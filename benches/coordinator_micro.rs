@@ -1,0 +1,99 @@
+//! L3 micro-benchmarks: the coordinator pieces that sit on the request path
+//! outside XLA — batcher decisions, tensor⇄literal conversion, task/data
+//! generation. These are the knobs of the §Perf L3 iteration: the
+//! coordinator must not be the bottleneck (paper's bottleneck is FFTConv).
+//!
+//! Run: `cargo bench --bench coordinator_micro`
+
+use std::time::{Duration, Instant};
+
+use hyena::coordinator::batcher::Batcher;
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::Tensor;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+fn time_it<F: FnMut()>(reps: usize, mut f: F) -> Summary {
+    let mut s = Summary::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+fn main() {
+    let mut table = Table::new(
+        "coordinator micro-benchmarks",
+        &["op", "p50", "p99", "unit"],
+    );
+    let mut push = |name: &str, s: &Summary, unit: &str| {
+        println!("{name:>32}: p50 {:>10.3}µs", s.p50() * 1e6);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", s.p50() * 1e6),
+            format!("{:.3}", s.p99() * 1e6),
+            unit.to_string(),
+        ]);
+    };
+
+    // Batcher decision path.
+    let s = time_it(2000, || {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5));
+        for i in 0..8 {
+            b.push(i);
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        std::hint::black_box(batch);
+    });
+    push("batcher fill+drain (8 req)", &s, "µs");
+
+    // Tensor -> literal conversion (the per-step host boundary).
+    let data: Vec<f32> = (0..8 * 256).map(|i| i as f32).collect();
+    let t = Tensor::from_f32(&[8, 256], data).unwrap();
+    let s = time_it(500, || {
+        let lit = t.to_literal().unwrap();
+        std::hint::black_box(lit);
+    });
+    push("tensor->literal 8x256 f32", &s, "µs");
+
+    let lit = t.to_literal().unwrap();
+    let s = time_it(500, || {
+        let back = Tensor::from_literal(&lit).unwrap();
+        std::hint::black_box(back);
+    });
+    push("literal->tensor 8x256 f32", &s, "µs");
+
+    // Task generation (per training batch).
+    let task = RecallTask::new(1024, 30, 8);
+    let mut rng = Pcg::new(0);
+    let s = time_it(200, || {
+        let b = task.sample_batch(&mut rng);
+        std::hint::black_box(b);
+    });
+    push("recall batch gen 8x1024", &s, "µs");
+
+    let task = RecallTask::new(1024, 30, 8);
+    let mut rng = Pcg::new(0);
+    let s = time_it(100, || {
+        let b = task.sample_batch(&mut rng).to_tensors();
+        std::hint::black_box(b);
+    });
+    push("recall batch gen+tensors", &s, "µs");
+
+    // Corpus batch assembly.
+    let corpus = generate(&CorpusConfig::default(), 100);
+    let mut lb = LmBatches::new(&corpus.train, 8, 256, 0).with_vocab(96);
+    let s = time_it(500, || {
+        let b = lb.next_batch();
+        std::hint::black_box(b);
+    });
+    push("tinypile batch 8x256", &s, "µs");
+
+    table.emit("coordinator_micro");
+}

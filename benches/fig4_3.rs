@@ -1,0 +1,72 @@
+//! E6 — Fig. 4.3: operator forward runtime vs sequence length —
+//! Hyena (FFT path), Hyena (Pallas DFT-matmul path), exact attention,
+//! flash-style chunked attention.
+//!
+//! Paper: batch 64 on A100 — Hyena crosses attention at L≈2048 and
+//! FlashAttention between 4096–8196, reaching 100× at 64k. Testbed: batch 4
+//! on one CPU core over compiled single-block artifacts; absolute ms are
+//! not comparable but the *crossover structure* (attention's quadratic
+//! growth overtaking Hyena's L log L) is the reproduced shape.
+//!
+//! Run: `cargo bench --bench fig4_3 -- [--iters 5] [--lens 256,...,8192]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::bench_forward;
+use hyena::report::Table;
+use hyena::runtime::{ModelState, Tensor};
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+const KINDS: &[&str] = &["hyena", "hyenapallas", "flash", "attn"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["bench"]); // libtest passes --bench; swallow it
+    let iters = args.get_usize("iters", 3);
+    let lens: Vec<usize> = args
+        .get_or("lens", "256,512,1024,2048,4096,8192")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let mut table = Table::new(
+        "Fig 4.3 — forward wall time (ms) vs sequence length (batch 4)",
+        &["seqlen", "hyena", "hyena-pallas", "flash", "attn", "attn/hyena"],
+    );
+    let mut rng = Pcg::new(0);
+    for &l in &lens {
+        let mut cells = vec![l.to_string()];
+        let mut hyena_ms = f64::NAN;
+        let mut attn_ms = f64::NAN;
+        for kind in KINDS {
+            let name = format!("rt_{kind}_L{l}");
+            let dir = hyena::artifact(&name);
+            if !dir.join("manifest.json").exists() {
+                cells.push("—".into());
+                continue;
+            }
+            let model = ModelState::load(&dir, 0)?;
+            let b = model.manifest.batch()?;
+            let v = model.manifest.vocab()?;
+            let toks: Vec<i32> = (0..b * l).map(|_| rng.usize_below(v) as i32).collect();
+            let inputs = [Tensor::from_i32(&[b, l], toks)?];
+            let s = bench_forward(&model, &inputs, 1, iters)?;
+            let ms = s.p50() * 1e3;
+            if *kind == "hyena" {
+                hyena_ms = ms;
+            }
+            if *kind == "attn" {
+                attn_ms = ms;
+            }
+            println!("{kind:>12} L={l:<5}: {ms:>9.2} ms (p50 of {iters})");
+            cells.push(format!("{ms:.2}"));
+        }
+        cells.push(if hyena_ms.is_finite() && attn_ms.is_finite() {
+            format!("{:.2}x", attn_ms / hyena_ms)
+        } else {
+            "—".into()
+        });
+        table.row(cells);
+    }
+    table.emit("fig4_3");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! §Perf L2 ablation: donated (input/output-aliased) vs non-donated
+//! train_step executables for the same model.
+//!
+//! `aot.py` donates params/m/v by default and, for configs with
+//! `emit_undonated`, also writes `train_step_nodonate.hlo.txt`. This bench
+//! loads both lowering variants of one artifact and reports wall time per
+//! optimizer step. Recorded in EXPERIMENTS.md §Perf L2.
+//!
+//! Run: `cargo bench --bench perf_donation -- [--model lm_hyena_s] [--iters 8]`
+
+use std::time::Instant;
+
+use anyhow::Result;
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::{runtime, Manifest, ModelState, Tensor};
+use hyena::util::cli::Args;
+use hyena::util::stats::Summary;
+
+fn bench_variant(
+    man: &Manifest,
+    hlo: &str,
+    params: &[Tensor],
+    batches: &mut LmBatches,
+    iters: usize,
+) -> Result<Summary> {
+    let rt = runtime();
+    let exe = rt.load(&man.dir.join(hlo))?;
+    // Assemble literals: params + m + v (zeros) + step + batch.
+    let p_lits: Vec<xla::Literal> = params
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let zeros: Vec<xla::Literal> = man
+        .params
+        .iter()
+        .map(|s| Tensor::zeros(s.dtype, &s.shape).to_literal())
+        .collect::<Result<_>>()?;
+    let step = Tensor::from_f32(&[], vec![0.0])?.to_literal()?;
+
+    let mut s = Summary::new();
+    for i in 0..iters + 1 {
+        let batch = batches.next_batch();
+        let b_lits: Vec<xla::Literal> = batch
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(p_lits.iter());
+        args.extend(zeros.iter());
+        args.extend(zeros.iter());
+        args.push(&step);
+        args.extend(b_lits.iter());
+        let t0 = Instant::now();
+        let outs = exe.run_literals_ref(&args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(outs.len(), 3 * man.params.len() + 1);
+        if i > 0 {
+            s.push(dt); // first iteration is warmup
+        }
+    }
+    Ok(s)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["bench"]);
+    let name = args.get_or("model", "lm_hyena_s").to_string();
+    let iters = args.get_usize("iters", 8);
+
+    let dir = hyena::artifact(&name);
+    let man = Manifest::load(&dir)?;
+    let model = ModelState::load(&dir, 0)?;
+    let params = model.params_host()?;
+    let corpus = generate(&CorpusConfig::default(), 150);
+    let (b, l, v) = (man.batch()?, man.seqlen()?, man.vocab()?);
+
+    let mut table = Table::new(
+        &format!("§Perf L2 — donation ablation ({name})"),
+        &["variant", "p50 ms/step", "mean ms/step"],
+    );
+    for (label, hlo) in [
+        ("donated (input_output_alias)", "train_step.hlo.txt"),
+        ("non-donated", "train_step_nodonate.hlo.txt"),
+    ] {
+        if !dir.join(hlo).exists() {
+            println!("skip {label}: {hlo} missing (build with emit_undonated)");
+            continue;
+        }
+        let mut batches = LmBatches::new(&corpus.train, b, l, 0).with_vocab(v);
+        let s = bench_variant(&man, hlo, &params, &mut batches, iters)?;
+        println!("{label:>32}: p50 {:.1} ms/step", s.p50() * 1e3);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", s.p50() * 1e3),
+            format!("{:.1}", s.mean() * 1e3),
+        ]);
+    }
+    table.emit("perf_donation");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Training-step throughput bench — the compute side of Tab. 4.4 (Hyena
+//! matches GPT perplexity with fewer FLOPs; here we measure wall-time per
+//! optimizer step and tokens/s for the GPT vs Hyena pairs at both sizes,
+//! plus the App. A.2 model-FLOP rate).
+//!
+//! Run: `cargo bench --bench step_throughput -- [--iters 5]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::bench_train_step;
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::ModelState;
+use hyena::util::cli::Args;
+
+const MODELS: &[&str] = &["lm_gpt_s", "lm_hyena_s", "lm_gpt_m", "lm_hyena_m"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["bench"]);
+    let iters = args.get_usize("iters", 5);
+    let corpus = generate(&CorpusConfig::default(), 200);
+
+    let mut table = Table::new(
+        "train-step wall time and model-FLOP throughput",
+        &["model", "params", "ms/step", "tok/s", "model GFLOP/s"],
+    );
+    for name in MODELS {
+        let dir = hyena::artifact(name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        let mut model = ModelState::load(&dir, 0)?;
+        let (b, l, v) = (
+            model.manifest.batch()?,
+            model.manifest.seqlen()?,
+            model.manifest.vocab()?,
+        );
+        let flops = model.manifest.flops_per_step.unwrap_or(0.0);
+        let mut batches = LmBatches::new(&corpus.train, b, l, 0).with_vocab(v);
+        let mut src = move || batches.next_batch();
+        let s = bench_train_step(&mut model, &mut src, 2, iters)?;
+        let ms = s.p50() * 1e3;
+        let tok_s = (b * l) as f64 / s.p50();
+        let gflops = flops / s.p50() / 1e9;
+        println!("{name:>12}: {ms:>8.1} ms/step  {tok_s:>8.0} tok/s  {gflops:>6.2} GFLOP/s");
+        table.row(vec![
+            name.to_string(),
+            model.manifest.param_count.to_string(),
+            format!("{ms:.1}"),
+            format!("{tok_s:.0}"),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    table.emit("step_throughput");
+    Ok(())
+}

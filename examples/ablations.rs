@@ -1,0 +1,58 @@
+//! Ablations over the Hyena design choices DESIGN.md calls out
+//! (paper Sec. 3.3 + App. D): sine-activation frequency ω, operator order N,
+//! short conv on/off, decay window on/off (≈ ckconv), PE feature count K.
+//!
+//! Run on associative recall at L = 512:
+//! `cargo run --release --example ablations -- [--steps 1200] [--vocab 20]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_and_eval;
+use hyena::report::Table;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+const VARIANTS: &[(&str, &str)] = &[
+    ("baseline (ω=14, N=2, short, decay)", "ar_implicit_L512"),
+    ("no decay window (=CKConv)", "ar_ckconv_L512"),
+    ("sine ω=1", "abl_sine1"),
+    ("sine ω=10", "abl_sine10"),
+    ("order N=1", "abl_order1"),
+    ("order N=3", "abl_order3"),
+    ("no short conv", "abl_noshort"),
+    ("PE features K=32", "abl_pe32"),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 1200);
+    let vocab = args.get_usize("vocab", 20);
+    let seed = args.get_u64("seed", 0);
+
+    let mut table = Table::new(
+        "Ablations — recall accuracy (%) at L=512",
+        &["variant", "accuracy", "steps/s"],
+    );
+    for (label, name) in VARIANTS {
+        let dir = hyena::artifact(name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        let task = RecallTask::new(512, vocab, 16);
+        let mut rng = Pcg::new(seed);
+        let src = {
+            let task = task.clone();
+            move || task.sample_batch(&mut rng).to_tensors()
+        };
+        let (acc, rep) = train_and_eval(&dir, seed as i32, src, steps, 8, true)?;
+        println!("{label:>36}: acc {:>5.1}%", 100.0 * acc);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", 100.0 * acc),
+            format!("{:.1}", rep.steps_per_s),
+        ]);
+    }
+    table.emit("ablations");
+    Ok(())
+}

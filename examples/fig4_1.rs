@@ -1,0 +1,73 @@
+//! E1 — Fig. 4.1 / Tab. A.2: associative recall accuracy across long-conv
+//! parametrizations, sequence lengths and vocabulary sizes.
+//!
+//! Paper setup: order-2 Hyena, 2 layers, width 64, swap only the long-conv
+//! parametrization (Conv1d / FNO / SSM(H3) / TransferFunc / CKConv / Hyena
+//! implicit). Paper sweeps L up to 131k on A100s; this testbed sweeps
+//! L ∈ {128, 512} and vocab ∈ {10, 20, 30, 40} (DESIGN.md §3). The paper's
+//! claim to reproduce: implicit FFN-based filters (Hyena, CKConv) >> SSM/
+//! TransferFunc >> explicit (FNO, Conv1d), gap widening with L and vocab.
+//!
+//! Run: `cargo run --release --example fig4_1 -- [--steps 1500] [--lens 128,512] [--vocabs 10,30]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_and_eval;
+use hyena::report::Table;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+const KINDS: &[&str] = &["implicit", "ckconv", "ssm", "tf", "fno", "conv1d"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 1500);
+    let lens: Vec<usize> = args
+        .get_or("lens", "128,512")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let vocabs: Vec<usize> = args
+        .get_or("vocabs", "10,30")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let mut table = Table::new(
+        "Fig 4.1 — recall accuracy (%) by long-conv parametrization",
+        &["parametrization", "seqlen", "vocab", "accuracy", "steps/s"],
+    );
+    for &l in &lens {
+        for kind in KINDS {
+            let name = format!("ar_{kind}_L{l}");
+            let dir = hyena::artifact(&name);
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skip {name}: artifact missing");
+                continue;
+            }
+            for &v in &vocabs {
+                let task = RecallTask::new(l, v, 16);
+                let mut rng = Pcg::new(0);
+                let src = {
+                    let task = task.clone();
+                    move || task.sample_batch(&mut rng).to_tensors()
+                };
+                let (acc, rep) = train_and_eval(&dir, 0, src, steps, 8, true)?;
+                println!(
+                    "{kind:>9} L={l:<5} V={v:<3} acc {:>5.1}%  ({:.1} steps/s)",
+                    100.0 * acc,
+                    rep.steps_per_s
+                );
+                table.row(vec![
+                    kind.to_string(),
+                    l.to_string(),
+                    v.to_string(),
+                    format!("{:.1}", 100.0 * acc),
+                    format!("{:.1}", rep.steps_per_s),
+                ]);
+            }
+        }
+    }
+    table.emit("fig4_1");
+    Ok(())
+}

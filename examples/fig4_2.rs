@@ -1,0 +1,95 @@
+//! E4 — Tab. 4.4 + Fig. 4.2: TinyPile perplexity at increasing token
+//! budgets (the "preliminary scaling law"), GPT vs Hyena at two sizes, with
+//! the App. A.2 FLOP accounting.
+//!
+//! Paper: GPT-125M vs Hyena-153M and GPT-355M vs Hyena-355M trained for
+//! 5/10/15B tokens — Hyena matches ppl with ~20% fewer total FLOPs (the
+//! saving is the non-parametric attention FLOPs). Testbed: two model sizes
+//! × three token budgets on TinyPile; the claims to reproduce are
+//! (a) ppl(hyena) ≈ ppl(gpt) at each budget, (b) FLOPs(hyena) < FLOPs(gpt)
+//! at the same budget, with the gap growing with seqlen.
+//!
+//! Run: `cargo run --release --example fig4_2 -- [--budgets 100,200,400] [--docs 400]`
+
+use anyhow::Result;
+use hyena::coordinator::trainer::{eval_loss, Trainer};
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::ModelState;
+use hyena::util::cli::Args;
+
+const MODELS: &[(&str, &str)] = &[
+    ("GPT-s", "lm_gpt_s"),
+    ("Hyena-s", "lm_hyena_s"),
+    ("GPT-m", "lm_gpt_m"),
+    ("Hyena-m", "lm_hyena_m"),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    // Budgets are in optimizer steps (tokens = steps × batch × seqlen);
+    // separate runs per budget like the paper's 5/10/15B protocol.
+    let budgets: Vec<u64> = args
+        .get_or("budgets", "100,200,400")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let docs = args.get_usize("docs", 400);
+    let seed = args.get_u64("seed", 0);
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, docs);
+
+    let mut table = Table::new(
+        "Fig 4.2 / Tab 4.4 — ppl vs token budget and total FLOPs",
+        &["model", "params", "steps", "tokens", "val ppl", "total flops"],
+    );
+    for (label, name) in MODELS {
+        let dir = hyena::artifact(name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        for &budget in &budgets {
+            let mut model = ModelState::load(&dir, seed as i32)?;
+            let (b, l, v) = (
+                model.manifest.batch()?,
+                model.manifest.seqlen()?,
+                model.manifest.vocab()?,
+            );
+            let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(v);
+            let rep = {
+                let mut tr = Trainer::new(&mut model, move || batches.next_batch());
+                tr.quiet = true;
+                tr.run(budget)?
+            };
+            let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, v);
+            let n = evals.len().min(6);
+            let mut i = 0;
+            let nll = eval_loss(
+                &model,
+                &mut || {
+                    let batch = evals[i].clone();
+                    i += 1;
+                    batch
+                },
+                n,
+            )?;
+            println!(
+                "{label:>8} @ {budget:>4} steps ({} tok): ppl {:.2}, {:.2e} FLOPs",
+                rep.tokens_seen,
+                nll.exp(),
+                rep.total_flops.unwrap_or(0.0)
+            );
+            table.row(vec![
+                label.to_string(),
+                model.manifest.param_count.to_string(),
+                budget.to_string(),
+                rep.tokens_seen.to_string(),
+                format!("{:.2}", nll.exp()),
+                format!("{:.3e}", rep.total_flops.unwrap_or(0.0)),
+            ]);
+        }
+    }
+    table.emit("fig4_2");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! E9 — Fig. C.1: learning multi-digit addition vs model depth.
+//!
+//! Paper: 1-layer Hyena learns ≤4-digit addition; longer numbers need
+//! deeper models. Testbed: depth ∈ {1,2,3} × digits ∈ {2,3,4}; metric is
+//! exact-digit accuracy on the masked result positions.
+//!
+//! Run: `cargo run --release --example figC_1 -- [--steps 1500]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_and_eval;
+use hyena::report::Table;
+use hyena::tasks::arithmetic::ArithmeticTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 1500);
+    let seed = args.get_u64("seed", 0);
+
+    let mut table = Table::new(
+        "Fig C.1 — addition: result-digit accuracy (%) by depth and digits",
+        &["depth", "digits", "accuracy"],
+    );
+    for depth in [1usize, 2, 3] {
+        let name = format!("arith_d{depth}");
+        let dir = hyena::artifact(&name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        for digits in [2usize, 3, 4] {
+            let task = ArithmeticTask::new(digits, 32, 32);
+            let mut rng = Pcg::new(seed);
+            let src = {
+                let task = task.clone();
+                move || task.sample_batch(&mut rng).to_tensors()
+            };
+            let (acc, _) = train_and_eval(&dir, seed as i32, src, steps, 6, true)?;
+            println!("depth {depth} digits {digits}: acc {:.1}%", 100.0 * acc);
+            table.row(vec![
+                depth.to_string(),
+                digits.to_string(),
+                format!("{:.1}", 100.0 * acc),
+            ]);
+        }
+    }
+    table.emit("figC_1");
+    Ok(())
+}

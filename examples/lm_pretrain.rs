@@ -1,0 +1,144 @@
+//! End-to-end driver (DESIGN.md §6): pretrain a Hyena LM on TinyPile from
+//! the Rust coordinator, log the loss curve, evaluate held-out perplexity,
+//! then bring the trained model up behind the dynamic-batching server and
+//! report serving latency/throughput. Proves all layers compose:
+//! Pallas-kerneled JAX graphs → HLO artifacts → PJRT runtime → trainer →
+//! server.
+//!
+//! Run: `cargo run --release --example lm_pretrain -- \
+//!        [--model lm_hyena_s] [--steps 400] [--docs 400] [--requests 16]`
+//!
+//! The paper trains 125M–355M models for 5–15B tokens on 8×A100; this
+//! testbed is one CPU core, so the default is a ~1.1M-param model for
+//! ~0.8M tokens (substitution notes: DESIGN.md §3). Results land in
+//! `results/lm_pretrain_<model>.csv` and EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{GenerateRequest, Server};
+use hyena::coordinator::trainer::{eval_loss, Trainer};
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::ModelState;
+use hyena::tokenizer::CharTokenizer;
+use hyena::util::cli::Args;
+use hyena::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let name = args.get_or("model", "lm_hyena_s").to_string();
+    let steps = args.get_u64("steps", 400);
+    let docs = args.get_usize("docs", 400);
+    let n_req = args.get_usize("requests", 16);
+    let seed = args.get_u64("seed", 0);
+
+    // ---- data -----------------------------------------------------------
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, docs);
+    println!(
+        "TinyPile: {} train / {} val tokens",
+        corpus.train.len(),
+        corpus.val.len()
+    );
+
+    // ---- train ------------------------------------------------------------
+    let mut model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    let (b, l, v) = (
+        model.manifest.batch()?,
+        model.manifest.seqlen()?,
+        model.manifest.vocab()?,
+    );
+    println!(
+        "{name}: {} params, batch {b} x seq {l}",
+        model.manifest.param_count
+    );
+    let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(v);
+    let report = {
+        let mut tr = Trainer::new(&mut model, move || batches.next_batch());
+        tr.log_every = (steps / 10).max(1);
+        tr.run(steps)?
+    };
+
+    // ---- held-out eval ------------------------------------------------------
+    let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, v);
+    let n_eval = evals.len().min(8);
+    let mut i = 0;
+    let val_nll = eval_loss(
+        &model,
+        &mut || {
+            let batch = evals[i].clone();
+            i += 1;
+            batch
+        },
+        n_eval,
+    )?;
+    println!(
+        "val: loss {val_nll:.4}  ppl {:.2}  (train FLOPs {:.2e})",
+        val_nll.exp(),
+        report.total_flops.unwrap_or(0.0)
+    );
+
+    // ---- persist loss curve ---------------------------------------------------
+    let mut t = Table::new(
+        &format!("lm_pretrain {name}"),
+        &["step", "tokens", "loss", "ppl", "elapsed_s"],
+    );
+    for p in &report.curve {
+        t.row(vec![
+            p.step.to_string(),
+            p.tokens_seen.to_string(),
+            format!("{:.4}", p.loss),
+            format!("{:.2}", p.ppl),
+            format!("{:.1}", p.elapsed_s),
+        ]);
+    }
+    t.emit(&format!("lm_pretrain_{name}"));
+
+    // ---- serve the trained weights ---------------------------------------------
+    // The server loads its own copy of the artifact (XLA state is per
+    // thread); push the trained params over in host form.
+    println!("\nserving {n_req} requests (dynamic batching, 10ms deadline)…");
+    let trained = model.params_host()?;
+    let server = Server::start_with_params(
+        hyena::artifact(&name),
+        seed as i32,
+        Duration::from_millis(10),
+        Some(trained),
+    )?;
+    let tok = CharTokenizer::new();
+    let prompt = tok.encode("The ");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_req)
+        .map(|_| {
+            server.handle.submit(GenerateRequest {
+                prompt: prompt.clone(),
+                max_new: 32,
+                sampling: Sampling::Temperature { t: 0.8, top_k: 20 },
+            })
+        })
+        .collect();
+    let mut lat = Summary::new();
+    let mut generated = 0usize;
+    let mut sample = String::new();
+    for (idx, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().expect("worker alive")?;
+        lat.push(resp.total_time.as_secs_f64());
+        generated += resp.tokens.len();
+        if idx == 0 {
+            sample = tok.decode(&resp.tokens);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("sample continuation: {sample:?}");
+    println!(
+        "serving: {} req, mean latency {:.0}ms, p99 {:.0}ms, {:.1} tok/s",
+        n_req,
+        lat.mean() * 1e3,
+        lat.p99() * 1e3,
+        generated as f64 / wall
+    );
+    server.stop();
+    Ok(())
+}

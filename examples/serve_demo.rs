@@ -1,0 +1,89 @@
+//! Serving workload demo: open-loop arrival process against the
+//! dynamic-batching server; reports latency percentiles, throughput and
+//! batch occupancy across batching deadlines (the policy the vLLM-style
+//! literature sweeps).
+//!
+//! Run: `cargo run --release --example serve_demo -- \
+//!        [--model golden_tiny] [--requests 48] [--rate 20] [--deadlines 1,10,50]`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{GenerateRequest, Server};
+use hyena::report::Table;
+use hyena::runtime::Manifest;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let name = args.get_or("model", "golden_tiny").to_string();
+    let n_req = args.get_usize("requests", 48);
+    let rate = args.get_f64("rate", 20.0); // requests/second
+    let deadlines: Vec<u64> = args
+        .get_or("deadlines", "1,10,50")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let seed = args.get_u64("seed", 0);
+
+    let man = Manifest::load(&hyena::artifact(&name))?;
+    let vocab = man.vocab()?;
+    let l = man.seqlen()?;
+    let max_new = 8.min(l.saturating_sub(6));
+
+    let mut table = Table::new(
+        &format!("serving policy sweep — {name}, {n_req} req @ {rate}/s"),
+        &["deadline_ms", "p50_ms", "p99_ms", "mean_occupancy", "tok_per_s"],
+    );
+    for &dl in &deadlines {
+        let server = Server::start(
+            hyena::artifact(&name),
+            seed as i32,
+            Duration::from_millis(dl),
+        )?;
+        let mut rng = Pcg::new(seed);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for _ in 0..n_req {
+            // Poisson-ish arrivals: exponential inter-arrival times.
+            let gap = -(1.0 - rng.f32() as f64).ln() / rate;
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.25)));
+            let prompt: Vec<i32> = (0..5).map(|_| rng.usize_below(vocab) as i32).collect();
+            handles.push(server.handle.submit(GenerateRequest {
+                prompt,
+                max_new,
+                sampling: Sampling::Greedy,
+            }));
+        }
+        let mut lat = Summary::new();
+        let mut occ = Summary::new();
+        let mut tokens = 0usize;
+        for h in handles {
+            let resp = h.recv().expect("worker alive")?;
+            lat.push(resp.total_time.as_secs_f64() * 1e3);
+            occ.push(resp.batch_occupancy as f64);
+            tokens += resp.tokens.len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "deadline {dl:>3}ms: p50 {:.1}ms p99 {:.1}ms occupancy {:.2} {:.1} tok/s",
+            lat.p50(),
+            lat.p99(),
+            occ.mean(),
+            tokens as f64 / wall
+        );
+        table.row(vec![
+            dl.to_string(),
+            format!("{:.1}", lat.p50()),
+            format!("{:.1}", lat.p99()),
+            format!("{:.2}", occ.mean()),
+            format!("{:.1}", tokens as f64 / wall),
+        ]);
+        server.stop();
+    }
+    table.emit("serve_demo");
+    Ok(())
+}

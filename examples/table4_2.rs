@@ -1,0 +1,62 @@
+//! E2 — Tab. 4.2: associative recall on longer sequences, operator shootout.
+//!
+//! Paper: vocab 30, 2-layer width-64 models — Hyena solves it (100%) while
+//! GSS/H3/AFT/RWKV collapse and exact attention runs out of memory at 64k+.
+//! Testbed: L = 1024 (CPU budget; DESIGN.md §3), same operators, same
+//! 2-layer width-64 recipe, expectation: hyena ≈ attention ≫ others.
+//!
+//! Run: `cargo run --release --example table4_2 -- [--steps 1500] [--vocab 30]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_and_eval;
+use hyena::report::Table;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+const OPS: &[&str] = &["hyena", "flash", "attn", "gss", "h3", "aft", "rwkv"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 1500);
+    let vocab = args.get_usize("vocab", 30);
+    let l = args.get_usize("len", 1024);
+    let ops_filter = args.get_or("ops", "hyena,flash,attn,gss,h3,aft,rwkv").to_string();
+
+    let mut table = Table::new(
+        "Tab 4.2 — recall accuracy (%) by operator",
+        &["operator", "seqlen", "vocab", "accuracy", "steps/s"],
+    );
+    for kind in OPS {
+        if !ops_filter.split(',').any(|o| o == *kind) {
+            continue;
+        }
+        let name = format!("op_{kind}_L{l}");
+        let dir = hyena::artifact(&name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        let task = RecallTask::new(l, vocab, 8);
+        let mut rng = Pcg::new(0);
+        let src = {
+            let task = task.clone();
+            move || task.sample_batch(&mut rng).to_tensors()
+        };
+        let (acc, rep) = train_and_eval(&dir, 0, src, steps, 8, true)?;
+        println!(
+            "{kind:>6} L={l} V={vocab}: acc {:>5.1}%  ({:.2} steps/s)",
+            100.0 * acc,
+            rep.steps_per_s
+        );
+        table.row(vec![
+            kind.to_string(),
+            l.to_string(),
+            vocab.to_string(),
+            format!("{:.1}", 100.0 * acc),
+            format!("{:.2}", rep.steps_per_s),
+        ]);
+    }
+    table.emit("table4_2");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! E3 — Tab. 4.3: WikiText103-style LM perplexity shootout at matched
+//! parameter budget (Transformer vs Hyena-3 vs Hyena-3-slim vs AFT vs RWKV).
+//!
+//! Paper: 125M params on WikiText103 — Transformer 18.6, Hyena-3 18.6,
+//! Hyena-3-slim (deeper/thinner) 18.5, AFT-conv 28.2. Testbed: ~1M-param
+//! models on TinyPile-W (DESIGN.md §3); the claim to reproduce is the
+//! *ordering*: hyena ≈ transformer, slim ≤ hyena, both ≪ AFT/RWKV.
+//!
+//! Run: `cargo run --release --example table4_3 -- [--steps 800] [--docs 400]`
+
+use anyhow::Result;
+use hyena::coordinator::trainer::{eval_loss, Trainer};
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::ModelState;
+use hyena::util::cli::Args;
+
+const MODELS: &[(&str, &str)] = &[
+    ("Transformer", "lm_attn_wt"),
+    ("Hyena-3", "lm_hyena3_wt"),
+    ("Hyena-3-slim", "lm_hyena3slim_wt"),
+    ("AFT-conv", "lm_aft_wt"),
+    ("RWKV", "lm_rwkv_wt"),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 800);
+    let docs = args.get_usize("docs", 400);
+    let seed = args.get_u64("seed", 0);
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, docs);
+
+    let mut table = Table::new(
+        "Tab 4.3 — TinyPile-W validation perplexity (same tokenizer)",
+        &["model", "params", "val loss", "ppl", "train flops"],
+    );
+    for (label, name) in MODELS {
+        let dir = hyena::artifact(name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        let mut model = ModelState::load(&dir, seed as i32)?;
+        let (b, l, v) = (
+            model.manifest.batch()?,
+            model.manifest.seqlen()?,
+            model.manifest.vocab()?,
+        );
+        let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(v);
+        let rep = {
+            let mut tr = Trainer::new(&mut model, move || batches.next_batch());
+            tr.quiet = true;
+            tr.run(steps)?
+        };
+        let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, v);
+        let n = evals.len().min(6);
+        let mut i = 0;
+        let nll = eval_loss(
+            &model,
+            &mut || {
+                let batch = evals[i].clone();
+                i += 1;
+                batch
+            },
+            n,
+        )?;
+        println!(
+            "{label:>14}: {} params, val ppl {:.2}",
+            model.manifest.param_count,
+            nll.exp()
+        );
+        table.row(vec![
+            label.to_string(),
+            model.manifest.param_count.to_string(),
+            format!("{nll:.4}"),
+            format!("{:.2}", nll.exp()),
+            format!("{:.2e}", rep.total_flops.unwrap_or(0.0)),
+        ]);
+    }
+    table.emit("table4_3");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! E5 — Tab. 4.5/4.6: zero-shot vs few-shot (3) accuracy of a pretrained
+//! attention-free LM (SuperGLUE stand-in; substitution in DESIGN.md §3).
+//!
+//! Protocol mirrors the paper: the *same* pretrained model is scored
+//! zero-shot and 3-shot by option log-likelihood on multiple-choice
+//! episodes; the paper's claim to reproduce is the characteristic few-shot
+//! lift of Hyena (Tab 4.6 avg 49.3 vs zero-shot 41.5) — demonstrations in
+//! context improve the attention-free model.
+//!
+//! Episodes are synthetic QA over the model's own training distribution:
+//!   recall-QA   "<kv pairs> <key> →  which value?" (in-context ability)
+//!   majority-QA "<symbols> → which symbol dominated?"
+//!   copy-QA     "<token> ... → which token opened the line?"
+//!
+//! Run: `cargo run --release --example table4_5 -- [--train-steps 600] [--episodes 60]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_artifact;
+use hyena::coordinator::fewshot::{eval_episodes, Episode};
+use hyena::report::Table;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+/// recall-QA episode generator over `vocab` tokens with `pairs` kv pairs.
+fn recall_episode(vocab: usize, pairs: usize) -> impl FnMut(&mut Pcg) -> Episode {
+    move |rng| {
+        let n_keys = vocab / 2;
+        let dict: Vec<i32> = (0..n_keys)
+            .map(|_| (n_keys + rng.usize_below(vocab - n_keys)) as i32)
+            .collect();
+        let mut prompt = Vec::new();
+        let mut appeared = Vec::new();
+        for _ in 0..pairs {
+            let k = rng.usize_below(n_keys);
+            appeared.push(k);
+            prompt.push(k as i32);
+            prompt.push(dict[k]);
+        }
+        let q = appeared[rng.usize_below(appeared.len())];
+        prompt.push(q as i32);
+        // options: correct value + 3 distractor values
+        let mut options = vec![vec![dict[q]]];
+        for _ in 0..3 {
+            let mut d = dict[rng.usize_below(n_keys)];
+            if d == dict[q] {
+                d = (n_keys as i32) + ((d - n_keys as i32 + 1) % (vocab - n_keys) as i32);
+            }
+            options.push(vec![d]);
+        }
+        // shuffle options, track correct index
+        let mut order: Vec<usize> = (0..options.len()).collect();
+        rng.shuffle(&mut order);
+        let correct = order.iter().position(|&i| i == 0).unwrap();
+        let options = order.into_iter().map(|i| options[i].clone()).collect();
+        Episode { prompt, options, correct }
+    }
+}
+
+/// majority-QA: which symbol dominates the window?
+fn majority_episode(vocab: usize, len: usize) -> impl FnMut(&mut Pcg) -> Episode {
+    move |rng| {
+        let maj = rng.usize_below(vocab) as i32;
+        let mut prompt: Vec<i32> = (0..len)
+            .map(|_| {
+                if rng.f32() < 0.55 {
+                    maj
+                } else {
+                    rng.usize_below(vocab) as i32
+                }
+            })
+            .collect();
+        prompt.push(0);
+        let mut distract = (maj + 1) % vocab as i32;
+        if distract == maj {
+            distract = (maj + 2) % vocab as i32;
+        }
+        let swap = rng.f32() < 0.5;
+        let options = if swap {
+            vec![vec![distract], vec![maj]]
+        } else {
+            vec![vec![maj], vec![distract]]
+        };
+        Episode { prompt, options, correct: usize::from(swap) }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let train_steps = args.get_u64("train-steps", 600);
+    let episodes = args.get_usize("episodes", 60);
+    let model_name = args.get_or("model", "op_hyena_L1024").to_string();
+    let dir = hyena::artifact(&model_name);
+
+    // Pretrain on the recall distribution (the testbed "pretraining corpus").
+    let l = hyena::runtime::Manifest::load(&dir)?.seqlen()?;
+    let task = RecallTask::new(l, 30, 8);
+    let mut rng = Pcg::new(0);
+    let src = {
+        let task = task.clone();
+        move || task.sample_batch(&mut rng).to_tensors()
+    };
+    println!("pretraining {model_name} for {train_steps} steps…");
+    let (model, _) = train_artifact(&dir, 0, src, train_steps, true)?;
+
+    let mut table = Table::new(
+        "Tab 4.5/4.6 — synthetic-QA accuracy (%), zero-shot vs 3-shot",
+        &["task", "0-shot", "3-shot", "lift"],
+    );
+    let mut eval_rng = Pcg::new(42);
+    let tasks: Vec<(&str, Box<dyn FnMut(&mut Pcg) -> Episode>)> = vec![
+        ("recall-QA", Box::new(recall_episode(30, 8))),
+        ("majority-QA", Box::new(majority_episode(10, 24))),
+    ];
+    for (label, mut mk) in tasks {
+        let zero = eval_episodes(&model, &mut mk, 0, episodes, &mut eval_rng)?;
+        let few = eval_episodes(&model, &mut mk, 3, episodes, &mut eval_rng)?;
+        println!(
+            "{label:>12}: 0-shot {:.1}%  3-shot {:.1}%  (lift {:+.1})",
+            100.0 * zero,
+            100.0 * few,
+            100.0 * (few - zero)
+        );
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", 100.0 * zero),
+            format!("{:.1}", 100.0 * few),
+            format!("{:+.1}", 100.0 * (few - zero)),
+        ]);
+    }
+    table.emit("table4_5");
+    Ok(())
+}

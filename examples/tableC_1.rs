@@ -1,0 +1,81 @@
+//! E8 — Tab. C.1: vocabulary-size scaling on associative recall vs LM loss
+//! on the corpus — the paper's "synthetics predict scale" correlation.
+//!
+//! Paper: recall accuracy at vocab {10,20,30,40} (L = training seqlen)
+//! correlates with loss on The Pile after 5B tokens — Hyena and Transformer
+//! top both columns, Conv1d/AFT bottom both. Testbed: recall at the same
+//! vocab grid on the op_* artifacts + TinyPile loss of the corresponding
+//! lm-style training run on the same operator.
+//!
+//! Run: `cargo run --release --example tableC_1 -- [--steps 1200] [--lm-steps 300]`
+
+use anyhow::Result;
+use hyena::coordinator::experiment::train_and_eval;
+use hyena::coordinator::trainer::Trainer;
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::report::Table;
+use hyena::runtime::ModelState;
+use hyena::tasks::recall::RecallTask;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+const OPS: &[&str] = &["hyena", "attn", "h3", "aft"];
+const VOCABS: &[usize] = &[10, 20, 30, 40];
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let steps = args.get_u64("steps", 1200);
+    let lm_steps = args.get_u64("lm-steps", 300);
+    let seed = args.get_u64("seed", 0);
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, 300);
+
+    let mut table = Table::new(
+        "Tab C.1 — recall acc (%) @ vocab size vs TinyPile loss",
+        &["model", "acc@10", "acc@20", "acc@30", "acc@40", "tinypile loss"],
+    );
+    for kind in OPS {
+        let name = format!("op_{kind}_L1024");
+        let dir = hyena::artifact(&name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip {name}: artifact missing");
+            continue;
+        }
+        let mut accs = Vec::new();
+        for &v in VOCABS {
+            let task = RecallTask::new(1024, v, 8);
+            let mut rng = Pcg::new(seed);
+            let src = {
+                let task = task.clone();
+                move || task.sample_batch(&mut rng).to_tensors()
+            };
+            let (acc, _) = train_and_eval(&dir, seed as i32, src, steps, 6, true)?;
+            accs.push(acc);
+            println!("{kind:>6} vocab {v}: acc {:.1}%", 100.0 * acc);
+        }
+        // TinyPile loss of the same operator trained as an LM (fresh init).
+        let mut model = ModelState::load(&dir, seed as i32)?;
+        let (b, l, vv) = (
+            model.manifest.batch()?,
+            model.manifest.seqlen()?,
+            model.manifest.vocab()?,
+        );
+        let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(vv);
+        let rep = {
+            let mut tr = Trainer::new(&mut model, move || batches.next_batch());
+            tr.quiet = true;
+            tr.run(lm_steps)?
+        };
+        println!("{kind:>6} TinyPile loss after {lm_steps} steps: {:.3}", rep.final_loss);
+        table.row(vec![
+            kind.to_string(),
+            format!("{:.0}", 100.0 * accs[0]),
+            format!("{:.0}", 100.0 * accs[1]),
+            format!("{:.0}", 100.0 * accs[2]),
+            format!("{:.0}", 100.0 * accs[3]),
+            format!("{:.3}", rep.final_loss),
+        ]);
+    }
+    table.emit("tableC_1");
+    Ok(())
+}

@@ -1,0 +1,257 @@
+"""AOT pipeline: lower every experiment config to HLO text artifacts.
+
+For each config ``name`` this emits ``artifacts/<name>/``:
+
+  ``manifest.json``     param layout (sorted keys), input/output specs,
+                        hyperparameters, FLOP accounting
+  ``init.hlo.txt``      seed:i32[] → (params…)
+  ``train_step.hlo.txt``(params…, m…, v…, step:f32[], batch…) →
+                        (params…, m…, v…, loss)   [unless forward_only]
+  ``forward.hlo.txt``   (params…, tokens|images) → logits
+  ``filters.hlo.txt``   (params…) → h[N,D,L] of block 0   [hyena mixers]
+
+Interchange format is HLO **text**: jax ≥ 0.5 serialized protos carry 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md). Incremental: a config is skipped when
+its manifest exists and records the same config dict, unless --force.
+
+Usage: ``python -m compile.aot [--out DIR] [--only GLOB] [--list] [--force]``
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import filters as filters_mod
+from . import model, ops, train
+from .configs import CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_keys(params: dict) -> list[str]:
+    return sorted(params.keys())
+
+
+def flatten(params: dict) -> list:
+    return [params[k] for k in flat_keys(params)]
+
+
+def unflatten(keys: list[str], vals) -> dict:
+    return dict(zip(keys, vals))
+
+
+def _spec(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(jnp.dtype(s.dtype).name)}
+
+
+def build_artifacts(name: str, cfg: dict, outdir: str, force: bool) -> bool:
+    adir = os.path.join(outdir, name)
+    man_path = os.path.join(adir, "manifest.json")
+    if not force and os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                if json.load(f).get("config") == cfg:
+                    return False  # up to date
+        except Exception:
+            pass
+    os.makedirs(adir, exist_ok=True)
+    t0 = time.time()
+
+    family = cfg["family"]
+    init_fn = model.init_lm if family == "lm" else model.init_img
+    fwd_fn = model.forward_lm if family == "lm" else model.forward_img
+
+    # Shapes are driven by a concrete (abstract-eval'd) init.
+    params0 = jax.eval_shape(lambda s: init_fn(s, cfg), jnp.zeros((), jnp.int32))
+    keys = flat_keys(params0)
+    pspecs = [_spec(params0[k]) for k in keys]
+    B, L = cfg["batch"], cfg["seqlen"]
+
+    # ---- init: seed → (params…) --------------------------------------------
+    def init_flat(seed):
+        return tuple(flatten(init_fn(seed, cfg)))
+
+    lowered = jax.jit(init_flat).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    with open(os.path.join(adir, "init.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # ---- forward ------------------------------------------------------------
+    if family == "lm":
+        data_specs = [jax.ShapeDtypeStruct((B, L), jnp.int32)]
+    else:
+        img = cfg["image"]
+        data_specs = [jax.ShapeDtypeStruct((B, img, img), jnp.float32)]
+
+    def fwd_flat(*args):
+        p = unflatten(keys, args[: len(keys)])
+        return (fwd_fn(p, args[len(keys)], cfg),)
+
+    lowered = jax.jit(fwd_flat).lower(*pspecs, *data_specs)
+    with open(os.path.join(adir, "forward.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # ---- train_step ----------------------------------------------------------
+    train_inputs = []
+    if not cfg.get("forward_only", False):
+        if family == "lm":
+            step_fn = train.make_lm_train_step(cfg)
+            batch_specs = [
+                jax.ShapeDtypeStruct((B, L), jnp.int32),   # tokens
+                jax.ShapeDtypeStruct((B, L), jnp.int32),   # targets
+                jax.ShapeDtypeStruct((B, L), jnp.float32), # loss mask
+            ]
+            train_inputs = ["tokens", "targets", "mask"]
+        else:
+            step_fn = train.make_img_train_step(cfg)
+            img = cfg["image"]
+            batch_specs = [
+                jax.ShapeDtypeStruct((B, img, img), jnp.float32),
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+            ]
+            train_inputs = ["images", "labels"]
+
+        nk = len(keys)
+
+        def step_flat(*args):
+            p = unflatten(keys, args[:nk])
+            m = unflatten(keys, args[nk : 2 * nk])
+            v = unflatten(keys, args[2 * nk : 3 * nk])
+            step = args[3 * nk]
+            batch = args[3 * nk + 1 :]
+            new_p, new_m, new_v, loss = step_fn(p, m, v, step, *batch)
+            return tuple(flatten(new_p)) + tuple(flatten(new_m)) + tuple(
+                flatten(new_v)
+            ) + (loss,)
+
+        # Donate params/m/v: input/output aliasing lets XLA update the
+        # optimizer state in place instead of allocating + copying every
+        # tensor each step (§Perf L2 lever; measured in EXPERIMENTS.md).
+        donate = tuple(range(3 * nk))
+        lowered = jax.jit(step_flat, donate_argnums=donate).lower(
+            *pspecs, *pspecs, *pspecs,
+            jax.ShapeDtypeStruct((), jnp.float32),
+            *batch_specs,
+        )
+        with open(os.path.join(adir, "train_step.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+        # Non-donated variant kept for the §Perf ablation.
+        if cfg.get("emit_undonated", False):
+            lowered = jax.jit(step_flat).lower(
+                *pspecs, *pspecs, *pspecs,
+                jax.ShapeDtypeStruct((), jnp.float32),
+                *batch_specs,
+            )
+            with open(os.path.join(adir, "train_step_nodonate.hlo.txt"), "w") as f:
+                f.write(to_hlo_text(lowered))
+
+    # ---- filters dump (hyena mixers): Fig D.5 driver -------------------------
+    # Lowered over ONLY the block-0 filter params (jit would DCE the rest
+    # anyway, changing the artifact's true arity); the manifest records which
+    # param names feed it, in flattening order.
+    has_filters = cfg.get("mixer") == "hyena"
+    filter_param_names = []
+    if has_filters:
+        N, D = cfg.get("order", 2), cfg["width"]
+        prefix = "blocks.0.mixer.filter."
+        filter_param_names = [k for k in keys if k.startswith(prefix)]
+        fspecs = [pspecs[keys.index(k)] for k in filter_param_names]
+
+        def filt_flat(*args):
+            fsub = {
+                k[len(prefix):]: v for k, v in zip(filter_param_names, args)
+            }
+            h = filters_mod.materialize_filter(
+                fsub, cfg.get("filter_kind", "implicit"), N, D, L, cfg
+            )
+            return (h,)
+
+        lowered = jax.jit(filt_flat).lower(*fspecs)
+        with open(os.path.join(adir, "filters.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+    # ---- manifest -------------------------------------------------------------
+    manifest = {
+        "name": name,
+        "config": cfg,
+        "params": [dict(name=k, **_spec_json(s)) for k, s in zip(keys, pspecs)],
+        "data_inputs": {
+            "forward": [_spec_json(s) for s in data_specs],
+            "train": train_inputs,
+        },
+        "param_count": int(sum(int(jnp.prod(jnp.array(s.shape))) for s in pspecs)),
+        "flops_per_token": model.flops_per_token_lm(cfg) if family == "lm" else None,
+        "flops_per_step": model.flops_per_step(cfg, B) if family == "lm" else None,
+        "has_train_step": not cfg.get("forward_only", False),
+        "has_filters": has_filters,
+        "filter_params": filter_param_names,
+    }
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+    # ---- goldens for the rust integration test -------------------------------
+    if name == "golden_tiny":
+        import numpy as np
+
+        p = init_fn(0, cfg)
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, cfg["vocab"], size=(B, L)).astype(np.int32)
+        logits = np.asarray(fwd_fn(p, jnp.asarray(toks), cfg))
+        golden = {
+            "tokens": toks.flatten().tolist(),
+            "logits_head": logits.flatten()[:64].tolist(),
+            "logits_sum": float(logits.sum()),
+            "logits_shape": list(logits.shape),
+        }
+        with open(os.path.join(adir, "golden.json"), "w") as f:
+            json.dump(golden, f)
+
+    dt = time.time() - t0
+    print(f"  {name}: {len(keys)} params, {dt:.1f}s", flush=True)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="glob over config names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    names = sorted(CONFIGS)
+    if args.only:
+        names = [n for n in names if fnmatch.fnmatch(n, args.only)]
+    if args.list:
+        for n in names:
+            print(n)
+        return
+    print(f"lowering {len(names)} configs -> {args.out}", flush=True)
+    built = 0
+    for n in names:
+        built += build_artifacts(n, CONFIGS[n], args.out, args.force)
+    print(f"done: {built} built, {len(names) - built} up-to-date")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Experiment configs — one entry per AOT artifact (DESIGN.md §5 index).
+
+Naming scheme:
+  ``ar_<filter>_L<len>``   E1  Fig 4.1 / Tab A.2 — conv parametrizations
+  ``op_<kind>_L<len>``     E2  Tab 4.2 — operator comparison
+  ``lm_<kind>_wt``         E3  Tab 4.3 — WikiText-style LM shootout
+  ``lm_<kind>_<size>``     E4  Tab 4.4 / Fig 4.2 — scaling on TinyPile
+  ``rt_<kind>_L<len>``     E6  Fig 4.3 — runtime benches (forward only)
+  ``img_<kind>``           E7  Tab 4.7 — image classification
+  ``arith_d<depth>``       E9  Fig C.1 — learning arithmetic
+  ``abl_*``                ablations (Sec. 3.3 design choices)
+  ``golden_tiny``          rust↔python integration golden
+
+Scale substitutions vs the paper are catalogued in DESIGN.md §3: the tiny
+widths/lengths here are the CPU-testbed equivalents of the paper's A100
+settings; relative comparisons (who wins, crossovers) are what we reproduce.
+"""
+from __future__ import annotations
+
+# Synthetic-task defaults (paper Tab. A.1: 2 layers, width 64, AdamW).
+_SYN = dict(
+    family="lm",
+    depth=2,
+    width=64,
+    mlp_ratio=2.0,
+    vocab=64,          # embedding slots; effective vocab varied in data
+    batch=16,
+    order=2,
+    n_heads=2,
+    short_filter=3,
+    pe_features=8,
+    filter_width=32,
+    filter_depth=4,
+    sine_freq=14.0,
+    lr=5e-4,
+    warmup_steps=100,
+    total_steps=2000,
+    weight_decay=0.1,
+)
+
+# TinyPile LM defaults (paper Tab. A.3/A.4 scaled down).
+_LM = dict(
+    family="lm",
+    mlp_ratio=4.0,
+    vocab=96,          # char tokenizer
+    batch=8,
+    seqlen=256,
+    n_heads=4,
+    order=2,
+    short_filter=3,
+    pe_features=8,
+    filter_width=64,
+    filter_depth=4,
+    sine_freq=14.0,
+    lr=6e-4,
+    warmup_steps=100,
+    total_steps=2000,
+    weight_decay=0.1,
+)
+
+
+def _syn(mixer, seqlen, **kw):
+    c = dict(_SYN, mixer=mixer, seqlen=seqlen)
+    c.update(kw)
+    return c
+
+
+def _lm(mixer, depth, width, **kw):
+    c = dict(_LM, mixer=mixer, depth=depth, width=width)
+    c.update(kw)
+    return c
+
+
+CONFIGS: dict[str, dict] = {}
+
+# --- E1: long-convolution parametrizations (Fig 4.1 / Tab A.2) -------------
+for fk in ["implicit", "ckconv", "conv1d", "fno", "ssm", "tf"]:
+    for L in [128, 512]:
+        CONFIGS[f"ar_{fk}_L{L}"] = _syn("hyena", L, filter_kind=fk)
+
+# --- E2: operator comparison (Tab 4.2) --------------------------------------
+for kind in ["hyena", "attn", "flash", "gss", "h3", "aft", "rwkv"]:
+    CONFIGS[f"op_{kind}_L1024"] = _syn(kind, 1024, filter_kind="implicit", batch=8)
+
+# --- E3: WikiText-style LM shootout (Tab 4.3) --------------------------------
+CONFIGS["lm_attn_wt"] = _lm("attn", 4, 128)
+CONFIGS["lm_hyena3_wt"] = _lm("hyena", 4, 128, order=3, filter_kind="implicit")
+CONFIGS["lm_hyena3slim_wt"] = _lm(
+    "hyena", 6, 128, order=3, filter_kind="implicit", mlp_ratio=2.0
+)
+CONFIGS["lm_aft_wt"] = _lm("aft", 4, 128)
+CONFIGS["lm_rwkv_wt"] = _lm("rwkv", 4, 128)
+
+# --- E4: TinyPile scaling (Tab 4.4 / Fig 4.2) --------------------------------
+CONFIGS["lm_gpt_s"] = _lm("attn", 4, 128)
+CONFIGS["lm_hyena_s"] = _lm("hyena", 4, 128, filter_kind="implicit", emit_undonated=True)
+CONFIGS["lm_gpt_m"] = _lm("attn", 6, 192, batch=8)
+CONFIGS["lm_hyena_m"] = _lm("hyena", 6, 192, filter_kind="implicit", batch=8)
+# E4 models double as the end-to-end pretrain driver targets.
+
+# --- E6: runtime benches (Fig 4.3; forward-only artifacts) -------------------
+for kind in ["hyena", "attn", "flash"]:
+    for L in [256, 512, 1024, 2048, 4096, 8192]:
+        if kind == "attn" and L > 4096:
+            continue  # exact attention: L² memory blow-up, paper marks ✗
+        CONFIGS[f"rt_{kind}_L{L}"] = _syn(
+            kind, L, filter_kind="implicit", batch=4, depth=1, forward_only=True
+        )
+# Pallas-kernel variant of the Hyena forward (DFT-matmul hot path).
+for L in [256, 1024]:
+    CONFIGS[f"rt_hyenapallas_L{L}"] = _syn(
+        "hyena", L, filter_kind="implicit", batch=4, depth=1,
+        forward_only=True, use_pallas=True,
+    )
+
+# --- E7: image classification (Tab 4.7) --------------------------------------
+_IMG = dict(
+    family="img",
+    depth=4,
+    width=96,
+    mlp_ratio=2.0,
+    patch=4,
+    image=32,
+    channels=1,
+    classes=10,
+    seqlen=64,          # (32/4)² patches
+    batch=16,
+    n_heads=2,
+    order=2,
+    short_filter=3,
+    pe_features=8,
+    filter_width=32,
+    filter_depth=4,
+    sine_freq=14.0,
+    lr=5e-4,
+    warmup_steps=100,
+    total_steps=2000,
+    weight_decay=0.05,
+    vocab=0,
+)
+CONFIGS["img_vit"] = dict(_IMG, mixer="attn")
+CONFIGS["img_hyena"] = dict(_IMG, mixer="hyena", filter_kind="implicit")
+
+# --- E9: learning arithmetic (Fig C.1) ---------------------------------------
+for d in [1, 2, 3]:
+    CONFIGS[f"arith_d{d}"] = _syn(
+        "hyena", 32, filter_kind="implicit", depth=d, vocab=16, batch=32
+    )
+
+# --- ablations (Sec. 3.3 / App. D design choices) ----------------------------
+CONFIGS["abl_sine1"] = _syn("hyena", 512, filter_kind="implicit", sine_freq=1.0)
+CONFIGS["abl_sine10"] = _syn("hyena", 512, filter_kind="implicit", sine_freq=10.0)
+CONFIGS["abl_order1"] = _syn("hyena", 512, filter_kind="implicit", order=1)
+CONFIGS["abl_order3"] = _syn("hyena", 512, filter_kind="implicit", order=3)
+CONFIGS["abl_noshort"] = _syn("hyena", 512, filter_kind="implicit", short_filter=0)
+CONFIGS["abl_pe32"] = _syn("hyena", 512, filter_kind="implicit", pe_features=32)
+
+# --- golden: rust↔python numerical integration -------------------------------
+CONFIGS["golden_tiny"] = _syn(
+    "hyena", 16, filter_kind="implicit", depth=1, width=32, vocab=32, batch=2
+)

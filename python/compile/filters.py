@@ -1,0 +1,249 @@
+"""Long-convolution filter parametrizations (paper Sec. 3.3 + App. A.1).
+
+Six interchangeable schemes, matching the comparison of Fig. 4.1 / Tab. A.2:
+
+====================  =========================================================
+``implicit`` (Hyena)  sine-activated FFN over a complex-exponential positional
+                      encoding, modulated by an exponential-decay window
+                      (Eq. 7, Fig. 3.1, App. D.3)
+``ckconv``            same FFN, no decay window (Romero et al., 2021b)
+``conv1d``            explicit FIR taps, fixed filter size M (CNN baseline)
+``fno``               explicit frequency-domain modes (Li et al., 2020)
+``ssm``               diagonal state-space model à la S4D (Gu et al., 2021)
+``tf``                transfer function: ratio of polynomials evaluated on the
+                      unit circle (classical generalization of SSMs)
+====================  =========================================================
+
+Every scheme exposes:
+  ``init_<kind>(key, N, D, cfg) -> params-subtree (dict of arrays)``
+  ``materialize_<kind>(params, N, D, L, cfg) -> h  # (N, D, L) float32``
+
+The per-channel skip bias (the ``D δ_t`` term) is owned by the operator, not
+the filter, so all schemes compete on the long-range component only.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Positional encoding (App. D.3): truncated complex-exponential basis.
+# ---------------------------------------------------------------------------
+
+
+def positional_encoding(L: int, K: int) -> jnp.ndarray:
+    """``t ↦ [t_norm, Re ρ_0..ρ_{K-1}, Im ρ_0..ρ_{K-1}]`` with ρ_k = e^{i2πkt/L}.
+
+    Returns ``(L, 2K+1)``. The feature count 2K+1 preconditions the filter
+    spectrum at init (App. D.3): filters resemble low-pass filters with
+    cut-off ≈ 2K+1, compensated by the sine-activation frequency ω.
+    """
+    t = jnp.arange(L, dtype=jnp.float32)
+    tn = t / max(L - 1, 1)
+    k = jnp.arange(K, dtype=jnp.float32)
+    ang = 2.0 * math.pi * k[None, :] * t[:, None] / L
+    return jnp.concatenate([tn[:, None], jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# implicit (Hyena) & ckconv: sine-FFN over the positional encoding.
+# ---------------------------------------------------------------------------
+
+
+def _ffn_sizes(cfg):
+    K = cfg.get("pe_features", 8)
+    width = cfg.get("filter_width", 32)
+    depth = cfg.get("filter_depth", 4)
+    return 2 * K + 1, width, depth
+
+
+def init_ffn_filter(key, N: int, D: int, cfg) -> dict:
+    """Shared init for ``implicit`` and ``ckconv``."""
+    d_in, width, depth = _ffn_sizes(cfg)
+    sizes = [d_in] + [width] * (depth - 1) + [N * D]
+    p = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k1, k2 = jax.random.split(key, 3)
+        bound = 1.0 / math.sqrt(a)
+        p[f"w{i}"] = jax.random.uniform(k1, (a, b), minval=-bound, maxval=bound)
+        p[f"b{i}"] = jax.random.uniform(k2, (b,), minval=-bound, maxval=bound)
+    return p
+
+
+def _ffn_eval(params, N: int, D: int, L: int, cfg) -> jnp.ndarray:
+    """Run the sine-activated FFN across all L positions: ``(N, D, L)``."""
+    _, _, depth = _ffn_sizes(cfg)
+    omega = cfg.get("sine_freq", 14.0)
+    z = positional_encoding(L, cfg.get("pe_features", 8))
+    for i in range(depth):
+        z = z @ params[f"w{i}"] + params[f"b{i}"]
+        if i < depth - 1:
+            # High-frequency periodic activation (Sec. 3.3): addresses the
+            # low-frequency bias of MLPs so filters carry high-freq content.
+            z = jnp.sin(omega * z)
+    return z.T.reshape(N, D, L)
+
+
+def init_implicit(key, N, D, cfg):
+    return init_ffn_filter(key, N, D, cfg)
+
+
+def materialize_implicit(params, N, D, L, cfg):
+    """Hyena filters: FFN output × (exp-decay window + floor) (Fig. 3.1).
+
+    Decay rates are log-spaced across channels so different channels commit
+    to different memory horizons at init; the additive floor keeps filters
+    from being pinned to zero past the decay length.
+    """
+    h = _ffn_eval(params, N, D, L, cfg)
+    fast = cfg.get("decay_fast", 0.3)
+    slow = cfg.get("decay_slow", 1.5)
+    shift = cfg.get("window_shift", 0.01)
+    t = jnp.arange(L, dtype=jnp.float32) / max(L, 1)
+    alpha = jnp.exp(
+        jnp.linspace(math.log(fast), math.log(slow), N * D)
+    ).reshape(N, D)
+    window = jnp.exp(-alpha[..., None] * t * L / (0.3 * L)) + shift
+    return h * window
+
+
+def init_ckconv(key, N, D, cfg):
+    return init_ffn_filter(key, N, D, cfg)
+
+
+def materialize_ckconv(params, N, D, L, cfg):
+    return _ffn_eval(params, N, D, L, cfg)
+
+
+# ---------------------------------------------------------------------------
+# conv1d: explicit FIR taps (the CNN baseline).
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, N, D, cfg):
+    M = cfg.get("filter_size", 64)
+    return {"taps": jax.random.normal(key, (N, D, M)) * (1.0 / math.sqrt(M))}
+
+
+def materialize_conv1d(params, N, D, L, cfg):
+    taps = params["taps"]
+    M = taps.shape[-1]
+    if M >= L:
+        return taps[..., :L]
+    return jnp.pad(taps, ((0, 0), (0, 0), (0, L - M)))
+
+
+# ---------------------------------------------------------------------------
+# fno: explicit frequency-domain modes.
+# ---------------------------------------------------------------------------
+
+
+def init_fno(key, N, D, cfg):
+    M = cfg.get("fno_modes", 64)
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / math.sqrt(M)
+    return {
+        "re": jax.random.normal(k1, (N, D, M)) * s,
+        "im": jax.random.normal(k2, (N, D, M)) * s,
+    }
+
+
+def materialize_fno(params, N, D, L, cfg):
+    """Place M learned complex modes into the rfft bins of a length-L filter."""
+    re, im = params["re"], params["im"]
+    M = re.shape[-1]
+    K = L // 2 + 1
+    m = min(M, K)
+    spec = jnp.zeros((N, D, K), dtype=jnp.complex64)
+    spec = spec.at[..., :m].set(re[..., :m] + 1j * im[..., :m])
+    return jnp.fft.irfft(spec, n=L).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssm: diagonal state-space model (S4D-lite).
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(key, N, D, cfg):
+    S = cfg.get("ssm_state", 64)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_idx = jnp.arange(S, dtype=jnp.float32)
+    return {
+        # A = -exp(log_a_re) + i·π·s  (S4D-Lin init), broadcast over (N, D).
+        "log_a_re": jnp.zeros((N, D, S)) + math.log(0.5),
+        "a_im": jnp.broadcast_to(math.pi * s_idx, (N, D, S)) * 1.0,
+        "c_re": jax.random.normal(k1, (N, D, S)) * (1.0 / math.sqrt(S)),
+        "c_im": jax.random.normal(k2, (N, D, S)) * (1.0 / math.sqrt(S)),
+        # Per-channel log timestep, log-uniform in [dt_min, dt_max].
+        "log_dt": jax.random.uniform(
+            k3, (N, D), minval=math.log(1e-3), maxval=math.log(1e-1)
+        ),
+    }
+
+
+def materialize_ssm(params, N, D, L, cfg):
+    """h_t = Σ_s Re(C_s · exp(t · dt · A_s)) · dt  for t = 0..L−1."""
+    dt = jnp.exp(params["log_dt"])[..., None]  # (N, D, 1)
+    a = -jnp.exp(params["log_a_re"]) + 1j * params["a_im"]  # (N, D, S)
+    c = params["c_re"] + 1j * params["c_im"]
+    t = jnp.arange(L, dtype=jnp.float32)
+    # (N, D, S, L) exponentials — fine at the widths used here.
+    expo = jnp.exp(a[..., None] * dt[..., None] * t)
+    h = jnp.einsum("nds,ndsl->ndl", c * dt, expo).real
+    return h.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tf: transfer function (ratio of polynomials on the unit circle).
+# ---------------------------------------------------------------------------
+
+
+def init_tf(key, N, D, cfg):
+    M = cfg.get("tf_order", 16)
+    k1, k2 = jax.random.split(key)
+    return {
+        "num": jax.random.normal(k1, (N, D, M)) * (1.0 / math.sqrt(M)),
+        # Denominator init small → poles near origin → stable at init.
+        "den": jax.random.normal(k2, (N, D, M - 1)) * 0.01,
+    }
+
+
+def materialize_tf(params, N, D, L, cfg):
+    """h = irfft( Σ b_m z^{-m} / (1 + Σ a_m z^{-m}) ), z on the P=2L circle."""
+    num, den = params["num"], params["den"]
+    P = 2 * L
+    K = P // 2 + 1
+    w = 2.0 * math.pi * jnp.arange(K) / P
+    m_num = jnp.arange(num.shape[-1], dtype=jnp.float32)
+    m_den = jnp.arange(1, den.shape[-1] + 1, dtype=jnp.float32)
+    zn = jnp.exp(-1j * w[None, :] * m_num[:, None])  # (M, K)
+    zd = jnp.exp(-1j * w[None, :] * m_den[:, None])  # (M-1, K)
+    H = jnp.einsum("ndm,mk->ndk", num.astype(jnp.complex64), zn) / (
+        1.0 + jnp.einsum("ndm,mk->ndk", den.astype(jnp.complex64), zd)
+    )
+    h = jnp.fft.irfft(H, n=P)[..., :L]
+    return h.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+FILTERS = {
+    "implicit": (init_implicit, materialize_implicit),
+    "ckconv": (init_ckconv, materialize_ckconv),
+    "conv1d": (init_conv1d, materialize_conv1d),
+    "fno": (init_fno, materialize_fno),
+    "ssm": (init_ssm, materialize_ssm),
+    "tf": (init_tf, materialize_tf),
+}
+
+
+def init_filter(key, kind: str, N: int, D: int, cfg) -> dict:
+    return FILTERS[kind][0](key, N, D, cfg)
+
+
+def materialize_filter(params, kind: str, N: int, D: int, L: int, cfg):
+    return FILTERS[kind][1](params, N, D, L, cfg)

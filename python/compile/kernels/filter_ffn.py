@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: Hyena filter materialization (paper Algorithm 2).
+
+Evaluates the sine-activated filter FFN over all L positions of the
+positional encoding in one fused kernel — PE build, the MLP stack and the
+exponential-decay window never round-trip to HBM. On TPU this runs as a
+(L-block × hidden) chain of MXU matmuls with VPU sine activations, in
+parallel across the sequence axis ("in parallel across N, L", Alg. 2).
+
+The surrounding jax function supplies the PE matrix (iota-generated, cheap)
+and the decay window; the kernel fuses Linear→sin(ω·)→…→Linear→window.
+Weights are small (K×W, W×W, W×ND) and live in VMEM whole; the grid blocks
+only the L axis.
+
+Lowered with ``interpret=True``; pinned against ``filters.materialize_*``
+(the jnp reference path) by pytest.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pe_ref, win_ref, *refs, depth: int, omega: float):
+    """One L-block instance: z = PE; repeat Linear+sin; final Linear; window.
+
+    ``refs`` = w0, b0, w1, b1, …, w_{depth-1}, b_{depth-1}, out_ref.
+    ``pe_ref``: (Lb, De); ``win_ref``: (Lb, ND); out: (Lb, ND).
+    """
+    out_ref = refs[-1]
+    z = pe_ref[...]
+    for i in range(depth):
+        w = refs[2 * i][...]
+        b = refs[2 * i + 1][...]
+        z = jnp.dot(z, w) + b
+        if i < depth - 1:
+            z = jnp.sin(omega * z)
+    out_ref[...] = z * win_ref[...]
+
+
+def filter_ffn_pallas(
+    pe: jnp.ndarray,
+    window: jnp.ndarray,
+    weights: list[jnp.ndarray],
+    biases: list[jnp.ndarray],
+    omega: float,
+    *,
+    block_l: int = 256,
+) -> jnp.ndarray:
+    """Fused filter FFN: ``window ⊙ FFN_sine(PE)``.
+
+    ``pe``: (L, De); ``window``: (L, ND) pre-broadcast decay window;
+    ``weights[i]``: (d_i, d_{i+1}); ``biases[i]``: (d_{i+1},).
+    Returns ``(L, ND)`` — the caller reshapes to (N, D, L).
+    """
+    L, _ = pe.shape
+    ND = weights[-1].shape[-1]
+    depth = len(weights)
+    block_l = min(block_l, L)
+    nl = -(-L // block_l)
+    Lp = nl * block_l
+    pe_p = jnp.pad(pe, ((0, Lp - L), (0, 0)))
+    win_p = jnp.pad(window, ((0, Lp - L), (0, 0)))
+
+    in_specs = [
+        pl.BlockSpec((block_l, pe.shape[1]), lambda i: (i, 0)),    # PE block
+        pl.BlockSpec((block_l, ND), lambda i: (i, 0)),             # window blk
+    ]
+    args = [pe_p, win_p]
+    for w, b in zip(weights, biases):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))   # whole W
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))     # whole b
+        args.extend([w, b])
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, depth=depth, omega=omega),
+        grid=(nl,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_l, ND), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Lp, ND), pe.dtype),
+        interpret=True,
+    )(*args)
+    return out[:L]
+
+
+def vmem_estimate_bytes(L_block: int, de: int, width: int, nd: int) -> int:
+    """VMEM working set of one instance (f32): PE/window/out blocks + the
+    whole (small) weight stack + one hidden activation block."""
+    weights = de * width + 2 * width * width + width * nd + 3 * width + nd
+    return 4 * (L_block * (de + 2 * nd + width) + weights)

@@ -1,0 +1,186 @@
+"""L1 Pallas kernel: fused gate ⊙ (long-conv + skip) — the Hyena hot path.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+The paper's CUDA implementation evaluates the long convolution with a fused
+FFT kernel. FFT butterflies are a poor fit for the TPU MXU (the paper itself
+flags FFTConv hardware utilization as the bottleneck, Sec. 3.3/4.4). We
+instead evaluate the padded circular convolution as **DFT-by-matmul**:
+
+    Vr = v · C,  Vi = v · S            (forward real DFT, two matmuls)
+    Yr = Vr⊙Hr − Vi⊙Hi                 (pointwise complex product)
+    Yi = Vr⊙Hi + Vi⊙Hr
+    y  = Yr · A + Yi · B               (inverse real DFT, two matmuls)
+    out = x ⊙ (y + bias ⊙ v)           (fused gate + skip)
+
+where C, S, A, B are the real/imaginary (i)rfft basis matrices for padded
+length P = 2L. All five stages live in one kernel instance, so the
+intermediate spectra never round-trip to HBM, and >95% of the FLOPs are
+MXU-shaped matmuls. The grid is (B, D/Db, K/Kb): the frequency axis is
+blocked and the partial inverse transforms are accumulated into the output
+block (irfft is linear over disjoint frequency bands), which bounds VMEM by
+the (L × Kb) basis tiles.
+
+Pallas is lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls); numerics are pinned against ``ref.gated_fftconv`` by
+pytest/hypothesis. VMEM footprint and MXU-utilization estimates per
+BlockSpec are recorded in DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dft_bases(L: int, dtype=jnp.float32):
+    """Real-DFT basis matrices for padded length P = 2L.
+
+    Returns (C, S, A, B):
+      C[t, k] =  cos(2π t k / P)            forward real part,  (L, K)
+      S[t, k] = -sin(2π t k / P)            forward imag part,  (L, K)
+      A[k, t] =  w_k cos(2π t k / P) / P    inverse from real,  (K, L)
+      B[k, t] = -w_k sin(2π t k / P) / P    inverse from imag,  (K, L)
+    with K = L + 1 rfft bins and w_0 = w_{K-1} = 1, else 2 (hermitian fold).
+    Only the first L rows matter on the forward side (the pad region is
+    zero) and only the first L columns on the inverse side (we truncate the
+    circular result back to the causal window).
+
+    Generated in-graph from broadcasted iota — no multi-MB constants in the
+    emitted HLO text.
+    """
+    P = 2 * L
+    K = L + 1
+    t = jnp.arange(L, dtype=dtype)[:, None]
+    k = jnp.arange(K, dtype=dtype)[None, :]
+    ang = (2.0 * math.pi / P) * t * k
+    C = jnp.cos(ang)
+    S = -jnp.sin(ang)
+    w = jnp.where((k == 0) | (k == K - 1), 1.0, 2.0) / P
+    A = (w * jnp.cos(ang)).T
+    B = (-w * jnp.sin(ang)).T
+    return C, S, A, B
+
+
+def _kernel(v_ref, x_ref, h_ref, b_ref, c_ref, s_ref, a_ref, bb_ref, o_ref):
+    """One (batch, channel-block, frequency-block) grid instance.
+
+    The output block doubles as the accumulator: grid iterations along the
+    frequency axis are sequential and map to the same output tile, so the
+    partial inverse transforms of successive bands can be summed in place;
+    the last band applies the fused skip + gate.
+    """
+    kidx = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    v = v_ref[0]            # (Db, L)
+    h = h_ref[...]          # (Db, L)
+    C = c_ref[...]          # (L, Kb)
+    S = s_ref[...]          # (L, Kb)
+
+    # Forward DFT of signal and filter for this frequency band (MXU matmuls).
+    vr = jnp.dot(v, C)      # (Db, Kb)
+    vi = jnp.dot(v, S)
+    hr = jnp.dot(h, C)
+    hi = jnp.dot(h, S)
+
+    # Pointwise complex product: the convolution theorem (paper Sec. 2).
+    yr = vr * hr - vi * hi
+    yi = vr * hi + vi * hr
+
+    # Partial inverse DFT for this band.
+    part = jnp.dot(yr, a_ref[...]) + jnp.dot(yi, bb_ref[...])  # (Db, L)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[0] = part
+
+    @pl.when(kidx > 0)
+    def _accum():
+        o_ref[0] += part
+
+    # Final band: apply the fused skip + gate.
+    @pl.when(kidx == nk - 1)
+    def _finish():
+        o_ref[0] = x_ref[0] * (o_ref[0] + b_ref[...] * v)
+
+
+def gated_fftconv_pallas(
+    x: jnp.ndarray,
+    h: jnp.ndarray,
+    v: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    block_d: int = 16,
+    block_k: int = 256,
+) -> jnp.ndarray:
+    """Fused Hyena recurrence step ``x ⊙ ((h * v) + bias ⊙ v)`` (Def. 3.1).
+
+    ``x, v``: ``(B, D, L)``; ``h``: ``(D, L)``; ``bias``: ``(D,)``.
+    Matches ``ref.gated_fftconv`` to ~1e-3 absolute (f32 DFT-matmul vs FFT).
+    """
+    Bsz, D, L = v.shape
+    K = L + 1
+    block_d = min(block_d, D)
+    block_k = min(block_k, K)
+    nd = -(-D // block_d)
+    nk = -(-K // block_k)
+    Dp = nd * block_d
+    Kp = nk * block_k
+
+    C, S, A, B = _dft_bases(L)
+    # Pad the frequency axis to a multiple of the block: zero bands
+    # contribute nothing to the accumulation. Pad channels likewise.
+    C = jnp.pad(C, ((0, 0), (0, Kp - K)))
+    S = jnp.pad(S, ((0, 0), (0, Kp - K)))
+    A = jnp.pad(A, ((0, Kp - K), (0, 0)))
+    B = jnp.pad(B, ((0, Kp - K), (0, 0)))
+    padd = Dp - D
+    vp = jnp.pad(v, ((0, 0), (0, padd), (0, 0)))
+    xp = jnp.pad(x, ((0, 0), (0, padd), (0, 0)))
+    hp = jnp.pad(h, ((0, padd), (0, 0)))
+    bp = jnp.pad(jnp.asarray(bias), ((0, padd),))[:, None]  # (Dp, 1)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Bsz, nd, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_d, L), lambda b, d, k: (b, d, 0)),   # v
+            pl.BlockSpec((1, block_d, L), lambda b, d, k: (b, d, 0)),   # x
+            pl.BlockSpec((block_d, L), lambda b, d, k: (d, 0)),         # h
+            pl.BlockSpec((block_d, 1), lambda b, d, k: (d, 0)),         # bias
+            pl.BlockSpec((L, block_k), lambda b, d, k: (0, k)),         # C
+            pl.BlockSpec((L, block_k), lambda b, d, k: (0, k)),         # S
+            pl.BlockSpec((block_k, L), lambda b, d, k: (k, 0)),         # A
+            pl.BlockSpec((block_k, L), lambda b, d, k: (k, 0)),         # B
+        ],
+        out_specs=pl.BlockSpec((1, block_d, L), lambda b, d, k: (b, d, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, Dp, L), v.dtype),
+        interpret=True,
+    )(vp, xp, hp, bp, C, S, A, B)
+    return out[:, :D, :]
+
+
+def vmem_estimate_bytes(L: int, block_d: int = 16, block_k: int = 256) -> int:
+    """Estimated VMEM working set of one kernel instance (f32 bytes).
+
+    The four basis tiles dominate (4 · L · Kb), plus the v/x/h/out channel
+    blocks (4 · Db · L) and the band spectra (6 · Db · Kb). Used to pick
+    block shapes so the working set fits a 16 MiB TPU VMEM.
+    """
+    Kb = min(block_k, L + 1)
+    return 4 * (4 * L * Kb + 4 * block_d * L + 6 * block_d * Kb)
+
+
+def mxu_flops(Bsz: int, D: int, L: int) -> int:
+    """MXU (matmul) FLOPs: 2 signal-DFT + 2 filter-DFT + 2 inverse matmuls."""
+    K = L + 1
+    return 2 * (4 * Bsz * D * L * K + 2 * D * L * K)
+
+
+def pointwise_flops(Bsz: int, D: int, L: int) -> int:
+    """Non-MXU (VPU elementwise) FLOPs: complex product + gate + skip."""
+    K = L + 1
+    return Bsz * D * (6 * K + 3 * L)

@@ -1,0 +1,111 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the mathematical ground truth for every kernel in this package:
+pytest (and hypothesis sweeps) pin the Pallas implementations against these
+functions, and the L2 training graph uses them directly (they lower to the
+native XLA `Fft` op, which the CPU PJRT backend executes efficiently).
+
+Conventions
+-----------
+Channel-major sequence layout ``(..., D, L)`` for convolution inputs, matching
+the SISO/depthwise formulation of the paper (Sec. 2): every channel has its
+own length-L causal filter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_fftconv(h: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal (aperiodic) convolution of filter ``h`` with signal ``v``.
+
+    ``h``: ``(..., L)`` filter response at t = 0..L-1 (causal by construction:
+    only non-negative taps are evaluated).
+    ``v``: ``(..., L)`` input signal; broadcasting across leading dims.
+
+    Zero-pads both to 2L so the circular convolution of the padded sequences
+    equals the aperiodic one (paper Sec. 2, "Fast Methods for Convolutions"),
+    then truncates back to L. O(L log L) via FFT.
+    """
+    L = v.shape[-1]
+    P = 2 * L
+    Hf = jnp.fft.rfft(h, n=P)
+    Vf = jnp.fft.rfft(v, n=P)
+    y = jnp.fft.irfft(Hf * Vf, n=P)[..., :L]
+    return y.astype(v.dtype)
+
+
+def fftconv_bias(h: jnp.ndarray, v: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Causal FFT convolution with a per-channel skip term.
+
+    ``out = (h * v) + bias ⊙ v`` — the ``D δ_t`` term of the SSM formulation
+    (paper Sec. 2.1); ``bias`` broadcasts over the L axis: shape ``(D,)``
+    against ``v`` of shape ``(..., D, L)``.
+    """
+    b = jnp.asarray(bias)
+    if b.ndim == 1:
+        b = b[:, None]
+    return causal_fftconv(h, v) + b * v
+
+
+def gated_fftconv(
+    x: jnp.ndarray, h: jnp.ndarray, v: jnp.ndarray, bias: jnp.ndarray
+) -> jnp.ndarray:
+    """One step of the Hyena recurrence (Def. 3.1):
+
+    ``z^{n+1} = x ⊙ ((h * z^n) + bias ⊙ z^n)``
+
+    Shapes: ``x, v``: ``(B, D, L)``; ``h``: ``(D, L)``; ``bias``: ``(D,)``.
+    This is the fused hot path the Pallas kernel implements.
+    """
+    return x * fftconv_bias(h, v, bias)
+
+
+def short_conv(w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal FIR convolution (Algorithm 1 step 2).
+
+    ``w``: ``(C, F)`` per-channel filter taps (F small, typically 3).
+    ``u``: ``(B, L, C)`` input.
+    ``y[b, t, c] = Σ_f w[c, f] · u[b, t - f, c]`` (zero beyond the left edge).
+    """
+    F = w.shape[-1]
+    y = jnp.zeros_like(u)
+    for f in range(F):
+        shifted = jnp.pad(u, ((0, 0), (f, 0), (0, 0)))[:, : u.shape[1], :]
+        y = y + w[:, f] * shifted
+    return y
+
+
+def hyena_recurrence(
+    v: jnp.ndarray, xs: jnp.ndarray, hs: jnp.ndarray, biases: jnp.ndarray
+) -> jnp.ndarray:
+    """Full order-N Hyena recurrence ``y = H(u) v`` (paper Eq. 4).
+
+    ``v``: ``(B, D, L)`` value projection; ``xs``: ``(N, B, D, L)`` gates;
+    ``hs``: ``(N, D, L)`` implicit long filters; ``biases``: ``(N, D)``.
+    """
+    N = xs.shape[0]
+    z = v
+    for n in range(N):
+        z = gated_fftconv(xs[n], hs[n], z, biases[n])
+    return z
+
+
+def hyena_matrix(
+    xs: jnp.ndarray, hs: jnp.ndarray, biases: jnp.ndarray
+) -> jnp.ndarray:
+    """Materialize the data-controlled matrix H(u) = D_x^N S_h^N … D_x^1 S_h^1.
+
+    Single channel: ``xs``: ``(N, L)``, ``hs``: ``(N, L)``, ``biases``: ``(N,)``.
+    Used only by tests / the Fig. D.2-D.4 visualization driver — O(L²) memory.
+    """
+    N, L = xs.shape
+    t = jnp.arange(L)
+    H = jnp.eye(L)
+    for n in range(N):
+        # Lower-triangular Toeplitz of filter n with the bias skip on its
+        # diagonal (S_h + b·I), then the diagonal gate D_x.
+        S = jnp.where(t[:, None] >= t[None, :], hs[n][t[:, None] - t[None, :]], 0.0)
+        S = S + biases[n] * jnp.eye(L)
+        H = jnp.diag(xs[n]) @ S @ H
+    return H

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: depthwise causal short convolution (Algorithm 1 step 2).
+
+Every Hyena projection is passed through a short (filter size F ≈ 3)
+depthwise causal FIR filter before entering the recurrence. On TPU this is a
+pure VPU (elementwise) kernel: the filter is tiny, so instead of a matmul we
+compute F shifted multiply-accumulates over an (L, C) tile resident in VMEM.
+The left halo is materialized by the surrounding jax function (F−1 rows of
+zero padding), keeping the kernel's BlockSpec a plain disjoint tiling.
+
+Lowered with ``interpret=True``; pinned against ``ref.short_conv``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, w_ref, o_ref, *, F: int, L: int):
+    """One batch-row instance over a padded (F-1+L, C) tile."""
+    w = w_ref[...]  # (C, F)
+    acc = w[:, 0] * u_ref[0, F - 1 : F - 1 + L, :]
+    for f in range(1, F):
+        # Tap f reads the input shifted f steps into the past; the pad
+        # region supplies zeros for t < f.
+        acc = acc + w[:, f] * u_ref[0, F - 1 - f : F - 1 - f + L, :]
+    o_ref[0] = acc
+
+
+def short_conv_pallas(w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: ``y[b,t,c] = Σ_f w[c,f] · u[b,t−f,c]``.
+
+    ``w``: ``(C, F)``; ``u``: ``(B, L, C)``. F must be static (it unrolls).
+    """
+    B, L, C = u.shape
+    F = w.shape[-1]
+    up = jnp.pad(u, ((0, 0), (F - 1, 0), (0, 0)))
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_kernel, F=F, L=L),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, L + F - 1, C), lambda b: (b, 0, 0)),
+            pl.BlockSpec((C, F), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, C), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, C), u.dtype),
+        interpret=True,
+    )(up, w)

@@ -1,0 +1,190 @@
+"""L2 models: decoder-only language model + ViT-style image classifier.
+
+The LM follows the standard GPT skeleton (pre-LN blocks, GELU MLP, learned
+positional embeddings, untied head) with the token mixer swapped per config —
+exactly the paper's drop-in protocol (Sec. 4.2, 4.5). Params are a flat
+``dict[str, array]`` with dotted keys; AOT flattening order is the sorted key
+order (see aot.py / the Rust manifest).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+
+
+# ---------------------------------------------------------------------------
+# shared nn pieces
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _prefix(sub: dict, name: str) -> dict:
+    return {f"{name}.{k}": v for k, v in sub.items()}
+
+
+def _sub(params: dict, name: str) -> dict:
+    pre = name + "."
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def init_block(key, cfg) -> dict:
+    D = cfg["width"]
+    Dm = int(D * cfg.get("mlp_ratio", 4))
+    keys = jax.random.split(key, 3)
+    p = {}
+    p.update(_prefix(ops.init_op(keys[0], cfg["mixer"], cfg), "mixer"))
+    p["ln1.g"] = jnp.ones((D,))
+    p["ln1.b"] = jnp.zeros((D,))
+    p["ln2.g"] = jnp.ones((D,))
+    p["ln2.b"] = jnp.zeros((D,))
+    p["mlp.w1"] = jax.random.normal(keys[1], (D, Dm)) / math.sqrt(D)
+    p["mlp.b1"] = jnp.zeros((Dm,))
+    p["mlp.w2"] = jax.random.normal(keys[2], (Dm, D)) / math.sqrt(Dm)
+    p["mlp.b2"] = jnp.zeros((D,))
+    return p
+
+
+def block_fwd(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = u + ops.apply_op(
+        _sub(p, "mixer"), cfg["mixer"], layer_norm(u, p["ln1.g"], p["ln1.b"]), cfg
+    )
+    z = layer_norm(h, p["ln2.g"], p["ln2.b"])
+    z = jax.nn.gelu(z @ p["mlp.w1"] + p["mlp.b1"]) @ p["mlp.w2"] + p["mlp.b2"]
+    return h + z
+
+
+# ---------------------------------------------------------------------------
+# language model
+# ---------------------------------------------------------------------------
+
+
+def init_lm(seed, cfg) -> dict:
+    """Initialize LM params from an (optionally traced) u32 seed."""
+    key = jax.random.PRNGKey(seed)
+    V, D, L = cfg["vocab"], cfg["width"], cfg["seqlen"]
+    depth = cfg["depth"]
+    keys = jax.random.split(key, depth + 3)
+    p = {
+        "embed": jax.random.normal(keys[0], (V, D)) * 0.02,
+        "pos": jax.random.normal(keys[1], (L, D)) * 0.01,
+        "lnf.g": jnp.ones((D,)),
+        "lnf.b": jnp.zeros((D,)),
+        "head": jax.random.normal(keys[2], (D, V)) * 0.02,
+    }
+    for i in range(depth):
+        p.update(_prefix(init_block(keys[3 + i], cfg), f"blocks.{i}"))
+    return p
+
+
+def forward_lm(params: dict, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    """tokens ``(B, L) int32`` → logits ``(B, L, V)``."""
+    L = tokens.shape[1]
+    u = params["embed"][tokens] + params["pos"][:L]
+    for i in range(cfg["depth"]):
+        u = block_fwd(_sub(params, f"blocks.{i}"), u, cfg)
+    u = layer_norm(u, params["lnf.g"], params["lnf.b"])
+    return u @ params["head"]
+
+
+def lm_loss(params, tokens, targets, mask, cfg):
+    """Masked autoregressive cross-entropy (mean over unmasked positions)."""
+    logits = forward_lm(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# image classifier (ViT / Hyena-ViT, Sec. 4.5)
+# ---------------------------------------------------------------------------
+
+
+def init_img(seed, cfg) -> dict:
+    key = jax.random.PRNGKey(seed)
+    D = cfg["width"]
+    pd = cfg["patch"] * cfg["patch"] * cfg.get("channels", 1)
+    depth = cfg["depth"]
+    keys = jax.random.split(key, depth + 3)
+    p = {
+        "patch_w": jax.random.normal(keys[0], (pd, D)) / math.sqrt(pd),
+        "patch_b": jnp.zeros((D,)),
+        "lnf.g": jnp.ones((D,)),
+        "lnf.b": jnp.zeros((D,)),
+        "head": jax.random.normal(keys[2], (D, cfg["classes"])) * 0.02,
+    }
+    if cfg["mixer"] in ("attn", "flash"):
+        # Hyena-ViT drops positional embeddings (App. A.4); attention needs them.
+        p["pos"] = jax.random.normal(keys[1], (cfg["seqlen"], D)) * 0.01
+    for i in range(depth):
+        p.update(_prefix(init_block(keys[3 + i], cfg), f"blocks.{i}"))
+    return p
+
+
+def patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """``(B, H, W) → (B, (H/p)·(W/p), p·p)`` row-major patch sequence."""
+    B, H, W = images.shape
+    ph, pw = H // patch, W // patch
+    x = images.reshape(B, ph, patch, pw, patch)
+    return x.transpose(0, 1, 3, 2, 4).reshape(B, ph * pw, patch * patch)
+
+
+def forward_img(params: dict, images: jnp.ndarray, cfg) -> jnp.ndarray:
+    """images ``(B, H, W) f32`` → logits ``(B, classes)``."""
+    u = patchify(images, cfg["patch"]) @ params["patch_w"] + params["patch_b"]
+    if "pos" in params:
+        u = u + params["pos"][: u.shape[1]]
+    for i in range(cfg["depth"]):
+        u = block_fwd(_sub(params, f"blocks.{i}"), u, cfg)
+    u = layer_norm(u, params["lnf.g"], params["lnf.b"])
+    return u.mean(axis=1) @ params["head"]
+
+
+def img_loss(params, images, labels, cfg):
+    logits = forward_img(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (paper App. A.2)
+# ---------------------------------------------------------------------------
+
+
+def flops_per_token_lm(cfg) -> float:
+    """Forward FLOPs per token, paper App. A.2 formulas (×2 for mul+add).
+
+    Attention blocks: 4 projections + the non-parametric attention-matrix
+    FLOPs (2·L·D for QK^T and AV each). Hyena blocks: (N+1) projections +
+    short conv + FFTConv term ``5·(order)·D·log2(L)`` + output projection.
+    """
+    D, L, V = cfg["width"], cfg["seqlen"], cfg["vocab"]
+    N = cfg.get("order", 2)
+    mlp = 2 * 2 * D * int(D * cfg.get("mlp_ratio", 4))
+    emb_head = 2 * D * V
+    if cfg["mixer"] in ("attn", "flash"):
+        mixer = 2 * 4 * D * D + 2 * 2 * L * D  # param + non-param (per token)
+    else:
+        proj = 2 * (N + 1) * D * D
+        short = 2 * (N + 1) * D * cfg.get("short_filter", 3)
+        fftconv = 2 * 5 * N * D * math.log2(max(L, 2))
+        out = 2 * D * D
+        mixer = proj + short + fftconv + out
+    return cfg["depth"] * (mixer + mlp) + emb_head
+
+
+def flops_per_step(cfg, batch: int) -> float:
+    """Training-step FLOPs ≈ 3× forward (fwd + bwd) × tokens."""
+    return 3.0 * flops_per_token_lm(cfg) * batch * cfg["seqlen"]
+
+
+def param_count(params: dict) -> int:
+    return int(sum(v.size for v in params.values()))

@@ -1,0 +1,326 @@
+"""Sequence-mixing operators (paper Sec. 3 + baselines of Sec. 4.1).
+
+Every operator maps ``u: (B, L, D) → y: (B, L, D)`` given a params subtree,
+and exposes ``init_<kind>(key, cfg) -> params``. Operators:
+
+``hyena``   order-N Hyena recurrence (Def. 3.1) with any filter kind
+``attn``    exact causal multi-head self-attention (materialized probs)
+``flash``   same math, chunked online-softmax (never materializes L×L)
+``gss``     Gated State Space ≈ Hyena_1 with SSM filters (Remark 3.2)
+``h3``      Hungry Hungry Hippo ≈ Hyena_2 with [shift, SSM] filters
+``aft``     Attention-Free Transformer, conv variant (Zhai et al., 2021)
+``rwkv``    RWKV-v4-style linear-attention recurrence (Peng, 2021)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import filters
+from .kernels import ref
+from .kernels.gated_fftconv import gated_fftconv_pallas
+from .kernels.short_conv import short_conv_pallas
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    k1, _ = jax.random.split(key)
+    return jax.random.normal(k1, (d_in, d_out)) * scale
+
+
+# ---------------------------------------------------------------------------
+# Hyena (Def. 3.1, Algorithms 1–3)
+# ---------------------------------------------------------------------------
+
+
+def init_hyena(key, cfg) -> dict:
+    D = cfg["width"]
+    N = cfg.get("order", 2)
+    F = cfg.get("short_filter", 3)
+    keys = jax.random.split(key, 6)
+    p = {
+        "proj_w": _dense_init(keys[0], D, (N + 1) * D),
+        "proj_b": jnp.zeros(((N + 1) * D,)),
+        "out_w": _dense_init(keys[1], D, D),
+        "out_b": jnp.zeros((D,)),
+        "bias": jax.random.normal(keys[3], (N, D)) * 0.2,
+    }
+    if F > 0:
+        # Identity-ish init: tap 0 near 1 so the block starts close to linear.
+        sc = jax.random.normal(keys[2], ((N + 1) * D, F)) * 0.1
+        p["short_w"] = sc.at[:, 0].add(1.0)
+    fsub = filters.init_filter(keys[4], cfg.get("filter_kind", "implicit"), N, D, cfg)
+    p.update({f"filter.{k}": v for k, v in fsub.items()})
+    return p
+
+
+def _filter_sub(p: dict) -> dict:
+    return {k[len("filter."):]: v for k, v in p.items() if k.startswith("filter.")}
+
+
+def hyena_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Order-N Hyena forward (Algorithm 3)."""
+    B, L, D = u.shape
+    N = cfg.get("order", 2)
+    use_pallas = cfg.get("use_pallas", False)
+
+    # Algorithm 1: projection + depthwise short conv, split into v, x^1..x^N.
+    z = u @ p["proj_w"] + p["proj_b"]  # (B, L, (N+1)D)
+    if "short_w" in p:
+        z = (
+            short_conv_pallas(p["short_w"], z)
+            if use_pallas
+            else ref.short_conv(p["short_w"], z)
+        )
+    z = z.reshape(B, L, N + 1, D).transpose(2, 0, 3, 1)  # (N+1, B, D, L)
+    v, xs = z[0], z[1:]
+
+    # Algorithm 2: materialize implicit filters for all orders at once.
+    hs = filters.materialize_filter(
+        _filter_sub(p), cfg.get("filter_kind", "implicit"), N, D, L, cfg
+    )
+
+    # The recurrence (Def. 3.1): v ← x^n ⊙ (h^n * v + bias_n ⊙ v).
+    step = gated_fftconv_pallas if use_pallas else ref.gated_fftconv
+    for n in range(N):
+        v = step(xs[n], hs[n], v, p["bias"][n])
+
+    y = v.transpose(0, 2, 1)  # (B, L, D)
+    return y @ p["out_w"] + p["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# Exact causal multi-head attention (the quadratic baseline, Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg) -> dict:
+    D = cfg["width"]
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(keys[0], D, D),
+        "wk": _dense_init(keys[1], D, D),
+        "wv": _dense_init(keys[2], D, D),
+        "wo": _dense_init(keys[3], D, D),
+    }
+
+
+def _split_heads(x, H):
+    B, L, D = x.shape
+    return x.reshape(B, L, H, D // H).transpose(0, 2, 1, 3)  # (B, H, L, Dh)
+
+
+def attn_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    B, L, D = u.shape
+    H = cfg.get("n_heads", 2)
+    q = _split_heads(u @ p["wq"], H)
+    k = _split_heads(u @ p["wk"], H)
+    v = _split_heads(u @ p["wv"], H)
+    scale = 1.0 / math.sqrt(D // H)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    y = y.transpose(0, 2, 1, 3).reshape(B, L, D)
+    return y @ p["wo"]
+
+
+def flash_attn_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """FlashAttention-style chunked online softmax (Dao et al., 2022b).
+
+    Identical math to ``attn_op`` but the L×L score matrix is never
+    materialized: KV is scanned in chunks with a running (max, denominator,
+    numerator) triple. This is the memory-bound profile the paper benchmarks
+    against in Fig. 4.3.
+    """
+    B, L, D = u.shape
+    H = cfg.get("n_heads", 2)
+    Cc = min(cfg.get("flash_chunk", 128), L)
+    nchunk = -(-L // Cc)
+    Lp = nchunk * Cc
+
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, Lp - L), (0, 0)))
+
+    q = pad(_split_heads(u @ p["wq"], H))  # (B, H, Lp, Dh)
+    k = pad(_split_heads(u @ p["wk"], H))
+    v = pad(_split_heads(u @ p["wv"], H))
+    scale = 1.0 / math.sqrt(D // H)
+    tq = jnp.arange(Lp)
+
+    kc = k.reshape(B, H, nchunk, Cc, -1).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nchunk, Cc, -1).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        m, den, num = carry
+        j, kj, vj = inp
+        tk = j * Cc + jnp.arange(Cc)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj) * scale  # (B, H, Lp, Cc)
+        s = jnp.where(tq[None, None, :, None] >= tk[None, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        den = den * alpha + pexp.sum(axis=-1)
+        num = num * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", pexp, vj)
+        return (m_new, den, num), None
+
+    Dh = D // H
+    init = (
+        jnp.full((B, H, Lp), -1e30),
+        jnp.zeros((B, H, Lp)),
+        jnp.zeros((B, H, Lp, Dh)),
+    )
+    (m, den, num), _ = jax.lax.scan(body, init, (jnp.arange(nchunk), kc, vc))
+    y = num / jnp.maximum(den, 1e-30)[..., None]
+    y = y.transpose(0, 2, 1, 3).reshape(B, Lp, D)[:, :L]
+    return y @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# GSS and H3 as short Hyena recurrences (Remark 3.2)
+# ---------------------------------------------------------------------------
+
+
+def init_gss(key, cfg) -> dict:
+    c = dict(cfg, order=1, filter_kind="ssm")
+    return init_hyena(key, c)
+
+
+def gss_op(p, u, cfg):
+    return hyena_op(p, u, dict(cfg, order=1, filter_kind="ssm"))
+
+
+def init_h3(key, cfg) -> dict:
+    """H3 = Hyena_2 with a shift filter (short explicit) + a diagonal SSM."""
+    D = cfg["width"]
+    keys = jax.random.split(key, 3)
+    c = dict(cfg, order=2, filter_kind="ssm")
+    p = init_hyena(keys[0], c)
+    # Replace filter order 0 with explicit shift taps (Dao et al., 2022c).
+    p["shift_taps"] = jax.random.normal(keys[1], (D, 4)) * 0.5
+    return p
+
+
+def h3_op(p, u, cfg):
+    B, L, D = u.shape
+    c = dict(cfg, order=2, filter_kind="ssm")
+    z = u @ p["proj_w"] + p["proj_b"]
+    if "short_w" in p:
+        z = ref.short_conv(p["short_w"], z)
+    z = z.reshape(B, L, 3, D).transpose(2, 0, 3, 1)
+    v, xs = z[0], z[1:]
+    hs = filters.materialize_filter(_filter_sub(p), "ssm", 2, D, L, c)
+    # Order 0: shift conv (explicit short taps padded to L).
+    shift = jnp.pad(p["shift_taps"], ((0, 0), (0, L - p["shift_taps"].shape[-1])))
+    v = ref.gated_fftconv(xs[0], shift, v, p["bias"][0])
+    # Order 1: diagonal SSM long conv.
+    v = ref.gated_fftconv(xs[1], hs[1], v, p["bias"][1])
+    y = v.transpose(0, 2, 1)
+    return y @ p["out_w"] + p["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# AFT-conv (Zhai et al., 2021)
+# ---------------------------------------------------------------------------
+
+
+def init_aft(key, cfg) -> dict:
+    D = cfg["width"]
+    M = cfg.get("aft_window", 64)
+    keys = jax.random.split(key, 5)
+    return {
+        "wq": _dense_init(keys[0], D, D),
+        "wk": _dense_init(keys[1], D, D),
+        "wv": _dense_init(keys[2], D, D),
+        "wo": _dense_init(keys[3], D, D),
+        # Learned position-bias kernel w_{t-s}, one per channel (conv form).
+        "pos": jax.random.normal(keys[4], (D, M)) * 0.1,
+    }
+
+
+def aft_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """y_t = σ(q_t) ⊙ Σ_{s≤t} e^{w_{t−s} + k_s} v_s / Σ_{s≤t} e^{w_{t−s} + k_s}."""
+    B, L, D = u.shape
+    q = u @ p["wq"]
+    k = jnp.clip(u @ p["wk"], -8.0, 8.0)
+    v = u @ p["wv"]
+    ek = jnp.exp(k).transpose(0, 2, 1)  # (B, D, L)
+    ev = (jnp.exp(k) * v).transpose(0, 2, 1)
+    M = p["pos"].shape[-1]
+    w = jnp.exp(p["pos"])
+    hw = jnp.pad(w, ((0, 0), (0, L - M))) if M < L else w[:, :L]
+    num = ref.causal_fftconv(hw, ev)
+    den = ref.causal_fftconv(hw, ek)
+    y = (num / jnp.maximum(den, 1e-6)).transpose(0, 2, 1)
+    return (jax.nn.sigmoid(q) * y) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# RWKV-v4-lite (Peng, 2021)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(key, cfg) -> dict:
+    D = cfg["width"]
+    keys = jax.random.split(key, 5)
+    return {
+        "wr": _dense_init(keys[0], D, D),
+        "wk": _dense_init(keys[1], D, D),
+        "wv": _dense_init(keys[2], D, D),
+        "wo": _dense_init(keys[3], D, D),
+        # Per-channel decay (positive via softplus) and first-token bonus.
+        "decay": jnp.linspace(-1.0, 2.0, D),
+        "bonus": jnp.zeros((D,)),
+    }
+
+
+def rwkv_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Linear-attention recurrence: exponential-decay weighted kv average."""
+    B, L, D = u.shape
+    r = jax.nn.sigmoid(u @ p["wr"])
+    k = jnp.clip(u @ p["wk"], -8.0, 8.0)
+    v = u @ p["wv"]
+    wdecay = jnp.exp(-jax.nn.softplus(p["decay"]))  # (D,) in (0, 1)
+    bonus = jnp.exp(p["bonus"])
+
+    def step(carry, inp):
+        a, b = carry  # numerator / denominator state, (B, D)
+        kt, vt = inp
+        ekt = jnp.exp(kt)
+        out = (a + bonus * ekt * vt) / (b + bonus * ekt + 1e-6)
+        a = wdecay * a + ekt * vt
+        b = wdecay * b + ekt
+        return (a, b), out
+
+    k_t = k.transpose(1, 0, 2)  # (L, B, D)
+    v_t = v.transpose(1, 0, 2)
+    init = (jnp.zeros((B, D)), jnp.zeros((B, D)))
+    _, wkv = jax.lax.scan(step, init, (k_t, v_t))
+    y = r * wkv.transpose(1, 0, 2)
+    return y @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+OPS = {
+    "hyena": (init_hyena, hyena_op),
+    "attn": (init_attn, attn_op),
+    "flash": (init_attn, flash_attn_op),
+    "gss": (init_gss, gss_op),
+    "h3": (init_h3, h3_op),
+    "aft": (init_aft, aft_op),
+    "rwkv": (init_rwkv, rwkv_op),
+}
+
+
+def init_op(key, kind: str, cfg) -> dict:
+    return OPS[kind][0](key, cfg)
+
+
+def apply_op(params: dict, kind: str, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    return OPS[kind][1](params, u, cfg)

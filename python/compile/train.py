@@ -1,0 +1,85 @@
+"""Training step: AdamW + linear-warmup/cosine-decay LR, all inside the graph.
+
+The step counter enters as a traced f32 scalar so the LR schedule (paper
+App. A.2, Tab. A.1/A.3) is computed inside XLA — the Rust trainer only
+increments an integer. Matches the paper's recipe: AdamW β=(0.9, 0.98),
+weight decay 0.1, linear warmup → cosine decay to lr_min.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+
+def lr_schedule(step, cfg):
+    peak = cfg.get("lr", 6e-4)
+    warm = float(cfg.get("warmup_steps", 100))
+    total = float(cfg.get("total_steps", 1000))
+    lr_min = cfg.get("lr_min", peak * 0.1)
+    warm_lr = peak * (step + 1.0) / warm
+    prog = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos_lr = lr_min + 0.5 * (peak - lr_min) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warm, warm_lr, cos_lr)
+
+
+def _decay_mask(name: str, arr) -> bool:
+    """Weight decay on matrices only (not biases/LN/embedding-like vectors)."""
+    return arr.ndim >= 2
+
+
+def adamw_step(params: dict, grads: dict, m: dict, v: dict, step, cfg):
+    b1 = cfg.get("beta1", 0.9)
+    b2 = cfg.get("beta2", 0.98)
+    eps = cfg.get("adam_eps", 1e-8)
+    wd = cfg.get("weight_decay", 0.1)
+    lr = lr_schedule(step, cfg)
+    t = step + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1.0 - b1) * g
+        v_k = b2 * v[k] + (1.0 - b2) * g * g
+        upd = (m_k / bc1) / (jnp.sqrt(v_k / bc2) + eps)
+        if _decay_mask(k, params[k]):
+            upd = upd + wd * params[k]
+        new_p[k] = params[k] - lr * upd
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v
+
+
+def make_lm_train_step(cfg):
+    """(params, m, v, step, tokens, targets, mask) → (params', m', v', loss)."""
+
+    def step_fn(params, m, v, step, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(model.lm_loss)(
+            params, tokens, targets, mask, cfg
+        )
+        # Gradient clipping by global norm (standard GPT recipe).
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        clip = cfg.get("grad_clip", 1.0)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = {k: g * scale for k, g in grads.items()}
+        new_p, new_m, new_v = adamw_step(params, grads, m, v, step, cfg)
+        return new_p, new_m, new_v, loss
+
+    return step_fn
+
+
+def make_img_train_step(cfg):
+    """(params, m, v, step, images, labels) → (params', m', v', loss)."""
+
+    def step_fn(params, m, v, step, images, labels):
+        loss, grads = jax.value_and_grad(model.img_loss)(params, images, labels, cfg)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        clip = cfg.get("grad_clip", 1.0)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = {k: g * scale for k, g in grads.items()}
+        new_p, new_m, new_v = adamw_step(params, grads, m, v, step, cfg)
+        return new_p, new_m, new_v, loss
+
+    return step_fn

@@ -1,0 +1,83 @@
+"""Config registry sanity: every experiment artifact is well-formed and its
+model builds (shape-level, via eval_shape — no FLOPs spent)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, ops
+from compile.configs import CONFIGS
+
+
+def test_registry_covers_experiment_index():
+    """DESIGN.md §5: at least one artifact per experiment family."""
+    names = set(CONFIGS)
+    for probe in [
+        "ar_implicit_L128", "ar_conv1d_L512",         # E1
+        "op_hyena_L1024", "op_rwkv_L1024",            # E2
+        "lm_hyena3slim_wt",                           # E3
+        "lm_gpt_s", "lm_hyena_m",                     # E4
+        "rt_attn_L1024", "rt_hyena_L8192",            # E6
+        "rt_hyenapallas_L256",                        # E6 pallas path
+        "img_vit", "img_hyena",                       # E7
+        "arith_d3",                                   # E9
+        "abl_order3", "abl_noshort",                  # ablations
+        "golden_tiny",
+    ]:
+        assert probe in names, probe
+
+
+def test_attention_8k_excluded():
+    """Tab 4.2 / Fig 4.3 mark exact attention OOM at the longest lengths."""
+    assert "rt_attn_L8192" not in CONFIGS
+    assert "rt_flash_L8192" in CONFIGS
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_config_fields(name):
+    cfg = CONFIGS[name]
+    assert cfg["family"] in ("lm", "img")
+    assert cfg["mixer"] in ops.OPS
+    assert cfg["seqlen"] >= 8
+    assert cfg["batch"] >= 1
+    assert cfg["depth"] >= 1
+    if cfg["family"] == "lm":
+        assert cfg["vocab"] >= 8
+    else:
+        assert cfg["classes"] >= 2
+        assert cfg["seqlen"] == (cfg["image"] // cfg["patch"]) ** 2
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["golden_tiny", "op_rwkv_L1024", "lm_hyena3slim_wt", "img_hyena", "abl_noshort"],
+)
+def test_models_build_at_shape_level(name):
+    cfg = CONFIGS[name]
+    init = model.init_lm if cfg["family"] == "lm" else model.init_img
+    fwd = model.forward_lm if cfg["family"] == "lm" else model.forward_img
+    params = jax.eval_shape(lambda s: init(s, cfg), jnp.zeros((), jnp.int32))
+    if cfg["family"] == "lm":
+        data = jax.ShapeDtypeStruct((cfg["batch"], cfg["seqlen"]), jnp.int32)
+        out = jax.eval_shape(lambda p, t: fwd(p, t, cfg), params, data)
+        assert out.shape == (cfg["batch"], cfg["seqlen"], cfg["vocab"])
+    else:
+        data = jax.ShapeDtypeStruct(
+            (cfg["batch"], cfg["image"], cfg["image"]), jnp.float32
+        )
+        out = jax.eval_shape(lambda p, t: fwd(p, t, cfg), params, data)
+        assert out.shape == (cfg["batch"], cfg["classes"])
+
+
+def test_slim_is_deeper_thinner_mlp():
+    """Tab 4.3: Hyena-slim trades MLP width for depth at ~equal params."""
+    base = CONFIGS["lm_hyena3_wt"]
+    slim = CONFIGS["lm_hyena3slim_wt"]
+    assert slim["depth"] > base["depth"]
+    assert slim["mlp_ratio"] < base["mlp_ratio"]
+
+
+def test_flop_accounting_matches_between_attention_variants():
+    """attn and flash share FLOP counts (same math)."""
+    a = model.flops_per_token_lm(dict(CONFIGS["op_attn_L1024"]))
+    f = model.flops_per_token_lm(dict(CONFIGS["op_flash_L1024"]))
+    assert a == f

@@ -1,0 +1,95 @@
+"""Filter parametrizations: shapes, causality-by-construction, spectra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import filters
+
+CFG = dict(
+    pe_features=8, filter_width=32, filter_depth=4, sine_freq=14.0,
+    filter_size=16, fno_modes=16, ssm_state=8, tf_order=8,
+)
+KINDS = ["implicit", "ckconv", "conv1d", "fno", "ssm", "tf"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("N,D,L", [(1, 4, 32), (2, 8, 64), (3, 2, 16)])
+def test_shapes_and_finite(kind, N, D, L):
+    p = filters.init_filter(jax.random.PRNGKey(0), kind, N, D, CFG)
+    h = filters.materialize_filter(p, kind, N, D, L, CFG)
+    assert h.shape == (N, D, L)
+    assert h.dtype == jnp.float32
+    assert bool(jnp.isfinite(h).all())
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_deterministic(kind):
+    p = filters.init_filter(jax.random.PRNGKey(7), kind, 2, 4, CFG)
+    h1 = filters.materialize_filter(p, kind, 2, 4, 32, CFG)
+    h2 = filters.materialize_filter(p, kind, 2, 4, 32, CFG)
+    np.testing.assert_array_equal(h1, h2)
+
+
+def test_positional_encoding_shape_and_bounds():
+    pe = filters.positional_encoding(64, 8)
+    assert pe.shape == (64, 17)
+    assert float(jnp.abs(pe[:, 1:]).max()) <= 1.0 + 1e-6
+    # first feature is normalized time
+    np.testing.assert_allclose(pe[0, 0], 0.0)
+    np.testing.assert_allclose(pe[-1, 0], 1.0)
+
+
+def test_implicit_decay_window_shrinks_tail():
+    """The decay-windowed Hyena filter has a smaller tail than raw CKConv
+    output with the same FFN params (Fig. 3.1)."""
+    p = filters.init_filter(jax.random.PRNGKey(0), "implicit", 1, 8, CFG)
+    L = 128
+    h_win = filters.materialize_filter(p, "implicit", 1, 8, L, CFG)
+    h_raw = filters.materialize_filter(p, "ckconv", 1, 8, L, CFG)
+    tail_ratio_win = float(jnp.abs(h_win[..., L // 2 :]).mean() / jnp.abs(h_win).mean())
+    tail_ratio_raw = float(jnp.abs(h_raw[..., L // 2 :]).mean() / jnp.abs(h_raw).mean())
+    assert tail_ratio_win < tail_ratio_raw
+
+
+def test_conv1d_zero_pads_beyond_filter_size():
+    p = filters.init_filter(jax.random.PRNGKey(1), "conv1d", 1, 2, CFG)
+    h = filters.materialize_filter(p, "conv1d", 1, 2, 64, CFG)
+    assert float(jnp.abs(h[..., CFG["filter_size"]:]).max()) == 0.0
+
+
+def test_ssm_filters_decay():
+    """Stable diagonal SSM: |h_t| decays with t on average (spectral radius < 1)."""
+    p = filters.init_filter(jax.random.PRNGKey(2), "ssm", 1, 8, CFG)
+    h = filters.materialize_filter(p, "ssm", 1, 8, 256, CFG)
+    head = float(jnp.abs(h[..., :32]).mean())
+    tail = float(jnp.abs(h[..., -32:]).mean())
+    assert tail < head
+
+
+def test_tf_stable_at_init():
+    p = filters.init_filter(jax.random.PRNGKey(3), "tf", 2, 4, CFG)
+    h = filters.materialize_filter(p, "tf", 2, 4, 128, CFG)
+    assert bool(jnp.isfinite(h).all())
+    assert float(jnp.abs(h).max()) < 100.0
+
+
+def test_sine_frequency_raises_high_freq_content():
+    """App. D.3: larger ω_a fills in more of the spectrum at init."""
+    def hf_energy(omega):
+        cfg = dict(CFG, sine_freq=omega)
+        p = filters.init_filter(jax.random.PRNGKey(4), "ckconv", 1, 8, cfg)
+        h = filters.materialize_filter(p, "ckconv", 1, 8, 128, cfg)
+        spec = jnp.abs(jnp.fft.rfft(h, axis=-1))
+        return float(spec[..., 32:].sum() / spec.sum())
+
+    assert hf_energy(14.0) > hf_energy(0.1)
+
+
+def test_fno_modes_bandlimit():
+    """FNO filters contain no energy above the parametrized mode count."""
+    cfg = dict(CFG, fno_modes=4)
+    p = filters.init_filter(jax.random.PRNGKey(5), "fno", 1, 2, cfg)
+    h = filters.materialize_filter(p, "fno", 1, 2, 64, cfg)
+    spec = jnp.abs(jnp.fft.rfft(h, axis=-1))
+    assert float(spec[..., 4:].max()) < 1e-5

@@ -1,0 +1,169 @@
+//! Dynamic batching policy for the inference server.
+//!
+//! Requests accumulate in a queue; a batch is released when either (a) the
+//! batch is full (the compiled executable's static batch dimension), or
+//! (b) the oldest queued request has waited `max_wait`. This is the standard
+//! serving trade-off between padding waste and queueing latency; the policy
+//! sweep is benchmarked in `benches/server.rs`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Decision state independent of I/O so the policy is unit/property-testable.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<(Instant, T)>,
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
+        assert!(batch_size > 0);
+        Batcher { queue: VecDeque::new(), batch_size, max_wait }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back((Instant::now(), item));
+    }
+
+    pub fn push_at(&mut self, at: Instant, item: T) {
+        self.queue.push_back((at, item));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be released right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.batch_size {
+            return true;
+        }
+        match self.queue.front() {
+            Some((t, _)) => now.duration_since(*t) >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline of the oldest request (for worker sleeps).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|(t, _)| {
+            let elapsed = now.duration_since(*t);
+            self.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Pop up to `batch_size` requests, FIFO.
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.batch_size);
+        self.queue.drain(..n).map(|(_, x)| x).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn releases_on_full_batch() {
+        let mut b = Batcher::new(4, Duration::from_secs(60));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push_at(now, i);
+        }
+        assert!(b.ready(now));
+        assert_eq!(b.take_batch(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push_at(t0, 1u32);
+        assert!(!b.ready(t0));
+        assert!(b.ready(t0 + Duration::from_millis(11)));
+        assert_eq!(b.take_batch(), vec![1]);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<u32> = Batcher::new(2, Duration::from_millis(0));
+        assert!(!b.ready(Instant::now()));
+        assert_eq!(b.time_to_deadline(Instant::now()), None);
+    }
+
+    #[test]
+    fn take_batch_caps_at_batch_size() {
+        let mut b = Batcher::new(3, Duration::from_secs(1));
+        let now = Instant::now();
+        for i in 0..7 {
+            b.push_at(now, i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 4);
+    }
+
+    /// Property: across any push/take interleavings, no request is lost or
+    /// duplicated, and batches preserve FIFO order.
+    #[test]
+    fn prop_no_loss_no_duplication_fifo() {
+        Prop::new("batcher conservation").cases(200).check(|rng| {
+            let bs = 1 + rng.usize_below(6);
+            let mut b = Batcher::new(bs, Duration::from_secs(60));
+            let now = Instant::now();
+            let total = 1 + rng.usize_below(40);
+            let mut pushed = 0u32;
+            let mut popped: Vec<u32> = Vec::new();
+            while popped.len() < total {
+                if pushed < total as u32 && rng.f32() < 0.6 {
+                    b.push_at(now, pushed);
+                    pushed += 1;
+                } else if !b.is_empty() {
+                    let batch = b.take_batch();
+                    prop_assert!(batch.len() <= bs, "batch over size");
+                    popped.extend(batch);
+                } else if pushed >= total as u32 {
+                    break;
+                }
+            }
+            popped.extend(b.take_batch());
+            while !b.is_empty() {
+                popped.extend(b.take_batch());
+            }
+            let want: Vec<u32> = (0..pushed).collect();
+            prop_assert!(popped == want, "lost/dup/reorder: {popped:?}");
+            Ok(())
+        });
+    }
+
+    /// Property: `ready` is monotone in time — once ready (with no queue
+    /// change), it stays ready.
+    #[test]
+    fn prop_ready_monotone() {
+        Prop::new("ready monotone").cases(100).check(|rng| {
+            let mut b = Batcher::new(4, Duration::from_millis(rng.u64_wait()));
+            let t0 = Instant::now();
+            b.push_at(t0, 0u8);
+            let d1 = Duration::from_millis(rng.below(100) as u64);
+            let d2 = d1 + Duration::from_millis(rng.below(100) as u64);
+            let r1 = b.ready(t0 + d1);
+            let r2 = b.ready(t0 + d2);
+            prop_assert!(!r1 || r2, "ready regressed");
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
+impl crate::util::rng::Pcg {
+    fn u64_wait(&mut self) -> u64 {
+        self.below(50) as u64
+    }
+}

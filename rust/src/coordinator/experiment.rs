@@ -1,0 +1,82 @@
+//! Shared experiment-driver plumbing for the `examples/` binaries: train an
+//! artifact on a batch source, evaluate, and time forward/train passes.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{eval_accuracy, BatchSource, TrainReport, Trainer};
+use crate::runtime::{ModelState, Tensor};
+use crate::util::stats::Summary;
+
+/// Train `artifact` for `steps` on `source`; returns the model + report.
+pub fn train_artifact<S: BatchSource>(
+    dir: &Path,
+    seed: i32,
+    mut source: S,
+    steps: u64,
+    quiet: bool,
+) -> Result<(ModelState, TrainReport)> {
+    let mut model = ModelState::load(dir, seed)?;
+    let report = {
+        let mut tr = Trainer::new(&mut model, || source.next_batch());
+        tr.quiet = quiet;
+        tr.run(steps)?
+    };
+    Ok((model, report))
+}
+
+/// Train then measure masked-position accuracy on fresh batches.
+pub fn train_and_eval<S: BatchSource>(
+    dir: &Path,
+    seed: i32,
+    mut source: S,
+    steps: u64,
+    eval_batches: usize,
+    quiet: bool,
+) -> Result<(f64, TrainReport)> {
+    let (model, report) = train_artifact(dir, seed, || source.next_batch(), steps, quiet)?;
+    let acc = eval_accuracy(&model, &mut || source.next_batch(), eval_batches)?;
+    Ok((acc, report))
+}
+
+/// Wall-time a forward pass `iters` times after `warmup` runs.
+pub fn bench_forward(
+    model: &ModelState,
+    inputs: &[Tensor],
+    warmup: usize,
+    iters: usize,
+) -> Result<Summary> {
+    for _ in 0..warmup {
+        model.forward(inputs)?;
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        model.forward(inputs)?;
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(s)
+}
+
+/// Wall-time train steps.
+pub fn bench_train_step<S: BatchSource>(
+    model: &mut ModelState,
+    source: &mut S,
+    warmup: usize,
+    iters: usize,
+) -> Result<Summary> {
+    for _ in 0..warmup {
+        let b = source.next_batch();
+        model.train_step(&b)?;
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let b = source.next_batch();
+        let t0 = Instant::now();
+        model.train_step(&b)?;
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(s)
+}

@@ -1,0 +1,111 @@
+//! Zero/few-shot evaluation harness (SuperGLUE stand-in, Tab. 4.5/4.6 —
+//! substitution documented in DESIGN.md §3).
+//!
+//! Protocol mirrors the paper's: score each answer option by its total
+//! log-probability given the prompt (logit scoring, as the paper uses for
+//! WIC/CB/BoolQ), optionally prepending k solved demonstrations. Tasks are
+//! built from the synthetic suite so pretrained TinyPile models can be
+//! probed for in-context ability without external datasets.
+
+use anyhow::Result;
+
+use crate::coordinator::generation::logprob_at;
+use crate::runtime::{ModelState, Tensor};
+use crate::util::rng::Pcg;
+
+/// One multiple-choice episode: prompt tokens + candidate answer tokens.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub prompt: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+/// Score one episode: pick the option with the highest mean token logprob.
+/// Returns (chosen index, was_correct).
+pub fn score_episode(model: &ModelState, ep: &Episode) -> Result<(usize, bool)> {
+    let b = model.manifest.batch()?;
+    let l = model.manifest.seqlen()?;
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (oi, opt) in ep.options.iter().enumerate() {
+        let mut seq = ep.prompt.clone();
+        seq.extend_from_slice(opt);
+        assert!(seq.len() <= l, "episode longer than model window");
+        let mut toks = vec![0i32; b * l];
+        toks[..seq.len()].copy_from_slice(&seq);
+        let logits = model.forward(&[Tensor::from_i32(&[b, l], toks)?])?;
+        let mut lp = 0.0f32;
+        for (k, &tok) in opt.iter().enumerate() {
+            let pos = ep.prompt.len() + k - 1; // logits at pos predict pos+1
+            lp += logprob_at(&logits, 0, pos, tok)?;
+        }
+        let mean_lp = lp / opt.len() as f32;
+        if mean_lp > best.0 {
+            best = (mean_lp, oi);
+        }
+    }
+    Ok((best.1, best.1 == ep.correct))
+}
+
+/// Build a k-shot episode by prepending `k` solved demonstrations of the
+/// same task (episodes share the generator, not the instance).
+pub fn with_shots(mut make: impl FnMut(&mut Pcg) -> Episode, k: usize, rng: &mut Pcg) -> Episode {
+    let target = make(rng);
+    let mut prompt = Vec::new();
+    for _ in 0..k {
+        let demo = make(rng);
+        prompt.extend_from_slice(&demo.prompt);
+        prompt.extend_from_slice(&demo.options[demo.correct]);
+    }
+    prompt.extend_from_slice(&target.prompt);
+    Episode { prompt, options: target.options, correct: target.correct }
+}
+
+/// Evaluate accuracy over n episodes.
+pub fn eval_episodes(
+    model: &ModelState,
+    mut make: impl FnMut(&mut Pcg) -> Episode,
+    shots: usize,
+    n: usize,
+    rng: &mut Pcg,
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for _ in 0..n {
+        let ep = with_shots(&mut make, shots, rng);
+        if score_episode(model, &ep)?.1 {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_shots_prepends_demos() {
+        let mut rng = Pcg::new(0);
+        let make = |_: &mut Pcg| Episode {
+            prompt: vec![1, 2],
+            options: vec![vec![3], vec![4]],
+            correct: 1,
+        };
+        let ep = with_shots(make, 2, &mut rng);
+        // two demos of (prompt + correct option) then the target prompt
+        assert_eq!(ep.prompt, vec![1, 2, 4, 1, 2, 4, 1, 2]);
+        assert_eq!(ep.correct, 1);
+    }
+
+    #[test]
+    fn zero_shots_is_plain_episode() {
+        let mut rng = Pcg::new(1);
+        let make = |_: &mut Pcg| Episode {
+            prompt: vec![9],
+            options: vec![vec![1]],
+            correct: 0,
+        };
+        let ep = with_shots(make, 0, &mut rng);
+        assert_eq!(ep.prompt, vec![9]);
+    }
+}

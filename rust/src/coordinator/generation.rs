@@ -1,0 +1,167 @@
+//! Autoregressive decoding + token sampling.
+//!
+//! Hyena has no KV cache (it is convolutional; the paper defers fast
+//! autoregressive inference to future work), so decoding recomputes the
+//! forward pass per generated token over the compiled fixed-length window.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ModelState, Tensor};
+use crate::util::rng::Pcg;
+
+/// Sampling policy for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// Temperature softmax sampling; optional top-k truncation.
+    Temperature { t: f32, top_k: usize },
+}
+
+/// Pick the next token from a logits row.
+pub fn sample_token(row: &[f32], s: Sampling, rng: &mut Pcg) -> i32 {
+    match s {
+        Sampling::Greedy => argmax(row),
+        Sampling::Temperature { t, top_k } => {
+            let t = t.max(1e-4);
+            let mut idx: Vec<usize> = (0..row.len()).collect();
+            if top_k > 0 && top_k < row.len() {
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                idx.truncate(top_k);
+            }
+            let mx = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f32> = idx.iter().map(|&i| ((row[i] - mx) / t).exp()).collect();
+            idx[rng.weighted(&weights)] as i32
+        }
+    }
+}
+
+pub fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// Decode a *batch* of prompts together through the compiled forward pass.
+///
+/// `prompts` are token id vectors (each < seqlen). Rows are padded with 0;
+/// causality guarantees pad positions after a row's frontier cannot affect
+/// its next-token logits. Each row stops after its own `max_new` tokens or
+/// at the model's window edge. Returns the generated suffixes.
+pub fn decode_batch(
+    model: &ModelState,
+    prompts: &[Vec<i32>],
+    max_new: &[usize],
+    sampling: Sampling,
+    rng: &mut Pcg,
+) -> Result<Vec<Vec<i32>>> {
+    let b = model.manifest.batch()?;
+    let l = model.manifest.seqlen()?;
+    let v = model.manifest.vocab()?;
+    if prompts.len() > b {
+        bail!("{} prompts > compiled batch {}", prompts.len(), b);
+    }
+    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
+    for s in &seqs {
+        if s.is_empty() || s.len() >= l {
+            bail!("prompt length {} out of range (1..{})", s.len(), l);
+        }
+    }
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let max_rounds = max_new.iter().copied().max().unwrap_or(0);
+
+    for _ in 0..max_rounds {
+        // Assemble the padded token matrix.
+        let mut toks = vec![0i32; b * l];
+        for (r, s) in seqs.iter().enumerate() {
+            toks[r * l..r * l + s.len()].copy_from_slice(s);
+        }
+        let logits = model.forward(&[Tensor::from_i32(&[b, l], toks)?])?;
+        let lf = logits.as_f32()?;
+        let mut progressed = false;
+        for (r, s) in seqs.iter_mut().enumerate() {
+            if out[r].len() >= max_new[r] || s.len() >= l {
+                continue;
+            }
+            let pos = s.len() - 1;
+            let row = &lf[(r * l + pos) * v..(r * l + pos + 1) * v];
+            let tok = sample_token(row, sampling, rng);
+            s.push(tok);
+            out[r].push(tok);
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+/// Per-position logits row accessor used by few-shot scoring: returns the
+/// log-softmax score of `target` at position `pos` of row `r`.
+pub fn logprob_at(logits: &Tensor, r: usize, pos: usize, target: i32) -> Result<f32> {
+    let shape = logits.shape();
+    let (l, v) = (shape[1], shape[2]);
+    let lf = logits.as_f32()?;
+    let row = &lf[(r * l + pos) * v..(r * l + pos + 1) * v];
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+    Ok(row[target as usize] - lse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let row = [0.1, 2.0, -1.0, 1.9];
+        let mut rng = Pcg::new(0);
+        assert_eq!(sample_token(&row, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let row = [0.0, 5.0, 0.0];
+        let mut rng = Pcg::new(1);
+        for _ in 0..50 {
+            let t = sample_token(
+                &row,
+                Sampling::Temperature { t: 0.01, top_k: 0 },
+                &mut rng,
+            );
+            assert_eq!(t, 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let row = [10.0, 9.0, -50.0, -50.0];
+        let mut rng = Pcg::new(2);
+        for _ in 0..100 {
+            let t = sample_token(
+                &row,
+                Sampling::Temperature { t: 5.0, top_k: 2 },
+                &mut rng,
+            );
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let row = [1.0, 0.9, 0.8, 0.7];
+        let mut rng = Pcg::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..300 {
+            let t = sample_token(
+                &row,
+                Sampling::Temperature { t: 10.0, top_k: 0 },
+                &mut rng,
+            );
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordination: training orchestration, dynamic-batching inference
+//! server, autoregressive decoding, few-shot evaluation harness.
+pub mod batcher;
+pub mod experiment;
+pub mod fewshot;
+pub mod generation;
+pub mod server;
+pub mod trainer;

@@ -1,0 +1,202 @@
+//! Threaded inference server with dynamic batching (serving-path L3).
+//!
+//! XLA handles are `!Send`, so the worker thread *constructs* its own
+//! `ModelState` from the artifact path; clients and worker exchange plain
+//! host data (`Vec<i32>` token ids) over mpsc channels. The worker drains
+//! the queue through the `Batcher` policy (full-batch or deadline), pads the
+//! prompt rows and decodes the whole batch together — request-level
+//! continuous batching (iteration-level rebatching has no payoff without a
+//! KV cache; the paper defers fast autoregressive inference to future work).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::generation::{decode_batch, Sampling};
+use crate::runtime::{ModelState, Tensor};
+use crate::util::rng::Pcg;
+
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampling: Sampling,
+}
+
+#[derive(Debug)]
+pub struct GenerateResponse {
+    pub tokens: Vec<i32>,
+    /// Time spent queued before entering a batch.
+    pub queue_time: Duration,
+    /// Wall time from submission to completion.
+    pub total_time: Duration,
+    /// How many requests shared the batch (observability).
+    pub batch_occupancy: usize,
+}
+
+struct Envelope {
+    req: GenerateRequest,
+    submitted: Instant,
+    reply: Sender<Result<GenerateResponse>>,
+}
+
+/// Handle used by clients to submit requests (cloneable, Send).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Envelope>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenerateRequest) -> Receiver<Result<GenerateResponse>> {
+        let (reply_tx, reply_rx) = channel();
+        let env = Envelope { req, submitted: Instant::now(), reply: reply_tx };
+        // If the worker is gone the reply channel closes and the caller
+        // observes a RecvError.
+        let _ = self.tx.send(env);
+        reply_rx
+    }
+
+    /// Convenience blocking call.
+    pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("server worker terminated"))?
+    }
+}
+
+pub struct Server {
+    pub handle: ServerHandle,
+    worker: Option<JoinHandle<()>>,
+    shutdown: Sender<()>,
+}
+
+impl Server {
+    /// Start the worker thread: it loads+compiles the artifact at
+    /// `artifact_dir` itself (XLA state never crosses threads) and then
+    /// serves until `stop()`. Blocks until the model is ready.
+    pub fn start(artifact_dir: PathBuf, seed: i32, max_wait: Duration) -> Result<Server> {
+        Self::start_with_params(artifact_dir, seed, max_wait, None)
+    }
+
+    /// Like [`Server::start`], but install pretrained parameters (host
+    /// tensors, manifest order) into the worker's model — the hand-off used
+    /// by `examples/lm_pretrain.rs` after training.
+    pub fn start_with_params(
+        artifact_dir: PathBuf,
+        seed: i32,
+        max_wait: Duration,
+        params: Option<Vec<Tensor>>,
+    ) -> Result<Server> {
+        let (tx, rx) = channel::<Envelope>();
+        let (sd_tx, sd_rx) = channel::<()>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        let worker = std::thread::Builder::new()
+            .name("hyena-server".into())
+            .spawn(move || {
+                let model = match ModelState::load(&artifact_dir, seed).and_then(|mut m| {
+                    if let Some(p) = params {
+                        m.set_params(&p)?;
+                    }
+                    Ok(m)
+                }) {
+                    Ok(m) => {
+                        let bs = m.manifest.batch().unwrap_or(1);
+                        let _ = ready_tx.send(Ok(bs));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let batch_size = model.manifest.batch().unwrap_or(1);
+                worker_loop(model, rx, sd_rx, batch_size, max_wait, seed as u64);
+            })
+            .expect("spawn server worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))??;
+        Ok(Server { handle: ServerHandle { tx }, worker: Some(worker), shutdown: sd_tx })
+    }
+
+    pub fn stop(mut self) {
+        let _ = self.shutdown.send(());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    model: ModelState,
+    rx: Receiver<Envelope>,
+    shutdown: Receiver<()>,
+    batch_size: usize,
+    max_wait: Duration,
+    seed: u64,
+) {
+    let mut batcher: Batcher<Envelope> = Batcher::new(batch_size, max_wait);
+    let mut rng = Pcg::with_stream(seed, 0x5e44);
+    loop {
+        // Drain everything currently queued on the channel.
+        loop {
+            match rx.try_recv() {
+                Ok(env) => batcher.push(env),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        if shutdown.try_recv().is_ok() {
+            return;
+        }
+        let now = Instant::now();
+        if batcher.ready(now) {
+            let envs = batcher.take_batch();
+            serve_batch(&model, envs, &mut rng);
+            continue;
+        }
+        // Sleep until the oldest deadline or a short poll tick.
+        let wait = batcher
+            .time_to_deadline(now)
+            .unwrap_or(Duration::from_millis(2))
+            .min(Duration::from_millis(2))
+            .max(Duration::from_micros(200));
+        if let Ok(env) = rx.recv_timeout(wait) {
+            batcher.push(env);
+        }
+    }
+}
+
+fn serve_batch(model: &ModelState, envs: Vec<Envelope>, rng: &mut Pcg) {
+    let occupancy = envs.len();
+    let entered = Instant::now();
+    let prompts: Vec<Vec<i32>> = envs.iter().map(|e| e.req.prompt.clone()).collect();
+    let max_new: Vec<usize> = envs.iter().map(|e| e.req.max_new).collect();
+    // All requests in a batch share one sampling config (first wins); the
+    // compiled graph is identical either way, this just simplifies the loop.
+    let sampling = envs.first().map(|e| e.req.sampling).unwrap_or(Sampling::Greedy);
+
+    match decode_batch(model, &prompts, &max_new, sampling, rng) {
+        Ok(outputs) => {
+            for (env, tokens) in envs.into_iter().zip(outputs) {
+                let resp = GenerateResponse {
+                    tokens,
+                    queue_time: entered.duration_since(env.submitted),
+                    total_time: env.submitted.elapsed(),
+                    batch_occupancy: occupancy,
+                };
+                let _ = env.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for env in envs {
+                let _ = env.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

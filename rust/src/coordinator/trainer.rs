@@ -1,0 +1,179 @@
+//! Training loop orchestrator: drives a `ModelState`'s train_step executable
+//! over a batch source, tracks losses/throughput, and mirrors the in-graph
+//! LR schedule for logging.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::perplexity;
+use crate::runtime::{ModelState, Tensor};
+
+/// Anything that can produce training batches (tasks, corpus, images).
+pub trait BatchSource {
+    /// Next batch in the model's train_step layout.
+    fn next_batch(&mut self) -> Vec<Tensor>;
+}
+
+impl<F: FnMut() -> Vec<Tensor>> BatchSource for F {
+    fn next_batch(&mut self) -> Vec<Tensor> {
+        self()
+    }
+}
+
+/// One recorded point on the loss curve.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    pub step: u64,
+    pub loss: f32,
+    pub ppl: f32,
+    pub tokens_seen: u64,
+    pub elapsed_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub curve: Vec<LogPoint>,
+    pub final_loss: f32,
+    pub steps: u64,
+    pub tokens_seen: u64,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+    pub tokens_per_s: f64,
+    /// From the manifest's App. A.2 accounting: total training FLOPs.
+    pub total_flops: Option<f64>,
+}
+
+pub struct Trainer<'a, S: BatchSource> {
+    pub model: &'a mut ModelState,
+    pub source: S,
+    pub log_every: u64,
+    /// Exponential moving average window for reported losses.
+    pub ema: f32,
+    pub quiet: bool,
+}
+
+impl<'a, S: BatchSource> Trainer<'a, S> {
+    pub fn new(model: &'a mut ModelState, source: S) -> Self {
+        Trainer { model, source, log_every: 50, ema: 0.9, quiet: false }
+    }
+
+    /// Run `steps` optimizer steps; returns the loss curve and throughput.
+    pub fn run(&mut self, steps: u64) -> Result<TrainReport> {
+        let tokens_per_batch = (self.model.manifest.batch()?
+            * self.model.manifest.seqlen().unwrap_or(1)) as u64;
+        let flops_per_step = self.model.manifest.flops_per_step;
+        let t0 = Instant::now();
+        let mut curve = Vec::new();
+        let mut ema_loss: Option<f32> = None;
+        let mut last = 0.0f32;
+        for i in 0..steps {
+            let batch = self.source.next_batch();
+            let loss = self.model.train_step(&batch)?;
+            last = loss;
+            ema_loss = Some(match ema_loss {
+                None => loss,
+                Some(e) => self.ema * e + (1.0 - self.ema) * loss,
+            });
+            if i % self.log_every == 0 || i + 1 == steps {
+                let point = LogPoint {
+                    step: self.model.step,
+                    loss: ema_loss.unwrap(),
+                    ppl: perplexity(ema_loss.unwrap()),
+                    tokens_seen: self.model.step * tokens_per_batch,
+                    elapsed_s: t0.elapsed().as_secs_f64(),
+                };
+                if !self.quiet {
+                    println!(
+                        "  step {:>6}  loss {:.4}  ppl {:>8.2}  tok {:>9}  {:.1}s",
+                        point.step, point.loss, point.ppl, point.tokens_seen, point.elapsed_s
+                    );
+                }
+                curve.push(point);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            final_loss: ema_loss.unwrap_or(last),
+            steps,
+            tokens_seen: steps * tokens_per_batch,
+            wall_s: wall,
+            steps_per_s: steps as f64 / wall.max(1e-9),
+            tokens_per_s: (steps * tokens_per_batch) as f64 / wall.max(1e-9),
+            total_flops: flops_per_step.map(|f| f * steps as f64),
+            curve,
+        })
+    }
+}
+
+/// Evaluate masked next-token accuracy of `model` on batches from `source`:
+/// fraction of positions with mask > 0 where argmax(logits) == target.
+/// This is the metric for all synthetic-task tables (Fig 4.1, Tab 4.2, ...).
+pub fn eval_accuracy<S: BatchSource>(
+    model: &ModelState,
+    source: &mut S,
+    batches: usize,
+) -> Result<f64> {
+    let mut correct = 0u64;
+    let mut total = 0u64;
+    for _ in 0..batches {
+        let batch = source.next_batch();
+        let (tokens, targets, mask) = (&batch[0], &batch[1], &batch[2]);
+        let logits = model.forward(std::slice::from_ref(tokens))?;
+        let v = *logits.shape().last().unwrap();
+        let l = logits.shape()[1];
+        let lf = logits.as_f32()?;
+        let tg = targets.as_i32()?;
+        let mk = mask.as_f32()?;
+        for (pos, (&t, &m)) in tg.iter().zip(mk.iter()).enumerate() {
+            if m <= 0.0 {
+                continue;
+            }
+            let row = &lf[pos * v..(pos + 1) * v];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            total += 1;
+            if argmax == t.clamp(0, v as i32 - 1) {
+                correct += 1;
+            }
+        }
+        debug_assert_eq!(lf.len() % (l * v), 0);
+    }
+    Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
+}
+
+/// Evaluate mean masked cross-entropy (→ perplexity) on held-out batches.
+pub fn eval_loss<S: BatchSource>(
+    model: &ModelState,
+    source: &mut S,
+    batches: usize,
+) -> Result<f64> {
+    let mut total_nll = 0.0f64;
+    let mut total_cnt = 0.0f64;
+    for _ in 0..batches {
+        let batch = source.next_batch();
+        let (tokens, targets, mask) = (&batch[0], &batch[1], &batch[2]);
+        let logits = model.forward(std::slice::from_ref(tokens))?;
+        let v = *logits.shape().last().unwrap();
+        let lf = logits.as_f32()?;
+        let tg = targets.as_i32()?;
+        let mk = mask.as_f32()?;
+        for (pos, (&t, &m)) in tg.iter().zip(mk.iter()).enumerate() {
+            if m <= 0.0 {
+                continue;
+            }
+            let row = &lf[pos * v..(pos + 1) * v];
+            // log-softmax at the target index, numerically stable
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+            let ti = (t.max(0) as usize).min(v - 1);
+            total_nll += (lse - row[ti]) as f64;
+            total_cnt += 1.0;
+        }
+    }
+    Ok(total_nll / total_cnt.max(1.0))
+}

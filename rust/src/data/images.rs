@@ -1,0 +1,138 @@
+//! Synthetic-10 image dataset (ImageNet/CIFAR stand-in for Tab. 4.7 —
+//! substitution table in DESIGN.md §3).
+//!
+//! Ten parametric pattern classes over single-channel images with additive
+//! noise, random phase/offsets and per-image gain so the task needs shape
+//! (not trivial pixel statistics): 0–3 oriented gratings at four angles,
+//! 4 checkerboard, 5 radial rings, 6 center blob, 7 corner gradient,
+//! 8 horizontal ramp + stripes, 9 noise-only texture.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct ImageTask {
+    pub size: usize,
+    pub batch: usize,
+    pub noise: f32,
+}
+
+impl ImageTask {
+    pub fn new(size: usize, batch: usize) -> Self {
+        ImageTask { size, batch, noise: 0.25 }
+    }
+
+    pub fn render(&self, class: usize, rng: &mut Pcg) -> Vec<f32> {
+        let n = self.size;
+        let phase = rng.f32() * std::f32::consts::TAU;
+        let freq = 0.5 + rng.f32() * 0.5;
+        let gain = 0.7 + rng.f32() * 0.6;
+        let mut img = vec![0.0f32; n * n];
+        for y in 0..n {
+            for x in 0..n {
+                let (xf, yf) = (x as f32 / n as f32, y as f32 / n as f32);
+                let v = match class {
+                    0..=3 => {
+                        // gratings at 0°, 45°, 90°, 135°
+                        let ang = class as f32 * std::f32::consts::PI / 4.0;
+                        let proj = xf * ang.cos() + yf * ang.sin();
+                        (proj * freq * 14.0 + phase).sin()
+                    }
+                    4 => {
+                        let k = (2.0 + freq * 4.0) as usize + 2;
+                        if ((x * k / n) + (y * k / n)) % 2 == 0 {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    }
+                    5 => {
+                        let r = ((xf - 0.5).powi(2) + (yf - 0.5).powi(2)).sqrt();
+                        (r * freq * 40.0 + phase).sin()
+                    }
+                    6 => {
+                        let r2 = (xf - 0.5).powi(2) + (yf - 0.5).powi(2);
+                        (-(r2) * (8.0 + 8.0 * freq)).exp() * 2.0 - 1.0
+                    }
+                    7 => (xf + yf) - 1.0,
+                    8 => (xf * 2.0 - 1.0) + 0.5 * (yf * freq * 25.0 + phase).sin(),
+                    _ => 0.0,
+                };
+                img[y * n + x] = gain * v + self.noise * rng.normal();
+            }
+        }
+        img
+    }
+
+    /// Batch in img train_step layout: `[images (B,H,W) f32, labels (B) i32]`.
+    pub fn sample_batch(&self, rng: &mut Pcg) -> Vec<Tensor> {
+        let n = self.size;
+        let mut images = Vec::with_capacity(self.batch * n * n);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let class = rng.usize_below(10);
+            images.extend(self.render(class, rng));
+            labels.push(class as i32);
+        }
+        vec![
+            Tensor::from_f32(&[self.batch, n, n], images).unwrap(),
+            Tensor::from_i32(&[self.batch], labels).unwrap(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let t = ImageTask::new(16, 4);
+        let mut rng = Pcg::new(0);
+        let b = t.sample_batch(&mut rng);
+        assert_eq!(b[0].shape(), &[4, 16, 16]);
+        assert_eq!(b[1].shape(), &[4]);
+        assert!(b[1].as_i32().unwrap().iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean inter-class L2 distance should exceed intra-class distance.
+        let t = ImageTask { size: 16, batch: 1, noise: 0.1 };
+        let mut rng = Pcg::new(1);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        let renders: Vec<Vec<Vec<f32>>> = (0..5)
+            .map(|c| (0..4).map(|_| t.render(c, &mut rng)).collect())
+            .collect();
+        for c1 in 0..5 {
+            for i in 0..4 {
+                for c2 in 0..5 {
+                    for j in 0..4 {
+                        if c1 == c2 && i < j {
+                            intra += dist(&renders[c1][i], &renders[c2][j]);
+                            n_intra += 1;
+                        } else if c1 < c2 {
+                            inter += dist(&renders[c1][i], &renders[c2][j]);
+                            n_inter += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(inter / n_inter as f32 > 0.8 * intra / n_intra as f32);
+    }
+
+    #[test]
+    fn finite_pixels() {
+        let t = ImageTask::new(8, 2);
+        let mut rng = Pcg::new(2);
+        let b = t.sample_batch(&mut rng);
+        assert!(b[0].as_f32().unwrap().iter().all(|p| p.is_finite()));
+    }
+}

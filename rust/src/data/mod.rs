@@ -1,0 +1,4 @@
+//! Data substrates: TinyPile corpus, LM batch pipeline, synthetic images.
+pub mod corpus;
+pub mod dataset;
+pub mod images;

@@ -1,0 +1,38 @@
+//! # hyena — Hyena Hierarchy reproduction
+//!
+//! Rust L3 coordinator for the three-layer (Rust + JAX + Pallas) stack
+//! reproducing *Hyena Hierarchy: Towards Larger Convolutional Language
+//! Models* (Poli et al., ICML 2023). See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layering:
+//! * [`runtime`] — PJRT client; loads HLO-text artifacts AOT-compiled by
+//!   `python/compile/aot.py` (JAX L2 models calling Pallas L1 kernels).
+//! * [`coordinator`] — training loop, dynamic-batching inference server,
+//!   decoding, few-shot harness.
+//! * [`tasks`], [`data`], [`tokenizer`] — the synthetic substrates standing
+//!   in for the paper's datasets (substitution table: DESIGN.md §3).
+//! * [`metrics`], [`report`], [`util`] — FLOP accounting (App. A.2), table
+//!   emission, JSON/RNG/CLI/property-test substrates.
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod tasks;
+pub mod tokenizer;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$HYENA_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("HYENA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of one named artifact.
+pub fn artifact(name: &str) -> PathBuf {
+    artifacts_dir().join(name)
+}

@@ -1,0 +1,232 @@
+//! `hyena` CLI — leader entrypoint for the coordinator.
+//!
+//! Subcommands:
+//!   list                              list available artifacts
+//!   train --model NAME [--steps N]    train on TinyPile (lm_*) or task data
+//!   eval  --model NAME                held-out loss/ppl on TinyPile
+//!   serve --model NAME [--requests N] run the batching server demo
+//!   dump-filters --model NAME [--out F] write filter CSV (Fig. D.5)
+//!   info  --model NAME                print manifest summary
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{GenerateRequest, Server};
+use hyena::coordinator::trainer::{eval_loss, Trainer};
+use hyena::data::corpus::{generate, CorpusConfig};
+use hyena::data::dataset::LmBatches;
+use hyena::runtime::checkpoint::Checkpoint;
+use hyena::runtime::{runtime, Manifest, ModelState};
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quiet", "greedy"]);
+    match args.positional.first().map(String::as_str) {
+        Some("list") => cmd_list(),
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("dump-filters") => cmd_dump_filters(&args),
+        _ => {
+            eprintln!(
+                "usage: hyena <list|info|train|eval|serve|dump-filters> \
+                 [--model NAME] [--steps N] [--seed S]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn model_arg(args: &Args) -> Result<String> {
+    args.get("model")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("--model NAME required (see `hyena list`)"))
+}
+
+fn cmd_list() -> Result<()> {
+    let dir = hyena::artifacts_dir();
+    let mut names: Vec<String> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    for n in names {
+        println!("{n}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let m = Manifest::load(&hyena::artifact(&name))?;
+    println!("name           {}", m.name);
+    println!("family         {}", m.family());
+    println!("params         {} tensors, {} elements", m.params.len(), m.numel());
+    println!("batch x seqlen {} x {}", m.batch()?, m.seqlen()?);
+    println!("train_step     {}", m.has_train_step);
+    if let Some(f) = m.flops_per_step {
+        println!("flops/step     {f:.3e}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let steps = args.get_u64("steps", 300);
+    let seed = args.get_u64("seed", 0);
+    println!("loading {name} (platform: {})", runtime().platform());
+    let mut model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    if model.manifest.family() != "lm" {
+        bail!("`hyena train` drives LM artifacts; use the examples/ for img");
+    }
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, 400);
+    println!(
+        "TinyPile: {} train / {} val tokens",
+        corpus.train.len(),
+        corpus.val.len()
+    );
+    let b = model.manifest.batch()?;
+    let l = model.manifest.seqlen()?;
+    let vocab = model.manifest.vocab()?;
+    if let Some(ckpt_path) = args.get("restore") {
+        let ckpt = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+        model.step = ckpt.step;
+        let params = ckpt.into_params(&model.manifest)?;
+        model.set_params(&params)?;
+        println!("restored checkpoint at step {}", model.step);
+    }
+    let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(vocab);
+    let mut trainer = Trainer::new(&mut model, move || batches.next_batch());
+    trainer.quiet = args.flag("quiet");
+    let report = trainer.run(steps)?;
+    if let Some(save_path) = args.get("save").map(str::to_string) {
+        let names: Vec<String> =
+            model.manifest.params.iter().map(|p| p.name.clone()).collect();
+        let tensors = model.params_host()?;
+        let ckpt = Checkpoint {
+            step: model.step,
+            tensors: names.into_iter().zip(tensors).collect(),
+        };
+        ckpt.save(std::path::Path::new(&save_path))?;
+        println!("saved checkpoint -> {save_path}");
+    }
+    println!(
+        "done: loss {:.4}  {:.2} steps/s  {:.0} tok/s",
+        report.final_loss, report.steps_per_s, report.tokens_per_s
+    );
+    let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, vocab);
+    if !evals.is_empty() {
+        let n = evals.len().min(4);
+        let mut i = 0;
+        let nll = eval_loss(
+            &model,
+            &mut || {
+                let batch = evals[i].clone();
+                i += 1;
+                batch
+            },
+            n,
+        )?;
+        println!("val loss {:.4}  ppl {:.2}", nll, nll.exp());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let seed = args.get_u64("seed", 0);
+    let model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    let corpus = generate(&CorpusConfig { seed, ..Default::default() }, 400);
+    let b = model.manifest.batch()?;
+    let l = model.manifest.seqlen()?;
+    let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, model.manifest.vocab()?);
+    let n = evals.len().min(8);
+    let mut i = 0;
+    let nll = eval_loss(
+        &model,
+        &mut || {
+            let batch = evals[i].clone();
+            i += 1;
+            batch
+        },
+        n,
+    )?;
+    println!(
+        "{name}: val loss {:.4}  ppl {:.2} (untrained init unless restored)",
+        nll,
+        nll.exp()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let n_req = args.get_usize("requests", 16);
+    let seed = args.get_u64("seed", 0);
+    let man = Manifest::load(&hyena::artifact(&name))?;
+    let l = man.seqlen()?;
+    let vocab = man.vocab()?;
+    let server = Server::start(hyena::artifact(&name), seed as i32, Duration::from_millis(20))?;
+    println!("server up; firing {n_req} requests");
+    let mut rng = Pcg::new(seed);
+    let sampling = if args.flag("greedy") {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature { t: 0.8, top_k: 16 }
+    };
+    let handles: Vec<_> = (0..n_req)
+        .map(|_| {
+            let prompt: Vec<i32> = (0..8).map(|_| rng.usize_below(vocab) as i32).collect();
+            server.handle.submit(GenerateRequest {
+                prompt,
+                max_new: 16.min(l.saturating_sub(9)),
+                sampling,
+            })
+        })
+        .collect();
+    let mut total = Duration::ZERO;
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().map_err(|_| anyhow!("worker died"))??;
+        total += resp.total_time;
+        println!(
+            "  req {i:>3}: {} tokens, queue {:?}, total {:?}, batch x{}",
+            resp.tokens.len(),
+            resp.queue_time,
+            resp.total_time,
+            resp.batch_occupancy
+        );
+    }
+    println!("mean latency {:?}", total / n_req as u32);
+    server.stop();
+    Ok(())
+}
+
+fn cmd_dump_filters(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let out = args.get_or("out", "results/filters.csv").to_string();
+    let seed = args.get_u64("seed", 0);
+    let model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    let h = model.dump_filters()?;
+    let shape = h.shape().to_vec();
+    let data = h.as_f32()?;
+    let (n, d, l) = (shape[0], shape[1], shape[2]);
+    let mut csv = String::from("order,channel,t,h\n");
+    for o in 0..n {
+        for c in 0..d.min(8) {
+            for t in 0..l {
+                csv.push_str(&format!("{o},{c},{t},{}\n", data[(o * d + c) * l + t]));
+            }
+        }
+    }
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, csv)?;
+    println!("filters (N={n}, D={d}, L={l}) -> {out} (first 8 channels)");
+    Ok(())
+}

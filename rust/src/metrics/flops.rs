@@ -1,0 +1,88 @@
+//! FLOP accounting — host-side mirror of paper App. A.2 (and of
+//! `python/compile/model.py::flops_per_token_lm`; the integration test
+//! cross-checks this against manifest values).
+
+/// Model shape needed for FLOP accounting.
+#[derive(Debug, Clone)]
+pub struct FlopShape {
+    pub depth: usize,
+    pub width: usize,
+    pub seqlen: usize,
+    pub vocab: usize,
+    pub mlp_ratio: f64,
+    pub order: usize,
+    pub short_filter: usize,
+    pub is_attention: bool,
+}
+
+/// Forward FLOPs per token (×2 for multiply+add), paper App. A.2:
+///  i.   projections: order × D × D
+///  ii.  short conv:  order × D × filter_len
+///  iii. FFTConv:     5 × (order) × D × log2(L)
+///  iv.  output:      D × D
+/// Attention: 4 projections + 2 × L × D non-parametric (matrix + AV).
+pub fn flops_per_token(s: &FlopShape) -> f64 {
+    let d = s.width as f64;
+    let l = s.seqlen as f64;
+    let mlp = 2.0 * 2.0 * d * (d * s.mlp_ratio);
+    let emb_head = 2.0 * d * s.vocab as f64;
+    let mixer = if s.is_attention {
+        2.0 * 4.0 * d * d + 2.0 * 2.0 * l * d
+    } else {
+        let n = s.order as f64;
+        let proj = 2.0 * (n + 1.0) * d * d;
+        let short = 2.0 * (n + 1.0) * d * s.short_filter as f64;
+        let fftconv = 2.0 * 5.0 * n * d * l.max(2.0).log2();
+        let out = 2.0 * d * d;
+        proj + short + fftconv + out
+    };
+    s.depth as f64 * (mixer + mlp) + emb_head
+}
+
+/// Training FLOPs per optimizer step (fwd + bwd ≈ 3× fwd).
+pub fn flops_per_step(s: &FlopShape, batch: usize) -> f64 {
+    3.0 * flops_per_token(s) * batch as f64 * s.seqlen as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(is_attention: bool, seqlen: usize) -> FlopShape {
+        FlopShape {
+            depth: 4,
+            width: 128,
+            seqlen,
+            vocab: 96,
+            mlp_ratio: 4.0,
+            order: 2,
+            short_filter: 3,
+            is_attention,
+        }
+    }
+
+    #[test]
+    fn hyena_beats_attention_at_long_l() {
+        // The paper's FLOP reduction comes from the non-parametric attention
+        // term growing with L while FFTConv grows with log L.
+        let f_attn = flops_per_token(&base(true, 2048));
+        let f_hyena = flops_per_token(&base(false, 2048));
+        assert!(f_hyena < f_attn, "{f_hyena} !< {f_attn}");
+    }
+
+    #[test]
+    fn attention_grows_linearly_in_l() {
+        let f1 = flops_per_token(&base(true, 1024));
+        let f2 = flops_per_token(&base(true, 4096));
+        assert!(f2 > f1 + 1.0);
+        // per-token parametric part constant; delta is 2·2·ΔL·D·depth
+        let expected_delta = 4.0 * (4096.0 - 1024.0) * 128.0 * 4.0;
+        assert!(((f2 - f1) - expected_delta).abs() < 1.0);
+    }
+
+    #[test]
+    fn step_flops_scale_with_batch() {
+        let s = base(false, 256);
+        assert!((flops_per_step(&s, 16) / flops_per_step(&s, 8) - 2.0).abs() < 1e-9);
+    }
+}

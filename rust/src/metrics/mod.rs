@@ -1,0 +1,46 @@
+//! Metrics: perplexity, accuracy, FLOP accounting (paper App. A.2 mirror),
+//! throughput tracking.
+
+pub mod flops;
+
+/// Perplexity from mean NLL (nats).
+pub fn perplexity(loss: f32) -> f32 {
+    loss.exp()
+}
+
+/// Classification accuracy from logits `(B, C)` against labels `(B,)`.
+pub fn class_accuracy(logits: &[f32], classes: usize, labels: &[i32]) -> f64 {
+    let mut correct = 0usize;
+    for (r, &lab) in labels.iter().enumerate() {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        if argmax == lab {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 48.0f32;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-3);
+    }
+
+    #[test]
+    fn class_accuracy_counts() {
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0];
+        // rows: argmax 0, argmax 1, argmax 1 (classes=2)... wait 3 rows of 2
+        let acc = class_accuracy(&logits, 2, &[0, 1, 0]);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

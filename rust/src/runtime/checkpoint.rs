@@ -1,0 +1,252 @@
+//! Checkpointing: persist/restore model parameters (and optimizer step) to
+//! a single binary file, validated against the artifact manifest.
+//!
+//! Format (little-endian):
+//!   magic "HYCK" | u32 version | u64 step | u32 n_tensors
+//!   per tensor: u32 name_len | name bytes | u8 dtype (0=f32, 1=i32)
+//!               u32 ndim | u64 dims… | raw data bytes
+//!
+//! Tensor order and names must match the manifest exactly — a checkpoint
+//! from a different config is rejected rather than silently misloaded.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 4] = b"HYCK";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            let code: u8 = match t.dtype() {
+                DType::F32 => 0,
+                DType::I32 => 1,
+            };
+            w.write_all(&[code])?;
+            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a hyena checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf-8")?;
+            let mut code = [0u8; 1];
+            r.read_exact(&mut code)?;
+            let ndim = read_u32(&mut r)? as usize;
+            if ndim > 16 {
+                bail!("implausible rank {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let t = match code[0] {
+                0 => {
+                    let mut data = vec![0f32; numel];
+                    let mut buf = [0u8; 4];
+                    for x in data.iter_mut() {
+                        r.read_exact(&mut buf)?;
+                        *x = f32::from_le_bytes(buf);
+                    }
+                    Tensor::F32 { shape, data }
+                }
+                1 => {
+                    let mut data = vec![0i32; numel];
+                    let mut buf = [0u8; 4];
+                    for x in data.iter_mut() {
+                        r.read_exact(&mut buf)?;
+                        *x = i32::from_le_bytes(buf);
+                    }
+                    Tensor::I32 { shape, data }
+                }
+                c => bail!("unknown dtype code {c}"),
+            };
+            tensors.push((name, t));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+
+    /// Validate names/shapes against a manifest and return tensors in
+    /// manifest order, ready for `ModelState::set_params`.
+    pub fn into_params(self, manifest: &Manifest) -> Result<Vec<Tensor>> {
+        if self.tensors.len() != manifest.params.len() {
+            bail!(
+                "checkpoint has {} tensors, manifest wants {}",
+                self.tensors.len(),
+                manifest.params.len()
+            );
+        }
+        let mut out = Vec::with_capacity(manifest.params.len());
+        let map: std::collections::HashMap<_, _> = self.tensors.into_iter().collect();
+        for spec in &manifest.params {
+            let t = map
+                .get(&spec.name)
+                .with_context(|| format!("checkpoint missing param {}", spec.name))?;
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "param {}: checkpoint shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            out.push(t.clone());
+        }
+        Ok(out)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hyena_ckpt_{name}.bin"))
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            tensors: vec![
+                (
+                    "a.w".into(),
+                    Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap(),
+                ),
+                ("b.ids".into(), Tensor::from_i32(&[4], vec![7, -8, 9, 0]).unwrap()),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("roundtrip");
+        sample().save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].0, "a.w");
+        assert_eq!(back.tensors[0].1.as_f32().unwrap()[5], -6.25);
+        assert_eq!(back.tensors[1].1.as_i32().unwrap(), &[7, -8, 9, 0]);
+        assert_eq!(back.tensors[0].1.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = tmp("trunc");
+        sample().save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn into_params_validates_names_and_shapes() {
+        use crate::runtime::manifest::ParamSpec;
+        use crate::runtime::tensor::DType;
+        let man = Manifest {
+            name: "t".into(),
+            dir: std::path::PathBuf::new(),
+            params: vec![
+                ParamSpec { name: "a.w".into(), shape: vec![2, 3], dtype: DType::F32 },
+                ParamSpec { name: "b.ids".into(), shape: vec![4], dtype: DType::I32 },
+            ],
+            config: crate::util::json::Json::Null,
+            param_count: 10,
+            flops_per_step: None,
+            flops_per_token: None,
+            has_train_step: false,
+            has_filters: false,
+            filter_params: vec![],
+        };
+        let params = sample().into_params(&man).unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].shape(), &[2, 3]); // manifest order preserved
+
+        let bad_man = Manifest {
+            params: vec![ParamSpec {
+                name: "a.w".into(),
+                shape: vec![3, 2], // wrong shape
+                dtype: DType::F32,
+            }],
+            ..man
+        };
+        assert!(sample().into_params(&bad_man).is_err());
+    }
+}

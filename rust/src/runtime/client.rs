@@ -1,0 +1,122 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute.
+//!
+//! The `xla` crate's handles are intentionally `!Send`/`!Sync` (they wrap
+//! `Rc` + raw PJRT pointers), so the runtime is **per-thread**: each thread
+//! that touches XLA gets its own client + executable cache via
+//! [`runtime()`], and nothing XLA-owned ever crosses a thread boundary.
+//! Cross-thread coordination (the server) exchanges plain host data only.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::tensor::Tensor;
+
+/// Thread-local PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+thread_local! {
+    static RT: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's runtime (created on first use).
+pub fn runtime() -> Rc<Runtime> {
+    RT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Rc::new(Runtime::new().expect("PJRT CPU client init failed")));
+        }
+        slot.as_ref().unwrap().clone()
+    })
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by canonical path).
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        let key = path
+            .canonicalize()
+            .unwrap_or_else(|_| path.to_path_buf())
+            .display()
+            .to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = Rc::new(Executable { exe, name: key.clone() });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (observability/test hook).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// A compiled artifact. All artifacts are lowered with `return_tuple=True`,
+/// so execution yields a single tuple literal which we decompose.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    fn collect(&self, mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let replica = out
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow!("no output buffers from {}", self.name))?;
+        let lit = replica.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute on host literals, returning the decomposed output tuple.
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.collect(out)
+    }
+
+    /// Execute on borrowed literals (the trainer hot loop: persistent param
+    /// literals are passed by reference, no re-conversion).
+    pub fn run_literals_ref(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.collect(out)
+    }
+
+    /// Execute on host tensors (converted to literals at the boundary).
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = args
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.run_literals(&lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}

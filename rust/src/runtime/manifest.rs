@@ -1,0 +1,186 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (DESIGN.md §2 "Artifact contract").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape+dtype+name of one parameter tensor, in flattening order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `manifest.json` for one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub config: Json,
+    pub param_count: usize,
+    pub flops_per_step: Option<f64>,
+    pub flops_per_token: Option<f64>,
+    pub has_train_step: bool,
+    pub has_filters: bool,
+    /// Param names (flattening order) consumed by the filters artifact.
+    pub filter_params: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", man_path.display()))?;
+
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params array"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = DType::from_name(
+                    p.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+                )?;
+                Ok(ParamSpec { name, shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            dir: dir.to_path_buf(),
+            param_count: j.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+            flops_per_step: j.get("flops_per_step").and_then(Json::as_f64),
+            flops_per_token: j.get("flops_per_token").and_then(Json::as_f64),
+            has_train_step: j
+                .get("has_train_step")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            has_filters: j.get("has_filters").and_then(Json::as_bool).unwrap_or(false),
+            filter_params: j
+                .get("filter_params")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+            params,
+        })
+    }
+
+    // -- config accessors -----------------------------------------------------
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("config missing {key}"))
+    }
+    pub fn cfg_str(&self, key: &str) -> Option<&str> {
+        self.config.get(key).and_then(Json::as_str)
+    }
+    pub fn batch(&self) -> Result<usize> {
+        self.cfg_usize("batch")
+    }
+    pub fn seqlen(&self) -> Result<usize> {
+        self.cfg_usize("seqlen")
+    }
+    pub fn vocab(&self) -> Result<usize> {
+        self.cfg_usize("vocab")
+    }
+    pub fn family(&self) -> &str {
+        self.cfg_str("family").unwrap_or("lm")
+    }
+
+    pub fn hlo_path(&self, which: &str) -> PathBuf {
+        self.dir.join(format!("{which}.hlo.txt"))
+    }
+
+    /// Total parameter elements per the specs (cross-check with param_count).
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_minimal_manifest() {
+        let dir = std::env::temp_dir().join("hyena_test_manifest");
+        write_manifest(
+            &dir,
+            r#"{"name":"t","config":{"batch":4,"seqlen":16,"vocab":32,"family":"lm"},
+               "params":[{"name":"a","shape":[2,3],"dtype":"float32"},
+                          {"name":"b","shape":[5],"dtype":"int32"}],
+               "param_count":11,"has_train_step":true,"has_filters":false,
+               "flops_per_step":123.5}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 6);
+        assert_eq!(m.params[1].dtype, DType::I32);
+        assert_eq!(m.numel(), 11);
+        assert_eq!(m.batch().unwrap(), 4);
+        assert_eq!(m.seqlen().unwrap(), 16);
+        assert!(m.has_train_step);
+        assert_eq!(m.flops_per_step, Some(123.5));
+        assert!(m.hlo_path("init").ends_with("init.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = std::env::temp_dir().join("hyena_test_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_errors() {
+        let dir = std::env::temp_dir().join("hyena_test_baddtype");
+        write_manifest(
+            &dir,
+            r#"{"name":"t","config":{},"params":[{"name":"a","shape":[1],"dtype":"float64"}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! Rust hot path. Python never runs at request time (DESIGN.md §2).
+pub mod checkpoint;
+pub mod client;
+pub mod manifest;
+pub mod model;
+pub mod tensor;
+
+pub use client::{runtime, Executable, Runtime};
+pub use manifest::{Manifest, ParamSpec};
+pub use model::ModelState;
+pub use tensor::{DType, Tensor};

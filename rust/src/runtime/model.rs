@@ -1,0 +1,188 @@
+//! `ModelState`: owns the parameter/optimizer literals of one artifact and
+//! drives its init / train_step / forward executables.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::client::{runtime, Executable};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::Tensor;
+
+pub struct ModelState {
+    pub manifest: Manifest,
+    /// Parameter literals, in manifest (sorted-key) order.
+    params: Vec<xla::Literal>,
+    /// AdamW first/second moments (allocated when training starts).
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    pub step: u64,
+    init_exe: Rc<Executable>,
+    forward_exe: Rc<Executable>,
+    train_exe: Option<Rc<Executable>>,
+    filters_exe: Option<Rc<Executable>>,
+}
+
+impl ModelState {
+    /// Load an artifact directory, compile its executables, and initialize
+    /// parameters from `seed` (inside XLA — fully deterministic).
+    pub fn load(dir: &Path, seed: i32) -> Result<ModelState> {
+        let manifest = Manifest::load(dir)?;
+        let rt = runtime();
+        let init_exe = rt.load(&manifest.hlo_path("init"))?;
+        let forward_exe = rt.load(&manifest.hlo_path("forward"))?;
+        let train_exe = if manifest.has_train_step {
+            Some(rt.load(&manifest.hlo_path("train_step"))?)
+        } else {
+            None
+        };
+        let filters_exe = if manifest.has_filters {
+            Some(rt.load(&manifest.hlo_path("filters"))?)
+        } else {
+            None
+        };
+
+        let seed_t = Tensor::from_i32(&[], vec![seed])?;
+        let params = init_exe
+            .run_literals(&[seed_t.to_literal()?])
+            .context("running init")?;
+        if params.len() != manifest.params.len() {
+            bail!(
+                "init returned {} tensors, manifest lists {}",
+                params.len(),
+                manifest.params.len()
+            );
+        }
+
+        Ok(ModelState {
+            manifest,
+            params,
+            m: Vec::new(),
+            v: Vec::new(),
+            step: 0,
+            init_exe,
+            forward_exe,
+            train_exe,
+            filters_exe,
+        })
+    }
+
+    /// Re-initialize parameters (fresh seed) and reset the optimizer.
+    pub fn reinit(&mut self, seed: i32) -> Result<()> {
+        let seed_t = Tensor::from_i32(&[], vec![seed])?;
+        self.params = self.init_exe.run_literals(&[seed_t.to_literal()?])?;
+        self.m.clear();
+        self.v.clear();
+        self.step = 0;
+        Ok(())
+    }
+
+    fn ensure_opt_state(&mut self) -> Result<()> {
+        if !self.m.is_empty() {
+            return Ok(());
+        }
+        for spec in &self.manifest.params {
+            let z = Tensor::zeros(spec.dtype, &spec.shape);
+            self.m.push(z.to_literal()?);
+            self.v.push(z.to_literal()?);
+        }
+        Ok(())
+    }
+
+    /// One optimizer step on a host batch. LM batches are
+    /// `[tokens, targets, mask]`; image batches `[images, labels]`.
+    /// Returns the scalar loss.
+    pub fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
+        let exe = self
+            .train_exe
+            .clone()
+            .ok_or_else(|| anyhow!("{} has no train_step artifact", self.manifest.name))?;
+        self.ensure_opt_state()?;
+
+        let step_t = Tensor::from_f32(&[], vec![self.step as f32])?.to_literal()?;
+        let batch_lits = batch
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(3 * self.params.len() + 1 + batch.len());
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&step_t);
+        args.extend(batch_lits.iter());
+
+        let mut outs = exe.run_literals_ref(&args)?;
+        let n = self.params.len();
+        if outs.len() != 3 * n + 1 {
+            bail!("train_step returned {} outputs, want {}", outs.len(), 3 * n + 1);
+        }
+        let loss_lit = outs.pop().unwrap();
+        let loss = Tensor::from_literal(&loss_lit)?.scalar_f32()?;
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Forward pass: `inputs` are the data tensors (tokens or images).
+    /// Returns logits as a host tensor.
+    pub fn forward(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let input_lits = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + inputs.len());
+        args.extend(self.params.iter());
+        args.extend(input_lits.iter());
+        let mut outs = self.forward_exe.run_literals_ref(&args)?;
+        if outs.is_empty() {
+            bail!("forward returned no outputs");
+        }
+        Tensor::from_literal(&outs.remove(0))
+    }
+
+    /// Materialize the block-0 implicit filters `h: (N, D, L)` (Fig. D.5).
+    pub fn dump_filters(&self) -> Result<Tensor> {
+        let exe = self
+            .filters_exe
+            .clone()
+            .ok_or_else(|| anyhow!("{} has no filters artifact", self.manifest.name))?;
+        // Only the block-0 filter params feed this artifact (manifest order).
+        let args: Vec<&xla::Literal> = self
+            .manifest
+            .filter_params
+            .iter()
+            .map(|name| {
+                self.manifest
+                    .params
+                    .iter()
+                    .position(|p| &p.name == name)
+                    .map(|i| &self.params[i])
+                    .ok_or_else(|| anyhow!("filter param {name} not in manifest"))
+            })
+            .collect::<Result<_>>()?;
+        let mut outs = exe.run_literals_ref(&args)?;
+        Tensor::from_literal(&outs.remove(0))
+    }
+
+    /// Copy parameters out to host tensors (checkpointing).
+    pub fn params_host(&self) -> Result<Vec<Tensor>> {
+        self.params.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Restore parameters from host tensors (ordering must match manifest).
+    pub fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
+        if tensors.len() != self.manifest.params.len() {
+            bail!("param count mismatch");
+        }
+        self.params = tensors
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+}

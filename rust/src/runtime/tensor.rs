@@ -1,0 +1,170 @@
+//! Host tensors and conversion to/from `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact tensor (the subset the models use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_name(name: &str) -> Result<DType> {
+        Ok(match name {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A host-side tensor: shape + f32 or i32 storage.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape: shape.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar f32 view (shape [] or [1]).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("not a scalar: {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert into an `xla::Literal` with the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        lit.reshape(&dims)
+            .with_context(|| format!("reshape literal to {:?}", self.shape()))
+    }
+
+    /// Read an `xla::Literal` back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shapes() {
+        let t = Tensor::zeros(DType::F32, &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.as_f32().unwrap(), &[0.0; 6]);
+    }
+
+    #[test]
+    fn from_rejects_bad_len() {
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_i32(&[2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::from_name("float32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("int32").unwrap(), DType::I32);
+        assert!(DType::from_name("float64").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 2]);
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[3], vec![5, -6, 7]).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[5, -6, 7]);
+    }
+
+    #[test]
+    fn scalar_f32_checks() {
+        let t = Tensor::from_f32(&[], vec![2.5]).unwrap();
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        let t2 = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        assert!(t2.scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Counting (paper Tab. 4.1): emit the number of occurrences of a marker
+//! token, capped at vocab−1 so the answer stays in-vocabulary.
+
+use crate::tasks::TaskBatch;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct CountingTask {
+    pub seqlen: usize,
+    pub vocab: usize,
+    pub batch: usize,
+    /// The token to count (id 1; id 0 is the query cue).
+    pub marker: i32,
+}
+
+impl CountingTask {
+    pub fn new(seqlen: usize, vocab: usize, batch: usize) -> Self {
+        assert!(vocab >= 4 && seqlen >= 4);
+        CountingTask { seqlen, vocab, batch, marker: 1 }
+    }
+
+    pub fn sample_seq(&self, rng: &mut Pcg) -> (Vec<i32>, i32) {
+        let body = self.seqlen - 1;
+        let cap = (self.vocab - 1) as i32;
+        // Choose a target count ≤ cap uniformly, then place that many markers.
+        let want = rng.usize_below((cap as usize).min(body) + 1);
+        let mut toks: Vec<i32> = (0..body)
+            .map(|_| {
+                // fill with non-marker tokens (≥ 2)
+                let t = 2 + rng.usize_below(self.vocab - 2);
+                t as i32
+            })
+            .collect();
+        let mut slots: Vec<usize> = (0..body).collect();
+        rng.shuffle(&mut slots);
+        for &s in slots.iter().take(want) {
+            toks[s] = self.marker;
+        }
+        toks.push(0); // query cue
+        (toks, want as i32)
+    }
+
+    pub fn sample_batch(&self, rng: &mut Pcg) -> TaskBatch {
+        let (b, l) = (self.batch, self.seqlen);
+        let mut tokens = Vec::with_capacity(b * l);
+        let mut targets = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for r in 0..b {
+            let (toks, ans) = self.sample_seq(rng);
+            tokens.extend_from_slice(&toks);
+            targets[r * l + l - 1] = ans;
+            mask[r * l + l - 1] = 1.0;
+        }
+        TaskBatch { tokens, targets, mask, batch: b, seqlen: l }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn answer_equals_marker_count() {
+        Prop::new("counting correct").cases(200).check(|rng| {
+            let task = CountingTask::new(16 + rng.usize_below(64), 8 + rng.usize_below(24), 1);
+            let (toks, ans) = task.sample_seq(rng);
+            let count = toks[..toks.len() - 1].iter().filter(|&&t| t == 1).count();
+            prop_assert!(count as i32 == ans, "count {count} != ans {ans}");
+            prop_assert!(ans < task.vocab as i32, "answer out of vocab");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,111 @@
+//! In-context learning of (modular) linear functions (paper Tab. 4.1).
+//!
+//! The paper's version uses real-valued x, w·x pairs. Our models are
+//! token-based, so we use the standard discrete analog: per sequence sample
+//! a secret multiplier w; the prompt is x₁, w·x₁ mod p, …, xₙ and the target
+//! is w·xₙ mod p. Solving it requires inferring w from the in-context pairs
+//! — the same data-controlled mechanism the real-valued version probes
+//! (documented substitution, DESIGN.md §3).
+
+use crate::tasks::TaskBatch;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct IclTask {
+    pub seqlen: usize,
+    /// Modulus p (must be ≤ vocab and prime for invertibility; 31 default).
+    pub modulus: usize,
+    pub batch: usize,
+}
+
+impl IclTask {
+    pub fn new(seqlen: usize, modulus: usize, batch: usize) -> Self {
+        assert!(seqlen >= 4 && modulus >= 5);
+        IclTask { seqlen, modulus, batch }
+    }
+
+    pub fn sample_seq(&self, rng: &mut Pcg) -> (Vec<i32>, i32) {
+        let p = self.modulus;
+        let w = 1 + rng.usize_below(p - 1); // non-zero multiplier
+        let pairs = (self.seqlen - 1) / 2;
+        let mut toks = Vec::with_capacity(self.seqlen);
+        for _ in 0..pairs {
+            let x = rng.usize_below(p);
+            toks.push(x as i32);
+            toks.push(((w * x) % p) as i32);
+        }
+        while toks.len() < self.seqlen - 1 {
+            toks.push(0);
+        }
+        toks.truncate(self.seqlen - 1);
+        let xq = 1 + rng.usize_below(p - 1);
+        toks.push(xq as i32);
+        (toks, ((w * xq) % p) as i32)
+    }
+
+    pub fn sample_batch(&self, rng: &mut Pcg) -> TaskBatch {
+        let (b, l) = (self.batch, self.seqlen);
+        let mut tokens = Vec::with_capacity(b * l);
+        let mut targets = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for r in 0..b {
+            let (toks, ans) = self.sample_seq(rng);
+            tokens.extend_from_slice(&toks);
+            targets[r * l + l - 1] = ans;
+            mask[r * l + l - 1] = 1.0;
+        }
+        TaskBatch { tokens, targets, mask, batch: b, seqlen: l }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn function_is_consistent_and_answer_correct() {
+        Prop::new("icl consistent w").cases(200).check(|rng| {
+            let task = IclTask::new(16 + 2 * rng.usize_below(32), 31, 1);
+            let (toks, ans) = task.sample_seq(rng);
+            // Recover w from the first pair with x != 0 and verify all pairs.
+            let p = 31i64;
+            let mut w: Option<i64> = None;
+            let mut i = 0;
+            while i + 1 < toks.len() - 1 {
+                let (x, y) = (toks[i] as i64, toks[i + 1] as i64);
+                if x != 0 && y != 0 {
+                    // w = y * x^{-1} mod p
+                    let xinv = mod_inv(x, p);
+                    let cand = (y * xinv) % p;
+                    match w {
+                        None => w = Some(cand),
+                        Some(prev) => prop_assert!(prev == cand, "inconsistent w"),
+                    }
+                }
+                i += 2;
+            }
+            if let Some(w) = w {
+                let xq = *toks.last().unwrap() as i64;
+                prop_assert!((w * xq) % p == ans as i64, "bad answer");
+            }
+            Ok(())
+        });
+    }
+
+    fn mod_inv(a: i64, p: i64) -> i64 {
+        // Fermat: a^(p-2) mod p
+        let mut result = 1i64;
+        let mut base = a % p;
+        let mut e = p - 2;
+        while e > 0 {
+            if e & 1 == 1 {
+                result = result * base % p;
+            }
+            base = base * base % p;
+            e >>= 1;
+        }
+        result
+    }
+}

@@ -1,0 +1,106 @@
+//! Majority voting (paper Tab. 4.1): the model must emit the most frequent
+//! token of the sequence — a *densely* activated data-controlled matrix.
+
+use crate::tasks::TaskBatch;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct MajorityTask {
+    pub seqlen: usize,
+    pub vocab: usize,
+    pub batch: usize,
+}
+
+impl MajorityTask {
+    pub fn new(seqlen: usize, vocab: usize, batch: usize) -> Self {
+        assert!(vocab >= 3 && seqlen >= 4);
+        MajorityTask { seqlen, vocab, batch }
+    }
+
+    /// One sequence: tokens biased toward a designated majority symbol so
+    /// the answer is unique w.h.p.; we verify and fix uniqueness explicitly.
+    pub fn sample_seq(&self, rng: &mut Pcg) -> (Vec<i32>, i32) {
+        let body = self.seqlen - 1;
+        let maj = rng.usize_below(self.vocab) as i32;
+        let mut toks: Vec<i32> = (0..body)
+            .map(|_| {
+                if rng.f32() < 0.35 {
+                    maj
+                } else {
+                    rng.usize_below(self.vocab) as i32
+                }
+            })
+            .collect();
+        // Recount and take the true mode (deterministic tie-break: smallest id),
+        // then break ties by overwriting one position with the mode.
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        let best = counts.iter().enumerate().max_by_key(|(i, &c)| (c, self.vocab - i)).unwrap();
+        let (mode, c0) = (best.0 as i32, *best.1);
+        let runner_up = counts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i as i32 != mode)
+            .map(|(_, &c)| c)
+            .max()
+            .unwrap_or(0);
+        if runner_up == c0 {
+            // Force strict majority by flipping one non-mode token.
+            if let Some(slot) = toks.iter().position(|&t| t != mode) {
+                toks[slot] = mode;
+            }
+        }
+        toks.push(0); // query marker position (token 0 acts as the cue)
+        (toks, mode)
+    }
+
+    pub fn sample_batch(&self, rng: &mut Pcg) -> TaskBatch {
+        let (b, l) = (self.batch, self.seqlen);
+        let mut tokens = Vec::with_capacity(b * l);
+        let mut targets = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for r in 0..b {
+            let (toks, ans) = self.sample_seq(rng);
+            tokens.extend_from_slice(&toks);
+            targets[r * l + l - 1] = ans;
+            mask[r * l + l - 1] = 1.0;
+        }
+        TaskBatch { tokens, targets, mask, batch: b, seqlen: l }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn answer_is_strict_mode() {
+        Prop::new("majority strict mode").cases(200).check(|rng| {
+            let task = MajorityTask::new(32 + rng.usize_below(64), 3 + rng.usize_below(20), 1);
+            let (toks, ans) = task.sample_seq(rng);
+            let mut counts = std::collections::HashMap::new();
+            for &t in &toks[..toks.len() - 1] {
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            let ans_count = counts[&ans];
+            for (&t, &c) in &counts {
+                if t != ans {
+                    prop_assert!(c <= ans_count, "token {t} count {c} > mode {ans_count}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_mask_single_position() {
+        let task = MajorityTask::new(16, 5, 3);
+        let mut rng = Pcg::new(0);
+        let b = task.sample_batch(&mut rng);
+        assert_eq!(b.mask.iter().filter(|&&m| m > 0.0).count(), 3);
+    }
+}

@@ -1,0 +1,33 @@
+//! Synthetic mechanistic-design benchmarks (paper Tab. 4.1, App. A.1):
+//! associative recall, majority, counting, ICL of (modular) linear
+//! functions, and multi-digit arithmetic.
+
+pub mod arithmetic;
+pub mod counting;
+pub mod icl;
+pub mod majority;
+pub mod recall;
+
+use crate::runtime::Tensor;
+
+/// A generated batch in the LM train_step layout.
+#[derive(Debug, Clone)]
+pub struct TaskBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seqlen: usize,
+}
+
+impl TaskBatch {
+    /// Convert to the `[tokens, targets, mask]` tensor triple.
+    pub fn to_tensors(&self) -> Vec<Tensor> {
+        let shape = [self.batch, self.seqlen];
+        vec![
+            Tensor::from_i32(&shape, self.tokens.clone()).unwrap(),
+            Tensor::from_i32(&shape, self.targets.clone()).unwrap(),
+            Tensor::from_f32(&shape, self.mask.clone()).unwrap(),
+        ]
+    }
+}

@@ -1,0 +1,147 @@
+//! Associative recall (paper Sec. 4.1, App. A.1).
+//!
+//! Each sequence concatenates key→value pairs drawn from a *per-sequence*
+//! random dictionary, ends with a query key that appeared earlier, and the
+//! model must emit that key's value. On long sequences, pairs repeat
+//! (App. A.1: with vocab 40 and 100k tokens multiple copies are inevitable);
+//! the dictionary is consistent within a sequence so repeats reinforce.
+//!
+//! Token layout: ids `0..effective_vocab` are data tokens; the key/value
+//! split is by parity of draw, not id range, matching the paper's setup
+//! where keys and values share a vocabulary.
+
+use crate::tasks::TaskBatch;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct RecallTask {
+    pub seqlen: usize,
+    /// Effective vocabulary (≤ the model's embedding slots).
+    pub vocab: usize,
+    pub batch: usize,
+}
+
+impl RecallTask {
+    pub fn new(seqlen: usize, vocab: usize, batch: usize) -> Self {
+        assert!(vocab >= 4, "recall needs ≥4 tokens");
+        assert!(seqlen >= 4);
+        RecallTask { seqlen, vocab, batch }
+    }
+
+    /// Generate one sequence: returns (tokens, answer).
+    pub fn sample_seq(&self, rng: &mut Pcg) -> (Vec<i32>, i32) {
+        let n_keys = (self.vocab / 2).max(1);
+        // Per-sequence dictionary: key k → value dict[k].
+        let dict: Vec<i32> = (0..n_keys)
+            .map(|_| (n_keys + rng.usize_below(self.vocab - n_keys)) as i32)
+            .collect();
+        let pairs = (self.seqlen - 1) / 2;
+        let mut toks = Vec::with_capacity(self.seqlen);
+        let mut appeared: Vec<usize> = Vec::new();
+        for _ in 0..pairs {
+            let k = rng.usize_below(n_keys);
+            appeared.push(k);
+            toks.push(k as i32);
+            toks.push(dict[k]);
+        }
+        // Query one key that appeared; its value is the answer.
+        let q = appeared[rng.usize_below(appeared.len())];
+        // Pad (with fresh pairs re-using the dict) so the query lands at the
+        // final position.
+        while toks.len() < self.seqlen - 1 {
+            toks.push(0);
+        }
+        toks.truncate(self.seqlen - 1);
+        toks.push(q as i32);
+        (toks, dict[q])
+    }
+
+    /// Batch in train_step layout: mask is 1 only at the final position.
+    pub fn sample_batch(&self, rng: &mut Pcg) -> TaskBatch {
+        let (b, l) = (self.batch, self.seqlen);
+        let mut tokens = Vec::with_capacity(b * l);
+        let mut targets = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for r in 0..b {
+            let (toks, ans) = self.sample_seq(rng);
+            tokens.extend_from_slice(&toks);
+            targets[r * l + l - 1] = ans;
+            mask[r * l + l - 1] = 1.0;
+        }
+        TaskBatch { tokens, targets, mask, batch: b, seqlen: l }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn answer_is_recoverable_from_context() {
+        // The value for the query key must appear right after some earlier
+        // occurrence of the key — i.e. the task is solvable from context.
+        Prop::new("recall solvable").cases(200).check(|rng| {
+            let vocab = 8 + rng.usize_below(32);
+            let seqlen = 16 + 2 * rng.usize_below(64);
+            let task = RecallTask::new(seqlen, vocab, 1);
+            let (toks, ans) = task.sample_seq(rng);
+            let q = *toks.last().unwrap();
+            let mut found = false;
+            for i in 0..toks.len() - 2 {
+                if toks[i] == q && toks[i + 1] == ans {
+                    found = true;
+                    break;
+                }
+            }
+            prop_assert!(found, "query {q} -> {ans} not in context {toks:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dictionary_is_consistent_within_sequence() {
+        // A key never maps to two different values in one sequence.
+        Prop::new("recall consistent dict").cases(100).check(|rng| {
+            let task = RecallTask::new(64, 20, 1);
+            let (toks, _) = task.sample_seq(rng);
+            let n_keys = 10;
+            let mut seen = vec![None; n_keys];
+            let mut i = 0;
+            while i + 1 < toks.len() - 1 {
+                let (k, v) = (toks[i] as usize, toks[i + 1]);
+                if k < n_keys && v != 0 {
+                    match seen[k] {
+                        None => seen[k] = Some(v),
+                        Some(prev) => prop_assert!(prev == v, "key {k}: {prev} vs {v}"),
+                    }
+                }
+                i += 2;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_layout() {
+        let task = RecallTask::new(32, 10, 4);
+        let mut rng = Pcg::new(0);
+        let b = task.sample_batch(&mut rng);
+        assert_eq!(b.tokens.len(), 4 * 32);
+        assert_eq!(b.mask.iter().filter(|&&m| m > 0.0).count(), 4);
+        // mask set exactly at the last position of each row
+        for r in 0..4 {
+            assert_eq!(b.mask[r * 32 + 31], 1.0);
+        }
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let task = RecallTask::new(64, 30, 2);
+        let mut rng = Pcg::new(1);
+        let b = task.sample_batch(&mut rng);
+        assert!(b.tokens.iter().all(|&t| (0..30).contains(&t)));
+        assert!(b.targets.iter().all(|&t| (0..30).contains(&t)));
+    }
+}

@@ -1,0 +1,226 @@
+//! Byte-pair encoding tokenizer substrate (the paper's models use the GPT2
+//! BPE tokenizer; this is a from-scratch trainable equivalent for corpora
+//! generated in-repo).
+//!
+//! Training: greedy merge of the most frequent adjacent pair, word-internal
+//! only (words split on whitespace; whitespace is re-attached to the
+//! following word GPT2-style via a leading marker). Deterministic given the
+//! corpus (ties break lexicographically).
+
+use std::collections::HashMap;
+
+use crate::tokenizer::CharTokenizer;
+
+/// Marker prepended to word-initial tokens (stand-in for GPT2's 'Ġ').
+const WORD_MARK: char = '\u{1}';
+
+#[derive(Debug, Clone)]
+pub struct BpeTokenizer {
+    /// Vocabulary: token string → id. Base vocab = single chars.
+    vocab: HashMap<String, i32>,
+    /// Reverse map for decode.
+    rev: Vec<String>,
+    /// Learned merges in priority order: (left, right) → merged.
+    merges: Vec<(String, String)>,
+}
+
+impl BpeTokenizer {
+    /// Train on `text` until the vocabulary reaches `vocab_size` (or no pair
+    /// occurs at least twice).
+    pub fn train(text: &str, vocab_size: usize) -> BpeTokenizer {
+        // Base vocabulary: every char seen + the word marker.
+        let mut vocab: HashMap<String, i32> = HashMap::new();
+        let mut rev: Vec<String> = Vec::new();
+        let mut add = |s: String, vocab: &mut HashMap<String, i32>, rev: &mut Vec<String>| {
+            if !vocab.contains_key(&s) {
+                vocab.insert(s.clone(), rev.len() as i32);
+                rev.push(s);
+            }
+        };
+        add(WORD_MARK.to_string(), &mut vocab, &mut rev);
+        for c in text.chars() {
+            if !c.is_whitespace() {
+                add(c.to_string(), &mut vocab, &mut rev);
+            }
+        }
+
+        // Word frequency table, words as symbol sequences.
+        let mut words: HashMap<Vec<String>, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            let mut syms: Vec<String> = vec![WORD_MARK.to_string()];
+            syms.extend(w.chars().map(|c| c.to_string()));
+            *words.entry(syms).or_insert(0) += 1;
+        }
+
+        let mut merges = Vec::new();
+        while rev.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut pairs: HashMap<(String, String), usize> = HashMap::new();
+            for (syms, &cnt) in &words {
+                for win in syms.windows(2) {
+                    *pairs
+                        .entry((win[0].clone(), win[1].clone()))
+                        .or_insert(0) += cnt;
+                }
+            }
+            let Some(((l, r), best)) = pairs
+                .into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)))
+            else {
+                break;
+            };
+            if best < 2 {
+                break;
+            }
+            let merged = format!("{l}{r}");
+            add(merged.clone(), &mut vocab, &mut rev);
+            merges.push((l.clone(), r.clone()));
+            // Apply the merge to every word.
+            let mut new_words: HashMap<Vec<String>, usize> = HashMap::new();
+            for (syms, cnt) in words {
+                let mut out = Vec::with_capacity(syms.len());
+                let mut i = 0;
+                while i < syms.len() {
+                    if i + 1 < syms.len() && syms[i] == l && syms[i + 1] == r {
+                        out.push(merged.clone());
+                        i += 2;
+                    } else {
+                        out.push(syms[i].clone());
+                        i += 1;
+                    }
+                }
+                *new_words.entry(out).or_insert(0) += cnt;
+            }
+            words = new_words;
+        }
+        BpeTokenizer { vocab, rev, merges }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.rev.len()
+    }
+
+    /// Encode text: split on whitespace, apply merges in training order.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for w in text.split_whitespace() {
+            let mut syms: Vec<String> = vec![WORD_MARK.to_string()];
+            syms.extend(w.chars().map(|c| c.to_string()));
+            for (l, r) in &self.merges {
+                let mut merged_syms = Vec::with_capacity(syms.len());
+                let mut i = 0;
+                while i < syms.len() {
+                    if i + 1 < syms.len() && &syms[i] == l && &syms[i + 1] == r {
+                        merged_syms.push(format!("{l}{r}"));
+                        i += 2;
+                    } else {
+                        merged_syms.push(syms[i].clone());
+                        i += 1;
+                    }
+                }
+                syms = merged_syms;
+            }
+            for s in syms {
+                match self.vocab.get(&s) {
+                    Some(&id) => out.push(id),
+                    None => {
+                        // Unknown char: fall back to char-level pieces.
+                        for c in s.chars() {
+                            if let Some(&id) = self.vocab.get(&c.to_string()) {
+                                out.push(id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode ids back to text (word marker → leading space).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            let Some(tok) = self.rev.get(id as usize) else { continue };
+            for c in tok.chars() {
+                if c == WORD_MARK {
+                    if !out.is_empty() {
+                        out.push(' ');
+                    }
+                } else {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean tokens per word on `text` (compression diagnostics).
+    pub fn fertility(&self, text: &str) -> f64 {
+        let words = text.split_whitespace().count().max(1);
+        self.encode(text).len() as f64 / words as f64
+    }
+}
+
+/// Compression comparison against the char tokenizer (tokens per char).
+pub fn compression_ratio(bpe: &BpeTokenizer, text: &str) -> f64 {
+    let chars = CharTokenizer::new().encode(text).len().max(1);
+    bpe.encode(text).len() as f64 / chars as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat. the cat ran. a cat and the mat";
+
+    #[test]
+    fn roundtrips_whitespace_normalized() {
+        let bpe = BpeTokenizer::train(CORPUS, 60);
+        let ids = bpe.encode("the cat sat");
+        assert_eq!(bpe.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn learns_frequent_words_as_single_tokens() {
+        let bpe = BpeTokenizer::train(CORPUS, 80);
+        // "the" appears 4× — should merge into ≤2 symbols (often 1 + marker).
+        let ids = bpe.encode("the");
+        assert!(ids.len() <= 2, "'the' took {} tokens", ids.len());
+    }
+
+    #[test]
+    fn compression_beats_char_level() {
+        let bpe = BpeTokenizer::train(CORPUS, 100);
+        assert!(compression_ratio(&bpe, CORPUS) < 0.75);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = BpeTokenizer::train(CORPUS, 64);
+        let b = BpeTokenizer::train(CORPUS, 64);
+        assert_eq!(a.encode(CORPUS), b.encode(CORPUS));
+        assert_eq!(a.vocab_size(), b.vocab_size());
+    }
+
+    #[test]
+    fn unknown_chars_fall_back_gracefully() {
+        let bpe = BpeTokenizer::train(CORPUS, 40);
+        let ids = bpe.encode("cat zzz");
+        // 'z' never appeared; it's dropped rather than panicking.
+        assert!(bpe.decode(&ids).starts_with("cat"));
+    }
+
+    #[test]
+    fn vocab_capped() {
+        let bpe = BpeTokenizer::train(CORPUS, 30);
+        assert!(bpe.vocab_size() <= 30);
+    }
+
+    #[test]
+    fn fertility_decreases_with_vocab() {
+        let small = BpeTokenizer::train(CORPUS, 30);
+        let large = BpeTokenizer::train(CORPUS, 120);
+        assert!(large.fertility(CORPUS) <= small.fertility(CORPUS));
+    }
+}

@@ -1,0 +1,97 @@
+//! Character-level tokenizer (the LM substrate's GPT2-tokenizer stand-in).
+//!
+//! Vocabulary: 95 printable ASCII characters (0x20..0x7e) + `\n`, mapped to
+//! ids 0..95, with one reserved `<unk>` slot — 96 total, matching the
+//! `vocab: 96` of the `lm_*` configs. Round-trip safe on its domain.
+
+pub mod bpe;
+
+pub const VOCAB_SIZE: usize = 96;
+pub const UNK: i32 = 95;
+
+#[derive(Debug, Clone, Default)]
+pub struct CharTokenizer;
+
+impl CharTokenizer {
+    pub fn new() -> Self {
+        CharTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    pub fn encode_char(&self, c: char) -> i32 {
+        match c {
+            '\n' => 94,
+            c if (' '..='}').contains(&c) => (c as u8 - b' ') as i32,
+            _ => UNK,
+        }
+    }
+
+    pub fn decode_char(&self, id: i32) -> char {
+        match id {
+            94 => '\n',
+            0..=93 => (b' ' + id as u8) as char,
+            _ => '\u{fffd}',
+        }
+    }
+
+    pub fn encode(&self, s: &str) -> Vec<i32> {
+        s.chars().map(|c| self.encode_char(c)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter().map(|&i| self.decode_char(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = CharTokenizer::new();
+        let s = "Hello, world! 123 {ok}\nnext";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = CharTokenizer::new();
+        for c in ' '..='}' {
+            let id = t.encode_char(c);
+            assert!((0..VOCAB_SIZE as i32).contains(&id));
+        }
+        assert_eq!(t.encode_char('\n'), 94);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = CharTokenizer::new();
+        assert_eq!(t.encode_char('é'), UNK);
+        assert_eq!(t.encode_char('\t'), UNK);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_printable() {
+        Prop::new("tokenizer roundtrip").cases(200).check(|rng| {
+            let t = CharTokenizer::new();
+            let len = 1 + rng.usize_below(200);
+            let s: String = (0..len)
+                .map(|_| {
+                    if rng.f32() < 0.05 {
+                        '\n'
+                    } else {
+                        (b' ' + rng.below(94) as u8) as char
+                    }
+                })
+                .collect();
+            prop_assert!(t.decode(&t.encode(&s)) == s, "roundtrip failed");
+            Ok(())
+        });
+    }
+}

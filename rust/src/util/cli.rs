@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser substrate (the vendored crate set has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — flag names must be
+    /// declared so `--flag value` vs `--opt value` is unambiguous.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, flag_names: &[&str]) -> Args {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        a.flags.push(body.to_string());
+                    } else {
+                        a.options.insert(body.to_string(), iter.next().unwrap());
+                    }
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse_from(
+            v(&["train", "--steps", "100", "--fast", "--lr=0.5", "extra"]),
+            &["fast"],
+        );
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_flag() {
+        let a = Args::parse_from(v(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn option_followed_by_option_is_flag() {
+        let a = Args::parse_from(v(&["--a", "--b", "5"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get_usize("b", 0), 5);
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = Args::parse_from(v(&[]), &[]);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

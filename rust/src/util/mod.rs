@@ -1,0 +1,6 @@
+//! Substrate utilities: JSON, deterministic RNG, stats, CLI parsing.
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,77 @@
+//! Property-testing harness substrate (the vendored set has no proptest).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing case seed so the case can be replayed exactly:
+//! `Prop::new(name).cases(500).check(|rng| { ... })`.
+
+use crate::util::rng::Pcg;
+
+pub struct Prop {
+    name: String,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Prop {
+        Prop { name: name.to_string(), cases: 256, base_seed: 0x9e3779b97f4a7c15 }
+    }
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property; panics (test failure) with the failing case seed.
+    pub fn check<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Pcg) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self
+                .base_seed
+                .wrapping_add((case as u64).wrapping_mul(0xbf58476d1ce4e5b9));
+            let mut rng = Pcg::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {case} (replay seed {seed:#x}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("u32 below bound").cases(100).check(|rng| {
+            let n = 1 + rng.below(100);
+            let v = rng.below(n);
+            prop_assert!(v < n, "v={v} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_failing_seed() {
+        Prop::new("always false").cases(3).check(|_| Err("nope".into()));
+    }
+}

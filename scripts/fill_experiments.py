@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from results/*.csv (run after the
+experiment chain / benches). Idempotent: placeholders are kept as HTML
+comments next to the inserted tables so re-running refreshes them."""
+import csv
+import io
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TAGS = {
+    "FIGC1": "figC_1.csv",
+    "TABLE47": "table4_7.csv",
+    "FIGD": "figD_filters.csv",
+    "FIG41": "fig4_1.csv",
+    "TABLE43": "table4_3.csv",
+    "FIG42": "fig4_2.csv",
+    "TABLE42": "table4_2.csv",
+    "TABLE45": "table4_5.csv",
+    "ABLATIONS": "ablations.csv",
+    "TABLEC1": "tableC_1.csv",
+    "LMPRETRAIN": "lm_pretrain_lm_hyena_s.csv",
+    "FIG43": "fig4_3.csv",
+    "PERF_L3": "coordinator_micro.csv",
+}
+
+
+def csv_to_md(path: str) -> str:
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    if not rows:
+        return "*(empty)*"
+    out = io.StringIO()
+    out.write("| " + " | ".join(rows[0]) + " |\n")
+    out.write("|" + "---|" * len(rows[0]) + "\n")
+    for r in rows[1:]:
+        out.write("| " + " | ".join(r) + " |\n")
+    return out.getvalue()
+
+
+def main() -> None:
+    md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(md_path).read()
+    for tag, fname in TAGS.items():
+        path = os.path.join(ROOT, "results", fname)
+        marker = f"<!-- {tag} -->"
+        if marker not in text:
+            continue
+        if not os.path.exists(path):
+            print(f"  {tag}: {fname} missing, skipped")
+            continue
+        table = csv_to_md(path)
+        # Replace marker + any previously inserted table (up to next header
+        # or marker) with marker + fresh table.
+        pattern = re.compile(re.escape(marker) + r"\n(?:\|[^\n]*\n)*")
+        text = pattern.sub(marker + "\n" + table, text)
+        print(f"  {tag}: filled from {fname}")
+    open(md_path, "w").write(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+//! Native FFTConv micro-bench: direct O(L²) causal convolution vs the
+//! radix-2 FFT path of `hyena::backend::fft` across sequence lengths —
+//! the CPU reproduction of the paper's runtime scaling story (Sec. 4.4 /
+//! Fig. 4.3: subquadratic mixing is what makes 64K-token contexts viable).
+//! The FFT path must win from L ≈ 8K at the latest; at 64K the gap is
+//! orders of magnitude. Recorded in EXPERIMENTS.md §Perf Native.
+//!
+//! Run: `cargo bench --bench native_fftconv -- [--max-l 65536] [--iters N]`
+
+use std::time::Instant;
+
+use anyhow::Result;
+use hyena::backend::fft::{causal_conv_direct, random_signal, CausalConv};
+use hyena::report::Table;
+use hyena::util::cli::Args;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+fn time_runs<F: FnMut() -> f32>(iters: usize, mut f: F) -> Summary {
+    let mut s = Summary::new();
+    let mut sink = 0.0f32;
+    for i in 0..=iters {
+        let t0 = Instant::now();
+        sink += f();
+        let dt = t0.elapsed().as_secs_f64();
+        if i > 0 {
+            s.push(dt); // first run is warmup
+        }
+    }
+    // Keep the optimizer from eliding the work.
+    assert!(sink.is_finite() || sink.is_nan());
+    s
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let max_l = args.get_usize("max-l", 65536);
+    let iters_cap = args.get_usize("iters", 32);
+
+    let mut rng = Pcg::new(0);
+    let mut table = Table::new(
+        "§Perf Native — causal conv: direct O(L²) vs FFT O(L log L)",
+        &["L", "direct p50 ms", "fft p50 ms", "speedup", "fft plan ms"],
+    );
+
+    for l in [1024usize, 8192, 65536] {
+        if l > max_l {
+            continue;
+        }
+        let h = random_signal(&mut rng, l);
+        let v = random_signal(&mut rng, l);
+
+        // Direct conv cost grows with L²: keep total work roughly constant.
+        let direct_iters = (((1usize << 24) + l * l - 1) / (l * l)).clamp(1, iters_cap);
+        let direct = time_runs(direct_iters, || causal_conv_direct(&h, &v)[l - 1]);
+
+        let t0 = Instant::now();
+        let plan = CausalConv::new(l);
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let fft_iters = ((1usize << 22) / l).clamp(4, 4 * iters_cap.max(1));
+        let fft = time_runs(fft_iters, || plan.conv(&h, &v)[l - 1]);
+
+        // Cross-check while we are here: the two paths must agree.
+        let a = causal_conv_direct(&h, &v);
+        let b = plan.conv(&h, &v);
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs() / (1.0 + x.abs()))
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 2e-2, "FFT and direct conv disagree at L={l}: {max_err}");
+
+        let speedup = direct.p50() / fft.p50().max(1e-12);
+        println!(
+            "L={l:>6}: direct {:>10.3} ms  fft {:>8.4} ms  speedup {speedup:>8.1}x",
+            direct.p50() * 1e3,
+            fft.p50() * 1e3,
+        );
+        table.row(vec![
+            l.to_string(),
+            format!("{:.3}", direct.p50() * 1e3),
+            format!("{:.4}", fft.p50() * 1e3),
+            format!("{speedup:.1}"),
+            format!("{plan_ms:.2}"),
+        ]);
+    }
+
+    table.emit("native_fftconv");
+    Ok(())
+}

@@ -1,0 +1,363 @@
+//! Iterative radix-2 FFT and the causal FFT convolution it powers.
+//!
+//! This is the native backend's replacement for the XLA `Fft` op: the
+//! O(L log L) "FFTConv" of the paper (Sec. 2, "Fast Methods for
+//! Convolutions"). A causal aperiodic convolution of two length-L signals is
+//! computed by zero-padding both to the next power of two ≥ 2L, multiplying
+//! spectra, and truncating the circular result back to L.
+//!
+//! [`CausalConv`] is a small *plan*: it owns the twiddle table for one
+//! transform size so repeated convolutions at a fixed sequence length (the
+//! hot path of every Hyena block) pay the trigonometry once. Gradients reuse
+//! the same plan: the adjoint of `conv(h, ·)` is correlation with `h`
+//! ([`CausalConv::corr`]), i.e. multiplication by the conjugate spectrum.
+
+use crate::util::rng::Pcg;
+
+/// Radix-2 decimation-in-time FFT plan for one power-of-two size.
+pub struct Fft {
+    n: usize,
+    /// Twiddles `w_k = exp(-2πik/n)` for `k < n/2`.
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl Fft {
+    /// Build a plan for transform size `n` (must be a power of two ≥ 1).
+    pub fn new(n: usize) -> Fft {
+        assert!(n.is_power_of_two(), "FFT size {n} is not a power of two");
+        let half = n / 2;
+        let mut tw_re = Vec::with_capacity(half);
+        let mut tw_im = Vec::with_capacity(half);
+        for k in 0..half {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        Fft { n, tw_re, tw_im }
+    }
+
+    /// Transform size.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// In-place forward transform of `(re, im)`.
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, false);
+    }
+
+    /// In-place inverse transform (includes the 1/n scale).
+    pub fn inverse(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, true);
+    }
+
+    fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "re buffer length != plan size");
+        assert_eq!(im.len(), n, "im buffer length != plan size");
+        if n == 1 {
+            return;
+        }
+
+        // Bit-reversal permutation.
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+
+        // Butterflies; at stage `len`, butterfly j uses twiddle w_{j·(n/len)}.
+        let mut len = 2usize;
+        while len <= n {
+            let step = n / len;
+            let half = len / 2;
+            let mut start = 0usize;
+            while start < n {
+                for k in 0..half {
+                    let wr = self.tw_re[k * step];
+                    let wi = if inverse { -self.tw_im[k * step] } else { self.tw_im[k * step] };
+                    let a = start + k;
+                    let b = a + half;
+                    let tr = re[b] * wr - im[b] * wi;
+                    let ti = re[b] * wi + im[b] * wr;
+                    re[b] = re[a] - tr;
+                    im[b] = im[a] - ti;
+                    re[a] += tr;
+                    im[a] += ti;
+                }
+                start += len;
+            }
+            len <<= 1;
+        }
+
+        if inverse {
+            let scale = 1.0 / n as f32;
+            for x in re.iter_mut() {
+                *x *= scale;
+            }
+            for x in im.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+}
+
+/// Spectrum of a real signal: full complex FFT of the zero-padded input.
+#[derive(Clone)]
+pub struct Spectrum {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+/// Causal-convolution plan for signals of length `l`.
+pub struct CausalConv {
+    l: usize,
+    fft: Fft,
+}
+
+impl CausalConv {
+    pub fn new(l: usize) -> CausalConv {
+        assert!(l >= 1);
+        let n = (2 * l).next_power_of_two();
+        CausalConv { l, fft: Fft::new(n) }
+    }
+
+    /// Signal length the plan convolves.
+    pub fn len(&self) -> usize {
+        self.l
+    }
+    pub fn is_empty(&self) -> bool {
+        self.l == 0
+    }
+
+    /// FFT size the plan transforms at (≥ 2·len, power of two).
+    pub fn fft_size(&self) -> usize {
+        self.fft.size()
+    }
+
+    /// Spectrum of a real length-`l` signal (zero-padded to the plan size).
+    pub fn spectrum(&self, x: &[f32]) -> Spectrum {
+        assert_eq!(x.len(), self.l);
+        let n = self.fft.size();
+        let mut re = vec![0.0f32; n];
+        re[..self.l].copy_from_slice(x);
+        let mut im = vec![0.0f32; n];
+        self.fft.forward(&mut re, &mut im);
+        Spectrum { re, im }
+    }
+
+    /// `irfft(A · B)[..l]` — causal convolution from two spectra.
+    pub fn conv_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
+        let n = self.fft.size();
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        for k in 0..n {
+            re[k] = a.re[k] * b.re[k] - a.im[k] * b.im[k];
+            im[k] = a.re[k] * b.im[k] + a.im[k] * b.re[k];
+        }
+        self.fft.inverse(&mut re, &mut im);
+        re.truncate(self.l);
+        re
+    }
+
+    /// `irfft(conj(A) · B)[..l]` — causal correlation from two spectra.
+    ///
+    /// This is the adjoint of [`CausalConv::conv_spec`] in either argument:
+    /// with `y = conv(h, v)` and upstream `dy`, `dv = corr(h, dy)` and
+    /// `dh = corr(v, dy)`.
+    pub fn corr_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
+        let n = self.fft.size();
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        for k in 0..n {
+            re[k] = a.re[k] * b.re[k] + a.im[k] * b.im[k];
+            im[k] = a.re[k] * b.im[k] - a.im[k] * b.re[k];
+        }
+        self.fft.inverse(&mut re, &mut im);
+        re.truncate(self.l);
+        re
+    }
+
+    /// Causal convolution `y[t] = Σ_{s≤t} h[t−s]·v[s]` in O(L log L).
+    pub fn conv(&self, h: &[f32], v: &[f32]) -> Vec<f32> {
+        self.conv_spec(&self.spectrum(h), &self.spectrum(v))
+    }
+
+    /// Causal correlation `y[s] = Σ_{t≥s} a[t−s]·g[t]` in O(L log L).
+    pub fn corr(&self, a: &[f32], g: &[f32]) -> Vec<f32> {
+        self.corr_spec(&self.spectrum(a), &self.spectrum(g))
+    }
+}
+
+/// Reference O(L²) causal convolution (tests + the bench baseline).
+pub fn causal_conv_direct(h: &[f32], v: &[f32]) -> Vec<f32> {
+    let l = v.len();
+    assert_eq!(h.len(), l);
+    let mut y = vec![0.0f32; l];
+    for t in 0..l {
+        let mut acc = 0.0f32;
+        for s in 0..=t {
+            acc += h[t - s] * v[s];
+        }
+        y[t] = acc;
+    }
+    y
+}
+
+/// Reference O(L²) causal correlation (tests).
+pub fn causal_corr_direct(a: &[f32], g: &[f32]) -> Vec<f32> {
+    let l = g.len();
+    assert_eq!(a.len(), l);
+    let mut y = vec![0.0f32; l];
+    for s in 0..l {
+        let mut acc = 0.0f32;
+        for t in s..l {
+            acc += a[t - s] * g[t];
+        }
+        y[s] = acc;
+    }
+    y
+}
+
+/// Random signal helper shared by the property tests and the bench.
+pub fn random_signal(rng: &mut Pcg, l: usize) -> Vec<f32> {
+    (0..l).map(|_| rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn forward_matches_naive_dft() {
+        let mut rng = Pcg::new(11);
+        for n in [1usize, 2, 4, 8, 32] {
+            let re_in = random_signal(&mut rng, n);
+            let im_in = random_signal(&mut rng, n);
+            let (mut re, mut im) = (re_in.clone(), im_in.clone());
+            Fft::new(n).forward(&mut re, &mut im);
+            for k in 0..n {
+                let (mut wr, mut wi) = (0.0f64, 0.0f64);
+                for t in 0..n {
+                    let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                    let (c, s) = (ang.cos(), ang.sin());
+                    wr += re_in[t] as f64 * c - im_in[t] as f64 * s;
+                    wi += re_in[t] as f64 * s + im_in[t] as f64 * c;
+                }
+                assert!(close(re[k], wr as f32, 1e-4), "n={n} k={k}: {} vs {wr}", re[k]);
+                assert!(close(im[k], wi as f32, 1e-4), "n={n} k={k}: {} vs {wi}", im[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        Prop::new("fft roundtrip").cases(64).check(|rng| {
+            let n = 1usize << (1 + rng.usize_below(9)); // 2..=512
+            let fft = Fft::new(n);
+            let re0 = random_signal(rng, n);
+            let im0 = random_signal(rng, n);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            fft.forward(&mut re, &mut im);
+            fft.inverse(&mut re, &mut im);
+            for t in 0..n {
+                prop_assert!(close(re[t], re0[t], 1e-4), "re[{t}]: {} vs {}", re[t], re0[t]);
+                prop_assert!(close(im[t], im0[t], 1e-4), "im[{t}]: {} vs {}", im[t], im0[t]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fft_conv_matches_direct() {
+        Prop::new("fft conv == direct conv").cases(64).check(|rng| {
+            let l = 1 + rng.usize_below(96);
+            let plan = CausalConv::new(l);
+            let h = random_signal(rng, l);
+            let v = random_signal(rng, l);
+            let fast = plan.conv(&h, &v);
+            let slow = causal_conv_direct(&h, &v);
+            for t in 0..l {
+                prop_assert!(close(fast[t], slow[t], 2e-3), "t={t}: {} vs {}", fast[t], slow[t]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fft_corr_matches_direct() {
+        Prop::new("fft corr == direct corr").cases(64).check(|rng| {
+            let l = 1 + rng.usize_below(96);
+            let plan = CausalConv::new(l);
+            let a = random_signal(rng, l);
+            let g = random_signal(rng, l);
+            let fast = plan.corr(&a, &g);
+            let slow = causal_corr_direct(&a, &g);
+            for t in 0..l {
+                prop_assert!(close(fast[t], slow[t], 2e-3), "t={t}: {} vs {}", fast[t], slow[t]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv_is_causal() {
+        // Changing v[t0..] must not change y[..t0].
+        Prop::new("conv causality").cases(32).check(|rng| {
+            let l = 2 + rng.usize_below(62);
+            let plan = CausalConv::new(l);
+            let h = random_signal(rng, l);
+            let v = random_signal(rng, l);
+            let t0 = 1 + rng.usize_below(l - 1);
+            let mut v2 = v.clone();
+            for x in v2[t0..].iter_mut() {
+                *x += 1.0 + rng.f32();
+            }
+            let y1 = plan.conv(&h, &v);
+            let y2 = plan.conv(&h, &v2);
+            for t in 0..t0 {
+                prop_assert!(close(y1[t], y2[t], 1e-4), "future leaked into t={t} (t0={t0})");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spectra_reuse_matches_one_shot() {
+        let mut rng = Pcg::new(5);
+        let l = 40;
+        let plan = CausalConv::new(l);
+        let h = random_signal(&mut rng, l);
+        let v = random_signal(&mut rng, l);
+        let hs = plan.spectrum(&h);
+        let vs = plan.spectrum(&v);
+        let a = plan.conv_spec(&hs, &vs);
+        let b = plan.conv(&h, &v);
+        for t in 0..l {
+            assert!(close(a[t], b[t], 1e-5));
+        }
+    }
+
+    #[test]
+    fn plan_size_is_padded_power_of_two() {
+        assert_eq!(CausalConv::new(1).fft_size(), 2);
+        assert_eq!(CausalConv::new(16).fft_size(), 32);
+        assert_eq!(CausalConv::new(17).fft_size(), 64);
+        assert_eq!(CausalConv::new(1024).fft_size(), 2048);
+    }
+}

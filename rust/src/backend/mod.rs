@@ -1,0 +1,167 @@
+//! Execution backends: one trait, two engines (DESIGN.md §2).
+//!
+//! The coordinator (trainer, server, decoding, few-shot harness) talks to a
+//! model exclusively through the [`Backend`] trait:
+//!
+//! * [`crate::runtime::ModelState`] — the **pjrt** backend: executes HLO
+//!   artifacts AOT-compiled from the JAX L2 / Pallas L1 stack. Fastest when
+//!   the PJRT runtime and artifacts are present.
+//! * [`native::NativeBackend`] — the **native** backend: a pure-Rust
+//!   evaluation of the Hyena operator (FFT long conv + gating, implicit
+//!   sine-FFN filters, AdamW training). Runs anywhere, zero dependencies.
+//!
+//! Selection: `--backend native|pjrt|auto` on the CLI, the `HYENA_BACKEND`
+//! environment variable, or automatic detection (an artifact directory with
+//! compiled HLO selects pjrt; anything else selects native).
+
+pub mod fft;
+pub mod native;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Manifest, ModelState, Tensor};
+
+/// A model engine the coordinator can drive.
+///
+/// Implementations own parameters and optimizer state; the coordinator
+/// exchanges only host [`Tensor`]s and reads shapes/hyperparameters from the
+/// (real or synthesized) [`Manifest`].
+pub trait Backend {
+    /// The artifact manifest (pjrt) or its synthesized equivalent (native).
+    fn manifest(&self) -> &Manifest;
+
+    /// Optimizer steps taken so far.
+    fn step(&self) -> u64;
+
+    /// Overwrite the step counter (checkpoint restore).
+    fn set_step(&mut self, step: u64);
+
+    /// Re-initialize parameters from `seed` and reset the optimizer.
+    fn reinit(&mut self, seed: i32) -> Result<()>;
+
+    /// One optimizer step on a host batch (LM: `[tokens, targets, mask]`),
+    /// returning the scalar loss.
+    fn train_step(&mut self, batch: &[Tensor]) -> Result<f32>;
+
+    /// Forward pass on data tensors, returning logits.
+    fn forward(&self, inputs: &[Tensor]) -> Result<Tensor>;
+
+    /// Materialize the block-0 implicit filters `(N, D, L)` (Fig. D.5).
+    fn dump_filters(&self) -> Result<Tensor>;
+
+    /// Copy parameters out to host tensors in manifest order.
+    fn params_host(&self) -> Result<Vec<Tensor>>;
+
+    /// Restore parameters from host tensors in manifest order.
+    fn set_params(&mut self, tensors: &[Tensor]) -> Result<()>;
+}
+
+/// Which engine to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust evaluation (no artifacts, no PJRT needed).
+    Native,
+    /// PJRT execution of AOT-compiled HLO artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Spelling → kind; `None` for `auto`/empty (defer to detection).
+    /// The single source of truth for backend names.
+    fn from_name(s: &str) -> Result<Option<BackendKind>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "native" => Ok(Some(BackendKind::Native)),
+            "pjrt" | "xla" => Ok(Some(BackendKind::Pjrt)),
+            "auto" | "" => Ok(None),
+            other => bail!("unknown backend {other:?} (expected native|pjrt|auto)"),
+        }
+    }
+
+    /// Parse a CLI spelling. `auto`/empty defers to [`BackendKind::detect`].
+    pub fn parse(s: &str, dir: &Path) -> Result<BackendKind> {
+        match BackendKind::from_name(s)? {
+            Some(kind) => Ok(kind),
+            None => BackendKind::detect(dir),
+        }
+    }
+
+    /// Resolve the backend for `dir`: `HYENA_BACKEND` wins when set;
+    /// otherwise a directory containing compiled HLO selects pjrt and
+    /// everything else selects native.
+    pub fn detect(dir: &Path) -> Result<BackendKind> {
+        if let Ok(v) = std::env::var("HYENA_BACKEND") {
+            if let Some(kind) = BackendKind::from_name(&v)
+                .map_err(|e| anyhow::anyhow!("HYENA_BACKEND: {e}"))?
+            {
+                return Ok(kind);
+            }
+        }
+        if dir.join("init.hlo.txt").exists() {
+            Ok(BackendKind::Pjrt)
+        } else {
+            Ok(BackendKind::Native)
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Construct a backend of `kind` for the artifact directory (or built-in
+/// config name) `dir`, with parameters initialized from `seed`.
+pub fn load(kind: BackendKind, dir: &Path, seed: i32) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(native::NativeBackend::load(dir, seed)?)),
+        BackendKind::Pjrt => Ok(Box::new(ModelState::load(dir, seed)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn parse_spellings() {
+        let d = PathBuf::from("artifacts/none");
+        assert_eq!(BackendKind::parse("native", &d).unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("PJRT", &d).unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu", &d).is_err());
+        // auto on a non-artifact dir resolves native (no env override set).
+        if std::env::var_os("HYENA_BACKEND").is_none() {
+            assert_eq!(BackendKind::parse("auto", &d).unwrap(), BackendKind::Native);
+        }
+    }
+
+    #[test]
+    fn load_native_builtin_via_trait_object() {
+        let model = load(BackendKind::Native, &PathBuf::from("artifacts/golden_tiny"), 3).unwrap();
+        assert_eq!(model.manifest().name, "golden_tiny");
+        assert_eq!(model.step(), 0);
+        let params = model.params_host().unwrap();
+        assert_eq!(params.len(), model.manifest().params.len());
+    }
+
+    #[test]
+    fn reinit_changes_parameters_deterministically() {
+        let dir = PathBuf::from("artifacts/native_micro");
+        let mut a = load(BackendKind::Native, &dir, 0).unwrap();
+        let b = load(BackendKind::Native, &dir, 1).unwrap();
+        let flat = |m: &dyn Backend| -> Vec<f32> {
+            m.params_host()
+                .unwrap()
+                .iter()
+                .flat_map(|t| t.as_f32().unwrap().to_vec())
+                .collect()
+        };
+        assert_ne!(flat(a.as_ref()), flat(b.as_ref()));
+        a.reinit(1).unwrap();
+        assert_eq!(flat(a.as_ref()), flat(b.as_ref()));
+    }
+}

@@ -1,0 +1,330 @@
+//! Native-backend model configuration.
+//!
+//! Mirrors the hyperparameter dictionaries of `python/compile/configs.py`
+//! for the configurations the native backend evaluates: decoder-only LMs
+//! with the `hyena` mixer and the `implicit` (sine-FFN + decay window)
+//! filter parametrization. A config arrives either from an artifact's
+//! `manifest.json` (so `--backend native` runs the exact shape an artifact
+//! was compiled for) or from the built-in table below (so the native path
+//! needs no artifacts at all — DESIGN.md §1/§2).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+/// Hyperparameters of one native Hyena LM (paper Tab. A.1/A.3 scaled down).
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    pub name: String,
+    // Shape.
+    pub depth: usize,
+    pub width: usize,
+    pub vocab: usize,
+    pub seqlen: usize,
+    pub batch: usize,
+    pub mlp_ratio: f64,
+    /// Hyena order N (Def. 3.1).
+    pub order: usize,
+    /// Depthwise explicit short-conv taps F (Algorithm 1; 0 disables).
+    pub short_filter: usize,
+    // Implicit filter FFN (Sec. 3.3 / App. D.3).
+    pub pe_features: usize,
+    pub filter_width: usize,
+    pub filter_depth: usize,
+    pub sine_freq: f32,
+    pub decay_fast: f32,
+    pub decay_slow: f32,
+    pub window_shift: f32,
+    // Optimizer (paper App. A.2 recipe).
+    pub lr: f32,
+    pub warmup_steps: f64,
+    pub total_steps: f64,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub grad_clip: f32,
+}
+
+impl NativeConfig {
+    /// Synthetic-task defaults (`_SYN` in configs.py): 2 layers, width 64.
+    fn syn(name: &str, seqlen: usize) -> NativeConfig {
+        NativeConfig {
+            name: name.to_string(),
+            depth: 2,
+            width: 64,
+            vocab: 64,
+            seqlen,
+            batch: 16,
+            mlp_ratio: 2.0,
+            order: 2,
+            short_filter: 3,
+            pe_features: 8,
+            filter_width: 32,
+            filter_depth: 4,
+            sine_freq: 14.0,
+            decay_fast: 0.3,
+            decay_slow: 1.5,
+            window_shift: 0.01,
+            lr: 5e-4,
+            warmup_steps: 100.0,
+            total_steps: 2000.0,
+            weight_decay: 0.1,
+            beta1: 0.9,
+            beta2: 0.98,
+            adam_eps: 1e-8,
+            grad_clip: 1.0,
+        }
+    }
+
+    /// TinyPile LM defaults (`_LM` in configs.py).
+    fn lm(name: &str, depth: usize, width: usize) -> NativeConfig {
+        NativeConfig {
+            depth,
+            width,
+            vocab: 96,
+            seqlen: 256,
+            batch: 8,
+            mlp_ratio: 4.0,
+            filter_width: 64,
+            lr: 6e-4,
+            ..NativeConfig::syn(name, 256)
+        }
+    }
+
+    /// Built-in configs runnable with zero artifacts, keyed by artifact name.
+    pub fn builtin(name: &str) -> Option<NativeConfig> {
+        let cfg = match name {
+            // rust↔python golden shape (configs.py `golden_tiny`).
+            "golden_tiny" => NativeConfig {
+                depth: 1,
+                width: 32,
+                vocab: 32,
+                batch: 2,
+                ..NativeConfig::syn(name, 16)
+            },
+            // Micro shape for fast native tests (native-only addition).
+            "native_micro" => NativeConfig {
+                depth: 1,
+                width: 16,
+                vocab: 16,
+                batch: 2,
+                pe_features: 4,
+                filter_width: 8,
+                filter_depth: 3,
+                ..NativeConfig::syn(name, 8)
+            },
+            // E1: filter parametrization testbeds (implicit rows).
+            "ar_implicit_L128" => NativeConfig::syn(name, 128),
+            "ar_implicit_L512" => NativeConfig::syn(name, 512),
+            // E2: operator comparison (hyena row).
+            "op_hyena_L1024" => NativeConfig { batch: 8, ..NativeConfig::syn(name, 1024) },
+            // E3/E4: TinyPile LMs.
+            "lm_hyena_s" => NativeConfig::lm(name, 4, 128),
+            "lm_hyena_m" => NativeConfig::lm(name, 6, 192),
+            "lm_hyena3_wt" => NativeConfig { order: 3, ..NativeConfig::lm(name, 4, 128) },
+            // E9: learning arithmetic.
+            "arith_d1" | "arith_d2" | "arith_d3" => NativeConfig {
+                depth: name.as_bytes()[7] as usize - b'0' as usize,
+                vocab: 16,
+                batch: 32,
+                ..NativeConfig::syn(name, 32)
+            },
+            _ => return None,
+        };
+        Some(cfg)
+    }
+
+    /// Names accepted by [`NativeConfig::builtin`], for `hyena list`.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &[
+            "golden_tiny",
+            "native_micro",
+            "ar_implicit_L128",
+            "ar_implicit_L512",
+            "op_hyena_L1024",
+            "lm_hyena_s",
+            "lm_hyena_m",
+            "lm_hyena3_wt",
+            "arith_d1",
+            "arith_d2",
+            "arith_d3",
+        ]
+    }
+
+    /// Read a config from an artifact manifest (`config` block of
+    /// `manifest.json`). Only LM/hyena/implicit configs are evaluable
+    /// natively; anything else is directed to the PJRT backend.
+    pub fn from_manifest(man: &Manifest) -> Result<NativeConfig> {
+        if man.family() != "lm" {
+            bail!(
+                "native backend supports family=lm, {} is {:?} (use --backend pjrt)",
+                man.name,
+                man.family()
+            );
+        }
+        let mixer = man.cfg_str("mixer").unwrap_or("hyena");
+        if mixer != "hyena" {
+            bail!(
+                "native backend implements the hyena mixer, {} uses {mixer:?} \
+                 (use --backend pjrt)",
+                man.name
+            );
+        }
+        let filter = man.cfg_str("filter_kind").unwrap_or("implicit");
+        if filter != "implicit" {
+            bail!(
+                "native backend implements the implicit filter, {} uses {filter:?} \
+                 (use --backend pjrt)",
+                man.name
+            );
+        }
+        let f = |key: &str, dflt: f64| man.config.get(key).and_then(Json::as_f64).unwrap_or(dflt);
+        let u = |key: &str| man.cfg_usize(key);
+        Ok(NativeConfig {
+            name: man.name.clone(),
+            depth: u("depth")?,
+            width: u("width")?,
+            vocab: u("vocab")?,
+            seqlen: u("seqlen")?,
+            batch: u("batch")?,
+            mlp_ratio: f("mlp_ratio", 4.0),
+            order: f("order", 2.0) as usize,
+            short_filter: f("short_filter", 3.0) as usize,
+            pe_features: f("pe_features", 8.0) as usize,
+            filter_width: f("filter_width", 32.0) as usize,
+            filter_depth: f("filter_depth", 4.0) as usize,
+            sine_freq: f("sine_freq", 14.0) as f32,
+            decay_fast: f("decay_fast", 0.3) as f32,
+            decay_slow: f("decay_slow", 1.5) as f32,
+            window_shift: f("window_shift", 0.01) as f32,
+            lr: f("lr", 6e-4) as f32,
+            warmup_steps: f("warmup_steps", 100.0),
+            total_steps: f("total_steps", 1000.0),
+            weight_decay: f("weight_decay", 0.1) as f32,
+            beta1: f("beta1", 0.9) as f32,
+            beta2: f("beta2", 0.98) as f32,
+            adam_eps: f("adam_eps", 1e-8) as f32,
+            grad_clip: f("grad_clip", 1.0) as f32,
+        })
+    }
+
+    /// MLP hidden width (`int(D * mlp_ratio)` like the Python model).
+    pub fn mlp_dim(&self) -> usize {
+        (self.width as f64 * self.mlp_ratio) as usize
+    }
+
+    /// Filter-FFN input features: `2K + 1` positional-encoding channels.
+    pub fn pe_dim(&self) -> usize {
+        2 * self.pe_features + 1
+    }
+
+    /// Per-layer (fan-in, fan-out) of the filter FFN:
+    /// `[pe_dim] + [filter_width]*(filter_depth-1) + [order*width]`.
+    pub fn filter_layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut sizes = vec![self.pe_dim()];
+        for _ in 0..self.filter_depth.saturating_sub(1) {
+            sizes.push(self.filter_width);
+        }
+        sizes.push(self.order * self.width);
+        sizes.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Sanity-check shape parameters before building a model.
+    pub fn validate(&self) -> Result<()> {
+        if self.depth == 0 || self.width == 0 || self.vocab == 0 {
+            bail!("{}: depth/width/vocab must be nonzero", self.name);
+        }
+        if self.seqlen == 0 || self.batch == 0 {
+            bail!("{}: seqlen/batch must be nonzero", self.name);
+        }
+        if self.order == 0 {
+            bail!("{}: hyena order must be ≥ 1", self.name);
+        }
+        if self.filter_depth == 0 {
+            bail!("{}: filter_depth must be ≥ 1", self.name);
+        }
+        Ok(())
+    }
+
+    /// The `config` block of a synthesized manifest (same keys the AOT
+    /// pipeline records, so manifest consumers cannot tell the backends
+    /// apart — DESIGN.md §2).
+    pub fn config_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::str("lm")),
+            ("mixer", Json::str("hyena")),
+            ("filter_kind", Json::str("implicit")),
+            ("depth", Json::num(self.depth as f64)),
+            ("width", Json::num(self.width as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("seqlen", Json::num(self.seqlen as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("mlp_ratio", Json::num(self.mlp_ratio)),
+            ("order", Json::num(self.order as f64)),
+            ("short_filter", Json::num(self.short_filter as f64)),
+            ("pe_features", Json::num(self.pe_features as f64)),
+            ("filter_width", Json::num(self.filter_width as f64)),
+            ("filter_depth", Json::num(self.filter_depth as f64)),
+            ("sine_freq", Json::num(self.sine_freq as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("warmup_steps", Json::num(self.warmup_steps)),
+            ("total_steps", Json::num(self.total_steps)),
+            ("weight_decay", Json::num(self.weight_decay as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_validate() {
+        for name in NativeConfig::builtin_names() {
+            let cfg = NativeConfig::builtin(name).expect(name);
+            assert_eq!(&cfg.name, name);
+            cfg.validate().expect(name);
+        }
+        assert!(NativeConfig::builtin("lm_attn_wt").is_none());
+    }
+
+    #[test]
+    fn golden_tiny_matches_python_shape() {
+        let c = NativeConfig::builtin("golden_tiny").unwrap();
+        assert_eq!((c.depth, c.width, c.vocab, c.seqlen, c.batch), (1, 32, 32, 16, 2));
+        assert_eq!(c.order, 2);
+        assert_eq!(c.pe_dim(), 17);
+        assert_eq!(c.mlp_dim(), 64);
+        let dims = c.filter_layer_dims();
+        assert_eq!(dims, vec![(17, 32), (32, 32), (32, 32), (32, 64)]);
+    }
+
+    #[test]
+    fn arith_depth_parses_from_name() {
+        assert_eq!(NativeConfig::builtin("arith_d3").unwrap().depth, 3);
+        assert_eq!(NativeConfig::builtin("arith_d1").unwrap().depth, 1);
+    }
+
+    #[test]
+    fn from_manifest_rejects_non_hyena() {
+        let man = Manifest {
+            name: "t".into(),
+            dir: std::path::PathBuf::new(),
+            params: vec![],
+            config: Json::parse(
+                r#"{"family":"lm","mixer":"attn","batch":1,"seqlen":8,
+                    "vocab":8,"depth":1,"width":8}"#,
+            )
+            .unwrap(),
+            param_count: 0,
+            flops_per_step: None,
+            flops_per_token: None,
+            has_train_step: false,
+            has_filters: false,
+            filter_params: vec![],
+        };
+        assert!(NativeConfig::from_manifest(&man).is_err());
+    }
+}

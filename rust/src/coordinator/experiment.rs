@@ -1,26 +1,33 @@
-//! Shared experiment-driver plumbing for the `examples/` binaries: train an
-//! artifact on a batch source, evaluate, and time forward/train passes.
+//! Shared experiment-driver plumbing for the `examples/` binaries: train a
+//! model on a batch source, evaluate, and time forward/train passes.
+//!
+//! Models are addressed by artifact directory and constructed through
+//! [`crate::backend`], so every driver honors `HYENA_BACKEND` and runs on
+//! either engine (artifact dirs with compiled HLO select pjrt, everything
+//! else the native backend).
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend::{self, Backend, BackendKind};
 use crate::coordinator::trainer::{eval_accuracy, BatchSource, TrainReport, Trainer};
-use crate::runtime::{ModelState, Tensor};
+use crate::runtime::Tensor;
 use crate::util::stats::Summary;
 
-/// Train `artifact` for `steps` on `source`; returns the model + report.
+/// Train the model at `dir` for `steps` on `source`; returns model + report.
 pub fn train_artifact<S: BatchSource>(
     dir: &Path,
     seed: i32,
     mut source: S,
     steps: u64,
     quiet: bool,
-) -> Result<(ModelState, TrainReport)> {
-    let mut model = ModelState::load(dir, seed)?;
+) -> Result<(Box<dyn Backend>, TrainReport)> {
+    let kind = BackendKind::detect(dir)?;
+    let mut model = backend::load(kind, dir, seed)?;
     let report = {
-        let mut tr = Trainer::new(&mut model, || source.next_batch());
+        let mut tr = Trainer::new(model.as_mut(), || source.next_batch());
         tr.quiet = quiet;
         tr.run(steps)?
     };
@@ -37,13 +44,13 @@ pub fn train_and_eval<S: BatchSource>(
     quiet: bool,
 ) -> Result<(f64, TrainReport)> {
     let (model, report) = train_artifact(dir, seed, || source.next_batch(), steps, quiet)?;
-    let acc = eval_accuracy(&model, &mut || source.next_batch(), eval_batches)?;
+    let acc = eval_accuracy(model.as_ref(), &mut || source.next_batch(), eval_batches)?;
     Ok((acc, report))
 }
 
 /// Wall-time a forward pass `iters` times after `warmup` runs.
 pub fn bench_forward(
-    model: &ModelState,
+    model: &dyn Backend,
     inputs: &[Tensor],
     warmup: usize,
     iters: usize,
@@ -62,7 +69,7 @@ pub fn bench_forward(
 
 /// Wall-time train steps.
 pub fn bench_train_step<S: BatchSource>(
-    model: &mut ModelState,
+    model: &mut dyn Backend,
     source: &mut S,
     warmup: usize,
     iters: usize,

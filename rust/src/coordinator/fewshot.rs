@@ -9,8 +9,9 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::coordinator::generation::logprob_at;
-use crate::runtime::{ModelState, Tensor};
+use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
 /// One multiple-choice episode: prompt tokens + candidate answer tokens.
@@ -23,9 +24,9 @@ pub struct Episode {
 
 /// Score one episode: pick the option with the highest mean token logprob.
 /// Returns (chosen index, was_correct).
-pub fn score_episode(model: &ModelState, ep: &Episode) -> Result<(usize, bool)> {
-    let b = model.manifest.batch()?;
-    let l = model.manifest.seqlen()?;
+pub fn score_episode(model: &dyn Backend, ep: &Episode) -> Result<(usize, bool)> {
+    let b = model.manifest().batch()?;
+    let l = model.manifest().seqlen()?;
     let mut best = (f32::NEG_INFINITY, 0usize);
     for (oi, opt) in ep.options.iter().enumerate() {
         let mut seq = ep.prompt.clone();
@@ -63,7 +64,7 @@ pub fn with_shots(mut make: impl FnMut(&mut Pcg) -> Episode, k: usize, rng: &mut
 
 /// Evaluate accuracy over n episodes.
 pub fn eval_episodes(
-    model: &ModelState,
+    model: &dyn Backend,
     mut make: impl FnMut(&mut Pcg) -> Episode,
     shots: usize,
     n: usize,

@@ -6,7 +6,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{ModelState, Tensor};
+use crate::backend::Backend;
+use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
 /// Sampling policy for one request.
@@ -50,15 +51,15 @@ pub fn argmax(row: &[f32]) -> i32 {
 /// its next-token logits. Each row stops after its own `max_new` tokens or
 /// at the model's window edge. Returns the generated suffixes.
 pub fn decode_batch(
-    model: &ModelState,
+    model: &dyn Backend,
     prompts: &[Vec<i32>],
     max_new: &[usize],
     sampling: Sampling,
     rng: &mut Pcg,
 ) -> Result<Vec<Vec<i32>>> {
-    let b = model.manifest.batch()?;
-    let l = model.manifest.seqlen()?;
-    let v = model.manifest.vocab()?;
+    let b = model.manifest().batch()?;
+    let l = model.manifest().seqlen()?;
+    let v = model.manifest().vocab()?;
     if prompts.len() > b {
         bail!("{} prompts > compiled batch {}", prompts.len(), b);
     }

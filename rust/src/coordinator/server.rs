@@ -1,12 +1,13 @@
 //! Threaded inference server with dynamic batching (serving-path L3).
 //!
-//! XLA handles are `!Send`, so the worker thread *constructs* its own
-//! `ModelState` from the artifact path; clients and worker exchange plain
-//! host data (`Vec<i32>` token ids) over mpsc channels. The worker drains
-//! the queue through the `Batcher` policy (full-batch or deadline), pads the
-//! prompt rows and decodes the whole batch together — request-level
-//! continuous batching (iteration-level rebatching has no payoff without a
-//! KV cache; the paper defers fast autoregressive inference to future work).
+//! XLA handles are `!Send` (and backends in general need not be), so the
+//! worker thread *constructs* its own [`Backend`] from the artifact path;
+//! clients and worker exchange plain host data (`Vec<i32>` token ids) over
+//! mpsc channels. The worker drains the queue through the `Batcher` policy
+//! (full-batch or deadline), pads the prompt rows and decodes the whole
+//! batch together — request-level continuous batching (iteration-level
+//! rebatching has no payoff without a KV cache; the paper defers fast
+//! autoregressive inference to future work).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -15,9 +16,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{self, Backend, BackendKind};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::generation::{decode_batch, Sampling};
-use crate::runtime::{ModelState, Tensor};
+use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
 pub struct GenerateRequest {
@@ -75,9 +77,10 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker thread: it loads+compiles the artifact at
-    /// `artifact_dir` itself (XLA state never crosses threads) and then
-    /// serves until `stop()`. Blocks until the model is ready.
+    /// Start the worker thread: it constructs its own backend for
+    /// `artifact_dir` (backend state never crosses threads) and then serves
+    /// until `stop()`. The engine follows [`BackendKind::detect`]
+    /// (`HYENA_BACKEND`, else artifact autodetection). Blocks until ready.
     pub fn start(artifact_dir: PathBuf, seed: i32, max_wait: Duration) -> Result<Server> {
         Self::start_with_params(artifact_dir, seed, max_wait, None)
     }
@@ -91,20 +94,32 @@ impl Server {
         max_wait: Duration,
         params: Option<Vec<Tensor>>,
     ) -> Result<Server> {
+        let kind = BackendKind::detect(&artifact_dir)?;
+        Self::start_kind(kind, artifact_dir, seed, max_wait, params)
+    }
+
+    /// Start with an explicitly chosen engine (the CLI's `--backend`).
+    pub fn start_kind(
+        kind: BackendKind,
+        artifact_dir: PathBuf,
+        seed: i32,
+        max_wait: Duration,
+        params: Option<Vec<Tensor>>,
+    ) -> Result<Server> {
         let (tx, rx) = channel::<Envelope>();
         let (sd_tx, sd_rx) = channel::<()>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
         let worker = std::thread::Builder::new()
             .name("hyena-server".into())
             .spawn(move || {
-                let model = match ModelState::load(&artifact_dir, seed).and_then(|mut m| {
+                let model = match backend::load(kind, &artifact_dir, seed).and_then(|mut m| {
                     if let Some(p) = params {
                         m.set_params(&p)?;
                     }
                     Ok(m)
                 }) {
                     Ok(m) => {
-                        let bs = m.manifest.batch().unwrap_or(1);
+                        let bs = m.manifest().batch().unwrap_or(1);
                         let _ = ready_tx.send(Ok(bs));
                         m
                     }
@@ -113,7 +128,7 @@ impl Server {
                         return;
                     }
                 };
-                let batch_size = model.manifest.batch().unwrap_or(1);
+                let batch_size = model.manifest().batch().unwrap_or(1);
                 worker_loop(model, rx, sd_rx, batch_size, max_wait, seed as u64);
             })
             .expect("spawn server worker");
@@ -132,7 +147,7 @@ impl Server {
 }
 
 fn worker_loop(
-    model: ModelState,
+    model: Box<dyn Backend>,
     rx: Receiver<Envelope>,
     shutdown: Receiver<()>,
     batch_size: usize,
@@ -156,7 +171,7 @@ fn worker_loop(
         let now = Instant::now();
         if batcher.ready(now) {
             let envs = batcher.take_batch();
-            serve_batch(&model, envs, &mut rng);
+            serve_batch(model.as_ref(), envs, &mut rng);
             continue;
         }
         // Sleep until the oldest deadline or a short poll tick.
@@ -171,7 +186,7 @@ fn worker_loop(
     }
 }
 
-fn serve_batch(model: &ModelState, envs: Vec<Envelope>, rng: &mut Pcg) {
+fn serve_batch(model: &dyn Backend, envs: Vec<Envelope>, rng: &mut Pcg) {
     let occupancy = envs.len();
     let entered = Instant::now();
     let prompts: Vec<Vec<i32>> = envs.iter().map(|e| e.req.prompt.clone()).collect();

@@ -1,13 +1,14 @@
-//! Training loop orchestrator: drives a `ModelState`'s train_step executable
-//! over a batch source, tracks losses/throughput, and mirrors the in-graph
-//! LR schedule for logging.
+//! Training loop orchestrator: drives a [`Backend`]'s train step over a
+//! batch source and tracks losses/throughput. Backend-agnostic — the same
+//! loop trains PJRT artifacts and native models.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::metrics::perplexity;
-use crate::runtime::{ModelState, Tensor};
+use crate::runtime::Tensor;
 
 /// Anything that can produce training batches (tasks, corpus, images).
 pub trait BatchSource {
@@ -45,7 +46,7 @@ pub struct TrainReport {
 }
 
 pub struct Trainer<'a, S: BatchSource> {
-    pub model: &'a mut ModelState,
+    pub model: &'a mut dyn Backend,
     pub source: S,
     pub log_every: u64,
     /// Exponential moving average window for reported losses.
@@ -54,15 +55,15 @@ pub struct Trainer<'a, S: BatchSource> {
 }
 
 impl<'a, S: BatchSource> Trainer<'a, S> {
-    pub fn new(model: &'a mut ModelState, source: S) -> Self {
+    pub fn new(model: &'a mut dyn Backend, source: S) -> Self {
         Trainer { model, source, log_every: 50, ema: 0.9, quiet: false }
     }
 
     /// Run `steps` optimizer steps; returns the loss curve and throughput.
     pub fn run(&mut self, steps: u64) -> Result<TrainReport> {
-        let tokens_per_batch = (self.model.manifest.batch()?
-            * self.model.manifest.seqlen().unwrap_or(1)) as u64;
-        let flops_per_step = self.model.manifest.flops_per_step;
+        let tokens_per_batch = (self.model.manifest().batch()?
+            * self.model.manifest().seqlen().unwrap_or(1)) as u64;
+        let flops_per_step = self.model.manifest().flops_per_step;
         let t0 = Instant::now();
         let mut curve = Vec::new();
         let mut ema_loss: Option<f32> = None;
@@ -77,10 +78,10 @@ impl<'a, S: BatchSource> Trainer<'a, S> {
             });
             if i % self.log_every == 0 || i + 1 == steps {
                 let point = LogPoint {
-                    step: self.model.step,
+                    step: self.model.step(),
                     loss: ema_loss.unwrap(),
                     ppl: perplexity(ema_loss.unwrap()),
-                    tokens_seen: self.model.step * tokens_per_batch,
+                    tokens_seen: self.model.step() * tokens_per_batch,
                     elapsed_s: t0.elapsed().as_secs_f64(),
                 };
                 if !self.quiet {
@@ -110,7 +111,7 @@ impl<'a, S: BatchSource> Trainer<'a, S> {
 /// fraction of positions with mask > 0 where argmax(logits) == target.
 /// This is the metric for all synthetic-task tables (Fig 4.1, Tab 4.2, ...).
 pub fn eval_accuracy<S: BatchSource>(
-    model: &ModelState,
+    model: &dyn Backend,
     source: &mut S,
     batches: usize,
 ) -> Result<f64> {
@@ -148,7 +149,7 @@ pub fn eval_accuracy<S: BatchSource>(
 
 /// Evaluate mean masked cross-entropy (→ perplexity) on held-out batches.
 pub fn eval_loss<S: BatchSource>(
-    model: &ModelState,
+    model: &dyn Backend,
     source: &mut S,
     batches: usize,
 ) -> Result<f64> {

@@ -6,14 +6,18 @@
 //! EXPERIMENTS.md for paper-vs-measured results.
 //!
 //! Layering:
+//! * [`backend`] — the [`backend::Backend`] trait and its two engines: the
+//!   PJRT artifact runtime and the pure-Rust native Hyena evaluator
+//!   (FFT long conv + gating; DESIGN.md §2).
 //! * [`runtime`] — PJRT client; loads HLO-text artifacts AOT-compiled by
 //!   `python/compile/aot.py` (JAX L2 models calling Pallas L1 kernels).
 //! * [`coordinator`] — training loop, dynamic-batching inference server,
-//!   decoding, few-shot harness.
+//!   decoding, few-shot harness; backend-agnostic via [`backend::Backend`].
 //! * [`tasks`], [`data`], [`tokenizer`] — the synthetic substrates standing
 //!   in for the paper's datasets (substitution table: DESIGN.md §3).
 //! * [`metrics`], [`report`], [`util`] — FLOP accounting (App. A.2), table
 //!   emission, JSON/RNG/CLI/property-test substrates.
+pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;

@@ -1,24 +1,32 @@
 //! `hyena` CLI — leader entrypoint for the coordinator.
 //!
 //! Subcommands:
-//!   list                              list available artifacts
+//!   list                              list artifacts + built-in native configs
 //!   train --model NAME [--steps N]    train on TinyPile (lm_*) or task data
 //!   eval  --model NAME                held-out loss/ppl on TinyPile
 //!   serve --model NAME [--requests N] run the batching server demo
 //!   dump-filters --model NAME [--out F] write filter CSV (Fig. D.5)
 //!   info  --model NAME                print manifest summary
+//!
+//! Every subcommand takes `--backend native|pjrt|auto` (default `auto`,
+//! also settable via `HYENA_BACKEND`). `auto` picks pjrt when the model's
+//! artifact directory holds compiled HLO and native otherwise, so a fresh
+//! checkout with no artifacts trains/serves out of the box.
 
+use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use hyena::backend::{self, Backend, BackendKind};
+use hyena::backend::native::NativeConfig;
 use hyena::coordinator::generation::Sampling;
 use hyena::coordinator::server::{GenerateRequest, Server};
 use hyena::coordinator::trainer::{eval_loss, Trainer};
 use hyena::data::corpus::{generate, CorpusConfig};
 use hyena::data::dataset::LmBatches;
 use hyena::runtime::checkpoint::Checkpoint;
-use hyena::runtime::{runtime, Manifest, ModelState};
+use hyena::runtime::Manifest;
 use hyena::util::cli::Args;
 use hyena::util::rng::Pcg;
 
@@ -34,7 +42,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: hyena <list|info|train|eval|serve|dump-filters> \
-                 [--model NAME] [--steps N] [--seed S]"
+                 [--model NAME] [--backend native|pjrt|auto] [--steps N] [--seed S]"
             );
             Ok(())
         }
@@ -47,29 +55,61 @@ fn model_arg(args: &Args) -> Result<String> {
         .ok_or_else(|| anyhow!("--model NAME required (see `hyena list`)"))
 }
 
+/// Resolve `--backend` / `HYENA_BACKEND` / autodetection for `dir`.
+fn backend_kind(args: &Args, dir: &Path) -> Result<BackendKind> {
+    BackendKind::parse(args.get_or("backend", "auto"), dir)
+}
+
+fn load_model(args: &Args, name: &str, seed: i32) -> Result<(Box<dyn Backend>, BackendKind)> {
+    let dir = hyena::artifact(name);
+    let kind = backend_kind(args, &dir)?;
+    let model = backend::load(kind, &dir, seed)?;
+    Ok((model, kind))
+}
+
 fn cmd_list() -> Result<()> {
     let dir = hyena::artifacts_dir();
-    let mut names: Vec<String> = std::fs::read_dir(&dir)?
-        .filter_map(|e| e.ok())
-        .filter(|e| e.path().join("manifest.json").exists())
-        .map(|e| e.file_name().to_string_lossy().into_owned())
-        .collect();
+    let mut names: Vec<String> = match std::fs::read_dir(&dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("manifest.json").exists())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect(),
+        Err(_) => Vec::new(),
+    };
     names.sort();
-    for n in names {
+    if names.is_empty() {
+        println!("(no compiled artifacts under {})", dir.display());
+    }
+    for n in &names {
         println!("{n}");
+    }
+    println!("\nbuilt-in native configs (no artifacts needed, --backend native):");
+    for n in NativeConfig::builtin_names() {
+        if !names.iter().any(|a| a == n) {
+            println!("{n}");
+        }
     }
     Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
-    let m = Manifest::load(&hyena::artifact(&name))?;
-    println!("name           {}", m.name);
-    println!("family         {}", m.family());
-    println!("params         {} tensors, {} elements", m.params.len(), m.numel());
-    println!("batch x seqlen {} x {}", m.batch()?, m.seqlen()?);
-    println!("train_step     {}", m.has_train_step);
-    if let Some(f) = m.flops_per_step {
+    let dir = hyena::artifact(&name);
+    let kind = backend_kind(args, &dir)?;
+    // pjrt: read the manifest straight off disk. native: synthesize it
+    // (cheap — parameters for these model sizes initialize in milliseconds).
+    let man: Manifest = match kind {
+        BackendKind::Pjrt => Manifest::load(&dir)?,
+        BackendKind::Native => backend::load(kind, &dir, 0)?.manifest().clone(),
+    };
+    println!("name           {}", man.name);
+    println!("backend        {}", kind.name());
+    println!("family         {}", man.family());
+    println!("params         {} tensors, {} elements", man.params.len(), man.numel());
+    println!("batch x seqlen {} x {}", man.batch()?, man.seqlen()?);
+    println!("train_step     {}", man.has_train_step);
+    if let Some(f) = man.flops_per_step {
         println!("flops/step     {f:.3e}");
     }
     Ok(())
@@ -79,10 +119,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let steps = args.get_u64("steps", 300);
     let seed = args.get_u64("seed", 0);
-    println!("loading {name} (platform: {})", runtime().platform());
-    let mut model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
-    if model.manifest.family() != "lm" {
-        bail!("`hyena train` drives LM artifacts; use the examples/ for img");
+    let (mut model, kind) = load_model(args, &name, seed as i32)?;
+    println!("loaded {name} (backend: {})", kind.name());
+    if model.manifest().family() != "lm" {
+        bail!("`hyena train` drives LM models; use the examples/ for img");
     }
     let corpus = generate(&CorpusConfig { seed, ..Default::default() }, 400);
     println!(
@@ -90,29 +130,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         corpus.train.len(),
         corpus.val.len()
     );
-    let b = model.manifest.batch()?;
-    let l = model.manifest.seqlen()?;
-    let vocab = model.manifest.vocab()?;
+    let b = model.manifest().batch()?;
+    let l = model.manifest().seqlen()?;
+    let vocab = model.manifest().vocab()?;
     if let Some(ckpt_path) = args.get("restore") {
-        let ckpt = Checkpoint::load(std::path::Path::new(ckpt_path))?;
-        model.step = ckpt.step;
-        let params = ckpt.into_params(&model.manifest)?;
+        let ckpt = Checkpoint::load(Path::new(ckpt_path))?;
+        model.set_step(ckpt.step);
+        let params = ckpt.into_params(model.manifest())?;
         model.set_params(&params)?;
-        println!("restored checkpoint at step {}", model.step);
+        println!("restored checkpoint at step {}", model.step());
     }
     let mut batches = LmBatches::new(&corpus.train, b, l, seed).with_vocab(vocab);
-    let mut trainer = Trainer::new(&mut model, move || batches.next_batch());
-    trainer.quiet = args.flag("quiet");
-    let report = trainer.run(steps)?;
+    let report = {
+        let mut trainer = Trainer::new(model.as_mut(), move || batches.next_batch());
+        trainer.quiet = args.flag("quiet");
+        trainer.run(steps)?
+    };
     if let Some(save_path) = args.get("save").map(str::to_string) {
         let names: Vec<String> =
-            model.manifest.params.iter().map(|p| p.name.clone()).collect();
+            model.manifest().params.iter().map(|p| p.name.clone()).collect();
         let tensors = model.params_host()?;
         let ckpt = Checkpoint {
-            step: model.step,
+            step: model.step(),
             tensors: names.into_iter().zip(tensors).collect(),
         };
-        ckpt.save(std::path::Path::new(&save_path))?;
+        ckpt.save(Path::new(&save_path))?;
         println!("saved checkpoint -> {save_path}");
     }
     println!(
@@ -124,7 +166,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let n = evals.len().min(4);
         let mut i = 0;
         let nll = eval_loss(
-            &model,
+            model.as_ref(),
             &mut || {
                 let batch = evals[i].clone();
                 i += 1;
@@ -140,15 +182,22 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let seed = args.get_u64("seed", 0);
-    let model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    let (mut model, _) = load_model(args, &name, seed as i32)?;
+    if let Some(ckpt_path) = args.get("restore") {
+        let ckpt = Checkpoint::load(Path::new(ckpt_path))?;
+        model.set_step(ckpt.step);
+        let params = ckpt.into_params(model.manifest())?;
+        model.set_params(&params)?;
+        println!("restored checkpoint at step {}", model.step());
+    }
     let corpus = generate(&CorpusConfig { seed, ..Default::default() }, 400);
-    let b = model.manifest.batch()?;
-    let l = model.manifest.seqlen()?;
-    let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, model.manifest.vocab()?);
+    let b = model.manifest().batch()?;
+    let l = model.manifest().seqlen()?;
+    let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, model.manifest().vocab()?);
     let n = evals.len().min(8);
     let mut i = 0;
     let nll = eval_loss(
-        &model,
+        model.as_ref(),
         &mut || {
             let batch = evals[i].clone();
             i += 1;
@@ -156,11 +205,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         },
         n,
     )?;
-    println!(
-        "{name}: val loss {:.4}  ppl {:.2} (untrained init unless restored)",
-        nll,
-        nll.exp()
-    );
+    let provenance = if args.get("restore").is_some() {
+        format!("restored, step {}", model.step())
+    } else {
+        "untrained init; pass --restore CKPT".to_string()
+    };
+    println!("{name}: val loss {:.4}  ppl {:.2} ({provenance})", nll, nll.exp());
     Ok(())
 }
 
@@ -168,11 +218,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let n_req = args.get_usize("requests", 16);
     let seed = args.get_u64("seed", 0);
-    let man = Manifest::load(&hyena::artifact(&name))?;
-    let l = man.seqlen()?;
-    let vocab = man.vocab()?;
-    let server = Server::start(hyena::artifact(&name), seed as i32, Duration::from_millis(20))?;
-    println!("server up; firing {n_req} requests");
+    let dir = hyena::artifact(&name);
+    let kind = backend_kind(args, &dir)?;
+    // Read shapes through a cheap probe load for native; pjrt reads the
+    // manifest without compiling.
+    let (l, vocab) = match kind {
+        BackendKind::Pjrt => {
+            let man = Manifest::load(&dir)?;
+            (man.seqlen()?, man.vocab()?)
+        }
+        BackendKind::Native => {
+            let probe = backend::load(kind, &dir, 0)?;
+            (probe.manifest().seqlen()?, probe.manifest().vocab()?)
+        }
+    };
+    let server = Server::start_kind(kind, dir, seed as i32, Duration::from_millis(20), None)?;
+    println!("server up (backend: {}); firing {n_req} requests", kind.name());
     let mut rng = Pcg::new(seed);
     let sampling = if args.flag("greedy") {
         Sampling::Greedy
@@ -210,7 +271,7 @@ fn cmd_dump_filters(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let out = args.get_or("out", "results/filters.csv").to_string();
     let seed = args.get_u64("seed", 0);
-    let model = ModelState::load(&hyena::artifact(&name), seed as i32)?;
+    let (model, _) = load_model(args, &name, seed as i32)?;
     let h = model.dump_filters()?;
     let shape = h.shape().to_vec();
     let data = h.as_f32()?;
@@ -223,7 +284,7 @@ fn cmd_dump_filters(args: &Args) -> Result<()> {
             }
         }
     }
-    if let Some(parent) = std::path::Path::new(&out).parent() {
+    if let Some(parent) = Path::new(&out).parent() {
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(&out, csv)?;

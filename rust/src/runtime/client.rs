@@ -25,15 +25,24 @@ thread_local! {
     static RT: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
 }
 
-/// The calling thread's runtime (created on first use).
-pub fn runtime() -> Rc<Runtime> {
+/// The calling thread's runtime, or an error when the PJRT client cannot be
+/// created (e.g. this build links the vendored `xla` stub). Only successful
+/// initializations are cached.
+pub fn try_runtime() -> Result<Rc<Runtime>> {
     RT.with(|slot| {
         let mut slot = slot.borrow_mut();
         if slot.is_none() {
-            *slot = Some(Rc::new(Runtime::new().expect("PJRT CPU client init failed")));
+            *slot = Some(Rc::new(Runtime::new()?));
         }
-        slot.as_ref().unwrap().clone()
+        Ok(slot.as_ref().unwrap().clone())
     })
+}
+
+/// The calling thread's runtime (created on first use); panics when PJRT is
+/// unavailable — prefer [`try_runtime`] on paths that can fall back to the
+/// native backend.
+pub fn runtime() -> Rc<Runtime> {
+    try_runtime().expect("PJRT CPU client init failed")
 }
 
 impl Runtime {

@@ -1,12 +1,19 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
-//! Rust hot path. Python never runs at request time (DESIGN.md §2).
+//! Rust hot path.
+//!
+//! This is the **pjrt** implementation of [`crate::backend::Backend`]. On
+//! this path Python never runs at request time (DESIGN.md §2) — artifacts
+//! are compiled ahead of time and only PJRT executes. When the PJRT runtime
+//! itself is absent (e.g. the vendored `xla` stub is linked), loading
+//! returns a clean error and callers fall back to the dependency-free
+//! native backend ([`crate::backend::native`]).
 pub mod checkpoint;
 pub mod client;
 pub mod manifest;
 pub mod model;
 pub mod tensor;
 
-pub use client::{runtime, Executable, Runtime};
+pub use client::{runtime, try_runtime, Executable, Runtime};
 pub use manifest::{Manifest, ParamSpec};
 pub use model::ModelState;
 pub use tensor::{DType, Tensor};

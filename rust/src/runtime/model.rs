@@ -6,7 +6,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::client::{runtime, Executable};
+use crate::runtime::client::{try_runtime, Executable};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 
@@ -29,7 +29,7 @@ impl ModelState {
     /// parameters from `seed` (inside XLA — fully deterministic).
     pub fn load(dir: &Path, seed: i32) -> Result<ModelState> {
         let manifest = Manifest::load(dir)?;
-        let rt = runtime();
+        let rt = try_runtime()?;
         let init_exe = rt.load(&manifest.hlo_path("init"))?;
         let forward_exe = rt.load(&manifest.hlo_path("forward"))?;
         let train_exe = if manifest.has_train_step {
@@ -184,5 +184,37 @@ impl ModelState {
             .map(Tensor::to_literal)
             .collect::<Result<Vec<_>>>()?;
         Ok(())
+    }
+}
+
+/// The PJRT engine behind the [`crate::backend::Backend`] trait: thin
+/// delegation to the inherent methods above.
+impl crate::backend::Backend for ModelState {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+    fn reinit(&mut self, seed: i32) -> Result<()> {
+        ModelState::reinit(self, seed)
+    }
+    fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
+        ModelState::train_step(self, batch)
+    }
+    fn forward(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        ModelState::forward(self, inputs)
+    }
+    fn dump_filters(&self) -> Result<Tensor> {
+        ModelState::dump_filters(self)
+    }
+    fn params_host(&self) -> Result<Vec<Tensor>> {
+        ModelState::params_host(self)
+    }
+    fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
+        ModelState::set_params(self, tensors)
     }
 }

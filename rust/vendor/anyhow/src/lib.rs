@@ -1,0 +1,180 @@
+//! Vendored minimal substitute for the `anyhow` crate.
+//!
+//! The container image has no crates.io registry, so the workspace vendors
+//! the slice of `anyhow` the codebase actually uses: [`Error`] (a message +
+//! optional cause chain), [`Result`], the [`anyhow!`]/[`bail!`] macros and
+//! the [`Context`] extension trait for `Result` and `Option`. Semantics
+//! mirror the real crate closely enough that swapping the path dependency
+//! for the registry crate is a one-line `Cargo.toml` change.
+
+use std::fmt;
+
+/// A string-message error with an optional chained cause.
+///
+/// Like `anyhow::Error`, `{}` prints the outermost message and `{:#}`
+/// prints the whole chain separated by `": "`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message plus chained causes, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts via `?`. Like real anyhow, `Error` itself does NOT
+// implement `std::error::Error`, which is what makes this blanket impl legal.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain: Vec<String> = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(c) = cur {
+            chain.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error { msg, source: err.map(Box::new) });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// Extension trait: attach context to the error branch of `Result`/`Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-computed context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("opening manifest");
+        assert_eq!(format!("{e}"), "opening manifest");
+        assert_eq!(format!("{e:#}"), "opening manifest: missing");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let r = v.with_context(|| format!("missing {}", "key"));
+        assert_eq!(format!("{}", r.unwrap_err()), "missing key");
+    }
+
+    #[test]
+    fn bail_and_anyhow() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Err(anyhow!("other"))
+        }
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "boom 7");
+        assert_eq!(format!("{}", inner(false).unwrap_err()), "other");
+    }
+}

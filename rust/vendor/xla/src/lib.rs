@@ -1,0 +1,299 @@
+//! Vendored API-surface stub of the `xla` (PJRT bindings) crate.
+//!
+//! The container image does not ship the real PJRT/XLA native libraries, so
+//! this crate keeps the workspace compiling and testable everywhere:
+//!
+//! * [`Literal`] is a **real, fully functional** host-side tensor container
+//!   (f32/i32 arrays and tuples with shapes) — everything the runtime's
+//!   host↔device boundary code needs works for real.
+//! * The PJRT pieces ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`]) are present with the right signatures but return
+//!   [`Error::Unavailable`] at the first point that would require the native
+//!   runtime. Callers surface that error cleanly and fall back to the
+//!   native Rust backend (`hyena::backend::NativeBackend`).
+//!
+//! Swapping in the real bindings is a one-line change in the workspace
+//! `Cargo.toml` (point the `xla` path dependency at the real crate); no
+//! source edits are needed because the call surface matches.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: either "this build has no PJRT" or a host-side shape error.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the native XLA/PJRT libraries, which this
+    /// vendored stub does not provide.
+    Unavailable(String),
+    /// Host-side literal misuse (bad reshape, dtype mismatch, ...).
+    Literal(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT runtime unavailable (vendored xla stub; use the \
+                 native backend, e.g. --backend native, or link the real xla crate)"
+            ),
+            Error::Literal(msg) => write!(f, "literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Element types the runtime exchanges with artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed host-element trait mapping Rust scalars to [`ElementType`].
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn store(data: &[Self]) -> Storage;
+    fn unstore(s: &Storage) -> Option<Vec<Self>>;
+}
+
+/// Backing store of an array literal.
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+    fn ty(&self) -> ElementType {
+        match self {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn store(data: &[f32]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+    fn unstore(s: &Storage) -> Option<Vec<f32>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn store(data: &[i32]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+    fn unstore(s: &Storage) -> Option<Vec<i32>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor value: a shaped array or a tuple of literals.
+///
+/// Fully functional (this is plain host data, no PJRT involved).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { shape: ArrayShape, data: Storage },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            shape: ArrayShape { ty: T::TY, dims: vec![data.len() as i64] },
+            data: T::store(data),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { shape, data } => {
+                let want: i64 = dims.iter().product();
+                if want as usize != data.len() {
+                    return Err(Error::Literal(format!(
+                        "cannot reshape {} elements to {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array {
+                    shape: ArrayShape { ty: shape.ty, dims: dims.to_vec() },
+                    data: data.clone(),
+                })
+            }
+            Literal::Tuple(_) => Err(Error::Literal("cannot reshape a tuple".into())),
+        }
+    }
+
+    /// Array shape accessor (errors on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { shape, .. } => Ok(shape.clone()),
+            Literal::Tuple(_) => Err(Error::Literal("tuple literal has no array shape".into())),
+        }
+    }
+
+    /// Copy elements out as a host `Vec` (dtype must match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::unstore(data).ok_or_else(|| {
+                Error::Literal(format!("dtype mismatch: literal is {:?}", data.ty()))
+            }),
+            Literal::Tuple(_) => Err(Error::Literal("cannot read a tuple as a vec".into())),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(items) => Ok(items),
+            Literal::Array { .. } => Err(Error::Literal("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native XLA text parser).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!("parsing HLO text {}", path.as_ref().display()))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in the stub (no HloModuleProto can be constructed),
+        // but keeps the call-site signature identical to the real crate.
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an XLA computation")
+    }
+}
+
+/// Compiled executable handle (stub: can never be constructed).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a PJRT executable")
+    }
+}
+
+/// Device buffer handle (stub: can never be constructed).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("reading a device buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_errors_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("native backend"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}

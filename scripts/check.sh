@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
+#
+# Usage: scripts/check.sh [--fix]
+#   --fix   run `cargo fmt` (writing) instead of `cargo fmt --check`
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH." >&2
+    echo "This container lacks a Rust toolchain; install one (rustup) to run the gate." >&2
+    exit 1
+fi
+
+FIX=0
+[ "${1:-}" = "--fix" ] && FIX=1
+
+echo "==> cargo fmt"
+if [ "$FIX" = 1 ]; then
+    cargo fmt
+else
+    cargo fmt --check
+fi
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "check.sh: all green"

@@ -24,6 +24,8 @@ TAGS = {
     "LMPRETRAIN": "lm_pretrain_lm_hyena_s.csv",
     "FIG43": "fig4_3.csv",
     "PERF_L3": "coordinator_micro.csv",
+    "PERF_NATIVE": "native_fftconv.csv",
+    "PERF_L2": "perf_donation.csv",
 }
 
 

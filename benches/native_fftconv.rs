@@ -1,18 +1,33 @@
-//! Native FFTConv micro-bench: direct O(L²) causal convolution vs the
-//! radix-2 FFT path of `hyena::backend::fft` across sequence lengths —
+//! Native FFTConv micro-bench: direct O(L²) causal convolution vs the PR-1
+//! full-complex FFT path vs the real-FFT (rfft) workspace path of
+//! `hyena::backend::fft`, plus the row-parallel engine at 1 vs N threads —
 //! the CPU reproduction of the paper's runtime scaling story (Sec. 4.4 /
 //! Fig. 4.3: subquadratic mixing is what makes 64K-token contexts viable).
-//! The FFT path must win from L ≈ 8K at the latest; at 64K the gap is
-//! orders of magnitude. Recorded in EXPERIMENTS.md §Perf Native.
+//! The FFT paths must win from L ≈ 8K at the latest; at 64K the gap is
+//! orders of magnitude, and the real-FFT path must beat the complex one.
 //!
-//! Run: `cargo bench --bench native_fftconv -- [--max-l 65536] [--iters N]`
+//! Results print as a table and persist machine-readably into
+//! `BENCH_native.json` (key `fftconv`) so the perf trajectory is tracked
+//! across PRs (EXPERIMENTS.md §Perf Native).
+//!
+//! Run: `cargo bench --bench native_fftconv -- [--max-l 65536] [--iters N]
+//!        [--threads N] [--rows 16] [--out BENCH_native.json] [--smoke]`
+//!
+//! `--smoke` is the CI gate (`scripts/check.sh bench-smoke`): small sizes,
+//! and a hard failure if the real-FFT path is not faster than direct at 8K.
 
+use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::Result;
-use hyena::backend::fft::{causal_conv_direct, random_signal, CausalConv};
-use hyena::report::Table;
+use anyhow::{bail, Result};
+use hyena::backend::fft::{
+    causal_conv_direct, random_signal, CausalConv, ComplexCausalConv, ConvWorkspace, Spectrum,
+};
+use hyena::report::{merge_bench_json, Table};
 use hyena::util::cli::Args;
+use hyena::util::json::Json;
+use hyena::util::pool::{self, SharedMut, WorkerPool};
 use hyena::util::rng::Pcg;
 use hyena::util::stats::Summary;
 
@@ -32,16 +47,63 @@ fn time_runs<F: FnMut() -> f32>(iters: usize, mut f: F) -> Summary {
     s
 }
 
+/// One batch of row convolutions through the workspace path — the shape of
+/// the model's (batch × channel) hot loop. Writes row r of `out`.
+fn conv_rows(
+    pool: &WorkerPool,
+    plan: &CausalConv,
+    spec_h: &Spectrum,
+    vs: &[Vec<f32>],
+    out: &mut [f32],
+    ws_pool: &Mutex<Vec<ConvWorkspace>>,
+) {
+    let l = plan.len();
+    let ov = SharedMut::new(out);
+    pool.par_for_with(
+        vs.len(),
+        || ws_pool.lock().unwrap().pop().unwrap_or_else(|| plan.workspace()),
+        |ws, r| {
+            // SAFETY: each index owns output row r exclusively.
+            let orow = unsafe { ov.slice(r * l, l) };
+            let mut sv = ws.take_spectrum();
+            plan.spectrum_into(&vs[r], ws, &mut sv);
+            plan.conv_spec_into(spec_h, &sv, ws, orow);
+            ws.put_spectrum(sv);
+        },
+        |ws| ws_pool.lock().unwrap().push(ws),
+    );
+}
+
 fn main() -> Result<()> {
-    let args = Args::parse(&[]);
-    let max_l = args.get_usize("max-l", 65536);
-    let iters_cap = args.get_usize("iters", 32);
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
+    let max_l = args.get_usize("max-l", if smoke { 8192 } else { 65536 });
+    let iters_cap = args.get_usize("iters", if smoke { 8 } else { 32 });
+    let threads = args.get_usize("threads", pool::default_threads()).max(1);
+    let n_rows = args.get_usize("rows", 16);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let pool_1 = WorkerPool::new(1);
+    let pool_n = WorkerPool::new(threads);
 
     let mut rng = Pcg::new(0);
+    let col_1t = format!("rows x{n_rows} 1t ms");
+    let col_nt = format!("rows x{n_rows} {threads}t ms");
     let mut table = Table::new(
-        "§Perf Native — causal conv: direct O(L²) vs FFT O(L log L)",
-        &["L", "direct p50 ms", "fft p50 ms", "speedup", "fft plan ms"],
+        "§Perf Native — causal conv: direct O(L²) vs complex-FFT vs real-FFT",
+        &[
+            "L",
+            "direct p50 ms",
+            "cfft p50 ms",
+            "rfft p50 ms",
+            "rfft/direct",
+            "rfft/cfft",
+            &col_1t,
+            &col_nt,
+        ],
     );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut smoke_ok = true;
 
     for l in [1024usize, 8192, 65536] {
         if l > max_l {
@@ -54,37 +116,108 @@ fn main() -> Result<()> {
         let direct_iters = (((1usize << 24) + l * l - 1) / (l * l)).clamp(1, iters_cap);
         let direct = time_runs(direct_iters, || causal_conv_direct(&h, &v)[l - 1]);
 
-        let t0 = Instant::now();
-        let plan = CausalConv::new(l);
-        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // PR-1 baseline: full complex FFTs.
+        let cplan = ComplexCausalConv::new(l);
         let fft_iters = ((1usize << 22) / l).clamp(4, 4 * iters_cap.max(1));
-        let fft = time_runs(fft_iters, || plan.conv(&h, &v)[l - 1]);
+        let cfft = time_runs(fft_iters, || cplan.conv(&h, &v)[l - 1]);
 
-        // Cross-check while we are here: the two paths must agree.
+        // Real-FFT workspace path (the model's engine): plan + workspace
+        // reused across calls, zero allocation inside the timed region.
+        let plan = CausalConv::new(l);
+        let mut ws = plan.workspace();
+        let mut sh = ws.take_spectrum();
+        let mut sv = ws.take_spectrum();
+        let mut out = vec![0.0f32; l];
+        let rfft = time_runs(fft_iters, || {
+            plan.spectrum_into(&h, &mut ws, &mut sh);
+            plan.spectrum_into(&v, &mut ws, &mut sv);
+            plan.conv_spec_into(&sh, &sv, &mut ws, &mut out);
+            out[l - 1]
+        });
+
+        // Cross-check while we are here: all paths must agree.
         let a = causal_conv_direct(&h, &v);
         let b = plan.conv(&h, &v);
+        let c = cplan.conv(&h, &v);
         let max_err = a
             .iter()
             .zip(&b)
+            .chain(a.iter().zip(&c))
             .map(|(x, y)| (x - y).abs() / (1.0 + x.abs()))
             .fold(0.0f32, f32::max);
         assert!(max_err < 2e-2, "FFT and direct conv disagree at L={l}: {max_err}");
 
-        let speedup = direct.p50() / fft.p50().max(1e-12);
+        // Row-parallel engine: n_rows independent conv rows, 1 vs N threads.
+        plan.spectrum_into(&h, &mut ws, &mut sh);
+        let vrows: Vec<Vec<f32>> = (0..n_rows).map(|_| random_signal(&mut rng, l)).collect();
+        let mut rows_out = vec![0.0f32; n_rows * l];
+        let ws_pool: Mutex<Vec<ConvWorkspace>> = Mutex::new(Vec::new());
+        let rows_iters = ((1usize << 22) / (l * n_rows).max(1)).clamp(2, iters_cap.max(2));
+        let rows_1t = time_runs(rows_iters, || {
+            conv_rows(&pool_1, &plan, &sh, &vrows, &mut rows_out, &ws_pool);
+            rows_out[l - 1]
+        });
+        let serial_out = rows_out.clone();
+        let rows_nt = time_runs(rows_iters, || {
+            conv_rows(&pool_n, &plan, &sh, &vrows, &mut rows_out, &ws_pool);
+            rows_out[l - 1]
+        });
+        assert_eq!(serial_out, rows_out, "thread count changed conv results at L={l}");
+
+        let sp_direct = direct.p50() / rfft.p50().max(1e-12);
+        let sp_cfft = cfft.p50() / rfft.p50().max(1e-12);
+        let sp_rows = rows_1t.p50() / rows_nt.p50().max(1e-12);
         println!(
-            "L={l:>6}: direct {:>10.3} ms  fft {:>8.4} ms  speedup {speedup:>8.1}x",
+            "L={l:>6}: direct {:>10.3} ms  cfft {:>8.4} ms  rfft {:>8.4} ms  \
+             (rfft {sp_direct:>8.1}x vs direct, {sp_cfft:>5.2}x vs cfft)  \
+             rows x{n_rows}: {:>8.3} -> {:>8.3} ms ({sp_rows:.2}x @ {threads}t)",
             direct.p50() * 1e3,
-            fft.p50() * 1e3,
+            cfft.p50() * 1e3,
+            rfft.p50() * 1e3,
+            rows_1t.p50() * 1e3,
+            rows_nt.p50() * 1e3,
         );
         table.row(vec![
             l.to_string(),
             format!("{:.3}", direct.p50() * 1e3),
-            format!("{:.4}", fft.p50() * 1e3),
-            format!("{speedup:.1}"),
-            format!("{plan_ms:.2}"),
+            format!("{:.4}", cfft.p50() * 1e3),
+            format!("{:.4}", rfft.p50() * 1e3),
+            format!("{sp_direct:.1}"),
+            format!("{sp_cfft:.2}"),
+            format!("{:.3}", rows_1t.p50() * 1e3),
+            format!("{:.3}", rows_nt.p50() * 1e3),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("l", Json::num(l as f64)),
+            ("direct_ms", Json::num(direct.p50() * 1e3)),
+            ("complex_fft_ms", Json::num(cfft.p50() * 1e3)),
+            ("real_fft_ms", Json::num(rfft.p50() * 1e3)),
+            ("speedup_real_vs_direct", Json::num(sp_direct)),
+            ("speedup_real_vs_complex", Json::num(sp_cfft)),
+            ("rows", Json::num(n_rows as f64)),
+            ("rows_1t_ms", Json::num(rows_1t.p50() * 1e3)),
+            ("rows_nt_ms", Json::num(rows_nt.p50() * 1e3)),
+            ("rows_thread_speedup", Json::num(sp_rows)),
+        ]));
+
+        if l >= 8192 && rfft.p50() >= direct.p50() {
+            smoke_ok = false;
+        }
     }
 
     table.emit("native_fftconv");
+    merge_bench_json(
+        Path::new(&out_path),
+        "fftconv",
+        Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    )?;
+    println!("bench ledger -> {out_path} (key: fftconv)");
+
+    if smoke && !smoke_ok {
+        bail!("bench-smoke gate: real-FFT conv was not faster than direct at L ≥ 8192");
+    }
     Ok(())
 }

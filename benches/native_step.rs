@@ -1,0 +1,115 @@
+//! Threaded training-step bench for the native backend: one full optimizer
+//! step (forward + backward + AdamW) at 1 thread vs N threads on the same
+//! fixed batch and seed. The row-parallel engine is write-disjoint with
+//! serial per-row arithmetic, so the losses must agree bit-for-bit — the
+//! bench asserts that while measuring the speedup.
+//!
+//! Results print as a table and persist into `BENCH_native.json` (key
+//! `train_step`) next to the FFTConv numbers (EXPERIMENTS.md §Perf Native).
+//!
+//! Run: `cargo bench --bench native_step -- [--model lm_hyena_s]
+//!        [--iters 5] [--threads N] [--out BENCH_native.json]`
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use hyena::backend::native::{NativeConfig, NativeModel};
+use hyena::report::{merge_bench_json, Table};
+use hyena::util::cli::Args;
+use hyena::util::json::Json;
+use hyena::util::pool;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+/// Train `iters + 1` steps (first is warmup) on a fixed batch; returns the
+/// per-step wall-time summary and the last loss.
+fn bench_steps(
+    model: &mut NativeModel,
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    b: usize,
+    iters: usize,
+) -> Result<(Summary, f32)> {
+    let mut s = Summary::new();
+    let mut last = 0.0f32;
+    for i in 0..=iters {
+        let t0 = Instant::now();
+        last = model.train_step(tokens, targets, mask, b)?;
+        if i > 0 {
+            s.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok((s, last))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let name = args.get_or("model", "lm_hyena_s").to_string();
+    let iters = args.get_usize("iters", 5);
+    let threads = args.get_usize("threads", pool::default_threads()).max(1);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let cfg = NativeConfig::builtin(&name)
+        .ok_or_else(|| anyhow!("no built-in native config named {name:?}"))?;
+    let (b, l, v) = (cfg.batch, cfg.seqlen, cfg.vocab);
+    let mut rng = Pcg::new(0);
+    let tokens: Vec<i32> = (0..b * l).map(|_| rng.usize_below(v) as i32).collect();
+    let targets: Vec<i32> = (0..b * l).map(|_| rng.usize_below(v) as i32).collect();
+    let mask = vec![1.0f32; b * l];
+
+    let mut m1 = NativeModel::new(cfg.clone(), 0)?;
+    m1.set_threads(1);
+    let (s1, loss1) = bench_steps(&mut m1, &tokens, &targets, &mask, b, iters)?;
+
+    let mut mn = NativeModel::new(cfg, 0)?;
+    mn.set_threads(threads);
+    let (sn, loss_n) = bench_steps(&mut mn, &tokens, &targets, &mask, b, iters)?;
+
+    assert_eq!(loss1, loss_n, "thread count changed the training loss");
+    assert_eq!(m1.params, mn.params, "thread count changed the parameters");
+
+    let speedup = s1.p50() / sn.p50().max(1e-12);
+    let tokens_per_step = (b * l) as f64;
+    println!(
+        "{name}: {b}x{l} step  1t {:>8.1} ms  {threads}t {:>8.1} ms  \
+         speedup {speedup:.2}x  ({:.0} tok/s threaded)",
+        s1.p50() * 1e3,
+        sn.p50() * 1e3,
+        tokens_per_step / sn.p50().max(1e-12),
+    );
+
+    let mut table = Table::new(
+        "§Perf Native — threaded training step (1 vs N threads)",
+        &["model", "batch x seqlen", "1t ms/step", "Nt ms/step", "threads", "speedup"],
+    );
+    table.row(vec![
+        name.clone(),
+        format!("{b} x {l}"),
+        format!("{:.1}", s1.p50() * 1e3),
+        format!("{:.1}", sn.p50() * 1e3),
+        threads.to_string(),
+        format!("{speedup:.2}"),
+    ]);
+    table.emit("native_step");
+
+    merge_bench_json(
+        Path::new(&out_path),
+        "train_step",
+        Json::obj(vec![
+            ("model", Json::str(&name)),
+            ("batch", Json::num(b as f64)),
+            ("seqlen", Json::num(l as f64)),
+            ("iters", Json::num(iters as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("ms_per_step_1t", Json::num(s1.p50() * 1e3)),
+            ("ms_per_step_nt", Json::num(sn.p50() * 1e3)),
+            ("thread_speedup", Json::num(speedup)),
+            ("tokens_per_s_nt", Json::num(tokens_per_step / sn.p50().max(1e-12))),
+            ("final_loss", Json::num(loss_n as f64)),
+        ]),
+    )?;
+    println!("bench ledger -> {out_path} (key: train_step)");
+    Ok(())
+}

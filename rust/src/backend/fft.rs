@@ -1,4 +1,5 @@
-//! Iterative radix-2 FFT and the causal FFT convolution it powers.
+//! Iterative radix-2 FFT, a real-input (rfft) plan on top of it, and the
+//! causal FFT convolution they power.
 //!
 //! This is the native backend's replacement for the XLA `Fft` op: the
 //! O(L log L) "FFTConv" of the paper (Sec. 2, "Fast Methods for
@@ -6,11 +7,30 @@
 //! computed by zero-padding both to the next power of two ≥ 2L, multiplying
 //! spectra, and truncating the circular result back to L.
 //!
-//! [`CausalConv`] is a small *plan*: it owns the twiddle table for one
+//! Two throughput decisions shape the API (DESIGN.md §Perf):
+//!
+//! * **Real-input transforms.** Every signal in the model is real, so
+//!   [`RealFft`] packs two real samples into one complex sample and runs a
+//!   *half-size* complex FFT (the classic pack-trick rfft), then untangles
+//!   the half spectrum `n/2 + 1` bins. Half the butterflies, half the
+//!   spectrum memory of the full complex transform PR 1 shipped (kept as
+//!   [`ComplexCausalConv`] for benches and cross-checks).
+//! * **Caller-owned workspaces.** The hot entry points
+//!   ([`CausalConv::spectrum_into`], [`CausalConv::conv_spec_into`],
+//!   [`CausalConv::corr_spec_into`]) write into caller-provided buffers and
+//!   borrow scratch from a [`ConvWorkspace`], so the per-row inner loops of
+//!   the model allocate nothing. The allocating conveniences (`spectrum`,
+//!   `conv`, `corr`, ...) remain for tests and cold paths.
+//!
+//! [`CausalConv`] is a small *plan*: it owns the twiddle tables for one
 //! transform size so repeated convolutions at a fixed sequence length (the
 //! hot path of every Hyena block) pay the trigonometry once. Gradients reuse
 //! the same plan: the adjoint of `conv(h, ·)` is correlation with `h`
 //! ([`CausalConv::corr`]), i.e. multiplication by the conjugate spectrum.
+
+// Index-based butterfly/untangle loops mirror the validated reference math
+// (and the Python mirror used to derive it) one-to-one.
+#![allow(clippy::needless_range_loop)]
 
 use crate::util::rng::Pcg;
 
@@ -111,24 +131,210 @@ impl Fft {
     }
 }
 
-/// Spectrum of a real signal: full complex FFT of the zero-padded input.
+// ---------------------------------------------------------------------------
+// real-input FFT (pack-two-reals trick)
+// ---------------------------------------------------------------------------
+
+/// Real-input FFT plan of size `n` (power of two ≥ 2) built on one complex
+/// FFT of size `n/2`.
+///
+/// Forward packs `z[j] = x[2j] + i·x[2j+1]`, transforms at half size, and
+/// untangles the conjugate-symmetric half spectrum `X[0..=n/2]` with
+/// `X[k] = Ze[k] + w^k·Zo[k]`, `w = exp(-2πi/n)`. Inverse entangles the half
+/// spectrum back into `Z` and unpacks the half-size inverse transform; the
+/// half plan's `1/(n/2)` scale is exactly the rfft normalization (validated
+/// against `numpy.fft.rfft/irfft` in a 1:1 Python mirror).
+pub struct RealFft {
+    n: usize,
+    half: Fft,
+    /// Untangle twiddles `w_k = exp(-2πik/n)` for `k ≤ n/2`.
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl RealFft {
+    /// Build a plan for real transform size `n` (power of two ≥ 2).
+    pub fn new(n: usize) -> RealFft {
+        assert!(n.is_power_of_two() && n >= 2, "rfft size {n} must be a power of two ≥ 2");
+        let m = n / 2;
+        let mut tw_re = Vec::with_capacity(m + 1);
+        let mut tw_im = Vec::with_capacity(m + 1);
+        for k in 0..=m {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        RealFft { n, half: Fft::new(m), tw_re, tw_im }
+    }
+
+    /// Real transform size.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// Number of half-spectrum bins: `n/2 + 1`.
+    pub fn spec_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Half spectrum of the real signal `x` zero-padded to the plan size.
+    ///
+    /// `sre`/`sim` are scratch of length `n/2`; `out_re`/`out_im` receive
+    /// the `n/2 + 1` spectrum bins. `x.len()` may be anything ≤ `n`.
+    pub fn forward(
+        &self,
+        x: &[f32],
+        sre: &mut [f32],
+        sim: &mut [f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) {
+        let (n, m) = (self.n, self.n / 2);
+        assert!(x.len() <= n, "signal length {} > rfft size {n}", x.len());
+        assert_eq!(sre.len(), m, "rfft scratch length != n/2");
+        assert_eq!(sim.len(), m, "rfft scratch length != n/2");
+        assert_eq!(out_re.len(), m + 1, "rfft spectrum length != n/2+1");
+        assert_eq!(out_im.len(), m + 1, "rfft spectrum length != n/2+1");
+
+        // Pack z[j] = x[2j] + i·x[2j+1], zero beyond the signal.
+        let l = x.len();
+        for j in 0..m {
+            let e = 2 * j;
+            sre[j] = if e < l { x[e] } else { 0.0 };
+            sim[j] = if e + 1 < l { x[e + 1] } else { 0.0 };
+        }
+        self.half.forward(sre, sim);
+
+        // Untangle: X[k] = Ze[k] + w^k·Zo[k], k = 0..=m, with Z[m] ≡ Z[0].
+        for k in 0..=m {
+            let zk = k % m;
+            let zc = (m - k) % m;
+            let (zr, zi) = (sre[zk], sim[zk]);
+            let (cr, ci) = (sre[zc], -sim[zc]); // conj(Z[m−k])
+            let (er, ei) = (0.5 * (zr + cr), 0.5 * (zi + ci)); // Ze[k]
+            let (dr, di) = (0.5 * (zr - cr), 0.5 * (zi - ci));
+            let (or_, oi) = (di, -dr); // Zo[k] = −i·(Z[k]−conj(Z[m−k]))/2
+            let (wr, wi) = (self.tw_re[k], self.tw_im[k]);
+            out_re[k] = er + or_ * wr - oi * wi;
+            out_im[k] = ei + or_ * wi + oi * wr;
+        }
+    }
+
+    /// Real inverse of a half spectrum, writing `out.len()` ≤ `n` leading
+    /// samples (circular-result truncation). Includes the 1/n scale.
+    pub fn inverse(
+        &self,
+        spec_re: &[f32],
+        spec_im: &[f32],
+        sre: &mut [f32],
+        sim: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let (n, m) = (self.n, self.n / 2);
+        assert_eq!(spec_re.len(), m + 1, "rfft spectrum length != n/2+1");
+        assert_eq!(spec_im.len(), m + 1, "rfft spectrum length != n/2+1");
+        assert_eq!(sre.len(), m, "rfft scratch length != n/2");
+        assert_eq!(sim.len(), m, "rfft scratch length != n/2");
+        assert!(out.len() <= n, "output length {} > rfft size {n}", out.len());
+
+        // Entangle: Z[k] = Ze[k] + i·Zo[k] with Ze[k] = (X[k]+conj(X[m−k]))/2
+        // and Zo[k] = w^{−k}·(X[k]−conj(X[m−k]))/2.
+        for k in 0..m {
+            let (xr, xi) = (spec_re[k], spec_im[k]);
+            let (cr, ci) = (spec_re[m - k], -spec_im[m - k]);
+            let (er, ei) = (0.5 * (xr + cr), 0.5 * (xi + ci));
+            let (dr, di) = (0.5 * (xr - cr), 0.5 * (xi - ci));
+            let (wr, wi) = (self.tw_re[k], -self.tw_im[k]); // w^{−k} = conj(w^k)
+            let (or_, oi) = (dr * wr - di * wi, dr * wi + di * wr);
+            sre[k] = er - oi;
+            sim[k] = ei + or_;
+        }
+        self.half.inverse(sre, sim);
+
+        // Unpack x[2j] = Re z[j], x[2j+1] = Im z[j]. The entangle step
+        // reconstructs Z = FFT_{n/2}(packed x) exactly, so the half plan's
+        // 1/(n/2) scale is the whole normalization — no extra factor.
+        for t in 0..out.len() {
+            out[t] = if t % 2 == 0 { sre[t / 2] } else { sim[t / 2] };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spectra + workspaces
+// ---------------------------------------------------------------------------
+
+/// Half spectrum of a real signal: `n/2 + 1` bins of the rfft of the
+/// zero-padded input (conjugate symmetry makes the upper half redundant).
 #[derive(Clone)]
 pub struct Spectrum {
     pub re: Vec<f32>,
     pub im: Vec<f32>,
 }
 
-/// Causal-convolution plan for signals of length `l`.
+impl Spectrum {
+    /// Number of bins.
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+}
+
+/// Reusable scratch for one [`CausalConv`] size: packed-transform re/im
+/// buffers plus a pool of [`Spectrum`]s. Own one per worker thread — every
+/// `*_into` entry point borrows one mutably, so the per-row hot loops of the
+/// model allocate nothing after warm-up.
+pub struct ConvWorkspace {
+    n: usize,
+    sre: Vec<f32>,
+    sim: Vec<f32>,
+    pool: Vec<Spectrum>,
+}
+
+impl ConvWorkspace {
+    /// Workspace sized for `plan` (usable with any plan of the same size).
+    pub fn new(plan: &CausalConv) -> ConvWorkspace {
+        let n = plan.fft_size();
+        ConvWorkspace { n, sre: vec![0.0; n / 2], sim: vec![0.0; n / 2], pool: Vec::new() }
+    }
+
+    /// FFT size the workspace serves.
+    pub fn fft_size(&self) -> usize {
+        self.n
+    }
+
+    /// Pop a spectrum buffer (or allocate one on first use).
+    pub fn take_spectrum(&mut self) -> Spectrum {
+        self.pool.pop().unwrap_or_else(|| Spectrum {
+            re: vec![0.0; self.n / 2 + 1],
+            im: vec![0.0; self.n / 2 + 1],
+        })
+    }
+
+    /// Return a spectrum buffer to the pool for reuse.
+    pub fn put_spectrum(&mut self, s: Spectrum) {
+        debug_assert_eq!(s.re.len(), self.n / 2 + 1);
+        self.pool.push(s);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// causal convolution plans
+// ---------------------------------------------------------------------------
+
+/// Causal-convolution plan for signals of length `l` (real-FFT engine).
 pub struct CausalConv {
     l: usize,
-    fft: Fft,
+    rfft: RealFft,
 }
 
 impl CausalConv {
     pub fn new(l: usize) -> CausalConv {
         assert!(l >= 1);
         let n = (2 * l).next_power_of_two();
-        CausalConv { l, fft: Fft::new(n) }
+        CausalConv { l, rfft: RealFft::new(n) }
     }
 
     /// Signal length the plan convolves.
@@ -141,50 +347,130 @@ impl CausalConv {
 
     /// FFT size the plan transforms at (≥ 2·len, power of two).
     pub fn fft_size(&self) -> usize {
-        self.fft.size()
+        self.rfft.size()
     }
 
-    /// Spectrum of a real length-`l` signal (zero-padded to the plan size).
-    pub fn spectrum(&self, x: &[f32]) -> Spectrum {
+    /// Half-spectrum bins per signal: `fft_size()/2 + 1`.
+    pub fn spec_len(&self) -> usize {
+        self.rfft.spec_len()
+    }
+
+    /// Allocate a workspace sized for this plan.
+    pub fn workspace(&self) -> ConvWorkspace {
+        ConvWorkspace::new(self)
+    }
+
+    /// Half spectrum of a real length-`l` signal into `out` (zero-alloc).
+    pub fn spectrum_into(&self, x: &[f32], ws: &mut ConvWorkspace, out: &mut Spectrum) {
+        self.spectrum_slices_into(x, ws, &mut out.re, &mut out.im);
+    }
+
+    /// Slice-based [`CausalConv::spectrum_into`] for spectra kept in flat
+    /// banks (e.g. the model's per-block filter-spectrum cache).
+    pub fn spectrum_slices_into(
+        &self,
+        x: &[f32],
+        ws: &mut ConvWorkspace,
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) {
         assert_eq!(x.len(), self.l);
-        let n = self.fft.size();
-        let mut re = vec![0.0f32; n];
-        re[..self.l].copy_from_slice(x);
-        let mut im = vec![0.0f32; n];
-        self.fft.forward(&mut re, &mut im);
-        Spectrum { re, im }
+        assert_eq!(ws.n, self.fft_size(), "workspace size != plan size");
+        self.rfft.forward(x, &mut ws.sre, &mut ws.sim, out_re, out_im);
     }
 
-    /// `irfft(A · B)[..l]` — causal convolution from two spectra.
-    pub fn conv_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
-        let n = self.fft.size();
-        let mut re = vec![0.0f32; n];
-        let mut im = vec![0.0f32; n];
-        for k in 0..n {
-            re[k] = a.re[k] * b.re[k] - a.im[k] * b.im[k];
-            im[k] = a.re[k] * b.im[k] + a.im[k] * b.re[k];
+    /// `irfft(A · B)[..l]` into `out` — causal convolution, zero-alloc.
+    pub fn conv_spec_into(
+        &self,
+        a: &Spectrum,
+        b: &Spectrum,
+        ws: &mut ConvWorkspace,
+        out: &mut [f32],
+    ) {
+        self.conv_spec_slices_into(&a.re, &a.im, &b.re, &b.im, ws, out);
+    }
+
+    /// Slice-based [`CausalConv::conv_spec_into`].
+    pub fn conv_spec_slices_into(
+        &self,
+        a_re: &[f32],
+        a_im: &[f32],
+        b_re: &[f32],
+        b_im: &[f32],
+        ws: &mut ConvWorkspace,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), self.l);
+        assert_eq!(ws.n, self.fft_size(), "workspace size != plan size");
+        let mut p = ws.take_spectrum();
+        for k in 0..self.spec_len() {
+            p.re[k] = a_re[k] * b_re[k] - a_im[k] * b_im[k];
+            p.im[k] = a_re[k] * b_im[k] + a_im[k] * b_re[k];
         }
-        self.fft.inverse(&mut re, &mut im);
-        re.truncate(self.l);
-        re
+        self.rfft.inverse(&p.re, &p.im, &mut ws.sre, &mut ws.sim, out);
+        ws.put_spectrum(p);
     }
 
-    /// `irfft(conj(A) · B)[..l]` — causal correlation from two spectra.
+    /// `irfft(conj(A) · B)[..l]` into `out` — causal correlation, zero-alloc.
     ///
-    /// This is the adjoint of [`CausalConv::conv_spec`] in either argument:
-    /// with `y = conv(h, v)` and upstream `dy`, `dv = corr(h, dy)` and
-    /// `dh = corr(v, dy)`.
-    pub fn corr_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
-        let n = self.fft.size();
-        let mut re = vec![0.0f32; n];
-        let mut im = vec![0.0f32; n];
-        for k in 0..n {
-            re[k] = a.re[k] * b.re[k] + a.im[k] * b.im[k];
-            im[k] = a.re[k] * b.im[k] - a.im[k] * b.re[k];
+    /// This is the adjoint of [`CausalConv::conv_spec_into`] in either
+    /// argument: with `y = conv(h, v)` and upstream `dy`, `dv = corr(h, dy)`
+    /// and `dh = corr(v, dy)`.
+    pub fn corr_spec_into(
+        &self,
+        a: &Spectrum,
+        b: &Spectrum,
+        ws: &mut ConvWorkspace,
+        out: &mut [f32],
+    ) {
+        self.corr_spec_slices_into(&a.re, &a.im, &b.re, &b.im, ws, out);
+    }
+
+    /// Slice-based [`CausalConv::corr_spec_into`].
+    pub fn corr_spec_slices_into(
+        &self,
+        a_re: &[f32],
+        a_im: &[f32],
+        b_re: &[f32],
+        b_im: &[f32],
+        ws: &mut ConvWorkspace,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), self.l);
+        assert_eq!(ws.n, self.fft_size(), "workspace size != plan size");
+        let mut p = ws.take_spectrum();
+        for k in 0..self.spec_len() {
+            p.re[k] = a_re[k] * b_re[k] + a_im[k] * b_im[k];
+            p.im[k] = a_re[k] * b_im[k] - a_im[k] * b_re[k];
         }
-        self.fft.inverse(&mut re, &mut im);
-        re.truncate(self.l);
-        re
+        self.rfft.inverse(&p.re, &p.im, &mut ws.sre, &mut ws.sim, out);
+        ws.put_spectrum(p);
+    }
+
+    // -- allocating conveniences (tests, cold paths) -------------------------
+
+    /// Spectrum of a real length-`l` signal (allocating convenience).
+    pub fn spectrum(&self, x: &[f32]) -> Spectrum {
+        let mut ws = self.workspace();
+        let mut s = ws.take_spectrum();
+        self.spectrum_into(x, &mut ws, &mut s);
+        s
+    }
+
+    /// Causal convolution from two spectra (allocating convenience).
+    pub fn conv_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
+        let mut ws = self.workspace();
+        let mut out = vec![0.0f32; self.l];
+        self.conv_spec_into(a, b, &mut ws, &mut out);
+        out
+    }
+
+    /// Causal correlation from two spectra (allocating convenience).
+    pub fn corr_spec(&self, a: &Spectrum, b: &Spectrum) -> Vec<f32> {
+        let mut ws = self.workspace();
+        let mut out = vec![0.0f32; self.l];
+        self.corr_spec_into(a, b, &mut ws, &mut out);
+        out
     }
 
     /// Causal convolution `y[t] = Σ_{s≤t} h[t−s]·v[s]` in O(L log L).
@@ -195,6 +481,66 @@ impl CausalConv {
     /// Causal correlation `y[s] = Σ_{t≥s} a[t−s]·g[t]` in O(L log L).
     pub fn corr(&self, a: &[f32], g: &[f32]) -> Vec<f32> {
         self.corr_spec(&self.spectrum(a), &self.spectrum(g))
+    }
+}
+
+/// The PR-1 engine: causal convolution via *full complex* FFTs. Kept as the
+/// baseline the real-FFT path is benchmarked and property-tested against.
+pub struct ComplexCausalConv {
+    l: usize,
+    fft: Fft,
+}
+
+impl ComplexCausalConv {
+    pub fn new(l: usize) -> ComplexCausalConv {
+        assert!(l >= 1);
+        let n = (2 * l).next_power_of_two();
+        ComplexCausalConv { l, fft: Fft::new(n) }
+    }
+
+    fn full_spectrum(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let n = self.fft.size();
+        let mut re = vec![0.0f32; n];
+        re[..x.len()].copy_from_slice(x);
+        let mut im = vec![0.0f32; n];
+        self.fft.forward(&mut re, &mut im);
+        (re, im)
+    }
+
+    /// Causal convolution via full complex spectra (the PR-1 hot path).
+    pub fn conv(&self, h: &[f32], v: &[f32]) -> Vec<f32> {
+        assert_eq!(h.len(), self.l);
+        assert_eq!(v.len(), self.l);
+        let n = self.fft.size();
+        let (ar, ai) = self.full_spectrum(h);
+        let (br, bi) = self.full_spectrum(v);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        for k in 0..n {
+            re[k] = ar[k] * br[k] - ai[k] * bi[k];
+            im[k] = ar[k] * bi[k] + ai[k] * br[k];
+        }
+        self.fft.inverse(&mut re, &mut im);
+        re.truncate(self.l);
+        re
+    }
+
+    /// Causal correlation via full complex spectra.
+    pub fn corr(&self, a: &[f32], g: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.l);
+        assert_eq!(g.len(), self.l);
+        let n = self.fft.size();
+        let (ar, ai) = self.full_spectrum(a);
+        let (br, bi) = self.full_spectrum(g);
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        for k in 0..n {
+            re[k] = ar[k] * br[k] + ai[k] * bi[k];
+            im[k] = ar[k] * bi[k] - ai[k] * br[k];
+        }
+        self.fft.inverse(&mut re, &mut im);
+        re.truncate(self.l);
+        re
     }
 }
 
@@ -284,6 +630,48 @@ mod tests {
     }
 
     #[test]
+    fn rfft_matches_full_complex_fft() {
+        // The real-input path must reproduce the lower half of the full
+        // complex spectrum bin-for-bin (conjugate symmetry covers the rest).
+        Prop::new("rfft == complex fft half").cases(64).check(|rng| {
+            let n = 1usize << (1 + rng.usize_below(9)); // 2..=512
+            let x = random_signal(rng, n);
+            let (mut fre, mut fim) = (x.clone(), vec![0.0f32; n]);
+            Fft::new(n).forward(&mut fre, &mut fim);
+
+            let plan = RealFft::new(n);
+            let m = n / 2;
+            let (mut sre, mut sim) = (vec![0.0f32; m], vec![0.0f32; m]);
+            let (mut hre, mut him) = (vec![0.0f32; m + 1], vec![0.0f32; m + 1]);
+            plan.forward(&x, &mut sre, &mut sim, &mut hre, &mut him);
+            for k in 0..=m {
+                prop_assert!(close(hre[k], fre[k], 1e-4), "re[{k}]: {} vs {}", hre[k], fre[k]);
+                prop_assert!(close(him[k], fim[k], 1e-4), "im[{k}]: {} vs {}", him[k], fim[k]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rfft_roundtrip_is_identity() {
+        Prop::new("rfft roundtrip").cases(64).check(|rng| {
+            let n = 1usize << (1 + rng.usize_below(9)); // 2..=512
+            let x = random_signal(rng, n);
+            let plan = RealFft::new(n);
+            let m = n / 2;
+            let (mut sre, mut sim) = (vec![0.0f32; m], vec![0.0f32; m]);
+            let (mut hre, mut him) = (vec![0.0f32; m + 1], vec![0.0f32; m + 1]);
+            plan.forward(&x, &mut sre, &mut sim, &mut hre, &mut him);
+            let mut back = vec![0.0f32; n];
+            plan.inverse(&hre, &him, &mut sre, &mut sim, &mut back);
+            for t in 0..n {
+                prop_assert!(close(back[t], x[t], 1e-4), "x[{t}]: {} vs {}", back[t], x[t]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn fft_conv_matches_direct() {
         Prop::new("fft conv == direct conv").cases(64).check(|rng| {
             let l = 1 + rng.usize_below(96);
@@ -313,6 +701,81 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn real_and_complex_engines_agree() {
+        // The real-FFT workspace path must match the PR-1 full-complex path
+        // within f32 round-off on both conv and corr.
+        Prop::new("real-fft == complex-fft").cases(64).check(|rng| {
+            let l = 1 + rng.usize_below(128);
+            let plan = CausalConv::new(l);
+            let reference = ComplexCausalConv::new(l);
+            let h = random_signal(rng, l);
+            let v = random_signal(rng, l);
+
+            let mut ws = plan.workspace();
+            let (mut sh, mut sv) = (ws.take_spectrum(), ws.take_spectrum());
+            plan.spectrum_into(&h, &mut ws, &mut sh);
+            plan.spectrum_into(&v, &mut ws, &mut sv);
+            let mut conv = vec![0.0f32; l];
+            plan.conv_spec_into(&sh, &sv, &mut ws, &mut conv);
+            let mut corr = vec![0.0f32; l];
+            plan.corr_spec_into(&sh, &sv, &mut ws, &mut corr);
+            ws.put_spectrum(sh);
+            ws.put_spectrum(sv);
+
+            let conv_ref = reference.conv(&h, &v);
+            let corr_ref = reference.corr(&h, &v);
+            for t in 0..l {
+                prop_assert!(
+                    close(conv[t], conv_ref[t], 1e-3),
+                    "conv t={t}: {} vs {}",
+                    conv[t],
+                    conv_ref[t]
+                );
+                prop_assert!(
+                    close(corr[t], corr_ref[t], 1e-3),
+                    "corr t={t}: {} vs {}",
+                    corr[t],
+                    corr_ref[t]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_reuse_is_stable() {
+        // Repeated _into calls through one workspace must keep producing the
+        // same answers (no stale state leaks between calls).
+        let mut rng = Pcg::new(3);
+        let l = 50;
+        let plan = CausalConv::new(l);
+        let mut ws = plan.workspace();
+        let h = random_signal(&mut rng, l);
+        let v = random_signal(&mut rng, l);
+        let want = causal_conv_direct(&h, &v);
+        let mut sh = ws.take_spectrum();
+        let mut sv = ws.take_spectrum();
+        let mut out = vec![0.0f32; l];
+        for round in 0..4 {
+            plan.spectrum_into(&h, &mut ws, &mut sh);
+            plan.spectrum_into(&v, &mut ws, &mut sv);
+            plan.conv_spec_into(&sh, &sv, &mut ws, &mut out);
+            for t in 0..l {
+                assert!(close(out[t], want[t], 2e-3), "round {round} t={t}");
+            }
+        }
+        ws.put_spectrum(sh);
+        ws.put_spectrum(sv);
+        // Pool round-trips buffers instead of allocating.
+        let s1 = ws.take_spectrum();
+        let s2 = ws.take_spectrum();
+        assert_eq!(s1.len(), plan.spec_len());
+        assert_eq!(s2.len(), plan.spec_len());
+        ws.put_spectrum(s1);
+        ws.put_spectrum(s2);
     }
 
     #[test]
@@ -359,5 +822,6 @@ mod tests {
         assert_eq!(CausalConv::new(16).fft_size(), 32);
         assert_eq!(CausalConv::new(17).fft_size(), 64);
         assert_eq!(CausalConv::new(1024).fft_size(), 2048);
+        assert_eq!(CausalConv::new(1024).spec_len(), 1025);
     }
 }

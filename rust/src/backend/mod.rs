@@ -13,6 +13,12 @@
 //! Selection: `--backend native|pjrt|auto` on the CLI, the `HYENA_BACKEND`
 //! environment variable, or automatic detection (an artifact directory with
 //! compiled HLO selects pjrt; anything else selects native).
+//!
+//! Threading: native backends capture the process-wide worker pool
+//! ([`crate::util::pool`]) at construction, sized by `--threads N` /
+//! `HYENA_THREADS` / available parallelism. The trainer and the batching
+//! server therefore share one pool — size it once in `main`, before the
+//! first backend loads.
 
 pub mod fft;
 pub mod native;

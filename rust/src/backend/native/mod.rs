@@ -64,6 +64,12 @@ impl NativeBackend {
     pub fn model(&self) -> &NativeModel {
         &self.model
     }
+
+    /// Mutable access to the model (thread-count sweeps in benches/tests;
+    /// see [`NativeModel::set_threads`]).
+    pub fn model_mut(&mut self) -> &mut NativeModel {
+        &mut self.model
+    }
 }
 
 /// Build a [`Manifest`] equivalent to what `python/compile/aot.py` would

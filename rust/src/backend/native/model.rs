@@ -12,6 +12,23 @@
 //! Tensors are flat `Vec<f32>` in row-major order. Sequence-mixing state
 //! uses the channel-major `(B, D, L)` layout of the paper's SISO convolution
 //! formulation; everything else is `(B, L, ·)`.
+//!
+//! **Throughput architecture** (DESIGN.md §Perf). The hot path is organized
+//! around three ideas:
+//!
+//! * A step-scoped [`Scratch`] arena threads reusable buffers through the
+//!   whole forward/backward pass — after the first optimizer step the inner
+//!   loops allocate nothing (activation caches are recycled into the arena
+//!   when the step retires).
+//! * Filter spectra (`spec_h`) are computed once per block in `mixer_fwd`
+//!   and cached in the block cache, so `mixer_bwd` multiplies cached spectra
+//!   instead of re-running an FFT per filter row.
+//! * The embarrassingly-parallel loops — (batch × channel) conv rows,
+//!   dense-kernel row blocks, filter-spectrum synthesis — run on the
+//!   process-wide worker pool ([`crate::util::pool`]). Every parallel loop
+//!   partitions its *output* rows and performs per-row arithmetic in the
+//!   exact serial order, so results are bitwise identical for any thread
+//!   count (pinned by tests here and in `rust/tests/native_e2e.rs`).
 
 // Index-based loops mirror the validated reference math one-to-one (iterator
 // rewrites would obscure the correspondence), and backward-pass helpers
@@ -19,11 +36,13 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use std::ops::Range;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-use crate::backend::fft::CausalConv;
+use crate::backend::fft::{CausalConv, ConvWorkspace};
 use crate::backend::native::config::NativeConfig;
+use crate::util::pool::{self, SharedMut, WorkerPool};
 use crate::util::rng::Pcg;
 
 // ---------------------------------------------------------------------------
@@ -219,73 +238,272 @@ impl Layout {
 }
 
 // ---------------------------------------------------------------------------
+// step-scoped workspaces
+// ---------------------------------------------------------------------------
+
+/// Pool of reusable `f32` buffers, reusing capacity LIFO — the phase
+/// structure of a train step makes this hit almost every time.
+///
+/// `take` hands out a buffer with *unspecified contents* (no memset — for
+/// outputs the kernels overwrite in full); `take_zeroed` is for the
+/// accumulator buffers (`dzs`, `dhfilt`, `grads`) that are built with `+=`.
+#[derive(Default)]
+struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        // Only the grown tail is written; any reused prefix keeps stale
+        // values by design.
+        v.resize(len, 0.0);
+        v
+    }
+    fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take(len);
+        v.fill(0.0);
+        v
+    }
+    fn put(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+}
+
+/// Per-worker convolution scratch: an FFT workspace (with its spectrum
+/// pool) plus two length-L real buffers for adjoint intermediates.
+struct ConvCtx {
+    ws: ConvWorkspace,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl ConvCtx {
+    fn new(plan: &CausalConv) -> ConvCtx {
+        ConvCtx { ws: plan.workspace(), a: vec![0.0; plan.len()], b: vec![0.0; plan.len()] }
+    }
+}
+
+fn take_ctx(ctxs: &Mutex<Vec<ConvCtx>>, plan: &CausalConv) -> ConvCtx {
+    ctxs.lock()
+        .unwrap()
+        .pop()
+        .filter(|c| c.ws.fft_size() == plan.fft_size())
+        .unwrap_or_else(|| ConvCtx::new(plan))
+}
+
+fn put_ctx(ctxs: &Mutex<Vec<ConvCtx>>, ctx: ConvCtx) {
+    ctxs.lock().unwrap().push(ctx);
+}
+
+/// Step-scoped scratch threaded through the forward/backward pass: the
+/// buffer arena plus the shared pool of per-worker [`ConvCtx`]s (taken once
+/// per parallel task, not per row). Owned by the model across training steps
+/// so the steady state allocates nothing; public entry points that lack a
+/// scratch (`forward_cached`, `backward`) build a transient one.
+#[derive(Default)]
+struct Scratch {
+    arena: Arena,
+    conv_ctxs: Mutex<Vec<ConvCtx>>,
+}
+
+impl Scratch {
+    /// Return every buffer of a retired activation cache to the arena.
+    fn recycle(&mut self, cache: Cache) {
+        let Cache { b: _, tokens: _, blocks, lnf_xhat, lnf_rstd, uf } = cache;
+        for v in [lnf_xhat, lnf_rstd, uf] {
+            self.arena.put(v);
+        }
+        for blk in blocks {
+            let BlockCache {
+                ln1_xhat,
+                ln1_rstd,
+                t1,
+                zp,
+                zs,
+                filt,
+                hfilt,
+                spec_h,
+                vs,
+                cs,
+                y_mix,
+                ln2_xhat,
+                ln2_rstd,
+                t2,
+                mlp_pre,
+                mlp_tanh,
+                mlp_act,
+            } = blk;
+            for v in [
+                ln1_xhat, ln1_rstd, t1, zp, zs, hfilt, y_mix, ln2_xhat, ln2_rstd, t2, mlp_pre,
+                mlp_tanh, mlp_act,
+            ] {
+                self.arena.put(v);
+            }
+            for v in vs {
+                self.arena.put(v);
+            }
+            for v in cs {
+                self.arena.put(v);
+            }
+            let FilterCache { zins, pres } = filt;
+            for v in zins {
+                self.arena.put(v);
+            }
+            for v in pres {
+                self.arena.put(v);
+            }
+            let SpecBank { re, im, .. } = spec_h;
+            self.arena.put(re);
+            self.arena.put(im);
+        }
+    }
+}
+
+/// Half spectra of many length-L rows in two flat buffers (`bins` floats
+/// per row). This is the cached `spec_h` of a block: computed once in
+/// `mixer_fwd`, reused by every batch element and again by `mixer_bwd`.
+struct SpecBank {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    bins: usize,
+}
+
+impl SpecBank {
+    fn row(&self, i: usize) -> (&[f32], &[f32]) {
+        let r = i * self.bins..(i + 1) * self.bins;
+        (&self.re[r.clone()], &self.im[r])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // dense / layernorm / gelu / short-conv primitives
 // ---------------------------------------------------------------------------
 
-/// `y[r, o] = Σ_i x[r, i] w[i, o] (+ b[o])`.
-fn dense_fwd(
+/// Rows (or weight rows) per parallel task in the blocked dense kernels:
+/// large enough to amortize dispatch and reuse streamed `w` rows, small
+/// enough that a block's outputs stay cache-resident.
+const DENSE_BLOCK: usize = 8;
+/// Elements per parallel task in the elementwise kernels (GELU).
+const ELEM_BLOCK: usize = 4096;
+
+fn blocks_of(n: usize, blk: usize) -> usize {
+    n.div_ceil(blk)
+}
+
+/// `y[r, o] = b[o] + Σ_i x[r, i] w[i, o]`, cache-blocked over row blocks
+/// (each streamed `w` row is applied to the whole block) and parallel over
+/// blocks. Overwrites `y`.
+fn dense_fwd_into(
+    pool: &WorkerPool,
     x: &[f32],
     w: &[f32],
     b: Option<&[f32]>,
     rows: usize,
     din: usize,
     dout: usize,
-) -> Vec<f32> {
-    let mut y = vec![0.0f32; rows * dout];
-    if let Some(b) = b {
-        for r in 0..rows {
-            y[r * dout..(r + 1) * dout].copy_from_slice(b);
-        }
-    }
-    for r in 0..rows {
-        let xrow = &x[r * din..(r + 1) * din];
-        let yrow = &mut y[r * dout..(r + 1) * dout];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[i * dout..(i + 1) * dout];
-            for o in 0..dout {
-                yrow[o] += xv * wrow[o];
+    y: &mut [f32],
+) {
+    assert_eq!(x.len(), rows * din);
+    assert_eq!(w.len(), din * dout);
+    assert_eq!(y.len(), rows * dout);
+    let yv = SharedMut::new(y);
+    pool.par_for(blocks_of(rows, DENSE_BLOCK), |blk| {
+        let r0 = blk * DENSE_BLOCK;
+        let r1 = (r0 + DENSE_BLOCK).min(rows);
+        // SAFETY: row blocks partition `y`; block `blk` owns rows r0..r1.
+        let yblk = unsafe { yv.slice(r0 * dout, (r1 - r0) * dout) };
+        for yrow in yblk.chunks_mut(dout) {
+            match b {
+                Some(bv) => yrow.copy_from_slice(bv),
+                None => yrow.fill(0.0),
             }
         }
-    }
-    y
-}
-
-/// `dx = dy @ wᵀ`.
-fn dense_bwd_dx(dy: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
-    let mut dx = vec![0.0f32; rows * din];
-    for r in 0..rows {
-        let dyrow = &dy[r * dout..(r + 1) * dout];
-        let dxrow = &mut dx[r * din..(r + 1) * din];
         for i in 0..din {
             let wrow = &w[i * dout..(i + 1) * dout];
-            let mut acc = 0.0f32;
-            for o in 0..dout {
-                acc += dyrow[o] * wrow[o];
+            for rr in 0..(r1 - r0) {
+                let xv = x[(r0 + rr) * din + i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yrow = &mut yblk[rr * dout..(rr + 1) * dout];
+                for o in 0..dout {
+                    yrow[o] += xv * wrow[o];
+                }
             }
-            dxrow[i] = acc;
         }
-    }
-    dx
+    });
 }
 
-/// `dw += xᵀ @ dy` (accumulates into `dw`).
-fn dense_bwd_dw(x: &[f32], dy: &[f32], rows: usize, din: usize, dout: usize, dw: &mut [f32]) {
-    for r in 0..rows {
-        let xrow = &x[r * din..(r + 1) * din];
-        let dyrow = &dy[r * dout..(r + 1) * dout];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dwrow = &mut dw[i * dout..(i + 1) * dout];
-            for o in 0..dout {
-                dwrow[o] += xv * dyrow[o];
+/// `dx = dy @ wᵀ`, blocked + parallel over row blocks. Overwrites `dx`.
+fn dense_bwd_dx_into(
+    pool: &WorkerPool,
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    dx: &mut [f32],
+) {
+    assert_eq!(dy.len(), rows * dout);
+    assert_eq!(w.len(), din * dout);
+    assert_eq!(dx.len(), rows * din);
+    let dxv = SharedMut::new(dx);
+    pool.par_for(blocks_of(rows, DENSE_BLOCK), |blk| {
+        let r0 = blk * DENSE_BLOCK;
+        let r1 = (r0 + DENSE_BLOCK).min(rows);
+        // SAFETY: row blocks partition `dx`.
+        let dxblk = unsafe { dxv.slice(r0 * din, (r1 - r0) * din) };
+        for i in 0..din {
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for rr in 0..(r1 - r0) {
+                let dyrow = &dy[(r0 + rr) * dout..(r0 + rr + 1) * dout];
+                let mut acc = 0.0f32;
+                for o in 0..dout {
+                    acc += dyrow[o] * wrow[o];
+                }
+                dxblk[rr * din + i] = acc;
             }
         }
-    }
+    });
+}
+
+/// `dw += xᵀ @ dy`, parallel over disjoint blocks of `dw` rows (each task
+/// scans every data row, so per-element accumulation order matches the
+/// serial kernel exactly). Accumulates into `dw`.
+fn dense_bwd_dw_into(
+    pool: &WorkerPool,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+) {
+    assert_eq!(x.len(), rows * din);
+    assert_eq!(dy.len(), rows * dout);
+    assert_eq!(dw.len(), din * dout);
+    let dwv = SharedMut::new(dw);
+    pool.par_for(blocks_of(din, DENSE_BLOCK), |blk| {
+        let i0 = blk * DENSE_BLOCK;
+        let i1 = (i0 + DENSE_BLOCK).min(din);
+        // SAFETY: weight-row blocks partition `dw`.
+        let dwblk = unsafe { dwv.slice(i0 * dout, (i1 - i0) * dout) };
+        for r in 0..rows {
+            let xrow = &x[r * din..(r + 1) * din];
+            let dyrow = &dy[r * dout..(r + 1) * dout];
+            for ii in 0..(i1 - i0) {
+                let xv = xrow[i0 + ii];
+                if xv == 0.0 {
+                    continue;
+                }
+                let dwrow = &mut dwblk[ii * dout..(ii + 1) * dout];
+                for o in 0..dout {
+                    dwrow[o] += xv * dyrow[o];
+                }
+            }
+        }
+    });
 }
 
 /// `db += Σ_r dy[r, ·]`.
@@ -300,17 +518,20 @@ fn dense_bwd_db(dy: &[f32], rows: usize, dout: usize, db: &mut [f32]) {
 
 const LN_EPS: f32 = 1e-5;
 
-/// Pre-LN layer norm over the last axis; returns `(y, xhat, rstd)`.
-fn layer_norm_fwd(
+/// Pre-LN layer norm over the last axis; overwrites `y`, `xhat`, `rstd`.
+fn layer_norm_fwd_into(
     x: &[f32],
     g: &[f32],
     b: &[f32],
     rows: usize,
     d: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut y = vec![0.0f32; rows * d];
-    let mut xhat = vec![0.0f32; rows * d];
-    let mut rstd = vec![0.0f32; rows];
+    y: &mut [f32],
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+) {
+    assert_eq!(y.len(), rows * d);
+    assert_eq!(xhat.len(), rows * d);
+    assert_eq!(rstd.len(), rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let mut mu = 0.0f32;
@@ -331,11 +552,10 @@ fn layer_norm_fwd(
             y[r * d + i] = xh * g[i] + b[i];
         }
     }
-    (y, xhat, rstd)
 }
 
-/// Layer-norm backward; accumulates `dg`/`db`, returns `dx`.
-fn layer_norm_bwd(
+/// Layer-norm backward; accumulates `dg`/`db`, overwrites `dx`.
+fn layer_norm_bwd_into(
     dy: &[f32],
     g: &[f32],
     xhat: &[f32],
@@ -344,8 +564,9 @@ fn layer_norm_bwd(
     d: usize,
     dg: &mut [f32],
     db: &mut [f32],
-) -> Vec<f32> {
-    let mut dx = vec![0.0f32; rows * d];
+    dx: &mut [f32],
+) {
+    assert_eq!(dx.len(), rows * d);
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
         let xhr = &xhat[r * d..(r + 1) * d];
@@ -366,53 +587,89 @@ fn layer_norm_bwd(
             dx[r * d + i] = rs * (dxh - m1 - xhr[i] * m2);
         }
     }
-    dx
 }
 
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_A: f32 = 0.044_715;
 
-/// Tanh-approximate GELU (jax.nn.gelu default); returns `(y, tanh_term)`.
-fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
-    let mut y = vec![0.0f32; x.len()];
-    let mut th = vec![0.0f32; x.len()];
-    for (i, &v) in x.iter().enumerate() {
-        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
-        th[i] = t;
-        y[i] = 0.5 * v * (1.0 + t);
-    }
-    (y, th)
+/// Tanh-approximate GELU (jax.nn.gelu default); overwrites `y` and the
+/// cached `tanh` term. Parallel over element blocks (tanh dominates).
+fn gelu_fwd_into(pool: &WorkerPool, x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    let n = x.len();
+    assert_eq!(y.len(), n);
+    assert_eq!(th.len(), n);
+    let yv = SharedMut::new(y);
+    let tv = SharedMut::new(th);
+    pool.par_for(blocks_of(n, ELEM_BLOCK), |blk| {
+        let s = blk * ELEM_BLOCK;
+        let e = (s + ELEM_BLOCK).min(n);
+        // SAFETY: element blocks partition `y` and `th`.
+        let ys = unsafe { yv.slice(s, e - s) };
+        let ts = unsafe { tv.slice(s, e - s) };
+        for (j, i) in (s..e).enumerate() {
+            let v = x[i];
+            let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+            ts[j] = t;
+            ys[j] = 0.5 * v * (1.0 + t);
+        }
+    });
 }
 
-fn gelu_bwd(dy: &[f32], x: &[f32], th: &[f32]) -> Vec<f32> {
-    let mut dx = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let (v, t) = (x[i], th[i]);
-        let ds = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-        dx[i] = dy[i] * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * ds);
-    }
-    dx
+/// GELU backward; overwrites `dx`.
+fn gelu_bwd_into(pool: &WorkerPool, dy: &[f32], x: &[f32], th: &[f32], dx: &mut [f32]) {
+    let n = x.len();
+    assert_eq!(dx.len(), n);
+    let dxv = SharedMut::new(dx);
+    pool.par_for(blocks_of(n, ELEM_BLOCK), |blk| {
+        let s = blk * ELEM_BLOCK;
+        let e = (s + ELEM_BLOCK).min(n);
+        // SAFETY: element blocks partition `dx`.
+        let ds = unsafe { dxv.slice(s, e - s) };
+        for (j, i) in (s..e).enumerate() {
+            let (v, t) = (x[i], th[i]);
+            let dsig = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            ds[j] = dy[i] * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * dsig);
+        }
+    });
 }
 
-/// Depthwise causal FIR conv: `y[b,t,c] = Σ_f w[c,f] u[b,t−f,c]`.
-fn short_conv_fwd(w: &[f32], u: &[f32], b: usize, l: usize, c: usize, f: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; u.len()];
-    for bi in 0..b {
+/// Depthwise causal FIR conv `y[b,t,c] = Σ_f w[c,f] u[b,t−f,c]`, parallel
+/// over batch rows. Overwrites `y`.
+fn short_conv_fwd_into(
+    pool: &WorkerPool,
+    w: &[f32],
+    u: &[f32],
+    b: usize,
+    l: usize,
+    c: usize,
+    f: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(y.len(), u.len());
+    let yv = SharedMut::new(y);
+    pool.par_for(b, |bi| {
+        // SAFETY: batch rows partition `y`.
+        let yb = unsafe { yv.slice(bi * l * c, l * c) };
+        yb.fill(0.0);
         for t in 0..l {
-            let yrow = (bi * l + t) * c;
+            let yrow = t * c;
             for tap in 0..f.min(t + 1) {
                 let urow = (bi * l + (t - tap)) * c;
                 for ch in 0..c {
-                    y[yrow + ch] += w[ch * f + tap] * u[urow + ch];
+                    yb[yrow + ch] += w[ch * f + tap] * u[urow + ch];
                 }
             }
         }
-    }
-    y
+    });
 }
 
-/// Short-conv backward: returns `du`, accumulates `dw`.
-fn short_conv_bwd(
+/// Short-conv backward: overwrites `du`, accumulates `dw`. Batch rows run
+/// in parallel with per-batch `dw` partials reduced in batch order —
+/// deterministic and thread-count-invariant (the partial sums reassociate
+/// f32 adds relative to a batch-outer serial kernel, so exact agreement is
+/// across thread counts, not with pre-partial-scheme outputs).
+fn short_conv_bwd_into(
+    pool: &WorkerPool,
     w: &[f32],
     u: &[f32],
     dy: &[f32],
@@ -421,21 +678,41 @@ fn short_conv_bwd(
     c: usize,
     f: usize,
     dw: &mut [f32],
-) -> Vec<f32> {
-    let mut du = vec![0.0f32; u.len()];
-    for bi in 0..b {
-        for t in 0..l {
-            let dyrow = (bi * l + t) * c;
-            for tap in 0..f.min(t + 1) {
-                let urow = (bi * l + (t - tap)) * c;
-                for ch in 0..c {
-                    du[urow + ch] += w[ch * f + tap] * dy[dyrow + ch];
-                    dw[ch * f + tap] += dy[dyrow + ch] * u[urow + ch];
+    du: &mut [f32],
+    arena: &mut Arena,
+) {
+    assert_eq!(du.len(), u.len());
+    assert_eq!(dw.len(), c * f);
+    let mut partial = arena.take(b * c * f);
+    {
+        let duv = SharedMut::new(du);
+        let pv = SharedMut::new(&mut partial);
+        pool.par_for(b, |bi| {
+            // SAFETY: batch rows partition `du` and `partial`.
+            let dub = unsafe { duv.slice(bi * l * c, l * c) };
+            dub.fill(0.0);
+            let pw = unsafe { pv.slice(bi * c * f, c * f) };
+            pw.fill(0.0);
+            for t in 0..l {
+                let dyrow = (bi * l + t) * c;
+                for tap in 0..f.min(t + 1) {
+                    let urow = (bi * l + (t - tap)) * c;
+                    let du_row = (t - tap) * c;
+                    for ch in 0..c {
+                        dub[du_row + ch] += w[ch * f + tap] * dy[dyrow + ch];
+                        pw[ch * f + tap] += dy[dyrow + ch] * u[urow + ch];
+                    }
                 }
             }
+        });
+    }
+    for bi in 0..b {
+        let pw = &partial[bi * c * f..(bi + 1) * c * f];
+        for i in 0..c * f {
+            dw[i] += pw[i];
         }
     }
-    du
+    arena.put(partial);
 }
 
 // ---------------------------------------------------------------------------
@@ -460,6 +737,9 @@ struct BlockCache {
     filt: FilterCache,
     /// Windowed filters `(N, D, L)`.
     hfilt: Vec<f32>,
+    /// Cached half spectra of every filter row `(N·D, bins)` — computed in
+    /// `mixer_fwd`, reused by `mixer_bwd` (no re-FFT of the filters).
+    spec_h: SpecBank,
     /// Recurrence states `v_0..v_N`, each `(B, D, L)`.
     vs: Vec<Vec<f32>>,
     /// Pre-gate responses `c_0..c_{N−1}`, each `(B, D, L)`.
@@ -484,6 +764,31 @@ pub struct Cache {
     uf: Vec<f32>,
 }
 
+/// Mixer activations produced by `mixer_fwd` (moved into the block cache).
+struct BlockCacheParts {
+    zp: Vec<f32>,
+    zs: Vec<f32>,
+    filt: FilterCache,
+    hfilt: Vec<f32>,
+    spec_h: SpecBank,
+    vs: Vec<Vec<f32>>,
+    cs: Vec<Vec<f32>>,
+    y_mix: Vec<f32>,
+}
+
+/// Borrowed view of the same activations for the backward pass.
+#[derive(Clone, Copy)]
+struct BlockCachePartsRef<'a> {
+    zp: &'a [f32],
+    zs: &'a [f32],
+    filt: &'a FilterCache,
+    hfilt: &'a [f32],
+    spec_h: &'a SpecBank,
+    vs: &'a [Vec<f32>],
+    cs: &'a [Vec<f32>],
+    y_mix: &'a [f32],
+}
+
 // ---------------------------------------------------------------------------
 // the model
 // ---------------------------------------------------------------------------
@@ -502,6 +807,11 @@ pub struct NativeModel {
     pe: Vec<f32>,
     /// Decay window `(N, D, L)` (Eq. 7 modulation) — constant.
     window: Vec<f32>,
+    /// Worker pool for the row-parallel engine (shared process-wide pool by
+    /// default; swap with [`NativeModel::set_threads`]).
+    pool: WorkerPool,
+    /// Step-scoped workspaces reused across training steps.
+    scratch: Scratch,
 }
 
 impl NativeModel {
@@ -547,6 +857,8 @@ impl NativeModel {
             cfg,
             pe,
             window,
+            pool: pool::global().clone(),
+            scratch: Scratch::default(),
         };
         model.init(seed);
         Ok(model)
@@ -593,6 +905,17 @@ impl NativeModel {
         self.step = 0;
     }
 
+    /// Use a dedicated worker pool with `n` threads for this model (tests,
+    /// benches, thread-count sweeps). Models default to the process pool.
+    pub fn set_threads(&mut self, n: usize) {
+        self.pool = WorkerPool::new(n);
+    }
+
+    /// Worker threads this model's parallel loops run on.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
     fn p(&self, ix: usize) -> &[f32] {
         self.layout.slice(&self.params, ix)
     }
@@ -601,26 +924,29 @@ impl NativeModel {
 
     /// Materialize block `bi`'s implicit filters `(N, D, L)` (Fig. 3.1):
     /// sine-FFN over the positional encoding, modulated by the decay window.
-    fn filter_fwd(&self, bi: usize) -> (Vec<f32>, FilterCache) {
+    fn filter_fwd_with(&self, bi: usize, sc: &mut Scratch) -> (Vec<f32>, FilterCache) {
         let cfg = &self.cfg;
         let (l, n, d) = (cfg.seqlen, cfg.order, cfg.width);
         let bix = &self.layout.ix.blocks[bi];
         let dims = cfg.filter_layer_dims();
         let depth = dims.len();
         let omega = cfg.sine_freq;
+        let pool = &self.pool;
 
         let mut zins = Vec::with_capacity(depth);
         let mut pres = Vec::with_capacity(depth);
-        let mut z = self.pe.clone();
+        let mut z = sc.arena.take(self.pe.len());
+        z.copy_from_slice(&self.pe);
         for (j, &(fan_in, fan_out)) in dims.iter().enumerate() {
             let w = self.p(bix.filt_w[j]);
             let b = self.p(bix.filt_b[j]);
-            let pre = dense_fwd(&z, w, Some(b), l, fan_in, fan_out);
+            let mut pre = sc.arena.take(l * fan_out);
+            dense_fwd_into(pool, &z, w, Some(b), l, fan_in, fan_out, &mut pre);
             zins.push(z);
             if j < depth - 1 {
-                let mut act = pre.clone();
-                for x in act.iter_mut() {
-                    *x = (omega * *x).sin();
+                let mut act = sc.arena.take(l * fan_out);
+                for (a, &p) in act.iter_mut().zip(pre.iter()) {
+                    *a = (omega * p).sin();
                 }
                 pres.push(pre);
                 z = act;
@@ -634,27 +960,68 @@ impl NativeModel {
 
         // z is (L, N·D); transpose to (N, D, L) and apply the window.
         let nd = n * d;
-        let mut hfilt = vec![0.0f32; nd * l];
+        let mut hfilt = sc.arena.take(nd * l);
         for t in 0..l {
             for ch in 0..nd {
                 hfilt[ch * l + t] = z[t * nd + ch] * self.window[ch * l + t];
             }
         }
+        sc.arena.put(z);
         (hfilt, FilterCache { zins, pres })
     }
 
+    /// Half spectra of `rows` filter rows of `hfilt` (N·D spectra, computed
+    /// once per block, in parallel, shared across the batch and the
+    /// backward pass).
+    fn filter_spectra(&self, hfilt: &[f32], rows: usize, sc: &mut Scratch) -> SpecBank {
+        let l = self.cfg.seqlen;
+        let bins = self.conv.spec_len();
+        let mut re = sc.arena.take(rows * bins);
+        let mut im = sc.arena.take(rows * bins);
+        {
+            let rv = SharedMut::new(&mut re);
+            let iv = SharedMut::new(&mut im);
+            let ctxs = &sc.conv_ctxs;
+            self.pool.par_for_with(
+                rows,
+                || take_ctx(ctxs, &self.conv),
+                |ctx, r| {
+                    // SAFETY: each index owns spectrum row r exclusively.
+                    let rrow = unsafe { rv.slice(r * bins, bins) };
+                    let irow = unsafe { iv.slice(r * bins, bins) };
+                    self.conv.spectrum_slices_into(
+                        &hfilt[r * l..(r + 1) * l],
+                        &mut ctx.ws,
+                        rrow,
+                        irow,
+                    );
+                },
+                |ctx| put_ctx(ctxs, ctx),
+            );
+        }
+        SpecBank { re, im, bins }
+    }
+
     /// Backward through the window + FFN; accumulates filter-weight grads.
-    fn filter_bwd(&self, bi: usize, dhfilt: &[f32], cache: &FilterCache, grads: &mut [f32]) {
+    fn filter_bwd_with(
+        &self,
+        bi: usize,
+        dhfilt: &[f32],
+        cache: &FilterCache,
+        grads: &mut [f32],
+        sc: &mut Scratch,
+    ) {
         let cfg = &self.cfg;
         let (l, n, d) = (cfg.seqlen, cfg.order, cfg.width);
         let bix = &self.layout.ix.blocks[bi];
         let dims = cfg.filter_layer_dims();
         let depth = dims.len();
         let omega = cfg.sine_freq;
+        let pool = &self.pool;
 
         // d(FFN output): un-window and transpose back to (L, N·D).
         let nd = n * d;
-        let mut dz = vec![0.0f32; l * nd];
+        let mut dz = sc.arena.take(l * nd);
         for t in 0..l {
             for ch in 0..nd {
                 dz[t * nd + ch] = dhfilt[ch * l + t] * self.window[ch * l + t];
@@ -671,37 +1038,77 @@ impl NativeModel {
                 }
             }
             let zin = &cache.zins[j];
-            dense_bwd_dw(zin, &dz, l, fan_in, fan_out, self.layout.slice_mut(grads, bix.filt_w[j]));
+            dense_bwd_dw_into(
+                pool,
+                zin,
+                &dz,
+                l,
+                fan_in,
+                fan_out,
+                self.layout.slice_mut(grads, bix.filt_w[j]),
+            );
             dense_bwd_db(&dz, l, fan_out, self.layout.slice_mut(grads, bix.filt_b[j]));
             if j > 0 {
-                dz = dense_bwd_dx(&dz, self.p(bix.filt_w[j]), l, fan_in, fan_out);
+                let mut dzn = sc.arena.take(l * fan_in);
+                dense_bwd_dx_into(pool, &dz, self.p(bix.filt_w[j]), l, fan_in, fan_out, &mut dzn);
+                sc.arena.put(std::mem::replace(&mut dz, dzn));
             }
         }
+        sc.arena.put(dz);
     }
 
     // -- hyena mixer ---------------------------------------------------------
 
     /// Order-N Hyena forward (Algorithm 3) on the normalized stream `t1`.
-    fn mixer_fwd(&self, bi: usize, t1: &[f32], b: usize) -> (Vec<f32>, BlockCacheParts) {
+    /// The (batch × channel) convolution rows run on the worker pool.
+    fn mixer_fwd(
+        &self,
+        bi: usize,
+        t1: &[f32],
+        b: usize,
+        sc: &mut Scratch,
+    ) -> (Vec<f32>, BlockCacheParts) {
         let cfg = &self.cfg;
         let (l, d, n, f) = (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter);
         let c = (n + 1) * d;
         let bix = &self.layout.ix.blocks[bi];
         let rows = b * l;
+        let pool = &self.pool;
 
         // Algorithm 1: projection + depthwise short conv.
-        let zp = dense_fwd(t1, self.p(bix.proj_w), Some(self.p(bix.proj_b)), rows, d, c);
+        let mut zp = sc.arena.take(rows * c);
+        dense_fwd_into(
+            pool,
+            t1,
+            self.p(bix.proj_w),
+            Some(self.p(bix.proj_b)),
+            rows,
+            d,
+            c,
+            &mut zp,
+        );
         let zs = match bix.short_w {
-            Some(sw) => short_conv_fwd(self.p(sw), &zp, b, l, c, f),
-            None => zp.clone(),
+            Some(sw) => {
+                let mut zs = sc.arena.take(rows * c);
+                short_conv_fwd_into(pool, self.p(sw), &zp, b, l, c, f, &mut zs);
+                zs
+            }
+            None => {
+                let mut zs = sc.arena.take(rows * c);
+                zs.copy_from_slice(&zp);
+                zs
+            }
         };
 
-        // Algorithm 2: materialize the implicit filters.
-        let (hfilt, filt) = self.filter_fwd(bi);
+        // Algorithm 2: materialize the implicit filters and their spectra
+        // (spectra cached for the whole block: batch reuse now, mixer_bwd
+        // reuse later).
+        let (hfilt, filt) = self.filter_fwd_with(bi, sc);
+        let spec_h = self.filter_spectra(&hfilt, n * d, sc);
 
         // Slot 0 is the value v; slots 1..N are the gates x^n. Transpose the
         // value slot into channel-major (B, D, L).
-        let mut v0 = vec![0.0f32; b * d * l];
+        let mut v0 = sc.arena.take(b * d * l);
         for bb in 0..b {
             for t in 0..l {
                 let src = (bb * l + t) * c;
@@ -716,30 +1123,40 @@ impl NativeModel {
         let mut vs = vec![v0];
         let mut cs = Vec::with_capacity(n);
         for order in 0..n {
-            // Filter spectra once per channel, reused across the batch.
-            let spec_h: Vec<_> = (0..d)
-                .map(|ch| self.conv.spectrum(&hfilt[(order * d + ch) * l..][..l]))
-                .collect();
             let vprev = vs.last().unwrap();
-            let mut cbuf = vec![0.0f32; b * d * l];
-            let mut vnext = vec![0.0f32; b * d * l];
-            for bb in 0..b {
-                for ch in 0..d {
-                    let row = (bb * d + ch) * l;
-                    let vrow = &vprev[row..row + l];
-                    let conv = self.conv.conv_spec(&spec_h[ch], &self.conv.spectrum(vrow));
-                    let bv = bias[order * d + ch];
-                    let crow = &mut cbuf[row..row + l];
-                    for t in 0..l {
-                        crow[t] = conv[t] + bv * vrow[t];
-                    }
-                    let vrow_next = &mut vnext[row..row + l];
-                    for t in 0..l {
-                        // Gate x^order lives in slot order+1 of zs.
-                        let gate = zs[(bb * l + t) * c + (order + 1) * d + ch];
-                        vrow_next[t] = gate * crow[t];
-                    }
-                }
+            let mut cbuf = sc.arena.take(b * d * l);
+            let mut vnext = sc.arena.take(b * d * l);
+            {
+                let cview = SharedMut::new(&mut cbuf);
+                let vview = SharedMut::new(&mut vnext);
+                let ctxs = &sc.conv_ctxs;
+                pool.par_for_with(
+                    b * d,
+                    || take_ctx(ctxs, &self.conv),
+                    |ctx, rix| {
+                        let (bb, ch) = (rix / d, rix % d);
+                        let row = rix * l; // (bb·d + ch)·l
+                        let vrow = &vprev[row..row + l];
+                        // SAFETY: index rix exclusively owns conv/gate row rix.
+                        let crow = unsafe { cview.slice(row, l) };
+                        let vnrow = unsafe { vview.slice(row, l) };
+                        let mut sv = ctx.ws.take_spectrum();
+                        self.conv.spectrum_into(vrow, &mut ctx.ws, &mut sv);
+                        let (hre, him) = spec_h.row(order * d + ch);
+                        self.conv.conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
+                        ctx.ws.put_spectrum(sv);
+                        let bv = bias[order * d + ch];
+                        for t in 0..l {
+                            crow[t] += bv * vrow[t];
+                        }
+                        for t in 0..l {
+                            // Gate x^order lives in slot order+1 of zs.
+                            let gate = zs[(bb * l + t) * c + (order + 1) * d + ch];
+                            vnrow[t] = gate * crow[t];
+                        }
+                    },
+                    |ctx| put_ctx(ctxs, ctx),
+                );
             }
             cs.push(cbuf);
             vs.push(vnext);
@@ -747,7 +1164,7 @@ impl NativeModel {
 
         // Back to (B, L, D) and the output projection.
         let vlast = vs.last().unwrap();
-        let mut y_mix = vec![0.0f32; rows * d];
+        let mut y_mix = sc.arena.take(rows * d);
         for bb in 0..b {
             for t in 0..l {
                 let dst = (bb * l + t) * d;
@@ -756,34 +1173,51 @@ impl NativeModel {
                 }
             }
         }
-        let out = dense_fwd(&y_mix, self.p(bix.out_w), Some(self.p(bix.out_b)), rows, d, d);
-        (out, BlockCacheParts { zp, zs, filt, hfilt, vs, cs, y_mix })
+        let mut out = sc.arena.take(rows * d);
+        dense_fwd_into(
+            pool,
+            &y_mix,
+            self.p(bix.out_w),
+            Some(self.p(bix.out_b)),
+            rows,
+            d,
+            d,
+            &mut out,
+        );
+        (out, BlockCacheParts { zp, zs, filt, hfilt, spec_h, vs, cs, y_mix })
     }
 
-    /// Mixer backward: returns `d(t1)`, accumulates all mixer grads.
+    /// Mixer backward: returns `d(t1)`, accumulates all mixer grads. The
+    /// per-channel recurrence adjoints run on the worker pool (channel ch
+    /// exclusively owns its filter-grad row, bias slot, gate slots and
+    /// `dvprev` rows, so the partition is write-disjoint), reusing the
+    /// filter spectra cached by `mixer_fwd`.
     fn mixer_bwd(
         &self,
         bi: usize,
         dout: &[f32],
         t1: &[f32],
-        parts: &BlockCacheParts4<'_>,
+        parts: &BlockCachePartsRef<'_>,
         b: usize,
         grads: &mut [f32],
+        sc: &mut Scratch,
     ) -> Vec<f32> {
         let cfg = &self.cfg;
         let (l, d, n, f) = (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter);
         let c = (n + 1) * d;
         let bix = &self.layout.ix.blocks[bi];
         let rows = b * l;
-        let BlockCacheParts4 { zp, zs, filt, hfilt, vs, cs, y_mix } = *parts;
+        let pool = &self.pool;
+        let BlockCachePartsRef { zp, zs, filt, hfilt: _, spec_h, vs, cs, y_mix } = *parts;
 
         // Out projection.
-        dense_bwd_dw(y_mix, dout, rows, d, d, self.layout.slice_mut(grads, bix.out_w));
+        dense_bwd_dw_into(pool, y_mix, dout, rows, d, d, self.layout.slice_mut(grads, bix.out_w));
         dense_bwd_db(dout, rows, d, self.layout.slice_mut(grads, bix.out_b));
-        let dy = dense_bwd_dx(dout, self.p(bix.out_w), rows, d, d);
+        let mut dy = sc.arena.take(rows * d);
+        dense_bwd_dx_into(pool, dout, self.p(bix.out_w), rows, d, d, &mut dy);
 
         // (B, L, D) → (B, D, L).
-        let mut dv = vec![0.0f32; b * d * l];
+        let mut dv = sc.arena.take(b * d * l);
         for bb in 0..b {
             for t in 0..l {
                 let src = (bb * l + t) * d;
@@ -792,56 +1226,88 @@ impl NativeModel {
                 }
             }
         }
+        sc.arena.put(dy);
 
-        // Recurrence backward (reverse order).
+        // Recurrence backward (reverse order), parallel over channels.
         let bias = self.p(bix.bias);
-        let mut dzs = vec![0.0f32; rows * c];
-        let mut dhfilt = vec![0.0f32; n * d * l];
+        let mut dzs = sc.arena.take_zeroed(rows * c);
+        let mut dhfilt = sc.arena.take_zeroed(n * d * l);
         for order in (0..n).rev() {
-            let spec_h: Vec<_> = (0..d)
-                .map(|ch| self.conv.spectrum(&hfilt[(order * d + ch) * l..][..l]))
-                .collect();
             let vprev = &vs[order];
             let cbuf = &cs[order];
-            let mut dvprev = vec![0.0f32; b * d * l];
-            for bb in 0..b {
-                for ch in 0..d {
-                    let row = (bb * d + ch) * l;
-                    let dvrow = &dv[row..row + l];
-                    let crow = &cbuf[row..row + l];
-                    let vrow = &vprev[row..row + l];
-                    // Gate grad and pre-gate grad (dc = dv ⊙ x).
-                    let mut dc = vec![0.0f32; l];
-                    for t in 0..l {
-                        let gix = (bb * l + t) * c + (order + 1) * d + ch;
-                        dzs[gix] += dvrow[t] * crow[t];
-                        dc[t] = dvrow[t] * zs[gix];
-                    }
-                    // Skip-bias grad: c = h∗v + bias⊙v.
-                    let bv = bias[order * d + ch];
-                    {
-                        let gb = self.layout.slice_mut(grads, bix.bias);
-                        let mut acc = 0.0f32;
-                        for t in 0..l {
-                            acc += dc[t] * vrow[t];
+            let mut dvprev = sc.arena.take(b * d * l);
+            {
+                let dzs_v = SharedMut::new(&mut dzs);
+                let dvp_v = SharedMut::new(&mut dvprev);
+                let dh_v = SharedMut::new(&mut dhfilt[order * d * l..(order + 1) * d * l]);
+                let gbias = &mut self.layout.slice_mut(grads, bix.bias)[order * d..(order + 1) * d];
+                let gb_v = SharedMut::new(gbias);
+                let ctxs = &sc.conv_ctxs;
+                pool.par_for_with(
+                    d,
+                    || take_ctx(ctxs, &self.conv),
+                    |ctx, ch| {
+                        let (hre, him) = spec_h.row(order * d + ch);
+                        let bv = bias[order * d + ch];
+                        let mut bias_acc = 0.0f32;
+                        // SAFETY: channel ch exclusively owns dhfilt row ch
+                        // (of this order), bias slot ch, the gate slots
+                        // `(·)·c + (order+1)·d + ch` of dzs, and rows
+                        // (bb, ch) of dvprev.
+                        let dh_row = unsafe { dh_v.slice(ch * l, l) };
+                        for bb in 0..b {
+                            let row = (bb * d + ch) * l;
+                            let vrow = &vprev[row..row + l];
+                            let crow = &cbuf[row..row + l];
+                            let dvrow = &dv[row..row + l];
+                            // Gate grad and pre-gate grad (dc = dv ⊙ x).
+                            let dc = &mut ctx.a;
+                            for t in 0..l {
+                                let gix = (bb * l + t) * c + (order + 1) * d + ch;
+                                unsafe {
+                                    *dzs_v.at(gix) += dvrow[t] * crow[t];
+                                }
+                                dc[t] = dvrow[t] * zs[gix];
+                            }
+                            // Skip-bias grad: c = h∗v + bias⊙v.
+                            let mut acc = 0.0f32;
+                            for t in 0..l {
+                                acc += dc[t] * vrow[t];
+                            }
+                            bias_acc += acc;
+                            // Convolution adjoints:
+                            // dh += corr(v, dc); dv = corr(h, dc) + bias⊙dc.
+                            let mut s_dc = ctx.ws.take_spectrum();
+                            self.conv.spectrum_into(dc, &mut ctx.ws, &mut s_dc);
+                            let mut s_v = ctx.ws.take_spectrum();
+                            self.conv.spectrum_into(vrow, &mut ctx.ws, &mut s_v);
+                            self.conv.corr_spec_into(&s_v, &s_dc, &mut ctx.ws, &mut ctx.b);
+                            for t in 0..l {
+                                dh_row[t] += ctx.b[t];
+                            }
+                            self.conv.corr_spec_slices_into(
+                                hre,
+                                him,
+                                &s_dc.re,
+                                &s_dc.im,
+                                &mut ctx.ws,
+                                &mut ctx.b,
+                            );
+                            let dvp = unsafe { dvp_v.slice(row, l) };
+                            for t in 0..l {
+                                dvp[t] = ctx.b[t] + bv * dc[t];
+                            }
+                            ctx.ws.put_spectrum(s_dc);
+                            ctx.ws.put_spectrum(s_v);
                         }
-                        gb[order * d + ch] += acc;
-                    }
-                    // Convolution adjoints: dh = corr(v, dc); dv = corr(h, dc) + bias⊙dc.
-                    let spec_dc = self.conv.spectrum(&dc);
-                    let dh_row = self.conv.corr_spec(&self.conv.spectrum(vrow), &spec_dc);
-                    let dst = &mut dhfilt[(order * d + ch) * l..][..l];
-                    for t in 0..l {
-                        dst[t] += dh_row[t];
-                    }
-                    let dv_conv = self.conv.corr_spec(&spec_h[ch], &spec_dc);
-                    let dvp = &mut dvprev[row..row + l];
-                    for t in 0..l {
-                        dvp[t] = dv_conv[t] + bv * dc[t];
-                    }
-                }
+                        unsafe {
+                            *gb_v.at(ch) += bias_acc;
+                        }
+                    },
+                    |ctx| put_ctx(ctxs, ctx),
+                );
             }
-            dv = dvprev;
+            sc.arena.put(std::mem::replace(&mut dv, dvprev));
         }
         // Value slot (slot 0) grad.
         for bb in 0..b {
@@ -852,39 +1318,67 @@ impl NativeModel {
                 }
             }
         }
+        sc.arena.put(dv);
 
         // Filters.
-        self.filter_bwd(bi, &dhfilt, filt, grads);
+        self.filter_bwd_with(bi, &dhfilt, filt, grads, sc);
+        sc.arena.put(dhfilt);
 
         // Short conv, projection.
         let dzp = match bix.short_w {
             Some(sw) => {
-                let w = self.p(sw).to_vec();
-                short_conv_bwd(&w, zp, &dzs, b, l, c, f, self.layout.slice_mut(grads, sw))
+                let mut dzp = sc.arena.take(rows * c);
+                short_conv_bwd_into(
+                    pool,
+                    self.p(sw),
+                    zp,
+                    &dzs,
+                    b,
+                    l,
+                    c,
+                    f,
+                    self.layout.slice_mut(grads, sw),
+                    &mut dzp,
+                    &mut sc.arena,
+                );
+                sc.arena.put(dzs);
+                dzp
             }
             None => dzs,
         };
-        dense_bwd_dw(t1, &dzp, rows, d, c, self.layout.slice_mut(grads, bix.proj_w));
+        dense_bwd_dw_into(pool, t1, &dzp, rows, d, c, self.layout.slice_mut(grads, bix.proj_w));
         dense_bwd_db(&dzp, rows, c, self.layout.slice_mut(grads, bix.proj_b));
-        dense_bwd_dx(&dzp, self.p(bix.proj_w), rows, d, c)
+        let mut dt1 = sc.arena.take(rows * d);
+        dense_bwd_dx_into(pool, &dzp, self.p(bix.proj_w), rows, d, c, &mut dt1);
+        sc.arena.put(dzp);
+        dt1
     }
 
     // -- full model ----------------------------------------------------------
 
     /// Forward pass over `tokens` (B·L ids), returning logits `(B, L, V)`
     /// and the activation cache for a subsequent backward pass.
+    ///
+    /// Transient-scratch convenience around [`NativeModel::train_step`]'s
+    /// persistent-workspace path (inference through the `Backend` trait).
     pub fn forward_cached(&self, tokens: &[i32], b: usize) -> Result<(Vec<f32>, Cache)> {
+        let mut sc = Scratch::default();
+        self.forward_with(tokens, b, &mut sc)
+    }
+
+    fn forward_with(&self, tokens: &[i32], b: usize, sc: &mut Scratch) -> Result<(Vec<f32>, Cache)> {
         let cfg = &self.cfg;
         let (l, d, vsz) = (cfg.seqlen, cfg.width, cfg.vocab);
         if tokens.len() != b * l {
             bail!("tokens length {} != batch {b} × seqlen {l}", tokens.len());
         }
         let rows = b * l;
+        let pool = &self.pool;
 
         // Embedding + learned positions.
         let embed = self.p(self.layout.ix.embed);
         let pos = self.p(self.layout.ix.pos);
-        let mut u = vec![0.0f32; rows * d];
+        let mut u = sc.arena.take(rows * d);
         for bb in 0..b {
             for t in 0..l {
                 let tok = (tokens[bb * l + t].max(0) as usize).min(vsz - 1);
@@ -900,24 +1394,70 @@ impl NativeModel {
         let mut blocks = Vec::with_capacity(cfg.depth);
         for bi in 0..cfg.depth {
             let bix = &self.layout.ix.blocks[bi];
-            let (t1, ln1_xhat, ln1_rstd) =
-                layer_norm_fwd(&u, self.p(bix.ln1_g), self.p(bix.ln1_b), rows, d);
-            let (mix, parts) = self.mixer_fwd(bi, &t1, b);
-            let mut h_res = u.clone();
+            let mut t1 = sc.arena.take(rows * d);
+            let mut ln1_xhat = sc.arena.take(rows * d);
+            let mut ln1_rstd = sc.arena.take(rows);
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln1_g),
+                self.p(bix.ln1_b),
+                rows,
+                d,
+                &mut t1,
+                &mut ln1_xhat,
+                &mut ln1_rstd,
+            );
+            let (mix, parts) = self.mixer_fwd(bi, &t1, b, sc);
+            let mut h_res = sc.arena.take(rows * d);
             for i in 0..rows * d {
-                h_res[i] += mix[i];
+                h_res[i] = u[i] + mix[i];
             }
-            let (t2, ln2_xhat, ln2_rstd) =
-                layer_norm_fwd(&h_res, self.p(bix.ln2_g), self.p(bix.ln2_b), rows, d);
+            sc.arena.put(mix);
+            let mut t2 = sc.arena.take(rows * d);
+            let mut ln2_xhat = sc.arena.take(rows * d);
+            let mut ln2_rstd = sc.arena.take(rows);
+            layer_norm_fwd_into(
+                &h_res,
+                self.p(bix.ln2_g),
+                self.p(bix.ln2_b),
+                rows,
+                d,
+                &mut t2,
+                &mut ln2_xhat,
+                &mut ln2_rstd,
+            );
             let dm = cfg.mlp_dim();
-            let mlp_pre =
-                dense_fwd(&t2, self.p(bix.mlp_w1), Some(self.p(bix.mlp_b1)), rows, d, dm);
-            let (mlp_act, mlp_tanh) = gelu_fwd(&mlp_pre);
-            let z = dense_fwd(&mlp_act, self.p(bix.mlp_w2), Some(self.p(bix.mlp_b2)), rows, dm, d);
-            let mut unew = h_res.clone();
+            let mut mlp_pre = sc.arena.take(rows * dm);
+            dense_fwd_into(
+                pool,
+                &t2,
+                self.p(bix.mlp_w1),
+                Some(self.p(bix.mlp_b1)),
+                rows,
+                d,
+                dm,
+                &mut mlp_pre,
+            );
+            let mut mlp_act = sc.arena.take(rows * dm);
+            let mut mlp_tanh = sc.arena.take(rows * dm);
+            gelu_fwd_into(pool, &mlp_pre, &mut mlp_act, &mut mlp_tanh);
+            let mut z = sc.arena.take(rows * d);
+            dense_fwd_into(
+                pool,
+                &mlp_act,
+                self.p(bix.mlp_w2),
+                Some(self.p(bix.mlp_b2)),
+                rows,
+                dm,
+                d,
+                &mut z,
+            );
+            let mut unew = sc.arena.take(rows * d);
             for i in 0..rows * d {
-                unew[i] += z[i];
+                unew[i] = h_res[i] + z[i];
             }
+            sc.arena.put(z);
+            sc.arena.put(h_res);
             blocks.push(BlockCache {
                 ln1_xhat,
                 ln1_rstd,
@@ -926,6 +1466,7 @@ impl NativeModel {
                 zs: parts.zs,
                 filt: parts.filt,
                 hfilt: parts.hfilt,
+                spec_h: parts.spec_h,
                 vs: parts.vs,
                 cs: parts.cs,
                 y_mix: parts.y_mix,
@@ -936,17 +1477,25 @@ impl NativeModel {
                 mlp_tanh,
                 mlp_act,
             });
-            u = unew;
+            sc.arena.put(std::mem::replace(&mut u, unew));
         }
 
-        let (uf, lnf_xhat, lnf_rstd) = layer_norm_fwd(
+        let mut uf = sc.arena.take(rows * d);
+        let mut lnf_xhat = sc.arena.take(rows * d);
+        let mut lnf_rstd = sc.arena.take(rows);
+        layer_norm_fwd_into(
             &u,
             self.p(self.layout.ix.lnf_g),
             self.p(self.layout.ix.lnf_b),
             rows,
             d,
+            &mut uf,
+            &mut lnf_xhat,
+            &mut lnf_rstd,
         );
-        let logits = dense_fwd(&uf, self.p(self.layout.ix.head), None, rows, d, vsz);
+        sc.arena.put(u);
+        let mut logits = sc.arena.take(rows * vsz);
+        dense_fwd_into(pool, &uf, self.p(self.layout.ix.head), None, rows, d, vsz, &mut logits);
         Ok((
             logits,
             Cache {
@@ -997,37 +1546,56 @@ impl NativeModel {
 
     /// Backward from `dlogits` through the whole model into `grads`
     /// (a zeroed buffer of `layout.total` length).
+    ///
+    /// Transient-scratch convenience (gradcheck, one-shot callers); the
+    /// training loop goes through [`NativeModel::train_step`], which reuses
+    /// the model's persistent workspaces.
     pub fn backward(&self, dlogits: &[f32], cache: &Cache, grads: &mut [f32]) {
+        let mut sc = Scratch::default();
+        self.backward_with(dlogits, cache, grads, &mut sc)
+    }
+
+    fn backward_with(&self, dlogits: &[f32], cache: &Cache, grads: &mut [f32], sc: &mut Scratch) {
         let cfg = &self.cfg;
         let (l, d, vsz) = (cfg.seqlen, cfg.width, cfg.vocab);
         let b = cache.b;
         let rows = b * l;
         let ix = &self.layout.ix;
+        let pool = &self.pool;
 
         // Head.
-        dense_bwd_dw(&cache.uf, dlogits, rows, d, vsz, self.layout.slice_mut(grads, ix.head));
-        let duf = dense_bwd_dx(dlogits, self.p(ix.head), rows, d, vsz);
+        dense_bwd_dw_into(
+            pool,
+            &cache.uf,
+            dlogits,
+            rows,
+            d,
+            vsz,
+            self.layout.slice_mut(grads, ix.head),
+        );
+        let mut duf = sc.arena.take(rows * d);
+        dense_bwd_dx_into(pool, dlogits, self.p(ix.head), rows, d, vsz, &mut duf);
 
         // Final LN.
-        let mut du = {
-            let (dg_ix, db_ix) = (ix.lnf_g, ix.lnf_b);
-            let g = self.p(dg_ix).to_vec();
+        let mut du = sc.arena.take(rows * d);
+        {
             let mut dg = vec![0.0f32; d];
             let mut db = vec![0.0f32; d];
-            let dx = layer_norm_bwd(
+            layer_norm_bwd_into(
                 &duf,
-                &g,
+                self.p(ix.lnf_g),
                 &cache.lnf_xhat,
                 &cache.lnf_rstd,
                 rows,
                 d,
                 &mut dg,
                 &mut db,
+                &mut du,
             );
-            add_into(self.layout.slice_mut(grads, dg_ix), &dg);
-            add_into(self.layout.slice_mut(grads, db_ix), &db);
-            dx
-        };
+            add_into(self.layout.slice_mut(grads, ix.lnf_g), &dg);
+            add_into(self.layout.slice_mut(grads, ix.lnf_b), &db);
+        }
+        sc.arena.put(duf);
 
         for bi in (0..cfg.depth).rev() {
             let bix = self.layout.ix.blocks[bi].clone();
@@ -1036,69 +1604,98 @@ impl NativeModel {
 
             // unew = h_res + mlp(t2): du splits into the residual and MLP paths.
             let dz = &du;
-            dense_bwd_dw(&bc.mlp_act, dz, rows, dm, d, self.layout.slice_mut(grads, bix.mlp_w2));
+            dense_bwd_dw_into(
+                pool,
+                &bc.mlp_act,
+                dz,
+                rows,
+                dm,
+                d,
+                self.layout.slice_mut(grads, bix.mlp_w2),
+            );
             dense_bwd_db(dz, rows, d, self.layout.slice_mut(grads, bix.mlp_b2));
-            let dact = dense_bwd_dx(dz, self.p(bix.mlp_w2), rows, dm, d);
-            let dpre = gelu_bwd(&dact, &bc.mlp_pre, &bc.mlp_tanh);
-            dense_bwd_dw(&bc.t2, &dpre, rows, d, dm, self.layout.slice_mut(grads, bix.mlp_w1));
+            let mut dact = sc.arena.take(rows * dm);
+            dense_bwd_dx_into(pool, dz, self.p(bix.mlp_w2), rows, dm, d, &mut dact);
+            let mut dpre = sc.arena.take(rows * dm);
+            gelu_bwd_into(pool, &dact, &bc.mlp_pre, &bc.mlp_tanh, &mut dpre);
+            sc.arena.put(dact);
+            dense_bwd_dw_into(
+                pool,
+                &bc.t2,
+                &dpre,
+                rows,
+                d,
+                dm,
+                self.layout.slice_mut(grads, bix.mlp_w1),
+            );
             dense_bwd_db(&dpre, rows, dm, self.layout.slice_mut(grads, bix.mlp_b1));
-            let dt2 = dense_bwd_dx(&dpre, self.p(bix.mlp_w1), rows, d, dm);
+            let mut dt2 = sc.arena.take(rows * d);
+            dense_bwd_dx_into(pool, &dpre, self.p(bix.mlp_w1), rows, d, dm, &mut dt2);
+            sc.arena.put(dpre);
 
-            let mut dh = du.clone(); // residual branch of unew = h + z
+            let mut dh = sc.arena.take(rows * d); // residual branch of unew = h + z
+            dh.copy_from_slice(&du);
             {
-                let g = self.p(bix.ln2_g).to_vec();
                 let mut dg = vec![0.0f32; d];
                 let mut db = vec![0.0f32; d];
-                let dx = layer_norm_bwd(
+                let mut dx = sc.arena.take(rows * d);
+                layer_norm_bwd_into(
                     &dt2,
-                    &g,
+                    self.p(bix.ln2_g),
                     &bc.ln2_xhat,
                     &bc.ln2_rstd,
                     rows,
                     d,
                     &mut dg,
                     &mut db,
+                    &mut dx,
                 );
                 add_into(self.layout.slice_mut(grads, bix.ln2_g), &dg);
                 add_into(self.layout.slice_mut(grads, bix.ln2_b), &db);
                 for i in 0..rows * d {
                     dh[i] += dx[i];
                 }
+                sc.arena.put(dx);
             }
+            sc.arena.put(dt2);
 
             // h_res = u + mixer(t1): dh feeds both the mixer and the skip.
-            let parts = BlockCacheParts4 {
+            let parts = BlockCachePartsRef {
                 zp: &bc.zp,
                 zs: &bc.zs,
                 filt: &bc.filt,
                 hfilt: &bc.hfilt,
+                spec_h: &bc.spec_h,
                 vs: &bc.vs,
                 cs: &bc.cs,
                 y_mix: &bc.y_mix,
             };
-            let dt1 = self.mixer_bwd(bi, &dh, &bc.t1, &parts, b, grads);
+            let dt1 = self.mixer_bwd(bi, &dh, &bc.t1, &parts, b, grads, sc);
             let mut du_new = dh;
             {
-                let g = self.p(bix.ln1_g).to_vec();
                 let mut dg = vec![0.0f32; d];
                 let mut db = vec![0.0f32; d];
-                let dx = layer_norm_bwd(
+                let mut dx = sc.arena.take(rows * d);
+                layer_norm_bwd_into(
                     &dt1,
-                    &g,
+                    self.p(bix.ln1_g),
                     &bc.ln1_xhat,
                     &bc.ln1_rstd,
                     rows,
                     d,
                     &mut dg,
                     &mut db,
+                    &mut dx,
                 );
                 add_into(self.layout.slice_mut(grads, bix.ln1_g), &dg);
                 add_into(self.layout.slice_mut(grads, bix.ln1_b), &db);
                 for i in 0..rows * d {
                     du_new[i] += dx[i];
                 }
+                sc.arena.put(dx);
             }
-            du = du_new;
+            sc.arena.put(dt1);
+            sc.arena.put(std::mem::replace(&mut du, du_new));
         }
 
         // Embedding + positions.
@@ -1125,6 +1722,7 @@ impl NativeModel {
                 }
             }
         }
+        sc.arena.put(du);
     }
 
     /// Warmup→cosine LR schedule (train.py `lr_schedule`).
@@ -1178,7 +1776,11 @@ impl NativeModel {
     }
 
     /// One optimizer step on `[tokens, targets, mask]` host data; returns
-    /// the scalar loss.
+    /// the scalar loss. Runs on the model's persistent workspaces — after
+    /// the first step all large activation/gradient buffers are reused and
+    /// the per-row inner loops allocate nothing (what remains per step is
+    /// small bookkeeping: the cached token ids, per-layer `d`-sized LN grad
+    /// pairs, and the `Vec` containers holding recycled buffers).
     pub fn train_step(
         &mut self,
         tokens: &[i32],
@@ -1186,41 +1788,31 @@ impl NativeModel {
         mask: &[f32],
         b: usize,
     ) -> Result<f32> {
-        let (mut logits, cache) = self.forward_cached(tokens, b)?;
+        let mut sc = std::mem::take(&mut self.scratch);
+        let fwd = self.forward_with(tokens, b, &mut sc);
+        let (mut logits, cache) = match fwd {
+            Ok(x) => x,
+            Err(e) => {
+                self.scratch = sc;
+                return Err(e);
+            }
+        };
         let loss = self.loss_and_dlogits(&mut logits, targets, mask);
-        let mut grads = vec![0.0f32; self.layout.total];
-        self.backward(&logits, &cache, &mut grads);
+        let mut grads = sc.arena.take_zeroed(self.layout.total);
+        self.backward_with(&logits, &cache, &mut grads, &mut sc);
         self.apply_grads(&mut grads);
+        sc.arena.put(grads);
+        sc.arena.put(logits);
+        sc.recycle(cache);
+        self.scratch = sc;
         Ok(loss)
     }
 
     /// Block-0 filters `(N, D, L)` for the Fig. D.5 dump.
     pub fn filters_block0(&self) -> Vec<f32> {
-        self.filter_fwd(0).0
+        let mut sc = Scratch::default();
+        self.filter_fwd_with(0, &mut sc).0
     }
-}
-
-/// Mixer activations produced by `mixer_fwd` (moved into the block cache).
-struct BlockCacheParts {
-    zp: Vec<f32>,
-    zs: Vec<f32>,
-    filt: FilterCache,
-    hfilt: Vec<f32>,
-    vs: Vec<Vec<f32>>,
-    cs: Vec<Vec<f32>>,
-    y_mix: Vec<f32>,
-}
-
-/// Borrowed view of the same activations for the backward pass.
-#[derive(Clone, Copy)]
-struct BlockCacheParts4<'a> {
-    zp: &'a [f32],
-    zs: &'a [f32],
-    filt: &'a FilterCache,
-    hfilt: &'a [f32],
-    vs: &'a [Vec<f32>],
-    cs: &'a [Vec<f32>],
-    y_mix: &'a [f32],
 }
 
 fn add_into(dst: &mut [f32], src: &[f32]) {
@@ -1277,6 +1869,42 @@ mod tests {
         let (logits, _) = m.forward_cached(&tokens, b).unwrap();
         assert_eq!(logits.len(), b * l * v);
         assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_thread_count_invariant() {
+        // Disjoint-row parallelism with fixed per-row arithmetic: logits
+        // must be bitwise identical for any worker count.
+        let mut m1 = micro();
+        let mut m3 = micro();
+        m1.set_threads(1);
+        m3.set_threads(3);
+        assert_eq!(m1.threads(), 1);
+        assert_eq!(m3.threads(), 3);
+        let (b, l, v) = (m1.cfg.batch, m1.cfg.seqlen, m1.cfg.vocab);
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| (i * 5 + 1) % v as i32).collect();
+        let (la, _) = m1.forward_cached(&tokens, b).unwrap();
+        let (lb, _) = m3.forward_cached(&tokens, b).unwrap();
+        assert_eq!(la, lb, "thread count changed forward results");
+    }
+
+    #[test]
+    fn train_step_is_thread_count_invariant() {
+        let mut m1 = micro();
+        let mut m2 = micro();
+        m1.set_threads(1);
+        m2.set_threads(2);
+        let (b, l, v) = (m1.cfg.batch, m1.cfg.seqlen, m1.cfg.vocab);
+        let mut rng = Pcg::new(21);
+        let tokens: Vec<i32> = (0..b * l).map(|_| rng.usize_below(v) as i32).collect();
+        let targets: Vec<i32> = (0..b * l).map(|_| rng.usize_below(v) as i32).collect();
+        let mask = vec![1.0f32; b * l];
+        for step in 0..4 {
+            let la = m1.train_step(&tokens, &targets, &mask, b).unwrap();
+            let lb = m2.train_step(&tokens, &targets, &mask, b).unwrap();
+            assert_eq!(la, lb, "thread count changed loss at step {step}");
+        }
+        assert_eq!(m1.params, m2.params, "thread count changed parameters");
     }
 
     #[test]

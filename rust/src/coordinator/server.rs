@@ -8,6 +8,11 @@
 //! batch together — request-level continuous batching (iteration-level
 //! rebatching has no payoff without a KV cache; the paper defers fast
 //! autoregressive inference to future work).
+//!
+//! The worker's native backend captures the process-wide worker pool
+//! (`util::pool`) at construction, so the server's forward passes and any
+//! concurrent training steps share one set of compute threads instead of
+//! oversubscribing the machine (`--threads` / `HYENA_THREADS`).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};

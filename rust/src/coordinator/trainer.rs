@@ -1,6 +1,8 @@
 //! Training loop orchestrator: drives a [`Backend`]'s train step over a
 //! batch source and tracks losses/throughput. Backend-agnostic — the same
-//! loop trains PJRT artifacts and native models.
+//! loop trains PJRT artifacts and native models. Native train steps run
+//! their row-parallel loops on the shared process pool (`util::pool`,
+//! `--threads` / `HYENA_THREADS`), so the loop itself stays single-threaded.
 
 use std::time::Instant;
 

@@ -12,6 +12,12 @@
 //! also settable via `HYENA_BACKEND`). `auto` picks pjrt when the model's
 //! artifact directory holds compiled HLO and native otherwise, so a fresh
 //! checkout with no artifacts trains/serves out of the box.
+//!
+//! `--threads N` (or `HYENA_THREADS=N`; default: available parallelism)
+//! sizes the process-wide worker pool that the native backend's
+//! row-parallel engine runs on — training steps and the batching server
+//! share the same pool, so concurrent components never oversubscribe the
+//! machine.
 
 use std::path::Path;
 use std::time::Duration;
@@ -32,6 +38,17 @@ use hyena::util::rng::Pcg;
 
 fn main() -> Result<()> {
     let args = Args::parse(&["quiet", "greedy"]);
+    // Size the shared worker pool before any backend is constructed (models
+    // capture the pool at load time).
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow!("--threads wants a positive integer, got {t:?}"))?;
+        if n == 0 {
+            bail!("--threads must be ≥ 1");
+        }
+        hyena::util::pool::configure(n);
+    }
     match args.positional.first().map(String::as_str) {
         Some("list") => cmd_list(),
         Some("info") => cmd_info(&args),
@@ -42,7 +59,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: hyena <list|info|train|eval|serve|dump-filters> \
-                 [--model NAME] [--backend native|pjrt|auto] [--steps N] [--seed S]"
+                 [--model NAME] [--backend native|pjrt|auto] [--threads N] \
+                 [--steps N] [--seed S]"
             );
             Ok(())
         }

@@ -1,8 +1,37 @@
 //! Table/series emission for the experiment drivers: markdown tables on
-//! stdout plus CSV files under `results/` for EXPERIMENTS.md.
+//! stdout plus CSV files under `results/` for EXPERIMENTS.md, and the
+//! machine-readable bench ledger (`BENCH_native.json`) that tracks the perf
+//! trajectory across PRs.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Merge `value` under `key` into the JSON object at `path` (created if
+/// absent, other keys preserved) — how each bench contributes its section
+/// of `BENCH_native.json` without clobbering the others.
+pub fn merge_bench_json(path: &Path, key: &str, value: Json) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).ok();
+    let mut root = match existing.as_deref().map(Json::parse) {
+        Some(Ok(j @ Json::Obj(_))) => j,
+        None => Json::Obj(BTreeMap::new()),
+        Some(_) => {
+            // Don't silently eat ledger history: a corrupt/non-object file
+            // is loud, and starting fresh is the only recovery.
+            eprintln!(
+                "warning: {} is not a JSON object; starting a fresh ledger",
+                path.display()
+            );
+            Json::Obj(BTreeMap::new())
+        }
+    };
+    if let Json::Obj(m) = &mut root {
+        m.insert(key.to_string(), value);
+    }
+    std::fs::write(path, format!("{root}\n"))
+}
 
 /// A simple column-aligned table (markdown-compatible).
 #[derive(Debug, Clone, Default)]
@@ -120,5 +149,21 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_json_merges_keys_without_clobbering() {
+        // Process-unique name: concurrent test runs must not share the file.
+        let path = std::env::temp_dir()
+            .join(format!("hyena_bench_merge_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        merge_bench_json(&path, "fftconv", Json::obj(vec![("l", Json::num(1024.0))])).unwrap();
+        merge_bench_json(&path, "train_step", Json::obj(vec![("t", Json::num(2.0))])).unwrap();
+        // Re-writing one key leaves the other intact.
+        merge_bench_json(&path, "fftconv", Json::obj(vec![("l", Json::num(8192.0))])).unwrap();
+        let j = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(j.get("fftconv").unwrap().get("l").unwrap().as_usize().unwrap(), 8192);
+        assert_eq!(j.get("train_step").unwrap().get("t").unwrap().as_usize().unwrap(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,6 +1,8 @@
-//! Substrate utilities: JSON, deterministic RNG, stats, CLI parsing.
+//! Substrate utilities: JSON, deterministic RNG, stats, CLI parsing, and
+//! the worker pool powering the native backend's row-parallel engine.
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

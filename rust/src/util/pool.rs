@@ -1,0 +1,383 @@
+//! Dependency-free worker pool for the native backend's row-parallel engine.
+//!
+//! `std::thread` + mpsc channels only (the vendored crate set has no rayon /
+//! crossbeam). One process-wide pool — sized by `--threads N`,
+//! `HYENA_THREADS`, or `available_parallelism` — is shared by the trainer,
+//! the batching server and the benches, so concurrent components contend
+//! for the same cores instead of oversubscribing them (DESIGN.md §Perf).
+//!
+//! Design rules that keep the parallel model simple and *deterministic*:
+//!
+//! * Work items are **disjoint-write**: every parallel loop partitions its
+//!   output rows, each index is processed with exactly the arithmetic the
+//!   serial loop would use, so results are bitwise identical for any thread
+//!   count (the threaded-vs-serial e2e test pins this).
+//! * Parallel regions are **leaf-level** — tasks never spawn nested
+//!   parallel regions, so the pool cannot deadlock on itself.
+//! * Scoped borrows: [`WorkerPool::scope_run`] blocks until every submitted
+//!   task has completed, which is what makes lending stack references to
+//!   pool threads sound.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Inner {
+    threads: usize,
+    /// `None` for a 1-thread (inline) pool. Mutex so the handle stays `Sync`
+    /// on toolchains where `mpsc::Sender` is not.
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Close the queue (workers observe a recv error and exit), then join.
+        *self.tx.lock().unwrap() = None;
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable handle to a fixed-size worker pool.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` workers (min 1). A 1-thread pool spawns
+    /// no OS threads and runs every task inline on the caller.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool {
+                inner: Arc::new(Inner {
+                    threads,
+                    tx: Mutex::new(None),
+                    handles: Mutex::new(Vec::new()),
+                }),
+            };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let h = std::thread::Builder::new()
+                .name(format!("hyena-pool-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        WorkerPool {
+            inner: Arc::new(Inner {
+                threads,
+                tx: Mutex::new(Some(tx)),
+                handles: Mutex::new(handles),
+            }),
+        }
+    }
+
+    /// Worker count the pool was built with.
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    fn send(&self, job: Job) {
+        let guard = self.inner.tx.lock().unwrap();
+        guard
+            .as_ref()
+            .expect("worker pool already shut down")
+            .send(job)
+            .expect("worker pool queue closed");
+    }
+
+    /// Run the given closures concurrently on the pool and block until every
+    /// one has finished. Panics (after all tasks settle) if any task panicked.
+    ///
+    /// Tasks may borrow from the caller's stack: the function does not
+    /// return before every task has completed, which is what makes the
+    /// internal lifetime erasure sound.
+    pub fn scope_run<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.threads() == 1 || n == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let (done_tx, done_rx) = channel::<bool>();
+        for t in tasks {
+            let done = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                let ok = catch_unwind(AssertUnwindSafe(t)).is_ok();
+                let _ = done.send(ok);
+            });
+            // SAFETY: `job` may capture 'a borrows of the caller's stack.
+            // We block on `done_rx` below until every job has signalled
+            // completion (the signal is sent even on panic), so no borrow
+            // outlives this call; erasing the lifetime is therefore sound.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
+            };
+            self.send(job);
+        }
+        let mut ok = true;
+        for _ in 0..n {
+            ok &= done_rx.recv().expect("worker pool died mid-scope");
+        }
+        assert!(ok, "a worker-pool task panicked");
+    }
+
+    /// Parallel `for i in 0..n { f(i) }` over the pool (order unspecified,
+    /// completion guaranteed on return).
+    pub fn par_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.par_for_with(n, || (), |_, i| f(i), |_| ());
+    }
+
+    /// Parallel for with per-task worker state: each task calls `init` once,
+    /// processes indices with `f(&mut state, i)`, then hands the state to
+    /// `done` (e.g. back into a reuse pool). Indices are claimed from a
+    /// shared atomic counter, so work balances across uneven rows.
+    pub fn par_for_with<W, I, F, D>(&self, n: usize, init: I, f: F, done: D)
+    where
+        I: Fn() -> W + Sync,
+        F: Fn(&mut W, usize) + Sync,
+        D: Fn(W) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let k = self.threads().min(n);
+        if k <= 1 {
+            let mut w = init();
+            for i in 0..n {
+                f(&mut w, i);
+            }
+            done(w);
+            return;
+        }
+        let counter = AtomicUsize::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            tasks.push(Box::new(|| {
+                let mut w = init();
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(&mut w, i);
+                }
+                done(w);
+            }));
+        }
+        self.scope_run(tasks);
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // The guard is dropped before the job runs; blocking in recv under
+        // the lock is fine (senders do not need it).
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // lock poisoned: shut down
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // queue closed: pool dropped
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global pool
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Pool size when nothing is configured: `HYENA_THREADS` if set (≥ 1), else
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    let from_env = std::env::var("HYENA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1);
+    from_env.unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Size the process-wide pool (the CLI's `--threads`). Must run before the
+/// first [`global`] use; returns false (and changes nothing) afterwards.
+pub fn configure(threads: usize) -> bool {
+    GLOBAL.set(WorkerPool::new(threads)).is_ok()
+}
+
+/// The process-wide pool, created on first use with [`default_threads`].
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(default_threads()))
+}
+
+// ---------------------------------------------------------------------------
+// disjoint-write shared views
+// ---------------------------------------------------------------------------
+
+/// Unsynchronized shared-mutable view of an `f32` buffer for
+/// embarrassingly-parallel *disjoint* writes (conv rows, dense row blocks).
+///
+/// Every parallel loop in the native backend partitions its output indices
+/// up front; this view is how tasks reach their partition without wrapping
+/// the whole buffer in a lock. All access is `unsafe` and the caller owns
+/// the disjointness argument at each call site.
+pub struct SharedMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SharedMut<'_> {}
+unsafe impl Sync for SharedMut<'_> {}
+
+impl<'a> SharedMut<'a> {
+    pub fn new(data: &'a mut [f32]) -> SharedMut<'a> {
+        SharedMut { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable subslice `[start, start + len)`.
+    ///
+    /// # Safety
+    /// No other live reference (from this view or elsewhere) may overlap the
+    /// range while the returned slice is alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+        assert!(start + len <= self.len, "SharedMut slice out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Mutable element reference.
+    ///
+    /// # Safety
+    /// No other live reference may target `idx` while the returned
+    /// reference is alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn at(&self, idx: usize) -> &mut f32 {
+        assert!(idx < self.len, "SharedMut index out of bounds");
+        &mut *self.ptr.add(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_every_index_once() {
+        let pool = WorkerPool::new(4);
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_row_writes_match_serial() {
+        let pool = WorkerPool::new(3);
+        let (rows, width) = (37, 11);
+        let mut out = vec![0.0f32; rows * width];
+        {
+            let view = SharedMut::new(&mut out);
+            pool.par_for(rows, |r| {
+                // SAFETY: each index owns row r exclusively.
+                let row = unsafe { view.slice(r * width, width) };
+                for (c, x) in row.iter_mut().enumerate() {
+                    *x = (r * width + c) as f32;
+                }
+            });
+        }
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut hits = 0u64;
+        {
+            let cell = AtomicU64::new(0);
+            pool.par_for(5, |_| {
+                cell.fetch_add(1, Ordering::Relaxed);
+            });
+            hits += cell.load(Ordering::Relaxed);
+        }
+        assert_eq!(hits, 5);
+    }
+
+    #[test]
+    fn par_for_with_reuses_and_returns_state() {
+        let pool = WorkerPool::new(2);
+        let created = AtomicUsize::new(0);
+        let returned = AtomicUsize::new(0);
+        let work = AtomicUsize::new(0);
+        pool.par_for_with(
+            64,
+            || {
+                created.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; 8]
+            },
+            |w, i| {
+                w[0] += 1.0;
+                work.fetch_add(i, Ordering::Relaxed);
+            },
+            |_w| {
+                returned.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        let c = created.load(Ordering::Relaxed);
+        assert!(c >= 1 && c <= 2, "one state per task, got {c}");
+        assert_eq!(c, returned.load(Ordering::Relaxed));
+        assert_eq!(work.load(Ordering::Relaxed), (0..64).sum::<usize>());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-pool task panicked")]
+    fn task_panic_propagates() {
+        let pool = WorkerPool::new(2);
+        pool.par_for(8, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix]
-#   --fix   run `cargo fmt` (writing) instead of `cargo fmt --check`
+# Usage: scripts/check.sh [--fix|bench-smoke]
+#   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
+#   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
+#                with 2 threads; fails on panic or if the real-FFT conv is
+#                not faster than the direct O(L²) conv at 8K.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,6 +13,13 @@ if ! command -v cargo >/dev/null 2>&1; then
     echo "error: cargo not found on PATH." >&2
     echo "This container lacks a Rust toolchain; install one (rustup) to run the gate." >&2
     exit 1
+fi
+
+if [ "${1:-}" = "bench-smoke" ]; then
+    echo "==> bench-smoke: native_fftconv (--smoke, 2 threads, L <= 8K)"
+    cargo bench --bench native_fftconv -- --smoke --threads 2
+    echo "check.sh: bench-smoke green"
+    exit 0
 fi
 
 FIX=0

@@ -1,0 +1,202 @@
+//! Serving-path bench: what a single request costs under (a) the PR-2
+//! serving path (`forward_cached` over the full compiled `(batch, L)` pad,
+//! building a training-grade activation cache it immediately discards),
+//! (b) the zero-alloc inference forward at the full length, and (c) the
+//! shape-bucketed inference forward at the smallest plan covering the
+//! prompt. This is the CPU serving reproduction of the paper's efficiency
+//! claim: the subquadratic long conv only pays off at serve time if short
+//! requests stop being padded to the compiled window.
+//!
+//! Correctness is asserted while timing: bucketed logits must agree with
+//! the full-pad logits at every prompt position (f32 round-off — the FFT
+//! sizes differ between plans, so bitwise equality is only defined at the
+//! largest bucket, which *is* asserted), and the greedy next token must
+//! match exactly.
+//!
+//! Results print as a table and persist into `BENCH_native.json` (key
+//! `serve`) next to the FFTConv/train-step numbers (EXPERIMENTS.md §Perf
+//! Native).
+//!
+//! Run: `cargo bench --bench native_serve -- [--model op_hyena_L1024]
+//!        [--iters 16] [--threads N] [--out BENCH_native.json] [--smoke]`
+//!
+//! `--smoke` (the `scripts/check.sh serve-smoke` perf gate) uses the small
+//! LM config and fails hard if a ≤ L/8 prompt served through its bucket is
+//! not faster than the full-pad inference path.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use hyena::backend::native::{NativeConfig, NativeModel};
+use hyena::coordinator::generation::argmax;
+use hyena::report::{merge_bench_json, Table};
+use hyena::util::cli::Args;
+use hyena::util::json::Json;
+use hyena::util::pool;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+fn time_runs<F: FnMut() -> f32>(iters: usize, mut f: F) -> Summary {
+    let mut s = Summary::new();
+    let mut sink = 0.0f32;
+    for i in 0..=iters {
+        let t0 = Instant::now();
+        sink += f();
+        let dt = t0.elapsed().as_secs_f64();
+        if i > 0 {
+            s.push(dt); // first run is warmup
+        }
+    }
+    assert!(sink.is_finite() || sink.is_nan());
+    s
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
+    let default_model = if smoke { "lm_hyena_s" } else { "op_hyena_L1024" };
+    let name = args.get_or("model", default_model).to_string();
+    let iters = args.get_usize("iters", if smoke { 6 } else { 16 });
+    let threads = args.get_usize("threads", pool::default_threads()).max(1);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let cfg = NativeConfig::builtin(&name)
+        .ok_or_else(|| anyhow!("no built-in native config named {name:?}"))?;
+    let (bcomp, l, v) = (cfg.batch, cfg.seqlen, cfg.vocab);
+
+    // Same seed → identical parameters; only the plan ladders differ.
+    let mut bucketed = NativeModel::new(cfg.clone(), 0)?;
+    bucketed.set_threads(threads);
+    let mut fullpad = NativeModel::new(cfg, 0)?;
+    fullpad.set_threads(threads);
+    fullpad.set_bucket_levels(1);
+    let buckets = bucketed.bucket_lens();
+    println!("{name}: L={l}, compiled batch {bcomp}, buckets {buckets:?}, {threads} threads");
+
+    let mut rng = Pcg::new(0);
+    let mut table = Table::new(
+        "§Perf Native — serving: full-pad vs shape-bucketed inference (1 request)",
+        &[
+            "prompt",
+            "bucket",
+            "cached fwd p50 ms",
+            "full-pad p50 ms",
+            "bucketed p50 ms",
+            "bucketed/full-pad",
+        ],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut smoke_ok = true;
+
+    let prompt_lens = [(l / 8).max(1), (l / 4).max(1), (l / 2).max(1), l - 1];
+    for &plen in &prompt_lens {
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.usize_below(v) as i32).collect();
+
+        // (a) PR-2 serving path: full (batch, L) pad + activation cache.
+        let mut padded = vec![0i32; bcomp * l];
+        padded[..plen].copy_from_slice(&prompt);
+        let cached = time_runs(iters, || {
+            let (logits, _cache) = fullpad.forward_cached(&padded, bcomp).unwrap();
+            logits[plen * v - 1]
+        });
+
+        // (b) zero-alloc inference forward, full-length plan.
+        let mut out_full = Vec::new();
+        let full = time_runs(iters, || {
+            fullpad.forward_infer_into(&prompt, 1, plen, &mut out_full).unwrap();
+            out_full[plen * v - 1]
+        });
+
+        // (c) shape-bucketed inference forward.
+        let mut out_bkt = Vec::new();
+        let mut bucket_len = 0usize;
+        let bkt = time_runs(iters, || {
+            bucket_len = bucketed.forward_infer_into(&prompt, 1, plen, &mut out_bkt).unwrap();
+            out_bkt[plen * v - 1]
+        });
+
+        // Correctness: every prompt position agrees within f32 round-off,
+        // and the greedy next token agrees exactly. At the largest bucket
+        // the logits must be bitwise identical (same plan, same kernels).
+        let mut max_rel = 0.0f32;
+        for (a, b) in out_bkt.iter().zip(out_full.iter()) {
+            max_rel = max_rel.max((a - b).abs() / (1.0 + a.abs().max(b.abs())));
+        }
+        assert!(max_rel < 2e-3, "bucketed logits diverged at plen={plen}: {max_rel}");
+        let last = (plen - 1) * v;
+        assert_eq!(
+            argmax(&out_bkt[last..last + v]),
+            argmax(&out_full[last..last + v]),
+            "greedy next token diverged at plen={plen}"
+        );
+        if bucket_len == l {
+            assert_eq!(out_bkt, out_full, "largest bucket is not bitwise-stable");
+        }
+
+        let ratio = bkt.p50() / full.p50().max(1e-12);
+        println!(
+            "prompt {plen:>6} -> bucket {bucket_len:>6}: cached {:>9.3} ms  \
+             full-pad {:>9.3} ms  bucketed {:>9.3} ms  ({:.2}x of full-pad)",
+            cached.p50() * 1e3,
+            full.p50() * 1e3,
+            bkt.p50() * 1e3,
+            ratio,
+        );
+        table.row(vec![
+            plen.to_string(),
+            bucket_len.to_string(),
+            format!("{:.3}", cached.p50() * 1e3),
+            format!("{:.3}", full.p50() * 1e3),
+            format!("{:.3}", bkt.p50() * 1e3),
+            format!("{ratio:.3}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("prompt_len", Json::num(plen as f64)),
+            ("bucket_len", Json::num(bucket_len as f64)),
+            ("cached_fwd_ms", Json::num(cached.p50() * 1e3)),
+            ("fullpad_ms", Json::num(full.p50() * 1e3)),
+            ("bucketed_ms", Json::num(bkt.p50() * 1e3)),
+            ("speedup_vs_fullpad", Json::num(full.p50() / bkt.p50().max(1e-12))),
+            ("speedup_vs_cached", Json::num(cached.p50() / bkt.p50().max(1e-12))),
+            ("max_rel_err", Json::num(max_rel as f64)),
+        ]));
+
+        // The gate: a short prompt must win through its bucket.
+        if plen <= l / 8 && bucket_len < l && bkt.p50() >= full.p50() {
+            smoke_ok = false;
+        }
+    }
+
+    table.emit("native_serve");
+    let stats = bucketed.serve_stats();
+    merge_bench_json(
+        Path::new(&out_path),
+        "serve",
+        Json::obj(vec![
+            ("model", Json::str(&name)),
+            ("seqlen", Json::num(l as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("buckets", Json::Arr(buckets.iter().map(|&b| Json::num(b as f64)).collect())),
+            ("rows", Json::Arr(json_rows)),
+            (
+                "serve_arena_hiwater_bytes",
+                Json::num(stats.arena.hiwater_bytes as f64),
+            ),
+            ("serve_arena_allocs", Json::num(stats.arena.allocs as f64)),
+            ("spec_cache_bytes", Json::num(stats.spec_bytes as f64)),
+        ]),
+    )?;
+    println!(
+        "bench ledger -> {out_path} (key: serve); serve arena hiwater {} KiB, \
+         {} allocs over {} inference forwards",
+        stats.arena.hiwater_bytes / 1024,
+        stats.arena.allocs,
+        stats.forwards
+    );
+
+    if smoke && !smoke_ok {
+        bail!("serve-smoke gate: a ≤ L/8 prompt was not faster through its bucket");
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+"""Numerical evidence for the shape-bucketed serving path (PR 3).
+
+The native Rust serving path routes a short prompt to the smallest causal
+FFT-conv plan that covers it instead of padding to the compiled L. Causality
+makes the result mathematically equal to the full-pad forward at every prompt
+position; the FFT sizes differ between plans, so in f32 the agreement is to
+round-off, not bitwise (the Rust e2e test pins 1e-4 relative; the full-L
+bucket is pinned bitwise). This mirror measures the actual cross-plan error
+in f32 so that tolerance is justified by data rather than hand-waving.
+
+Mirrors `rust/src/backend/fft.rs::CausalConv` exactly: zero-pad both signals
+to the next power of two ≥ 2L, multiply rfft spectra, truncate the irfft.
+"""
+
+import numpy as np
+
+
+def causal_conv_f32(h, v, l):
+    """f32 causal FFT convolution at plan length l (numpy rfft mirror)."""
+    n = 1 << int(np.ceil(np.log2(max(2 * l, 2))))
+    hp = np.zeros(n, dtype=np.float32)
+    vp = np.zeros(n, dtype=np.float32)
+    hp[: len(h)] = h[:l].astype(np.float32)
+    vp[: len(v)] = v[:l].astype(np.float32)
+    spec = (np.fft.rfft(hp) * np.fft.rfft(vp)).astype(np.complex64)
+    return np.fft.irfft(spec, n=n).astype(np.float32)[:l]
+
+
+def bucket_ladder(full, levels=4, min_len=8):
+    lens = [full]
+    l = full
+    for _ in range(levels - 1):
+        l //= 2
+        if l < min_len:
+            break
+        lens.append(l)
+    return sorted(set(lens))
+
+
+def test_bucket_ladder_matches_rust():
+    assert bucket_ladder(256) == [32, 64, 128, 256]
+    assert bucket_ladder(16) == [8, 16]
+    assert bucket_ladder(8) == [8]
+    assert bucket_ladder(48, 3) == [12, 24, 48]
+
+
+def test_bucketed_prefix_agrees_within_f32_roundoff():
+    """Prefix logits claim: conv at the bucket plan equals the full-plan
+    conv on the prompt support, to f32 round-off well inside 1e-4."""
+    rng = np.random.default_rng(0)
+    worst = 0.0
+    for full in (256, 1024):
+        for lb in bucket_ladder(full)[:-1]:
+            for _ in range(20):
+                h = rng.standard_normal(full).astype(np.float32)
+                v = np.zeros(full, dtype=np.float32)
+                p = rng.integers(1, lb + 1)  # prompt support ≤ bucket
+                v[:p] = rng.standard_normal(p).astype(np.float32)
+                y_full = causal_conv_f32(h, v, full)[:lb]
+                y_bkt = causal_conv_f32(h[:lb], v[:lb], lb)
+                rel = np.max(
+                    np.abs(y_full - y_bkt)
+                    / (1.0 + np.maximum(np.abs(y_full), np.abs(y_bkt)))
+                )
+                worst = max(worst, float(rel))
+    # Measured ~1e-6..1e-5; the Rust test's 1e-4 leaves an order of margin.
+    assert worst < 5e-5, f"cross-plan f32 disagreement too large: {worst}"
+
+
+def test_same_plan_is_deterministic():
+    """Same plan + same inputs → bitwise-identical output (the full-bucket
+    bitwise guarantee of the Rust serving path)."""
+    rng = np.random.default_rng(1)
+    h = rng.standard_normal(128).astype(np.float32)
+    v = rng.standard_normal(128).astype(np.float32)
+    a = causal_conv_f32(h, v, 128)
+    b = causal_conv_f32(h, v, 128)
+    assert np.array_equal(a, b)

@@ -484,6 +484,74 @@ impl CausalConv {
     }
 }
 
+// ---------------------------------------------------------------------------
+// shape-bucketed plan bank
+// ---------------------------------------------------------------------------
+
+/// Minimum bucket length the bank will build a plan for. Below this the FFT
+/// setup cost dwarfs the transform itself and bucketing stops paying.
+pub const MIN_BUCKET_LEN: usize = 8;
+
+/// A ladder of [`CausalConv`] plans at halving sequence lengths — the
+/// serving-side answer to "every request pads to the full compiled L".
+///
+/// The largest plan is always exactly the model length; below it the bank
+/// holds `levels − 1` plans at `L/2, L/4, ...` (stopping at
+/// [`MIN_BUCKET_LEN`]). A request of length `l` routes to the *smallest*
+/// plan that fits, so a short prompt transforms at a fraction of the full
+/// FFT size instead of paying `O(L log L)` for padding it never reads.
+/// Plans are immutable after construction and shared by reference.
+pub struct PlanBank {
+    /// Plans sorted ascending by signal length; the last is the full length.
+    plans: Vec<CausalConv>,
+}
+
+impl PlanBank {
+    /// Build a bank for model length `full` with up to `levels` buckets
+    /// (`levels == 1` reproduces the unbucketed single-plan behaviour).
+    pub fn new(full: usize, levels: usize) -> PlanBank {
+        assert!(full >= 1, "plan bank needs a nonzero length");
+        let mut lens = vec![full];
+        let mut l = full;
+        for _ in 1..levels.max(1) {
+            l /= 2;
+            if l < MIN_BUCKET_LEN {
+                break;
+            }
+            lens.push(l);
+        }
+        lens.sort_unstable();
+        lens.dedup();
+        PlanBank { plans: lens.into_iter().map(CausalConv::new).collect() }
+    }
+
+    /// Bucket signal lengths, ascending (the last is the full length).
+    pub fn lens(&self) -> Vec<usize> {
+        self.plans.iter().map(|p| p.len()).collect()
+    }
+
+    /// Number of buckets.
+    pub fn levels(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Index of the smallest bucket whose plan covers length `l`
+    /// (`None` when `l` exceeds the full length).
+    pub fn bucket_index(&self, l: usize) -> Option<usize> {
+        self.plans.iter().position(|p| p.len() >= l)
+    }
+
+    /// The plan at bucket `i` (ascending by length).
+    pub fn plan(&self, i: usize) -> &CausalConv {
+        &self.plans[i]
+    }
+
+    /// The full-length plan (the training path's single plan).
+    pub fn full(&self) -> &CausalConv {
+        self.plans.last().expect("plan bank is never empty")
+    }
+}
+
 /// The PR-1 engine: causal convolution via *full complex* FFTs. Kept as the
 /// baseline the real-FFT path is benchmarked and property-tested against.
 pub struct ComplexCausalConv {
@@ -823,5 +891,53 @@ mod tests {
         assert_eq!(CausalConv::new(17).fft_size(), 64);
         assert_eq!(CausalConv::new(1024).fft_size(), 2048);
         assert_eq!(CausalConv::new(1024).spec_len(), 1025);
+    }
+
+    #[test]
+    fn plan_bank_ladder_and_routing() {
+        let bank = PlanBank::new(256, 4);
+        assert_eq!(bank.lens(), vec![32, 64, 128, 256]);
+        assert_eq!(bank.full().len(), 256);
+        // Smallest bucket that fits.
+        assert_eq!(bank.bucket_index(1), Some(0));
+        assert_eq!(bank.bucket_index(32), Some(0));
+        assert_eq!(bank.bucket_index(33), Some(1));
+        assert_eq!(bank.bucket_index(200), Some(3));
+        assert_eq!(bank.bucket_index(256), Some(3));
+        assert_eq!(bank.bucket_index(257), None);
+        // Ladder stops at the minimum bucket length.
+        assert_eq!(PlanBank::new(16, 4).lens(), vec![8, 16]);
+        // One level = the unbucketed single plan.
+        assert_eq!(PlanBank::new(256, 1).lens(), vec![256]);
+        // Non-power-of-two full lengths still get a valid ladder.
+        assert_eq!(PlanBank::new(48, 3).lens(), vec![12, 24, 48]);
+    }
+
+    #[test]
+    fn bucket_plans_agree_with_full_plan_within_tolerance() {
+        // A short signal convolved through its bucket plan must match the
+        // full-pad plan mathematically (causality); the FFT sizes differ so
+        // agreement is within f32 round-off, not bitwise (DESIGN §Serving).
+        let mut rng = Pcg::new(17);
+        let bank = PlanBank::new(128, 4);
+        let p = 20usize; // prompt support → routes to the 32-length bucket
+        let h_full = random_signal(&mut rng, 128);
+        let mut v_full = vec![0.0f32; 128];
+        for x in v_full[..p].iter_mut() {
+            *x = rng.normal();
+        }
+        let want = bank.full().conv(&h_full, &v_full);
+        let bi = bank.bucket_index(p).unwrap();
+        let plan = bank.plan(bi);
+        let lb = plan.len();
+        let got = plan.conv(&h_full[..lb], &v_full[..lb]);
+        for t in 0..lb {
+            assert!(
+                close(got[t], want[t], 1e-3),
+                "bucket {lb} t={t}: {} vs {}",
+                got[t],
+                want[t]
+            );
+        }
     }
 }

@@ -29,6 +29,33 @@ use anyhow::{bail, Result};
 
 use crate::runtime::{Manifest, ModelState, Tensor};
 
+/// Arena/workspace accounting a backend can expose through the train and
+/// serve reports (ROADMAP "per-step arena high-water metrics"). All fields
+/// are zero for engines that do not track them.
+#[derive(Debug, Clone, Default)]
+pub struct MemReport {
+    /// Training-scratch arena high-water mark, bytes.
+    pub train_arena_hiwater_bytes: usize,
+    /// Fresh/grown allocations the training arena has performed (steady
+    /// state: stops increasing).
+    pub train_arena_allocs: u64,
+    /// Serving-workspace arena high-water mark, bytes.
+    pub serve_arena_hiwater_bytes: usize,
+    /// Fresh/grown allocations the serving arena has performed.
+    pub serve_arena_allocs: u64,
+    /// Bytes held by cached per-bucket filter spectra.
+    pub serve_spec_bytes: usize,
+    /// Inference forward passes executed (decoding runs one per round per
+    /// batch, so this exceeds the request count by the mean decode length).
+    pub serve_forwards: u64,
+    /// Serving bucket lengths, ascending (last = full seqlen).
+    pub bucket_lens: Vec<usize>,
+    /// Inference forwards executed per bucket, aligned with `bucket_lens` —
+    /// counted at the point of plan selection, so an all-full-bucket
+    /// histogram is direct evidence of a full-pad fallback.
+    pub bucket_hits: Vec<u64>,
+}
+
 /// A model engine the coordinator can drive.
 ///
 /// Implementations own parameters and optimizer state; the coordinator
@@ -53,6 +80,60 @@ pub trait Backend {
 
     /// Forward pass on data tensors, returning logits.
     fn forward(&self, inputs: &[Tensor]) -> Result<Tensor>;
+
+    /// Inference-only forward over `rows` token rows of length `l ≤ seqlen`,
+    /// returning logits `(rows, l, vocab)`.
+    ///
+    /// The default pads every row to the compiled `(batch, seqlen)` shape
+    /// and slices the result out of [`Backend::forward`] — correct for any
+    /// engine, but it pays the full-length cost and rejects more rows than
+    /// the compiled batch. The native backend overrides this with its
+    /// shape-bucketed zero-alloc serving path, which has no static batch
+    /// dimension and therefore accepts any nonzero row count — callers that
+    /// must stay engine-portable (the server does, via the batcher's
+    /// `batch_size`) should keep rows within `manifest().batch()`.
+    fn infer(&self, tokens: &[i32], rows: usize, l: usize) -> Result<Tensor> {
+        let man = self.manifest();
+        let (bcomp, full, vocab) = (man.batch()?, man.seqlen()?, man.vocab()?);
+        if l == 0 || l > full {
+            bail!("infer length {l} out of range 1..={full}");
+        }
+        if rows > bcomp {
+            bail!("{rows} rows > compiled batch {bcomp}");
+        }
+        if tokens.len() != rows * l {
+            bail!("tokens length {} != rows {rows} × length {l}", tokens.len());
+        }
+        let mut toks = vec![0i32; bcomp * full];
+        for r in 0..rows {
+            toks[r * full..r * full + l].copy_from_slice(&tokens[r * l..(r + 1) * l]);
+        }
+        let logits = self.forward(&[Tensor::from_i32(&[bcomp, full], toks)?])?;
+        let lf = logits.as_f32()?;
+        let mut out = Vec::with_capacity(rows * l * vocab);
+        for r in 0..rows {
+            out.extend_from_slice(&lf[(r * full) * vocab..(r * full + l) * vocab]);
+        }
+        Tensor::from_f32(&[rows, l, vocab], out)
+    }
+
+    /// Serving bucket lengths, ascending. Engines without shape bucketing
+    /// report the single compiled seqlen.
+    fn serve_buckets(&self) -> Vec<usize> {
+        self.manifest().seqlen().map(|l| vec![l]).unwrap_or_default()
+    }
+
+    /// Rebuild the serving bucket ladder with `levels` buckets (1 disables
+    /// bucketing). No-op for engines without shape bucketing.
+    fn set_serve_buckets(&mut self, _levels: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Arena/workspace accounting for the train/serve reports, when the
+    /// engine tracks it.
+    fn mem_report(&self) -> Option<MemReport> {
+        None
+    }
 
     /// Materialize the block-0 implicit filters `(N, D, L)` (Fig. D.5).
     fn dump_filters(&self) -> Result<Tensor>;
@@ -152,6 +233,66 @@ mod tests {
         assert_eq!(model.step(), 0);
         let params = model.params_host().unwrap();
         assert_eq!(params.len(), model.manifest().params.len());
+    }
+
+    #[test]
+    fn default_infer_pads_to_the_compiled_shape() {
+        // A wrapper that delegates everything but keeps the trait-default
+        // `infer`, so the pad-and-slice fallback itself is covered.
+        struct PadOnly(Box<dyn Backend>);
+        impl Backend for PadOnly {
+            fn manifest(&self) -> &Manifest {
+                self.0.manifest()
+            }
+            fn step(&self) -> u64 {
+                self.0.step()
+            }
+            fn set_step(&mut self, step: u64) {
+                self.0.set_step(step)
+            }
+            fn reinit(&mut self, seed: i32) -> Result<()> {
+                self.0.reinit(seed)
+            }
+            fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
+                self.0.train_step(batch)
+            }
+            fn forward(&self, inputs: &[Tensor]) -> Result<Tensor> {
+                self.0.forward(inputs)
+            }
+            fn dump_filters(&self) -> Result<Tensor> {
+                self.0.dump_filters()
+            }
+            fn params_host(&self) -> Result<Vec<Tensor>> {
+                self.0.params_host()
+            }
+            fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
+                self.0.set_params(tensors)
+            }
+        }
+
+        let dir = PathBuf::from("artifacts/golden_tiny");
+        let native = load(BackendKind::Native, &dir, 0).unwrap();
+        let fallback = PadOnly(load(BackendKind::Native, &dir, 0).unwrap());
+        assert_eq!(fallback.serve_buckets(), vec![16]);
+        assert!(fallback.mem_report().is_none());
+
+        let (l, v) = (5usize, 32usize);
+        let tokens: Vec<i32> = (0..l as i32).map(|i| i + 1).collect();
+        let got = fallback.infer(&tokens, 1, l).unwrap();
+        assert_eq!(got.shape(), &[1, l, v]);
+        // The fallback must equal the full-pad forward's prefix exactly
+        // (same engine, same full-length plan underneath).
+        let mut padded = tokens.clone();
+        padded.resize(16, 0);
+        let mut full_batch = vec![0i32; 2 * 16];
+        full_batch[..16].copy_from_slice(&padded);
+        let full = native
+            .forward(&[Tensor::from_i32(&[2, 16], full_batch).unwrap()])
+            .unwrap();
+        assert_eq!(got.as_f32().unwrap(), &full.as_f32().unwrap()[..l * v]);
+        // Out-of-range lengths are rejected.
+        assert!(fallback.infer(&tokens, 1, 0).is_err());
+        assert!(fallback.infer(&tokens, 1, 99).is_err());
     }
 
     #[test]

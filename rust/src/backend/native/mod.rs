@@ -16,7 +16,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, MemReport};
 use crate::metrics::flops::{flops_per_step, flops_per_token, FlopShape};
 use crate::runtime::manifest::ParamSpec;
 use crate::runtime::tensor::DType;
@@ -176,6 +176,35 @@ impl Backend for NativeBackend {
         Tensor::from_f32(&[b, self.model.cfg.seqlen, self.model.cfg.vocab], logits)
     }
 
+    fn infer(&self, tokens: &[i32], rows: usize, l: usize) -> Result<Tensor> {
+        let (logits, _bucket) = self.model.forward_infer(tokens, rows, l)?;
+        Tensor::from_f32(&[rows, l, self.model.cfg.vocab], logits)
+    }
+
+    fn serve_buckets(&self) -> Vec<usize> {
+        self.model.bucket_lens()
+    }
+
+    fn set_serve_buckets(&mut self, levels: usize) -> Result<()> {
+        self.model.set_bucket_levels(levels);
+        Ok(())
+    }
+
+    fn mem_report(&self) -> Option<MemReport> {
+        let train = self.model.train_arena_stats();
+        let serve = self.model.serve_stats();
+        Some(MemReport {
+            train_arena_hiwater_bytes: train.hiwater_bytes,
+            train_arena_allocs: train.allocs,
+            serve_arena_hiwater_bytes: serve.arena.hiwater_bytes,
+            serve_arena_allocs: serve.arena.allocs,
+            serve_spec_bytes: serve.spec_bytes,
+            serve_forwards: serve.forwards,
+            bucket_lens: serve.bucket_lens,
+            bucket_hits: serve.bucket_hits,
+        })
+    }
+
     fn dump_filters(&self) -> Result<Tensor> {
         let cfg = &self.model.cfg;
         Tensor::from_f32(&[cfg.order, cfg.width, cfg.seqlen], self.model.filters_block0())
@@ -204,6 +233,9 @@ impl Backend for NativeBackend {
             }
             self.model.params[e.range()].copy_from_slice(t.as_f32()?);
         }
+        // Serving caches key off the params epoch; a restore is an
+        // out-of-band parameter change.
+        self.model.note_params_changed();
         Ok(())
     }
 }

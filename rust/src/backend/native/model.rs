@@ -40,7 +40,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-use crate::backend::fft::{CausalConv, ConvWorkspace};
+use crate::backend::fft::{CausalConv, ConvWorkspace, PlanBank};
 use crate::backend::native::config::NativeConfig;
 use crate::util::pool::{self, SharedMut, WorkerPool};
 use crate::util::rng::Pcg;
@@ -241,23 +241,57 @@ impl Layout {
 // step-scoped workspaces
 // ---------------------------------------------------------------------------
 
+/// Snapshot of an [`Arena`]'s accounting, exposed through the train/serve
+/// reports so memory regressions show up in benches (ROADMAP "per-step
+/// arena high-water metrics").
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Times `take` had to allocate a fresh buffer or grow a reused one.
+    /// In steady state this stops increasing — the zero-alloc invariant the
+    /// serve-path test pins.
+    pub allocs: u64,
+    /// High-water mark of checked-out + pooled capacity, in bytes.
+    pub hiwater_bytes: usize,
+    /// Capacity currently parked in the free pool, in bytes.
+    pub pool_bytes: usize,
+}
+
 /// Pool of reusable `f32` buffers, reusing capacity LIFO — the phase
 /// structure of a train step makes this hit almost every time.
 ///
 /// `take` hands out a buffer with *unspecified contents* (no memset — for
 /// outputs the kernels overwrite in full); `take_zeroed` is for the
 /// accumulator buffers (`dzs`, `dhfilt`, `grads`) that are built with `+=`.
+///
+/// The arena tracks its own accounting (fresh/grown allocations, live +
+/// pooled capacity high-water) so steady-state allocation behaviour is
+/// observable rather than assumed.
 #[derive(Default)]
 struct Arena {
     free: Vec<Vec<f32>>,
+    allocs: u64,
+    out_elems: usize,
+    pool_elems: usize,
+    hiwater_elems: usize,
 }
 
 impl Arena {
     fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.free.pop().unwrap_or_default();
+        let mut v = match self.free.pop() {
+            Some(v) => {
+                self.pool_elems = self.pool_elems.saturating_sub(v.capacity());
+                v
+            }
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            self.allocs += 1;
+        }
         // Only the grown tail is written; any reused prefix keeps stale
         // values by design.
         v.resize(len, 0.0);
+        self.out_elems += v.capacity();
+        self.hiwater_elems = self.hiwater_elems.max(self.out_elems + self.pool_elems);
         v
     }
     fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
@@ -266,7 +300,17 @@ impl Arena {
         v
     }
     fn put(&mut self, v: Vec<f32>) {
+        self.out_elems = self.out_elems.saturating_sub(v.capacity());
+        self.pool_elems += v.capacity();
+        self.hiwater_elems = self.hiwater_elems.max(self.out_elems + self.pool_elems);
         self.free.push(v);
+    }
+    fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            allocs: self.allocs,
+            hiwater_bytes: self.hiwater_elems * std::mem::size_of::<f32>(),
+            pool_bytes: self.pool_elems * std::mem::size_of::<f32>(),
+        }
     }
 }
 
@@ -374,6 +418,87 @@ impl SpecBank {
         let r = i * self.bins..(i + 1) * self.bins;
         (&self.re[r.clone()], &self.im[r])
     }
+}
+
+// ---------------------------------------------------------------------------
+// serving workspaces (shape-bucketed, zero steady-state allocation)
+// ---------------------------------------------------------------------------
+
+/// How many halving plan buckets a model builds by default (`L/8..L`).
+pub const DEFAULT_BUCKET_LEVELS: usize = 4;
+
+/// Per-bucket serving state: a pool of per-worker conv contexts sized for
+/// the bucket's plan, plus the filter spectra of every block materialized at
+/// the bucket length (built lazily on the bucket's first request, reused
+/// until the parameters change).
+#[derive(Default)]
+struct ServeBucket {
+    ctxs: Mutex<Vec<ConvCtx>>,
+    /// One [`SpecBank`] per block (empty until the bucket is first used).
+    spec: Vec<SpecBank>,
+    hits: u64,
+}
+
+/// Persistent inference workspace: one buffer arena plus per-bucket conv
+/// contexts and cached filter spectra. Owned by the model behind a `Mutex`
+/// (the `Backend` forward surface is `&self`), so a steady-state request
+/// allocates nothing — buffers, FFT scratch and spectra all round-trip.
+#[derive(Default)]
+struct ServeState {
+    arena: Arena,
+    /// Parallel to the model's plan-bank buckets (ascending lengths).
+    buckets: Vec<ServeBucket>,
+    /// Params epoch the cached spectra were built at.
+    epoch: u64,
+    forwards: u64,
+}
+
+impl ServeState {
+    /// Re-key the state to the current plan ladder and parameter epoch,
+    /// recycling stale cached spectra into the arena.
+    fn sync(&mut self, epoch: u64, levels: usize) {
+        if self.buckets.len() != levels {
+            let old = std::mem::take(&mut self.buckets);
+            for bkt in old {
+                for s in bkt.spec {
+                    self.arena.put(s.re);
+                    self.arena.put(s.im);
+                }
+            }
+            self.buckets = (0..levels).map(|_| ServeBucket::default()).collect();
+            self.epoch = epoch;
+        } else if self.epoch != epoch {
+            for bkt in self.buckets.iter_mut() {
+                for s in bkt.spec.drain(..) {
+                    self.arena.put(s.re);
+                    self.arena.put(s.im);
+                }
+            }
+            self.epoch = epoch;
+        }
+    }
+
+    fn spec_bytes(&self) -> usize {
+        self.buckets
+            .iter()
+            .flat_map(|b| b.spec.iter())
+            .map(|s| (s.re.len() + s.im.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+/// Snapshot of the serving workspace for the serve report.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Inference forward passes executed (one per decode round per batch).
+    pub forwards: u64,
+    pub arena: ArenaStats,
+    /// Bytes held by cached per-bucket filter spectra.
+    pub spec_bytes: usize,
+    /// Bucket signal lengths, ascending (last = full L).
+    pub bucket_lens: Vec<usize>,
+    /// Requests served per bucket, aligned with `bucket_lens`.
+    pub bucket_hits: Vec<u64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -802,7 +927,9 @@ pub struct NativeModel {
     m: Vec<f32>,
     v: Vec<f32>,
     pub step: u64,
-    conv: CausalConv,
+    /// Causal-conv plans at halving bucket lengths; the largest is the full
+    /// seqlen plan the training path runs on (`NativeModel::conv`).
+    bank: PlanBank,
     /// Positional encoding `(L, 2K+1)` (App. D.3) — constant.
     pe: Vec<f32>,
     /// Decay window `(N, D, L)` (Eq. 7 modulation) — constant.
@@ -812,6 +939,12 @@ pub struct NativeModel {
     pool: WorkerPool,
     /// Step-scoped workspaces reused across training steps.
     scratch: Scratch,
+    /// Persistent inference workspace (`forward_infer` path). Mutex-guarded
+    /// because the `Backend` inference surface is `&self`.
+    serve: Mutex<ServeState>,
+    /// Bumped whenever parameters change (init, optimizer step, restore) so
+    /// the serving path knows when its cached filter spectra went stale.
+    epoch: u64,
 }
 
 impl NativeModel {
@@ -848,7 +981,7 @@ impl NativeModel {
         }
 
         let mut model = NativeModel {
-            conv: CausalConv::new(l),
+            bank: PlanBank::new(l, DEFAULT_BUCKET_LEVELS),
             params: vec![0.0f32; layout.total],
             m: Vec::new(),
             v: Vec::new(),
@@ -859,9 +992,35 @@ impl NativeModel {
             window,
             pool: pool::global().clone(),
             scratch: Scratch::default(),
+            serve: Mutex::new(ServeState::default()),
+            epoch: 0,
         };
         model.init(seed);
         Ok(model)
+    }
+
+    /// The full-length causal-conv plan (the training path's plan).
+    fn conv(&self) -> &CausalConv {
+        self.bank.full()
+    }
+
+    /// Bucket signal lengths of the serving plan bank, ascending.
+    pub fn bucket_lens(&self) -> Vec<usize> {
+        self.bank.lens()
+    }
+
+    /// Rebuild the serving plan ladder with `levels` buckets (1 = unbucketed)
+    /// and invalidate the serving workspace. The full-length plan is always
+    /// kept, so the training path is unaffected.
+    pub fn set_bucket_levels(&mut self, levels: usize) {
+        self.bank = PlanBank::new(self.cfg.seqlen, levels);
+        *self.serve.lock().unwrap() = ServeState::default();
+    }
+
+    /// Record that parameters changed out-of-band (checkpoint restore), so
+    /// cached serving spectra are rebuilt on the next request.
+    pub fn note_params_changed(&mut self) {
+        self.epoch += 1;
     }
 
     /// (Re-)initialize parameters from `seed`; resets the optimizer.
@@ -903,6 +1062,7 @@ impl NativeModel {
         self.m.clear();
         self.v.clear();
         self.step = 0;
+        self.epoch += 1;
     }
 
     /// Use a dedicated worker pool with `n` threads for this model (tests,
@@ -974,27 +1134,35 @@ impl NativeModel {
     /// once per block, in parallel, shared across the batch and the
     /// backward pass).
     fn filter_spectra(&self, hfilt: &[f32], rows: usize, sc: &mut Scratch) -> SpecBank {
-        let l = self.cfg.seqlen;
-        let bins = self.conv.spec_len();
-        let mut re = sc.arena.take(rows * bins);
-        let mut im = sc.arena.take(rows * bins);
+        self.spectra_rows(hfilt, rows, self.cfg.seqlen, self.conv(), &sc.conv_ctxs, &mut sc.arena)
+    }
+
+    /// Plan-generic spectrum bank of `rows` length-`l` rows of `hfilt` —
+    /// shared by the training path (full plan) and the bucketed serving
+    /// path (per-bucket plans + workspaces).
+    fn spectra_rows(
+        &self,
+        hfilt: &[f32],
+        rows: usize,
+        l: usize,
+        plan: &CausalConv,
+        ctxs: &Mutex<Vec<ConvCtx>>,
+        arena: &mut Arena,
+    ) -> SpecBank {
+        let bins = plan.spec_len();
+        let mut re = arena.take(rows * bins);
+        let mut im = arena.take(rows * bins);
         {
             let rv = SharedMut::new(&mut re);
             let iv = SharedMut::new(&mut im);
-            let ctxs = &sc.conv_ctxs;
             self.pool.par_for_with(
                 rows,
-                || take_ctx(ctxs, &self.conv),
+                || take_ctx(ctxs, plan),
                 |ctx, r| {
                     // SAFETY: each index owns spectrum row r exclusively.
                     let rrow = unsafe { rv.slice(r * bins, bins) };
                     let irow = unsafe { iv.slice(r * bins, bins) };
-                    self.conv.spectrum_slices_into(
-                        &hfilt[r * l..(r + 1) * l],
-                        &mut ctx.ws,
-                        rrow,
-                        irow,
-                    );
+                    plan.spectrum_slices_into(&hfilt[r * l..(r + 1) * l], &mut ctx.ws, rrow, irow);
                 },
                 |ctx| put_ctx(ctxs, ctx),
             );
@@ -1132,7 +1300,7 @@ impl NativeModel {
                 let ctxs = &sc.conv_ctxs;
                 pool.par_for_with(
                     b * d,
-                    || take_ctx(ctxs, &self.conv),
+                    || take_ctx(ctxs, self.conv()),
                     |ctx, rix| {
                         let (bb, ch) = (rix / d, rix % d);
                         let row = rix * l; // (bb·d + ch)·l
@@ -1141,9 +1309,9 @@ impl NativeModel {
                         let crow = unsafe { cview.slice(row, l) };
                         let vnrow = unsafe { vview.slice(row, l) };
                         let mut sv = ctx.ws.take_spectrum();
-                        self.conv.spectrum_into(vrow, &mut ctx.ws, &mut sv);
+                        self.conv().spectrum_into(vrow, &mut ctx.ws, &mut sv);
                         let (hre, him) = spec_h.row(order * d + ch);
-                        self.conv.conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
+                        self.conv().conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
                         ctx.ws.put_spectrum(sv);
                         let bv = bias[order * d + ch];
                         for t in 0..l {
@@ -1245,7 +1413,7 @@ impl NativeModel {
                 let ctxs = &sc.conv_ctxs;
                 pool.par_for_with(
                     d,
-                    || take_ctx(ctxs, &self.conv),
+                    || take_ctx(ctxs, self.conv()),
                     |ctx, ch| {
                         let (hre, him) = spec_h.row(order * d + ch);
                         let bv = bias[order * d + ch];
@@ -1278,14 +1446,14 @@ impl NativeModel {
                             // Convolution adjoints:
                             // dh += corr(v, dc); dv = corr(h, dc) + bias⊙dc.
                             let mut s_dc = ctx.ws.take_spectrum();
-                            self.conv.spectrum_into(dc, &mut ctx.ws, &mut s_dc);
+                            self.conv().spectrum_into(dc, &mut ctx.ws, &mut s_dc);
                             let mut s_v = ctx.ws.take_spectrum();
-                            self.conv.spectrum_into(vrow, &mut ctx.ws, &mut s_v);
-                            self.conv.corr_spec_into(&s_v, &s_dc, &mut ctx.ws, &mut ctx.b);
+                            self.conv().spectrum_into(vrow, &mut ctx.ws, &mut s_v);
+                            self.conv().corr_spec_into(&s_v, &s_dc, &mut ctx.ws, &mut ctx.b);
                             for t in 0..l {
                                 dh_row[t] += ctx.b[t];
                             }
-                            self.conv.corr_spec_slices_into(
+                            self.conv().corr_spec_slices_into(
                                 hre,
                                 him,
                                 &s_dc.re,
@@ -1773,6 +1941,7 @@ impl NativeModel {
             }
         }
         self.step += 1;
+        self.epoch += 1;
     }
 
     /// One optimizer step on `[tokens, targets, mask]` host data; returns
@@ -1808,6 +1977,382 @@ impl NativeModel {
         Ok(loss)
     }
 
+    // -- inference-only forward (bucketed serving path) ----------------------
+
+    /// Materialize block `bi`'s implicit filters truncated to the leading
+    /// `lq` positions, `(N, D, lq)` — the serving-path sibling of
+    /// `filter_fwd_with`. Filter positions are a prefix of the full-length
+    /// filters: the FFN rows and decay-window entries are the same values
+    /// (bitwise), just fewer of them.
+    fn filter_fwd_len(&self, bi: usize, lq: usize, arena: &mut Arena) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (lfull, n, d) = (cfg.seqlen, cfg.order, cfg.width);
+        debug_assert!(lq <= lfull);
+        let bix = &self.layout.ix.blocks[bi];
+        let dims = cfg.filter_layer_dims();
+        let depth = dims.len();
+        let omega = cfg.sine_freq;
+        let pool = &self.pool;
+        let pe_dim = cfg.pe_dim();
+
+        let mut z = arena.take(lq * pe_dim);
+        z.copy_from_slice(&self.pe[..lq * pe_dim]);
+        for (j, &(fan_in, fan_out)) in dims.iter().enumerate() {
+            let w = self.p(bix.filt_w[j]);
+            let bv = self.p(bix.filt_b[j]);
+            let mut pre = arena.take(lq * fan_out);
+            dense_fwd_into(pool, &z, w, Some(bv), lq, fan_in, fan_out, &mut pre);
+            if j < depth - 1 {
+                // Same per-element arithmetic as the training path's
+                // separate `act` buffer, just in place.
+                for x in pre.iter_mut() {
+                    *x = (omega * *x).sin();
+                }
+            }
+            arena.put(std::mem::replace(&mut z, pre));
+        }
+
+        // z is (lq, N·D); transpose to (N, D, lq) and apply the window
+        // (whose rows stride the full L).
+        let nd = n * d;
+        let mut hfilt = arena.take(nd * lq);
+        for t in 0..lq {
+            for ch in 0..nd {
+                hfilt[ch * lq + t] = z[t * nd + ch] * self.window[ch * lfull + t];
+            }
+        }
+        arena.put(z);
+        hfilt
+    }
+
+    /// Order-N Hyena forward on the normalized stream — the cache-free
+    /// serving sibling of `mixer_fwd`: identical per-row arithmetic, but
+    /// recurrence states ping-pong through two arena buffers and the
+    /// filters arrive as the bucket's cached spectra.
+    fn mixer_infer(
+        &self,
+        bi: usize,
+        t1: &[f32],
+        b: usize,
+        lb: usize,
+        plan: &CausalConv,
+        spec_h: &SpecBank,
+        ctxs: &Mutex<Vec<ConvCtx>>,
+        arena: &mut Arena,
+    ) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, n, f) = (cfg.width, cfg.order, cfg.short_filter);
+        let c = (n + 1) * d;
+        let bix = &self.layout.ix.blocks[bi];
+        let rows = b * lb;
+        let pool = &self.pool;
+
+        let mut zp = arena.take(rows * c);
+        dense_fwd_into(
+            pool,
+            t1,
+            self.p(bix.proj_w),
+            Some(self.p(bix.proj_b)),
+            rows,
+            d,
+            c,
+            &mut zp,
+        );
+        let zs = match bix.short_w {
+            Some(sw) => {
+                let mut zs = arena.take(rows * c);
+                short_conv_fwd_into(pool, self.p(sw), &zp, b, lb, c, f, &mut zs);
+                arena.put(zp);
+                zs
+            }
+            None => zp,
+        };
+
+        // Value slot → channel-major (B, D, lb).
+        let mut vcur = arena.take(b * d * lb);
+        for bb in 0..b {
+            for t in 0..lb {
+                let src = (bb * lb + t) * c;
+                for ch in 0..d {
+                    vcur[(bb * d + ch) * lb + t] = zs[src + ch];
+                }
+            }
+        }
+
+        // The recurrence (Def. 3.1): v ← x^n ⊙ (h^n ∗ v + bias_n ⊙ v).
+        let bias = self.p(bix.bias);
+        let mut vnext = arena.take(b * d * lb);
+        for order in 0..n {
+            {
+                let vview = SharedMut::new(&mut vnext);
+                pool.par_for_with(
+                    b * d,
+                    || take_ctx(ctxs, plan),
+                    |ctx, rix| {
+                        let (bb, ch) = (rix / d, rix % d);
+                        let row = rix * lb;
+                        let vrow = &vcur[row..row + lb];
+                        // SAFETY: index rix exclusively owns output row rix.
+                        let vnrow = unsafe { vview.slice(row, lb) };
+                        let mut sv = ctx.ws.take_spectrum();
+                        plan.spectrum_into(vrow, &mut ctx.ws, &mut sv);
+                        let (hre, him) = spec_h.row(order * d + ch);
+                        let crow = &mut ctx.a[..lb];
+                        plan.conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
+                        ctx.ws.put_spectrum(sv);
+                        let bv = bias[order * d + ch];
+                        for t in 0..lb {
+                            crow[t] += bv * vrow[t];
+                        }
+                        for t in 0..lb {
+                            // Gate x^order lives in slot order+1 of zs.
+                            let gate = zs[(bb * lb + t) * c + (order + 1) * d + ch];
+                            vnrow[t] = gate * crow[t];
+                        }
+                    },
+                    |ctx| put_ctx(ctxs, ctx),
+                );
+            }
+            std::mem::swap(&mut vcur, &mut vnext);
+        }
+        arena.put(vnext);
+        arena.put(zs);
+
+        // Back to (B, lb, D) and the output projection.
+        let mut y_mix = arena.take(rows * d);
+        for bb in 0..b {
+            for t in 0..lb {
+                let dst = (bb * lb + t) * d;
+                for ch in 0..d {
+                    y_mix[dst + ch] = vcur[(bb * d + ch) * lb + t];
+                }
+            }
+        }
+        arena.put(vcur);
+        let mut out = arena.take(rows * d);
+        dense_fwd_into(
+            pool,
+            &y_mix,
+            self.p(bix.out_w),
+            Some(self.p(bix.out_b)),
+            rows,
+            d,
+            d,
+            &mut out,
+        );
+        arena.put(y_mix);
+        out
+    }
+
+    /// Inference-only forward: no activation cache, no transient scratch.
+    ///
+    /// `tokens` is `b` rows of `lq` ids (`1 ≤ lq ≤ seqlen`). The request is
+    /// routed to the smallest plan bucket covering `lq`; rows are padded to
+    /// the bucket length with token 0 (the full-pad convention, so causality
+    /// makes logits at positions `< lq` independent of the padding), and
+    /// logits `(b, lq, V)` are written into `out`. Returns the bucket
+    /// length used.
+    ///
+    /// Every buffer comes from the persistent mutex-guarded serving
+    /// workspace; per-bucket filter spectra are cached across requests and
+    /// invalidated when parameters change. In steady state a request
+    /// allocates nothing (pinned via [`ArenaStats::allocs`] by the e2e
+    /// tests). At the largest bucket (`lq` routed to the full plan) the
+    /// logits are bitwise identical to `forward_cached`'s; smaller buckets
+    /// transform at a smaller FFT size, so they agree with the full-pad
+    /// path to f32 round-off rather than bitwise (DESIGN.md §Serving).
+    pub fn forward_infer_into(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        lq: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<usize> {
+        let cfg = &self.cfg;
+        let (d, vsz, lfull) = (cfg.width, cfg.vocab, cfg.seqlen);
+        if b == 0 {
+            bail!("infer wants at least one row");
+        }
+        if lq == 0 || lq > lfull {
+            bail!("infer length {lq} out of range 1..={lfull}");
+        }
+        if tokens.len() != b * lq {
+            bail!("tokens length {} != batch {b} × length {lq}", tokens.len());
+        }
+        let bucket_ix = self.bank.bucket_index(lq).expect("lq ≤ seqlen has a bucket");
+        let plan = self.bank.plan(bucket_ix);
+        let lb = plan.len();
+        let rows = b * lb;
+        let pool = &self.pool;
+
+        let mut guard = self.serve.lock().unwrap();
+        let st = &mut *guard;
+        st.sync(self.epoch, self.bank.levels());
+
+        // Materialize this bucket's filter spectra once per params epoch.
+        if st.buckets[bucket_ix].spec.is_empty() {
+            for blk in 0..cfg.depth {
+                let hfilt = self.filter_fwd_len(blk, lb, &mut st.arena);
+                let spec = self.spectra_rows(
+                    &hfilt,
+                    cfg.order * d,
+                    lb,
+                    plan,
+                    &st.buckets[bucket_ix].ctxs,
+                    &mut st.arena,
+                );
+                st.arena.put(hfilt);
+                st.buckets[bucket_ix].spec.push(spec);
+            }
+        }
+
+        let ServeState { arena, buckets, .. } = &mut *st;
+        let bucket = &buckets[bucket_ix];
+        let ctxs = &bucket.ctxs;
+
+        // Embedding + learned positions over the bucket length (token-0 pad).
+        let embed = self.p(self.layout.ix.embed);
+        let pos = self.p(self.layout.ix.pos);
+        let mut u = arena.take(rows * d);
+        for bb in 0..b {
+            for t in 0..lb {
+                let id = if t < lq { tokens[bb * lq + t] } else { 0 };
+                let tok = (id.max(0) as usize).min(vsz - 1);
+                let dst = (bb * lb + t) * d;
+                let emb = &embed[tok * d..(tok + 1) * d];
+                let ps = &pos[t * d..(t + 1) * d];
+                for ch in 0..d {
+                    u[dst + ch] = emb[ch] + ps[ch];
+                }
+            }
+        }
+
+        // One LN output buffer + scratch pair serves every norm site.
+        let mut t1 = arena.take(rows * d);
+        let mut xhat = arena.take(rows * d);
+        let mut rstd = arena.take(rows);
+        let dm = cfg.mlp_dim();
+        for blk in 0..cfg.depth {
+            let bix = &self.layout.ix.blocks[blk];
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln1_g),
+                self.p(bix.ln1_b),
+                rows,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            let mix = self.mixer_infer(blk, &t1, b, lb, plan, &bucket.spec[blk], ctxs, arena);
+            for i in 0..rows * d {
+                u[i] += mix[i];
+            }
+            arena.put(mix);
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln2_g),
+                self.p(bix.ln2_b),
+                rows,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            let mut pre = arena.take(rows * dm);
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.mlp_w1),
+                Some(self.p(bix.mlp_b1)),
+                rows,
+                d,
+                dm,
+                &mut pre,
+            );
+            let mut act = arena.take(rows * dm);
+            let mut th = arena.take(rows * dm);
+            gelu_fwd_into(pool, &pre, &mut act, &mut th);
+            arena.put(th);
+            arena.put(pre);
+            let mut z = arena.take(rows * d);
+            dense_fwd_into(
+                pool,
+                &act,
+                self.p(bix.mlp_w2),
+                Some(self.p(bix.mlp_b2)),
+                rows,
+                dm,
+                d,
+                &mut z,
+            );
+            arena.put(act);
+            for i in 0..rows * d {
+                u[i] += z[i];
+            }
+            arena.put(z);
+        }
+        let ix = &self.layout.ix;
+        layer_norm_fwd_into(
+            &u,
+            self.p(ix.lnf_g),
+            self.p(ix.lnf_b),
+            rows,
+            d,
+            &mut t1,
+            &mut xhat,
+            &mut rstd,
+        );
+        let mut logits = arena.take(rows * vsz);
+        dense_fwd_into(pool, &t1, self.p(ix.head), None, rows, d, vsz, &mut logits);
+
+        // Hand back the requested (b, lq, V) prefix rows.
+        out.clear();
+        out.reserve(b * lq * vsz);
+        for bb in 0..b {
+            out.extend_from_slice(&logits[(bb * lb) * vsz..(bb * lb + lq) * vsz]);
+        }
+        arena.put(logits);
+        arena.put(rstd);
+        arena.put(xhat);
+        arena.put(t1);
+        arena.put(u);
+
+        st.forwards += 1;
+        st.buckets[bucket_ix].hits += 1;
+        Ok(lb)
+    }
+
+    /// Allocating convenience around [`NativeModel::forward_infer_into`]:
+    /// returns the `(b, lq, V)` logits and the bucket length used.
+    pub fn forward_infer(&self, tokens: &[i32], b: usize, lq: usize) -> Result<(Vec<f32>, usize)> {
+        let mut out = Vec::new();
+        let lb = self.forward_infer_into(tokens, b, lq, &mut out)?;
+        Ok((out, lb))
+    }
+
+    /// Serving-workspace snapshot: inference-forward counts, arena
+    /// accounting, cached spectra bytes, per-bucket hit counts.
+    pub fn serve_stats(&self) -> ServeStats {
+        let st = self.serve.lock().unwrap();
+        let mut bucket_hits = vec![0u64; self.bank.levels()];
+        for (h, bkt) in bucket_hits.iter_mut().zip(st.buckets.iter()) {
+            *h = bkt.hits;
+        }
+        ServeStats {
+            forwards: st.forwards,
+            arena: st.arena.stats(),
+            spec_bytes: st.spec_bytes(),
+            bucket_lens: self.bank.lens(),
+            bucket_hits,
+        }
+    }
+
+    /// Training-scratch arena snapshot (per-step high-water metrics).
+    pub fn train_arena_stats(&self) -> ArenaStats {
+        self.scratch.arena.stats()
+    }
+
     /// Block-0 filters `(N, D, L)` for the Fig. D.5 dump.
     pub fn filters_block0(&self) -> Vec<f32> {
         let mut sc = Scratch::default();
@@ -1827,6 +2372,12 @@ mod tests {
 
     fn micro() -> NativeModel {
         NativeModel::new(NativeConfig::builtin("native_micro").unwrap(), 0).unwrap()
+    }
+
+    /// golden_tiny (L = 16) is the smallest builtin with a two-bucket plan
+    /// ladder ([8, 16]); native_micro (L = 8) collapses to a single bucket.
+    fn tiny() -> NativeModel {
+        NativeModel::new(NativeConfig::builtin("golden_tiny").unwrap(), 0).unwrap()
     }
 
     #[test]
@@ -2012,6 +2563,158 @@ mod tests {
         let warm_end = m.lr_at(m.cfg.warmup_steps - 1.0);
         assert!((warm_end - peak).abs() < peak * 0.05);
         assert!(m.lr_at(m.cfg.total_steps) <= peak * 0.11);
+    }
+
+    #[test]
+    fn infer_at_full_bucket_is_bitwise_equal_to_forward() {
+        // The serving path at the largest bucket runs the exact kernels of
+        // the training forward, so the logits must agree bit-for-bit.
+        let m = micro();
+        let (l, v) = (m.cfg.seqlen, m.cfg.vocab);
+        let b = 2usize;
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| (i * 3 + 1) % v as i32).collect();
+        let (want, _) = m.forward_cached(&tokens, b).unwrap();
+        let (got, lb) = m.forward_infer(&tokens, b, l).unwrap();
+        assert_eq!(lb, l);
+        assert_eq!(got, want, "full-bucket infer diverged from forward_cached");
+    }
+
+    #[test]
+    fn infer_at_small_bucket_matches_full_pad_prefix() {
+        // A short prompt through its small bucket must reproduce the
+        // full-pad logits at every prompt position. The FFT sizes differ
+        // between the plans, so agreement is within f32 round-off.
+        let m = tiny();
+        let (l, v) = (m.cfg.seqlen, m.cfg.vocab);
+        assert!(m.bucket_lens().len() > 1, "golden_tiny should have ≥ 2 buckets");
+        let lq = m.bucket_lens()[0]; // smallest bucket
+        assert!(lq < l);
+        let tokens: Vec<i32> = (0..lq as i32).map(|i| (i * 5 + 2) % v as i32).collect();
+        // Full-pad reference: pad to L with token 0 (the serving convention).
+        let mut padded = tokens.clone();
+        padded.resize(l, 0);
+        let (full, _) = m.forward_cached(&padded, 1).unwrap();
+        let (got, lb) = m.forward_infer(&tokens, 1, lq).unwrap();
+        assert_eq!(lb, lq);
+        assert_eq!(got.len(), lq * v);
+        for t in 0..lq {
+            for ch in 0..v {
+                let (a, b_) = (got[t * v + ch], full[t * v + ch]);
+                assert!(
+                    (a - b_).abs() <= 1e-4 * (1.0 + a.abs().max(b_.abs())),
+                    "bucketed logits diverged at t={t} ch={ch}: {a} vs {b_}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infer_steady_state_allocates_nothing() {
+        let m = tiny();
+        let (l, v) = (m.cfg.seqlen, m.cfg.vocab);
+        let lq = l / 2;
+        let tokens: Vec<i32> = (0..lq as i32).map(|i| i % v as i32).collect();
+        let mut out = Vec::new();
+        // Warm until the arena accounting stabilizes (first pass builds the
+        // spectra cache and grows buffers; LIFO reuse then converges).
+        m.forward_infer_into(&tokens, 1, lq, &mut out).unwrap();
+        let mut warm = m.serve_stats();
+        for _ in 0..8 {
+            m.forward_infer_into(&tokens, 1, lq, &mut out).unwrap();
+            let now = m.serve_stats();
+            let settled = now.arena == warm.arena;
+            warm = now;
+            if settled {
+                break;
+            }
+        }
+        let first = out.clone();
+        for _ in 0..8 {
+            m.forward_infer_into(&tokens, 1, lq, &mut out).unwrap();
+        }
+        let after = m.serve_stats();
+        assert_eq!(out, first, "steady-state infer changed its answer");
+        assert_eq!(
+            warm.arena.allocs, after.arena.allocs,
+            "steady-state serving still allocates"
+        );
+        assert_eq!(
+            warm.arena.hiwater_bytes, after.arena.hiwater_bytes,
+            "steady-state serving grew the arena high-water mark"
+        );
+        assert_eq!(after.forwards, warm.forwards + 8);
+        assert!(after.spec_bytes > 0, "filter spectra should be cached");
+    }
+
+    #[test]
+    fn infer_tracks_param_changes() {
+        // Cached spectra must be invalidated when the optimizer steps; the
+        // serving path re-agrees with the training forward afterwards.
+        let mut m = micro();
+        let (b, l, v) = (m.cfg.batch, m.cfg.seqlen, m.cfg.vocab);
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| (i * 7 + 1) % v as i32).collect();
+        let (before, _) = m.forward_infer(&tokens, b, l).unwrap();
+        let targets = tokens.clone();
+        let mask = vec![1.0f32; b * l];
+        m.train_step(&tokens, &targets, &mask, b).unwrap();
+        let (want, _) = m.forward_cached(&tokens, b).unwrap();
+        let (after, _) = m.forward_infer(&tokens, b, l).unwrap();
+        assert_ne!(before, after, "infer ignored a parameter update");
+        assert_eq!(after, want, "infer out of sync with forward after train step");
+    }
+
+    #[test]
+    fn infer_is_thread_count_invariant() {
+        let mut m1 = tiny();
+        let mut m3 = tiny();
+        m1.set_threads(1);
+        m3.set_threads(3);
+        let (l, v) = (m1.cfg.seqlen, m1.cfg.vocab);
+        let lq = l / 2;
+        let tokens: Vec<i32> = (0..(2 * lq) as i32).map(|i| (i * 3 + 2) % v as i32).collect();
+        let (a, _) = m1.forward_infer(&tokens, 2, lq).unwrap();
+        let (b, _) = m3.forward_infer(&tokens, 2, lq).unwrap();
+        assert_eq!(a, b, "thread count changed bucketed inference results");
+    }
+
+    #[test]
+    fn bucket_ladder_respects_levels_override() {
+        let mut m = tiny();
+        let l = m.cfg.seqlen;
+        assert_eq!(m.bucket_lens(), vec![8, l]);
+        m.set_bucket_levels(1);
+        assert_eq!(m.bucket_lens(), vec![l]);
+        let (_, lb) = m
+            .forward_infer(&(0..2).map(|i| i as i32).collect::<Vec<_>>(), 1, 2)
+            .unwrap();
+        assert_eq!(lb, l, "levels=1 must route everything to the full plan");
+    }
+
+    #[test]
+    fn train_arena_stats_reach_steady_state() {
+        let mut m = micro();
+        let (b, l, v) = (m.cfg.batch, m.cfg.seqlen, m.cfg.vocab);
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| i % v as i32).collect();
+        let mask = vec![1.0f32; b * l];
+        // Warm until the per-step accounting stabilizes.
+        m.train_step(&tokens, &tokens, &mask, b).unwrap();
+        let mut warm = m.train_arena_stats();
+        for _ in 0..8 {
+            m.train_step(&tokens, &tokens, &mask, b).unwrap();
+            let now = m.train_arena_stats();
+            let settled = now == warm;
+            warm = now;
+            if settled {
+                break;
+            }
+        }
+        assert!(warm.hiwater_bytes > 0);
+        for _ in 0..3 {
+            m.train_step(&tokens, &tokens, &mask, b).unwrap();
+        }
+        let after = m.train_arena_stats();
+        assert_eq!(warm.allocs, after.allocs, "steady-state training still allocates");
+        assert_eq!(warm.hiwater_bytes, after.hiwater_bytes);
     }
 
     #[test]

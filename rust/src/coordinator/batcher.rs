@@ -5,6 +5,12 @@
 //! (b) the oldest queued request has waited `max_wait`. This is the standard
 //! serving trade-off between padding waste and queueing latency; the policy
 //! sweep is benchmarked in `benches/server.rs`.
+//!
+//! With shape-bucketed plans (`Batcher::take_batch_by_key`), a released
+//! batch additionally shares one *shape bucket*: the oldest request picks
+//! the bucket and the batch is filled with the queued requests of that
+//! bucket in FIFO order, so a short prompt is never padded to the full
+//! compiled length just because a long prompt was queued beside it.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -61,6 +67,28 @@ impl<T> Batcher<T> {
     pub fn take_batch(&mut self) -> Vec<T> {
         let n = self.queue.len().min(self.batch_size);
         self.queue.drain(..n).map(|(_, x)| x).collect()
+    }
+
+    /// Pop up to `batch_size` requests that share the *oldest* request's
+    /// key (its shape bucket), preserving FIFO order within the key.
+    /// Requests with other keys keep their queue positions and timestamps,
+    /// so `ready`'s deadline logic serves every bucket eventually.
+    pub fn take_batch_by_key<K: Eq, F: Fn(&T) -> K>(&mut self, key: F) -> Vec<T> {
+        let Some((_, front)) = self.queue.front() else {
+            return Vec::new();
+        };
+        let k0 = key(front);
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(entry) = self.queue.pop_front() {
+            if taken.len() < self.batch_size && key(&entry.1) == k0 {
+                taken.push(entry.1);
+            } else {
+                rest.push_back(entry);
+            }
+        }
+        self.queue = rest;
+        taken
     }
 }
 
@@ -139,6 +167,62 @@ mod tests {
             }
             let want: Vec<u32> = (0..pushed).collect();
             prop_assert!(popped == want, "lost/dup/reorder: {popped:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn take_by_key_groups_the_oldest_bucket() {
+        let mut b = Batcher::new(3, Duration::from_secs(1));
+        let now = Instant::now();
+        // (id, bucket): oldest is bucket 8.
+        for item in [(0u32, 8usize), (1, 16), (2, 8), (3, 8), (4, 16), (5, 8)] {
+            b.push_at(now, item);
+        }
+        let batch = b.take_batch_by_key(|x| x.1);
+        assert_eq!(batch, vec![(0, 8), (2, 8), (3, 8)], "bucket-8 FIFO, capped at 3");
+        // The other bucket (and the bucket-8 overflow) kept its order.
+        let batch = b.take_batch_by_key(|x| x.1);
+        assert_eq!(batch, vec![(1, 16), (4, 16)]);
+        let batch = b.take_batch_by_key(|x| x.1);
+        assert_eq!(batch, vec![(5, 8)]);
+        assert!(b.is_empty());
+        assert!(b.take_batch_by_key(|x| x.1).is_empty());
+    }
+
+    /// Property: bucketed draining loses/duplicates nothing, every released
+    /// batch is single-bucket, and order within a bucket is FIFO.
+    #[test]
+    fn prop_take_by_key_conserves_and_is_homogeneous() {
+        Prop::new("bucketed batcher conservation").cases(200).check(|rng| {
+            let bs = 1 + rng.usize_below(5);
+            let mut b = Batcher::new(bs, Duration::from_secs(60));
+            let now = Instant::now();
+            let total = 1 + rng.usize_below(40);
+            let items: Vec<(u32, usize)> =
+                (0..total).map(|i| (i as u32, [8usize, 16, 32][rng.usize_below(3)])).collect();
+            for &it in &items {
+                b.push_at(now, it);
+            }
+            let mut popped: Vec<(u32, usize)> = Vec::new();
+            while !b.is_empty() {
+                let batch = b.take_batch_by_key(|x| x.1);
+                prop_assert!(!batch.is_empty(), "ready queue released nothing");
+                prop_assert!(batch.len() <= bs, "batch over size");
+                prop_assert!(
+                    batch.iter().all(|x| x.1 == batch[0].1),
+                    "mixed buckets in one batch: {batch:?}"
+                );
+                popped.extend(batch);
+            }
+            prop_assert!(popped.len() == items.len(), "lost/duplicated requests");
+            for bucket in [8usize, 16, 32] {
+                let want: Vec<u32> =
+                    items.iter().filter(|x| x.1 == bucket).map(|x| x.0).collect();
+                let got: Vec<u32> =
+                    popped.iter().filter(|x| x.1 == bucket).map(|x| x.0).collect();
+                prop_assert!(got == want, "bucket {bucket} reordered: {got:?} vs {want:?}");
+            }
             Ok(())
         });
     }

@@ -2,7 +2,11 @@
 //!
 //! Hyena has no KV cache (it is convolutional; the paper defers fast
 //! autoregressive inference to future work), so decoding recomputes the
-//! forward pass per generated token over the compiled fixed-length window.
+//! forward pass per generated token. Each round runs through
+//! [`Backend::infer`] at the *current* frontier length rather than the full
+//! compiled window, so backends with shape-bucketed plans (the native
+//! engine) transform short sequences at small FFT sizes and grow buckets
+//! only as the sequences lengthen.
 
 use anyhow::{bail, Result};
 
@@ -19,37 +23,61 @@ pub enum Sampling {
 }
 
 /// Pick the next token from a logits row.
+///
+/// Robust against non-finite logits: NaNs lose every comparison
+/// (`f32::total_cmp` under a NaN filter, never `partial_cmp().unwrap()` —
+/// one NaN logit used to panic the whole serving worker) and are excluded
+/// from the temperature-sampling support. `-inf` entries stay in the
+/// support with zero weight; a `+inf` (or all-`-inf`) support degenerates
+/// the softmax, so it falls back to the greedy argmax — keeping greedy and
+/// temperature sampling consistent about which token dominates.
 pub fn sample_token(row: &[f32], s: Sampling, rng: &mut Pcg) -> i32 {
     match s {
         Sampling::Greedy => argmax(row),
         Sampling::Temperature { t, top_k } => {
             let t = t.max(1e-4);
-            let mut idx: Vec<usize> = (0..row.len()).collect();
-            if top_k > 0 && top_k < row.len() {
-                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            let mut idx: Vec<usize> = (0..row.len()).filter(|&i| !row[i].is_nan()).collect();
+            if idx.is_empty() {
+                // Degenerate row (all NaN): deterministic fallback.
+                return argmax(row);
+            }
+            if top_k > 0 && top_k < idx.len() {
+                idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
                 idx.truncate(top_k);
             }
             let mx = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
+            if !mx.is_finite() {
+                // +inf in the support (or nothing above -inf): softmax
+                // weights are NaN; the dominating token is the argmax.
+                return argmax(row);
+            }
             let weights: Vec<f32> = idx.iter().map(|&i| ((row[i] - mx) / t).exp()).collect();
             idx[rng.weighted(&weights)] as i32
         }
     }
 }
 
+/// Index of the largest non-NaN logit (0 for an all-NaN row).
 pub fn argmax(row: &[f32]) -> i32 {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .filter(|(_, x)| !x.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i as i32)
         .unwrap_or(0)
 }
 
-/// Decode a *batch* of prompts together through the compiled forward pass.
+/// Decode a *batch* of prompts together.
 ///
-/// `prompts` are token id vectors (each < seqlen). Rows are padded with 0;
-/// causality guarantees pad positions after a row's frontier cannot affect
-/// its next-token logits. Each row stops after its own `max_new` tokens or
-/// at the model's window edge. Returns the generated suffixes.
+/// `prompts` are token id vectors (each < seqlen). Each round assembles the
+/// live rows at the current frontier length (the longest sequence so far)
+/// and runs [`Backend::infer`], which rounds the length up to the engine's
+/// smallest covering plan bucket — short prompts are served at a fraction
+/// of the full-window cost and buckets grow as the sequences lengthen. Rows
+/// shorter than the frontier are padded with 0 inside the engine; causality
+/// guarantees pad positions after a row's frontier cannot affect its
+/// next-token logits. Each row stops after its own `max_new` tokens or at
+/// the model's window edge. Returns the generated suffixes.
 pub fn decode_batch(
     model: &dyn Backend,
     prompts: &[Vec<i32>],
@@ -69,31 +97,35 @@ pub fn decode_batch(
             bail!("prompt length {} out of range (1..{})", s.len(), l);
         }
     }
-    let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let rows = seqs.len();
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];
     let max_rounds = max_new.iter().copied().max().unwrap_or(0);
+    let mut toks: Vec<i32> = Vec::new();
 
     for _ in 0..max_rounds {
-        // Assemble the padded token matrix.
-        let mut toks = vec![0i32; b * l];
-        for (r, s) in seqs.iter().enumerate() {
-            toks[r * l..r * l + s.len()].copy_from_slice(s);
-        }
-        let logits = model.forward(&[Tensor::from_i32(&[b, l], toks)?])?;
-        let lf = logits.as_f32()?;
-        let mut progressed = false;
-        for (r, s) in seqs.iter_mut().enumerate() {
-            if out[r].len() >= max_new[r] || s.len() >= l {
-                continue;
-            }
-            let pos = s.len() - 1;
-            let row = &lf[(r * l + pos) * v..(r * l + pos + 1) * v];
-            let tok = sample_token(row, sampling, rng);
-            s.push(tok);
-            out[r].push(tok);
-            progressed = true;
-        }
-        if !progressed {
+        // Compact to the live rows: finished sequences stop paying for
+        // forward passes (infer takes an arbitrary row count).
+        let live: Vec<usize> =
+            (0..rows).filter(|&r| out[r].len() < max_new[r] && seqs[r].len() < l).collect();
+        if live.is_empty() {
             break;
+        }
+        // Frontier length this round; the engine rounds it up to a bucket.
+        let lcur = live.iter().map(|&r| seqs[r].len()).max().unwrap_or(0).min(l);
+        toks.clear();
+        toks.resize(live.len() * lcur, 0);
+        for (i, &r) in live.iter().enumerate() {
+            let n = seqs[r].len().min(lcur);
+            toks[i * lcur..i * lcur + n].copy_from_slice(&seqs[r][..n]);
+        }
+        let logits = model.infer(&toks, live.len(), lcur)?;
+        let lf = logits.as_f32()?;
+        for (i, &r) in live.iter().enumerate() {
+            let pos = seqs[r].len() - 1;
+            let row = &lf[(i * lcur + pos) * v..(i * lcur + pos + 1) * v];
+            let tok = sample_token(row, sampling, rng);
+            seqs[r].push(tok);
+            out[r].push(tok);
         }
     }
     Ok(out)
@@ -148,6 +180,40 @@ mod tests {
             );
             assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
         }
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_and_never_win() {
+        // Regression: the top-k path used `partial_cmp().unwrap()`, so a
+        // single NaN logit panicked the serving worker.
+        let row = [0.1, f32::NAN, 2.0, f32::NAN, -1.0];
+        let mut rng = Pcg::new(7);
+        assert_eq!(sample_token(&row, Sampling::Greedy, &mut rng), 2);
+        for _ in 0..100 {
+            let t = sample_token(&row, Sampling::Temperature { t: 1.0, top_k: 2 }, &mut rng);
+            assert!(t == 0 || t == 2, "sampled a NaN slot: {t}");
+        }
+        // Non-finite-only rows fall back deterministically instead of
+        // panicking in the weighted sampler.
+        let bad = [f32::NAN, f32::NAN];
+        assert_eq!(sample_token(&bad, Sampling::Greedy, &mut rng), 0);
+        let _ = sample_token(&bad, Sampling::Temperature { t: 0.5, top_k: 1 }, &mut rng);
+        // -inf stays sampleable territory for greedy (total_cmp orders it).
+        let inf = [f32::NEG_INFINITY, 1.0];
+        assert_eq!(sample_token(&inf, Sampling::Greedy, &mut rng), 1);
+        // Greedy and temperature agree on a +inf-dominated row (temperature
+        // degenerates to argmax instead of excluding the +inf slot).
+        let pinf = [f32::INFINITY, 0.0];
+        assert_eq!(sample_token(&pinf, Sampling::Greedy, &mut rng), 0);
+        for _ in 0..20 {
+            assert_eq!(
+                sample_token(&pinf, Sampling::Temperature { t: 1.0, top_k: 0 }, &mut rng),
+                0
+            );
+        }
+        // All--inf rows degenerate deterministically too.
+        let ninf = [f32::NEG_INFINITY, f32::NEG_INFINITY];
+        let _ = sample_token(&ninf, Sampling::Temperature { t: 1.0, top_k: 0 }, &mut rng);
     }
 
     #[test]

@@ -4,10 +4,20 @@
 //! worker thread *constructs* its own [`Backend`] from the artifact path;
 //! clients and worker exchange plain host data (`Vec<i32>` token ids) over
 //! mpsc channels. The worker drains the queue through the `Batcher` policy
-//! (full-batch or deadline), pads the prompt rows and decodes the whole
-//! batch together — request-level continuous batching (iteration-level
-//! rebatching has no payoff without a KV cache; the paper defers fast
-//! autoregressive inference to future work).
+//! (full-batch or deadline) and decodes the whole batch together —
+//! request-level continuous batching (iteration-level rebatching has no
+//! payoff without a KV cache; the paper defers fast autoregressive
+//! inference to future work).
+//!
+//! **Shape-bucketed routing.** Each request is keyed by the smallest plan
+//! bucket (`Backend::serve_buckets`) covering its terminal length
+//! (`prompt + max_new`), and a released batch contains only requests of the
+//! oldest request's bucket. Decoding then runs through `Backend::infer` at
+//! the live frontier length, so short prompts are served at a fraction of
+//! the full-window FLOPs instead of being padded to the compiled L
+//! (DESIGN.md §Serving). The response reports the routed bucket
+//! (`bucket_len`) so callers — and `scripts/check.sh serve-smoke` — can
+//! detect a full-pad fallback.
 //!
 //! The worker's native backend captures the process-wide worker pool
 //! (`util::pool`) at construction, so the server's forward passes and any
@@ -21,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{self, Backend, BackendKind};
+use crate::backend::{self, Backend, BackendKind, MemReport};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::generation::{decode_batch, Sampling};
 use crate::runtime::Tensor;
@@ -42,6 +52,9 @@ pub struct GenerateResponse {
     pub total_time: Duration,
     /// How many requests shared the batch (observability).
     pub batch_occupancy: usize,
+    /// Plan bucket the request was routed to (== compiled seqlen when the
+    /// engine has no shape buckets — the full-pad fallback).
+    pub bucket_len: usize,
 }
 
 struct Envelope {
@@ -50,10 +63,16 @@ struct Envelope {
     reply: Sender<Result<GenerateResponse>>,
 }
 
+/// Worker-bound messages: generation work or a serving-stats probe.
+enum Msg {
+    Gen(Envelope),
+    Mem(Sender<Option<MemReport>>),
+}
+
 /// Handle used by clients to submit requests (cloneable, Send).
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: Sender<Envelope>,
+    tx: Sender<Msg>,
 }
 
 impl ServerHandle {
@@ -63,7 +82,7 @@ impl ServerHandle {
         let env = Envelope { req, submitted: Instant::now(), reply: reply_tx };
         // If the worker is gone the reply channel closes and the caller
         // observes a RecvError.
-        let _ = self.tx.send(env);
+        let _ = self.tx.send(Msg::Gen(env));
         reply_rx
     }
 
@@ -72,6 +91,16 @@ impl ServerHandle {
         self.submit(req)
             .recv()
             .map_err(|_| anyhow!("server worker terminated"))?
+    }
+
+    /// Snapshot of the worker backend's arena/workspace accounting (the
+    /// serve report; `None` when the engine does not track it).
+    pub fn mem_report(&self) -> Option<MemReport> {
+        let (tx, rx) = channel();
+        if self.tx.send(Msg::Mem(tx)).is_err() {
+            return None;
+        }
+        rx.recv().ok().flatten()
     }
 }
 
@@ -100,18 +129,21 @@ impl Server {
         params: Option<Vec<Tensor>>,
     ) -> Result<Server> {
         let kind = BackendKind::detect(&artifact_dir)?;
-        Self::start_kind(kind, artifact_dir, seed, max_wait, params)
+        Self::start_kind(kind, artifact_dir, seed, max_wait, params, None)
     }
 
-    /// Start with an explicitly chosen engine (the CLI's `--backend`).
+    /// Start with an explicitly chosen engine (the CLI's `--backend`) and,
+    /// optionally, an explicit serving bucket-ladder depth (the CLI's
+    /// `--buckets`; `None` keeps the engine default).
     pub fn start_kind(
         kind: BackendKind,
         artifact_dir: PathBuf,
         seed: i32,
         max_wait: Duration,
         params: Option<Vec<Tensor>>,
+        buckets: Option<usize>,
     ) -> Result<Server> {
-        let (tx, rx) = channel::<Envelope>();
+        let (tx, rx) = channel::<Msg>();
         let (sd_tx, sd_rx) = channel::<()>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
         let worker = std::thread::Builder::new()
@@ -120,6 +152,9 @@ impl Server {
                 let model = match backend::load(kind, &artifact_dir, seed).and_then(|mut m| {
                     if let Some(p) = params {
                         m.set_params(&p)?;
+                    }
+                    if let Some(levels) = buckets {
+                        m.set_serve_buckets(levels)?;
                     }
                     Ok(m)
                 }) {
@@ -151,9 +186,22 @@ impl Server {
     }
 }
 
+/// Smallest bucket covering a request's terminal length (prompt + budget),
+/// clamped into the ladder — requests that will outgrow every bucket route
+/// to the largest (the full compiled length).
+fn bucket_for(env: &Envelope, buckets: &[usize]) -> usize {
+    let terminal = env.req.prompt.len() + env.req.max_new;
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= terminal)
+        .or_else(|| buckets.last().copied())
+        .unwrap_or(terminal)
+}
+
 fn worker_loop(
     model: Box<dyn Backend>,
-    rx: Receiver<Envelope>,
+    rx: Receiver<Msg>,
     shutdown: Receiver<()>,
     batch_size: usize,
     max_wait: Duration,
@@ -161,11 +209,19 @@ fn worker_loop(
 ) {
     let mut batcher: Batcher<Envelope> = Batcher::new(batch_size, max_wait);
     let mut rng = Pcg::with_stream(seed, 0x5e44);
+    // The plan ladder is fixed for the worker's lifetime.
+    let buckets = model.serve_buckets();
+    let handle = |msg: Msg, batcher: &mut Batcher<Envelope>| match msg {
+        Msg::Gen(env) => batcher.push(env),
+        Msg::Mem(reply) => {
+            let _ = reply.send(model.mem_report());
+        }
+    };
     loop {
         // Drain everything currently queued on the channel.
         loop {
             match rx.try_recv() {
-                Ok(env) => batcher.push(env),
+                Ok(msg) => handle(msg, &mut batcher),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => return,
             }
@@ -175,8 +231,8 @@ fn worker_loop(
         }
         let now = Instant::now();
         if batcher.ready(now) {
-            let envs = batcher.take_batch();
-            serve_batch(model.as_ref(), envs, &mut rng);
+            let envs = batcher.take_batch_by_key(|env| bucket_for(env, &buckets));
+            serve_batch(model.as_ref(), envs, &buckets, &mut rng);
             continue;
         }
         // Sleep until the oldest deadline or a short poll tick.
@@ -185,19 +241,20 @@ fn worker_loop(
             .unwrap_or(Duration::from_millis(2))
             .min(Duration::from_millis(2))
             .max(Duration::from_micros(200));
-        if let Ok(env) = rx.recv_timeout(wait) {
-            batcher.push(env);
+        if let Ok(msg) = rx.recv_timeout(wait) {
+            handle(msg, &mut batcher);
         }
     }
 }
 
-fn serve_batch(model: &dyn Backend, envs: Vec<Envelope>, rng: &mut Pcg) {
+fn serve_batch(model: &dyn Backend, envs: Vec<Envelope>, buckets: &[usize], rng: &mut Pcg) {
     let occupancy = envs.len();
     let entered = Instant::now();
+    let bucket_len = envs.first().map(|e| bucket_for(e, buckets)).unwrap_or(0);
     let prompts: Vec<Vec<i32>> = envs.iter().map(|e| e.req.prompt.clone()).collect();
     let max_new: Vec<usize> = envs.iter().map(|e| e.req.max_new).collect();
     // All requests in a batch share one sampling config (first wins); the
-    // compiled graph is identical either way, this just simplifies the loop.
+    // executed graph is identical either way, this just simplifies the loop.
     let sampling = envs.first().map(|e| e.req.sampling).unwrap_or(Sampling::Greedy);
 
     match decode_batch(model, &prompts, &max_new, sampling, rng) {
@@ -208,6 +265,7 @@ fn serve_batch(model: &dyn Backend, envs: Vec<Envelope>, rng: &mut Pcg) {
                     queue_time: entered.duration_since(env.submitted),
                     total_time: env.submitted.elapsed(),
                     batch_occupancy: occupancy,
+                    bucket_len,
                 };
                 let _ = env.reply.send(Ok(resp));
             }

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, MemReport};
 use crate::metrics::perplexity;
 use crate::runtime::Tensor;
 
@@ -45,6 +45,9 @@ pub struct TrainReport {
     pub tokens_per_s: f64,
     /// From the manifest's App. A.2 accounting: total training FLOPs.
     pub total_flops: Option<f64>,
+    /// Arena/workspace high-water accounting (backends that track it), so
+    /// memory regressions surface in the train report alongside throughput.
+    pub mem: Option<MemReport>,
 }
 
 pub struct Trainer<'a, S: BatchSource> {
@@ -104,6 +107,7 @@ impl<'a, S: BatchSource> Trainer<'a, S> {
             steps_per_s: steps as f64 / wall.max(1e-9),
             tokens_per_s: (steps * tokens_per_batch) as f64 / wall.max(1e-9),
             total_flops: flops_per_step.map(|f| f * steps as f64),
+            mem: self.model.mem_report(),
             curve,
         })
     }

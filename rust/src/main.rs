@@ -37,7 +37,7 @@ use hyena::util::cli::Args;
 use hyena::util::rng::Pcg;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["quiet", "greedy"]);
+    let args = Args::parse(&["quiet", "greedy", "mixed", "require-buckets"]);
     // Size the shared worker pool before any backend is constructed (models
     // capture the pool at load time).
     if let Some(t) = args.get("threads") {
@@ -60,7 +60,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: hyena <list|info|train|eval|serve|dump-filters> \
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
-                 [--steps N] [--seed S]"
+                 [--steps N] [--seed S] [--buckets N] [--mixed] \
+                 [--require-buckets]"
             );
             Ok(())
         }
@@ -179,6 +180,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         "done: loss {:.4}  {:.2} steps/s  {:.0} tok/s",
         report.final_loss, report.steps_per_s, report.tokens_per_s
     );
+    if let Some(mem) = &report.mem {
+        println!(
+            "train arena hiwater {} KiB ({} allocs)",
+            mem.train_arena_hiwater_bytes / 1024,
+            mem.train_arena_allocs
+        );
+    }
     let evals = LmBatches::eval_batches_vocab(&corpus.val, b, l, vocab);
     if !evals.is_empty() {
         let n = evals.len().min(4);
@@ -236,6 +244,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
     let n_req = args.get_usize("requests", 16);
     let seed = args.get_u64("seed", 0);
+    let buckets = args.get("buckets").and_then(|v| v.parse::<usize>().ok());
+    let mixed = args.flag("mixed");
     let dir = hyena::artifact(&name);
     let kind = backend_kind(args, &dir)?;
     // Read shapes through a cheap probe load for native; pjrt reads the
@@ -250,7 +260,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (probe.manifest().seqlen()?, probe.manifest().vocab()?)
         }
     };
-    let server = Server::start_kind(kind, dir, seed as i32, Duration::from_millis(20), None)?;
+    let server =
+        Server::start_kind(kind, dir, seed as i32, Duration::from_millis(20), None, buckets)?;
     println!("server up (backend: {}); firing {n_req} requests", kind.name());
     let mut rng = Pcg::new(seed);
     let sampling = if args.flag("greedy") {
@@ -258,29 +269,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         Sampling::Temperature { t: 0.8, top_k: 16 }
     };
-    let handles: Vec<_> = (0..n_req)
-        .map(|_| {
-            let prompt: Vec<i32> = (0..8).map(|_| rng.usize_below(vocab) as i32).collect();
+    // Prompt lengths: fixed (default 8) or a mixed ladder exercising every
+    // serving bucket (`--mixed`, the serve-smoke gate's traffic shape).
+    let base_len = args.get_usize("prompt-len", 8).clamp(1, l.saturating_sub(2).max(1));
+    let mixed_lens = [
+        (l / 8).max(1),
+        (l / 4).max(1),
+        (l / 2).max(1),
+        (3 * l / 4).min(l.saturating_sub(2)).max(1),
+    ];
+    let reqs: Vec<(Vec<i32>, usize)> = (0..n_req)
+        .map(|i| {
+            let plen = if mixed { mixed_lens[i % mixed_lens.len()] } else { base_len };
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.usize_below(vocab) as i32).collect();
+            let max_new = 8.min(l.saturating_sub(plen + 1)).max(1);
+            (prompt, max_new)
+        })
+        .collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(prompt, max_new)| {
             server.handle.submit(GenerateRequest {
-                prompt,
-                max_new: 16.min(l.saturating_sub(9)),
+                prompt: prompt.clone(),
+                max_new: *max_new,
                 sampling,
             })
         })
         .collect();
     let mut total = Duration::ZERO;
+    let mut routed: Vec<(usize, usize)> = Vec::new(); // (terminal len, bucket)
     for (i, h) in handles.into_iter().enumerate() {
         let resp = h.recv().map_err(|_| anyhow!("worker died"))??;
         total += resp.total_time;
+        routed.push((reqs[i].0.len() + reqs[i].1, resp.bucket_len));
         println!(
-            "  req {i:>3}: {} tokens, queue {:?}, total {:?}, batch x{}",
+            "  req {i:>3}: prompt {:>4} -> {} tokens, bucket {:>5}, queue {:?}, \
+             total {:?}, batch x{}",
+            reqs[i].0.len(),
             resp.tokens.len(),
+            resp.bucket_len,
             resp.queue_time,
             resp.total_time,
             resp.batch_occupancy
         );
     }
     println!("mean latency {:?}", total / n_req as u32);
+
+    // Serve report: bucket routing + workspace high-water marks.
+    if let Some(mem) = server.handle.mem_report() {
+        println!(
+            "serve report: {} inference forwards, buckets {:?}, hits {:?}",
+            mem.serve_forwards, mem.bucket_lens, mem.bucket_hits
+        );
+        println!(
+            "  serve arena hiwater {} KiB ({} allocs), cached spectra {} KiB",
+            mem.serve_arena_hiwater_bytes / 1024,
+            mem.serve_arena_allocs,
+            mem.serve_spec_bytes / 1024
+        );
+        if args.flag("require-buckets") {
+            // The serve-smoke gate: every request must have been routed to
+            // the smallest bucket covering its terminal length — a short
+            // prompt landing in the full-L bucket is the padding waste this
+            // path exists to remove.
+            if mem.bucket_lens.len() < 2 {
+                bail!("--require-buckets: engine reports a single bucket ({:?})", mem.bucket_lens);
+            }
+            let full = *mem.bucket_lens.last().unwrap();
+            let mut expect_below_full = false;
+            for (i, &(terminal, got)) in routed.iter().enumerate() {
+                let want =
+                    mem.bucket_lens.iter().copied().find(|&b| b >= terminal).unwrap_or(full);
+                expect_below_full |= want < full;
+                if got != want {
+                    bail!(
+                        "--require-buckets: request {i} (terminal len {terminal}) \
+                         was routed to bucket {got}, expected {want} — full-pad fallback"
+                    );
+                }
+            }
+            // The check above recomputes the router's own formula, so it
+            // cannot see an engine-side regression. bucket_hits is counted
+            // at the point of *plan selection* inside the inference
+            // forward: if short requests exist but every executed forward
+            // ran the full plan, the serving path is full-padding.
+            if expect_below_full {
+                let below: u64 =
+                    mem.bucket_hits.iter().take(mem.bucket_hits.len().saturating_sub(1)).sum();
+                if below == 0 {
+                    bail!(
+                        "--require-buckets: short requests were present but every \
+                         inference forward executed the full-{full} plan \
+                         (hits {:?}) — full-pad fallback in the engine",
+                        mem.bucket_hits
+                    );
+                }
+            }
+            println!("bucket routing verified: no full-pad fallback");
+        }
+    } else if args.flag("require-buckets") {
+        bail!("--require-buckets: backend exposes no serve report");
+    }
     server.stop();
     Ok(())
 }

@@ -1,11 +1,16 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|bench-smoke]
+# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
 #                not faster than the direct O(L²) conv at 8K.
+#   serve-smoke  serving gate: (1) the native_serve bench must show a ≤ L/8
+#                prompt served through its plan bucket beating the full-pad
+#                inference path, and (2) the real server must survive mixed-
+#                length traffic with every request routed to its smallest
+#                covering bucket (no full-pad fallback, no panics).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,6 +24,16 @@ if [ "${1:-}" = "bench-smoke" ]; then
     echo "==> bench-smoke: native_fftconv (--smoke, 2 threads, L <= 8K)"
     cargo bench --bench native_fftconv -- --smoke --threads 2
     echo "check.sh: bench-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "serve-smoke" ]; then
+    echo "==> serve-smoke: native_serve bench gate (--smoke, 2 threads)"
+    cargo bench --bench native_serve -- --smoke --threads 2
+    echo "==> serve-smoke: live server, mixed-length traffic, bucket routing enforced"
+    cargo run --release --bin hyena -- serve --model lm_hyena_s --backend native \
+        --requests 12 --mixed --require-buckets --greedy --threads 2 --seed 0
+    echo "check.sh: serve-smoke green"
     exit 0
 fi
 

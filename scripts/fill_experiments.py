@@ -24,7 +24,8 @@ TAGS = {
     "LMPRETRAIN": "lm_pretrain_lm_hyena_s.csv",
     "FIG43": "fig4_3.csv",
     "PERF_L3": "coordinator_micro.csv",
-    "PERF_NATIVE": "native_fftconv.csv",
+    # A tag may hold several CSVs (filled in order; missing ones skipped).
+    "PERF_NATIVE": ["native_fftconv.csv", "native_step.csv", "native_serve.csv"],
     "PERF_L2": "perf_donation.csv",
 }
 
@@ -45,20 +46,27 @@ def csv_to_md(path: str) -> str:
 def main() -> None:
     md_path = os.path.join(ROOT, "EXPERIMENTS.md")
     text = open(md_path).read()
-    for tag, fname in TAGS.items():
-        path = os.path.join(ROOT, "results", fname)
+    for tag, fnames in TAGS.items():
+        if isinstance(fnames, str):
+            fnames = [fnames]
         marker = f"<!-- {tag} -->"
         if marker not in text:
             continue
-        if not os.path.exists(path):
-            print(f"  {tag}: {fname} missing, skipped")
+        tables, filled = [], []
+        for fname in fnames:
+            path = os.path.join(ROOT, "results", fname)
+            if not os.path.exists(path):
+                print(f"  {tag}: {fname} missing, skipped")
+                continue
+            tables.append(csv_to_md(path))
+            filled.append(fname)
+        if not tables:
             continue
-        table = csv_to_md(path)
-        # Replace marker + any previously inserted table (up to next header
-        # or marker) with marker + fresh table.
-        pattern = re.compile(re.escape(marker) + r"\n(?:\|[^\n]*\n)*")
-        text = pattern.sub(marker + "\n" + table, text)
-        print(f"  {tag}: filled from {fname}")
+        # Replace marker + any previously inserted tables (runs of |-lines,
+        # each optionally followed by one blank separator) with fresh ones.
+        pattern = re.compile(re.escape(marker) + r"\n(?:(?:\|[^\n]*\n)+\n?)*")
+        text = pattern.sub(marker + "\n" + "\n".join(tables), text)
+        print(f"  {tag}: filled from {', '.join(filled)}")
     open(md_path, "w").write(text)
 
 

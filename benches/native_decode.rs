@@ -1,0 +1,220 @@
+//! Streaming-decode bench: what one generated token costs under (a) the
+//! PR-3 decode loop (full-prefix recompute through the bucketed
+//! `Backend::infer` every round — O(L log L) per token) and (b) the PR-4
+//! session path (`decode_begin` prefill once, then `decode_step` serving
+//! each token as O(L) time-domain dots against per-session recurrence
+//! state — DESIGN.md §Decode). This is the CPU reproduction of the
+//! "fast autoregressive inference" the paper defers to future work:
+//! convolutional LMs decode at constant state, not constant prefix.
+//!
+//! Correctness is asserted while timing: the greedy token streams of the
+//! two paths must be identical at every length.
+//!
+//! Results print as a table and persist into `BENCH_native.json` (key
+//! `decode`) next to the FFTConv/train-step/serve numbers (EXPERIMENTS.md
+//! §Perf Native).
+//!
+//! Run: `cargo bench --bench native_decode -- [--iters 8] [--gen 32]
+//!        [--threads N] [--out BENCH_native.json] [--smoke]`
+//!
+//! `--smoke` (the `scripts/check.sh decode-smoke` perf gate) shrinks the
+//! run and fails hard if streamed decode is not ≥ 2× faster per token
+//! than full-recompute decode on the large (L = 4096) case.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use hyena::backend::native::{NativeBackend, NativeConfig};
+use hyena::backend::Backend;
+use hyena::coordinator::generation::{argmax, decode_batch, decode_batch_recompute, Sampling};
+use hyena::report::{merge_bench_json, Table};
+use hyena::util::cli::Args;
+use hyena::util::json::Json;
+use hyena::util::pool;
+use hyena::util::rng::Pcg;
+use hyena::util::stats::Summary;
+
+/// The op_hyena shape (paper E2 testbed) at an arbitrary window length.
+fn config_at(l: usize) -> Result<NativeConfig> {
+    let base = NativeConfig::builtin("op_hyena_L1024")
+        .ok_or_else(|| anyhow!("missing builtin op_hyena_L1024"))?;
+    Ok(NativeConfig { name: format!("op_hyena_L{l}"), seqlen: l, ..base })
+}
+
+fn time_runs<F: FnMut() -> i32>(iters: usize, mut f: F) -> Summary {
+    let mut s = Summary::new();
+    let mut sink = 0i64;
+    for i in 0..=iters {
+        let t0 = Instant::now();
+        sink += f() as i64;
+        let dt = t0.elapsed().as_secs_f64();
+        if i > 0 {
+            s.push(dt); // first run is warmup
+        }
+    }
+    assert!(sink > i64::MIN);
+    s
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
+    let iters = args.get_usize("iters", if smoke { 3 } else { 8 });
+    let gen = args.get_usize("gen", if smoke { 8 } else { 32 }).max(2);
+    let threads = args.get_usize("threads", pool::default_threads()).max(1);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let mut table = Table::new(
+        "§Perf Native — decode: full-recompute vs streamed sessions (1 request)",
+        &[
+            "L",
+            "prompt",
+            "new",
+            "recompute ms/tok",
+            "streamed ms/tok",
+            "step-only p50 ms",
+            "recompute/streamed",
+        ],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut smoke_ok = true;
+
+    for &l in &[1024usize, 4096] {
+        let cfg = config_at(l)?;
+        let v = cfg.vocab;
+        let mut backend =
+            NativeBackend::from_config(cfg, &PathBuf::from("artifacts").join("bench"), 0)?;
+        backend.model_mut().set_threads(threads);
+        let buckets = backend.model().bucket_lens();
+
+        let plen = l / 2;
+        let mut rng = Pcg::new(7);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.usize_below(v) as i32).collect();
+        println!(
+            "op_hyena_L{l}: prompt {plen}, {gen} new tokens, buckets {buckets:?}, \
+             {threads} threads"
+        );
+
+        // (a) PR-3 path: every round re-runs the growing prefix.
+        let mut out_rec: Vec<Vec<i32>> = Vec::new();
+        let rec = time_runs(iters, || {
+            let mut rng = Pcg::new(0);
+            out_rec = decode_batch_recompute(
+                &backend,
+                std::slice::from_ref(&prompt),
+                &[gen],
+                Sampling::Greedy,
+                &mut rng,
+            )
+            .unwrap();
+            out_rec[0][gen - 1]
+        });
+
+        // (b) streamed sessions end-to-end (prefill + steps).
+        let mut out_str: Vec<Vec<i32>> = Vec::new();
+        let str_total = time_runs(iters, || {
+            let mut rng = Pcg::new(0);
+            out_str = decode_batch(
+                &backend,
+                std::slice::from_ref(&prompt),
+                &[gen],
+                Sampling::Greedy,
+                &mut rng,
+            )
+            .unwrap();
+            out_str[0][gen - 1]
+        });
+        assert_eq!(
+            out_rec, out_str,
+            "greedy decode diverged between recompute and streamed at L={l}"
+        );
+
+        // Step-only latency: the steady-state per-token cost with the
+        // prefill amortized away (what a long generation converges to).
+        let mut logits = Vec::new();
+        let mut step_s = Summary::new();
+        for i in 0..=iters {
+            let mut sess = backend.decode_begin(&prompt, &mut logits).unwrap();
+            let mut tok = argmax(&logits);
+            let t0 = Instant::now();
+            for _ in 1..gen {
+                backend.decode_step(&mut sess, tok, &mut logits).unwrap();
+                tok = argmax(&logits);
+            }
+            let per = t0.elapsed().as_secs_f64() / (gen - 1) as f64;
+            backend.decode_end(sess);
+            if i > 0 {
+                step_s.push(per); // first run is warmup
+            }
+        }
+        let step_ms = step_s.p50() * 1e3;
+
+        let rec_tok_ms = rec.p50() * 1e3 / gen as f64;
+        let str_tok_ms = str_total.p50() * 1e3 / gen as f64;
+        let ratio = rec_tok_ms / str_tok_ms.max(1e-12);
+        println!(
+            "  recompute {rec_tok_ms:>9.3} ms/tok   streamed {str_tok_ms:>9.3} ms/tok   \
+             step-only {step_ms:>9.3} ms   ({ratio:.1}x)"
+        );
+        table.row(vec![
+            l.to_string(),
+            plen.to_string(),
+            gen.to_string(),
+            format!("{rec_tok_ms:.3}"),
+            format!("{str_tok_ms:.3}"),
+            format!("{step_ms:.3}"),
+            format!("{ratio:.2}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("seqlen", Json::num(l as f64)),
+            ("prompt_len", Json::num(plen as f64)),
+            ("new_tokens", Json::num(gen as f64)),
+            ("recompute_ms_per_tok", Json::num(rec_tok_ms)),
+            ("streamed_ms_per_tok", Json::num(str_tok_ms)),
+            ("step_only_ms", Json::num(step_ms)),
+            ("speedup", Json::num(ratio)),
+        ]));
+
+        // The gate: on the large case the streamed path must win ≥ 2×.
+        if l == 4096 && ratio < 2.0 {
+            smoke_ok = false;
+        }
+
+        // Session accounting must balance: every begin ended, state freed.
+        let stats = backend.model().serve_stats();
+        assert_eq!(
+            stats.decode_sessions_live, 0,
+            "decode sessions leaked at L={l}: {}",
+            stats.decode_sessions_live
+        );
+        assert!(stats.decode_steps > 0, "no streamed steps recorded at L={l}");
+        if l == 4096 {
+            merge_bench_json(
+                Path::new(&out_path),
+                "decode",
+                Json::obj(vec![
+                    ("model", Json::str("op_hyena_L{1024,4096}")),
+                    ("threads", Json::num(threads as f64)),
+                    ("rows", Json::Arr(std::mem::take(&mut json_rows))),
+                    ("decode_sessions_total", Json::num(stats.decode_sessions_total as f64)),
+                    ("decode_steps", Json::num(stats.decode_steps as f64)),
+                    ("decode_state_bytes", Json::num(stats.decode_state_bytes as f64)),
+                    (
+                        "serve_arena_hiwater_bytes",
+                        Json::num(stats.arena.hiwater_bytes as f64),
+                    ),
+                    ("serve_arena_allocs", Json::num(stats.arena.allocs as f64)),
+                ]),
+            )?;
+        }
+    }
+
+    table.emit("native_decode");
+    println!("bench ledger -> {out_path} (key: decode)");
+
+    if smoke && !smoke_ok {
+        bail!("decode-smoke gate: streamed decode was not ≥ 2× faster per token at L=4096");
+    }
+    Ok(())
+}

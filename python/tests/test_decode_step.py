@@ -1,0 +1,124 @@
+"""Numerical evidence for the streaming decode path (PR 4).
+
+The native Rust decode path keeps per-session histories of every long-conv
+input resident and serves each new position as a single time-domain dot
+against the buffered history — O(L) per token — falling back to the bucketed
+FFT path only for the prefill (DESIGN.md §Decode). The claims mirrored here:
+
+1. The incremental dot (`rust/src/backend/fft.rs::causal_dot_step`: a
+   forward dot of the history against the *reversed* filter tail) equals the
+   direct causal conv exactly, and the FFT conv to f32 round-off — so the
+   streamed token stream can be pinned token-identical against recompute.
+2. Composed through the Hyena recurrence (v ← gate ⊙ (h ∗ v + bias ⊙ v)),
+   stepping position-by-position from an FFT-prefilled history stays within
+   f32 round-off of recomputing the whole prefix with FFTs each round —
+   the exactness contract the Rust e2e tests pin at the model level.
+"""
+
+import numpy as np
+
+
+def causal_conv_fft_f32(h, v, l):
+    """f32 causal FFT conv at plan length l (CausalConv mirror)."""
+    n = 1 << int(np.ceil(np.log2(max(2 * l, 2))))
+    hp = np.zeros(n, dtype=np.float32)
+    vp = np.zeros(n, dtype=np.float32)
+    hp[:l] = h[:l].astype(np.float32)
+    vp[:l] = v[:l].astype(np.float32)
+    spec = (np.fft.rfft(hp) * np.fft.rfft(vp)).astype(np.complex64)
+    return np.fft.irfft(spec, n=n).astype(np.float32)[:l]
+
+
+def causal_dot_step(hrev, hist):
+    """One streaming conv output: y[t] = Σ_{s≤t} h[t−s]·v[s], as the forward
+    f32 dot of the history against the reversed filter's tail (the layout of
+    `causal_dot_step` in fft.rs)."""
+    n = len(hist)
+    tail = hrev[len(hrev) - n :].astype(np.float32)
+    return np.float32(np.dot(tail, hist.astype(np.float32)))
+
+
+def test_incremental_dot_matches_direct_conv_exactly_in_shape():
+    """Position-by-position streaming equals the direct O(L²) conv."""
+    rng = np.random.default_rng(1)
+    for l in (1, 7, 64, 300):
+        h = rng.standard_normal(l).astype(np.float32)
+        v = rng.standard_normal(l).astype(np.float32)
+        hrev = h[::-1].copy()
+        direct = np.convolve(h.astype(np.float64), v.astype(np.float64))[:l]
+        for t in range(l):
+            got = causal_dot_step(hrev, v[: t + 1])
+            assert abs(got - direct[t]) <= 1e-4 * (1.0 + abs(direct[t])), (
+                f"L={l} t={t}: {got} vs {direct[t]}"
+            )
+
+
+def test_incremental_dot_agrees_with_fft_conv():
+    """The decode dot vs the serving path's FFT conv: f32 round-off only.
+    This is the cross-method error budget behind the Rust 1e-3 logits
+    tolerance and the token-identical greedy pin."""
+    rng = np.random.default_rng(2)
+    worst = 0.0
+    for l in (64, 256, 1024, 4096):
+        h = rng.standard_normal(l).astype(np.float32)
+        v = rng.standard_normal(l).astype(np.float32)
+        hrev = h[::-1].copy()
+        y_fft = causal_conv_fft_f32(h, v, l)
+        for t in range(0, l, max(1, l // 64)):
+            got = causal_dot_step(hrev, v[: t + 1])
+            rel = abs(got - y_fft[t]) / (1.0 + abs(y_fft[t]))
+            worst = max(worst, rel)
+    assert worst < 2e-4, f"dot vs FFT conv drifted: {worst}"
+
+
+def hyena_recurrence_fft(z_value, gates, filters, biases, l):
+    """Reference: the order-N recurrence evaluated with full FFT convs over
+    the whole length (the recompute/serving path). Returns every v_order
+    history and the final output."""
+    v = z_value.astype(np.float32)
+    hists = []
+    for h, bias, gate in zip(filters, biases, gates):
+        hists.append(v.copy())
+        c = causal_conv_fft_f32(h, v, l) + np.float32(bias) * v
+        v = gate.astype(np.float32) * c
+    return hists, v
+
+
+def test_streamed_recurrence_matches_fft_recompute():
+    """FFT-prefill the first p positions, then stream positions p..l one at
+    a time with incremental dots (the DecodeState walk): the final outputs
+    must agree with full FFT recompute to f32 round-off."""
+    rng = np.random.default_rng(3)
+    n_order = 2
+    for l, p in ((64, 24), (256, 100), (1024, 500)):
+        z = rng.standard_normal(l).astype(np.float32)
+        gates = [rng.standard_normal(l).astype(np.float32) for _ in range(n_order)]
+        filters = [rng.standard_normal(l).astype(np.float32) for _ in range(n_order)]
+        biases = [np.float32(rng.standard_normal() * 0.2) for _ in range(n_order)]
+        hrevs = [h[::-1].copy() for h in filters]
+
+        # Full recompute reference.
+        _, want = hyena_recurrence_fft(z, gates, filters, biases, l)
+
+        # Prefill: histories of v_0..v_{N−1} for positions < p come from
+        # the FFT path at the prefix length (the bucketed prefill).
+        pre_hists, _ = hyena_recurrence_fft(z[:p], [g[:p] for g in gates], filters, biases, p)
+        hists = [np.zeros(l, dtype=np.float32) for _ in range(n_order)]
+        for o in range(n_order):
+            hists[o][:p] = pre_hists[o]
+
+        # Stream positions p..l: append v_order[t], dot, gate — the exact
+        # walk of `NativeModel::decode_step_into`.
+        out = np.zeros(l, dtype=np.float32)
+        for t in range(p, l):
+            v_t = z[t]
+            for o in range(n_order):
+                hists[o][t] = v_t
+                c = causal_dot_step(hrevs[o], hists[o][: t + 1]) + biases[o] * hists[o][t]
+                v_t = gates[o][t] * c
+            out[t] = v_t
+
+        rel = np.max(
+            np.abs(out[p:] - want[p:]) / (1.0 + np.maximum(np.abs(out[p:]), np.abs(want[p:])))
+        )
+        assert rel < 2e-3, f"L={l} p={p}: streamed recurrence drifted {rel}"

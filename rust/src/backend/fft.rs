@@ -612,6 +612,37 @@ impl ComplexCausalConv {
     }
 }
 
+// ---------------------------------------------------------------------------
+// streaming decode kernel
+// ---------------------------------------------------------------------------
+
+/// One streaming causal-convolution output — the decode-path replacement
+/// for the FFT (DESIGN.md §Decode).
+///
+/// For a filter `h` and signal `v`, the causal conv at position `t` is
+/// `y[t] = Σ_{s≤t} h[t−s]·v[s]`. During decode the signal history
+/// `v[0..=t]` is appended one position per token, so the new output is a
+/// single O(t) dot product instead of an O(L log L) transform.
+///
+/// History layout: `hist` is the signal history `v[0..=t]` in forward time
+/// order (an append-only prefix of a length-`L` row). `hrev` is the filter
+/// **reversed** (`hrev[k] = h[L−1−k]`, length `L ≥ hist.len()`): reversing
+/// the filter once at cache-build time turns the convolution's backward
+/// walk into a forward dot of two contiguous slices — the inner loop the
+/// compiler can vectorize, with a fixed serial accumulation order so
+/// results are bitwise identical for any thread count.
+#[inline]
+pub fn causal_dot_step(hrev: &[f32], hist: &[f32]) -> f32 {
+    let n = hist.len();
+    assert!(n >= 1 && hrev.len() >= n, "filter shorter than history");
+    let tail = &hrev[hrev.len() - n..];
+    let mut acc = 0.0f32;
+    for k in 0..n {
+        acc += tail[k] * hist[k];
+    }
+    acc
+}
+
 /// Reference O(L²) causal convolution (tests + the bench baseline).
 pub fn causal_conv_direct(h: &[f32], v: &[f32]) -> Vec<f32> {
     let l = v.len();
@@ -881,6 +912,43 @@ mod tests {
         let b = plan.conv(&h, &v);
         for t in 0..l {
             assert!(close(a[t], b[t], 1e-5));
+        }
+    }
+
+    #[test]
+    fn causal_dot_step_matches_direct_conv_position_by_position() {
+        // Streaming the history one position at a time through the reversed
+        // filter must reproduce every output of the direct O(L²) conv (the
+        // same accumulation order, so the agreement is bitwise).
+        Prop::new("causal dot step == direct conv").cases(64).check(|rng| {
+            let l = 1 + rng.usize_below(96);
+            let h = random_signal(rng, l);
+            let v = random_signal(rng, l);
+            let hrev: Vec<f32> = h.iter().rev().copied().collect();
+            let want = causal_conv_direct(&h, &v);
+            for t in 0..l {
+                let got = causal_dot_step(&hrev, &v[..=t]);
+                // Both sides accumulate h[t−s]·v[s] in ascending s — the
+                // arithmetic is identical, so equality is exact.
+                prop_assert!(got == want[t], "t={t}: {got} vs {}", want[t]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn causal_dot_step_agrees_with_fft_conv() {
+        // And against the FFT plan (different rounding → f32 round-off).
+        let mut rng = Pcg::new(23);
+        let l = 200usize;
+        let plan = CausalConv::new(l);
+        let h = random_signal(&mut rng, l);
+        let v = random_signal(&mut rng, l);
+        let hrev: Vec<f32> = h.iter().rev().copied().collect();
+        let fft = plan.conv(&h, &v);
+        for t in 0..l {
+            let got = causal_dot_step(&hrev, &v[..=t]);
+            assert!(close(got, fft[t], 2e-3), "t={t}: {got} vs {}", fft[t]);
         }
     }
 

@@ -43,10 +43,11 @@ pub struct MemReport {
     pub serve_arena_hiwater_bytes: usize,
     /// Fresh/grown allocations the serving arena has performed.
     pub serve_arena_allocs: u64,
-    /// Bytes held by cached per-bucket filter spectra.
+    /// Bytes held by the input-independent filter caches: per-bucket
+    /// spectra plus the decode path's reversed time-domain filters.
     pub serve_spec_bytes: usize,
-    /// Inference forward passes executed (decoding runs one per round per
-    /// batch, so this exceeds the request count by the mean decode length).
+    /// Inference forward passes executed (streaming decode runs one per
+    /// prefill; the recompute fallback runs one per decode round).
     pub serve_forwards: u64,
     /// Serving bucket lengths, ascending (last = full seqlen).
     pub bucket_lens: Vec<usize>,
@@ -54,6 +55,90 @@ pub struct MemReport {
     /// counted at the point of plan selection, so an all-full-bucket
     /// histogram is direct evidence of a full-pad fallback.
     pub bucket_hits: Vec<u64>,
+    /// Decode sessions currently holding streaming state.
+    pub decode_sessions_live: u64,
+    /// Engine-level decode sessions begun over the engine's lifetime.
+    /// Counts every prefill that builds session state, so mid-session
+    /// stale-state rebuilds (after a parameter update) and failed prefill
+    /// attempts are included — this can exceed the caller-visible session
+    /// count, never undercount it.
+    pub decode_sessions_total: u64,
+    /// Tokens served through the streaming `decode_step` path (recompute
+    /// fallbacks do not count — zero here under decode traffic is direct
+    /// evidence the engine is re-running prefixes).
+    pub decode_steps: u64,
+    /// Bytes held by live per-session ring buffers / channel histories.
+    pub decode_state_bytes: usize,
+}
+
+/// One autoregressive decode request in flight (DESIGN.md §Decode).
+///
+/// The portable state is the token sequence itself: the default trait
+/// implementation re-runs the growing prefix through [`Backend::infer`]
+/// every step, which is correct for any engine. Engines with a streaming
+/// path (the native backend's per-request recurrence state) stash their
+/// private state in `ext` and serve each step at O(L) instead of
+/// O(L log L); if that state goes stale (a parameter update mid-session)
+/// they rebuild it from `tokens`, so the session is always resumable.
+pub struct DecodeSession {
+    /// Prompt + generated tokens so far (grows by one per `decode_step`).
+    tokens: Vec<i32>,
+    /// Steps served through this session.
+    steps: u64,
+    /// Engine-private streaming state (`None` for recompute engines).
+    ext: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl DecodeSession {
+    /// Begin a session over `prompt` with no engine-private state (the
+    /// recompute default). Engine overrides attach state via
+    /// [`DecodeSession::set_ext`].
+    pub fn new(prompt: &[i32]) -> DecodeSession {
+        DecodeSession { tokens: prompt.to_vec(), steps: 0, ext: None }
+    }
+
+    /// Prompt + generated tokens so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Current sequence length (prompt + generated).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Steps served through this session.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Attach engine-private streaming state.
+    pub fn set_ext(&mut self, ext: Box<dyn std::any::Any + Send>) {
+        self.ext = Some(ext);
+    }
+
+    /// Borrow the engine-private state as `T` (None if absent or foreign).
+    pub fn ext_mut<T: 'static>(&mut self) -> Option<&mut T> {
+        self.ext.as_mut().and_then(|e| e.downcast_mut::<T>())
+    }
+
+    /// Detach the engine-private state as `T` (None if absent or foreign).
+    pub fn take_ext<T: 'static>(&mut self) -> Option<Box<T>> {
+        match self.ext.take() {
+            Some(e) => match e.downcast::<T>() {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    self.ext = Some(e);
+                    None
+                }
+            },
+            None => None,
+        }
+    }
 }
 
 /// A model engine the coordinator can drive.
@@ -116,6 +201,67 @@ pub trait Backend {
         }
         Tensor::from_f32(&[rows, l, vocab], out)
     }
+
+    /// Begin a streaming decode session over `prompt`: run the prefill and
+    /// write the last position's `(V,)` logits row into `logits`.
+    ///
+    /// The default prefills through [`Backend::infer`] and keeps no engine
+    /// state, so each subsequent [`Backend::decode_step`] re-runs the whole
+    /// prefix — today's recompute decode, correct for any engine (PJRT is
+    /// untouched). The native backend overrides the pair with per-session
+    /// recurrence state and O(L)-per-token steps (DESIGN.md §Decode).
+    fn decode_begin(&self, prompt: &[i32], logits: &mut Vec<f32>) -> Result<DecodeSession> {
+        let full = self.manifest().seqlen()?;
+        if prompt.is_empty() || prompt.len() >= full {
+            bail!("prompt length {} out of range (1..{full})", prompt.len());
+        }
+        let sess = DecodeSession::new(prompt);
+        let v = self.manifest().vocab()?;
+        let l = sess.tokens.len();
+        let t = self.infer(&sess.tokens, 1, l)?;
+        logits.clear();
+        logits.extend_from_slice(&t.as_f32()?[(l - 1) * v..l * v]);
+        Ok(sess)
+    }
+
+    /// Advance a session by one token: append `token` to the sequence and
+    /// write the `(V,)` logits row at its position into `logits`. Fails at
+    /// the model's window edge (callers stop rows there).
+    fn decode_step(
+        &self,
+        sess: &mut DecodeSession,
+        token: i32,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let full = self.manifest().seqlen()?;
+        if sess.tokens.len() >= full {
+            bail!("decode session is at the window edge (length {full})");
+        }
+        sess.tokens.push(token);
+        let l = sess.tokens.len();
+        let res = self.infer(&sess.tokens, 1, l).and_then(|t| {
+            let v = self.manifest().vocab()?;
+            logits.clear();
+            logits.extend_from_slice(&t.as_f32()?[(l - 1) * v..l * v]);
+            Ok(())
+        });
+        match res {
+            Ok(()) => {
+                sess.steps += 1;
+                Ok(())
+            }
+            Err(e) => {
+                // Keep the session consistent on failure: the token was
+                // not consumed, so it must not stay in the history.
+                sess.tokens.pop();
+                Err(e)
+            }
+        }
+    }
+
+    /// Finish a session, releasing any engine-private state back to the
+    /// engine's workspaces. The recompute default has none to release.
+    fn decode_end(&self, _sess: DecodeSession) {}
 
     /// Serving bucket lengths, ascending. Engines without shape bucketing
     /// report the single compiled seqlen.
@@ -235,41 +381,42 @@ mod tests {
         assert_eq!(params.len(), model.manifest().params.len());
     }
 
+    /// A wrapper that delegates the required methods but keeps every trait
+    /// default (`infer`, `decode_begin/step/end`), so the pad-and-slice and
+    /// recompute-decode fallbacks themselves are covered.
+    struct PadOnly(Box<dyn Backend>);
+    impl Backend for PadOnly {
+        fn manifest(&self) -> &Manifest {
+            self.0.manifest()
+        }
+        fn step(&self) -> u64 {
+            self.0.step()
+        }
+        fn set_step(&mut self, step: u64) {
+            self.0.set_step(step)
+        }
+        fn reinit(&mut self, seed: i32) -> Result<()> {
+            self.0.reinit(seed)
+        }
+        fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
+            self.0.train_step(batch)
+        }
+        fn forward(&self, inputs: &[Tensor]) -> Result<Tensor> {
+            self.0.forward(inputs)
+        }
+        fn dump_filters(&self) -> Result<Tensor> {
+            self.0.dump_filters()
+        }
+        fn params_host(&self) -> Result<Vec<Tensor>> {
+            self.0.params_host()
+        }
+        fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
+            self.0.set_params(tensors)
+        }
+    }
+
     #[test]
     fn default_infer_pads_to_the_compiled_shape() {
-        // A wrapper that delegates everything but keeps the trait-default
-        // `infer`, so the pad-and-slice fallback itself is covered.
-        struct PadOnly(Box<dyn Backend>);
-        impl Backend for PadOnly {
-            fn manifest(&self) -> &Manifest {
-                self.0.manifest()
-            }
-            fn step(&self) -> u64 {
-                self.0.step()
-            }
-            fn set_step(&mut self, step: u64) {
-                self.0.set_step(step)
-            }
-            fn reinit(&mut self, seed: i32) -> Result<()> {
-                self.0.reinit(seed)
-            }
-            fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
-                self.0.train_step(batch)
-            }
-            fn forward(&self, inputs: &[Tensor]) -> Result<Tensor> {
-                self.0.forward(inputs)
-            }
-            fn dump_filters(&self) -> Result<Tensor> {
-                self.0.dump_filters()
-            }
-            fn params_host(&self) -> Result<Vec<Tensor>> {
-                self.0.params_host()
-            }
-            fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
-                self.0.set_params(tensors)
-            }
-        }
-
         let dir = PathBuf::from("artifacts/golden_tiny");
         let native = load(BackendKind::Native, &dir, 0).unwrap();
         let fallback = PadOnly(load(BackendKind::Native, &dir, 0).unwrap());
@@ -293,6 +440,48 @@ mod tests {
         // Out-of-range lengths are rejected.
         assert!(fallback.infer(&tokens, 1, 0).is_err());
         assert!(fallback.infer(&tokens, 1, 99).is_err());
+    }
+
+    #[test]
+    fn default_decode_session_recomputes_via_infer() {
+        // The trait-default decode session must reproduce, step by step,
+        // what re-running the growing prefix through `infer` yields — the
+        // contract that keeps recompute engines (pjrt) correct unchanged.
+        let dir = PathBuf::from("artifacts/golden_tiny");
+        let fallback = PadOnly(load(BackendKind::Native, &dir, 0).unwrap());
+        let v = fallback.manifest().vocab().unwrap();
+        let prompt = vec![1i32, 2, 3];
+
+        let mut logits = Vec::new();
+        let mut sess = fallback.decode_begin(&prompt, &mut logits).unwrap();
+        assert_eq!(sess.tokens(), &prompt[..]);
+        assert_eq!(sess.len(), 3);
+        assert_eq!(logits.len(), v);
+        let mut seq = prompt.clone();
+        for step in 0..4 {
+            let tok = crate::coordinator::generation::argmax(&logits);
+            seq.push(tok);
+            fallback.decode_step(&mut sess, tok, &mut logits).unwrap();
+            assert_eq!(sess.tokens(), &seq[..], "session tokens diverged at step {step}");
+            let want = fallback.infer(&seq, 1, seq.len()).unwrap();
+            let wf = want.as_f32().unwrap();
+            assert_eq!(
+                &logits[..],
+                &wf[(seq.len() - 1) * v..seq.len() * v],
+                "recompute-default step {step} diverged from infer"
+            );
+        }
+        assert_eq!(sess.steps(), 4);
+        fallback.decode_end(sess);
+
+        // Bounds: empty / over-long prompts are rejected, and a session at
+        // the window edge refuses further steps.
+        assert!(fallback.decode_begin(&[], &mut logits).is_err());
+        assert!(fallback.decode_begin(&[0; 16], &mut logits).is_err());
+        let mut edge = fallback.decode_begin(&[1; 15], &mut logits).unwrap();
+        fallback.decode_step(&mut edge, 2, &mut logits).unwrap();
+        assert!(fallback.decode_step(&mut edge, 2, &mut logits).is_err());
+        fallback.decode_end(edge);
     }
 
     #[test]

@@ -16,14 +16,14 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{Backend, MemReport};
+use crate::backend::{Backend, DecodeSession, MemReport};
 use crate::metrics::flops::{flops_per_step, flops_per_token, FlopShape};
 use crate::runtime::manifest::ParamSpec;
 use crate::runtime::tensor::DType;
 use crate::runtime::{Manifest, Tensor};
 
 pub use config::NativeConfig;
-pub use model::NativeModel;
+pub use model::{DecodeState, NativeModel};
 
 /// A native model plus the synthesized manifest that makes it
 /// indistinguishable from an artifact-backed model to the coordinator.
@@ -69,6 +69,38 @@ impl NativeBackend {
     /// see [`NativeModel::set_threads`]).
     pub fn model_mut(&mut self) -> &mut NativeModel {
         &mut self.model
+    }
+
+    /// One engine step for [`Backend::decode_step`], after `token` has been
+    /// appended to the session: streams against the resident state, or
+    /// rebuilds it from the session's tokens when stale or missing.
+    fn step_session(
+        &self,
+        sess: &mut DecodeSession,
+        token: i32,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        // Streaming fast path: one O(L) step against the session state.
+        let streamed = match sess.ext_mut::<DecodeState>() {
+            Some(state) if !self.model.decode_state_stale(state) => {
+                self.model.decode_step_into(state, token, logits)?;
+                true
+            }
+            _ => false,
+        };
+        if !streamed {
+            // Stale (a parameter update landed mid-session) or missing
+            // state: rebuild it from the session's tokens — prefill the
+            // prefix, then stream the new token through the fresh state.
+            if let Some(old) = sess.take_ext::<DecodeState>() {
+                self.model.decode_end_state(*old);
+            }
+            let prefix = &sess.tokens[..sess.tokens.len() - 1];
+            let mut state = self.model.decode_begin_state(prefix, logits)?;
+            self.model.decode_step_into(&mut state, token, logits)?;
+            sess.set_ext(Box::new(state));
+        }
+        Ok(())
     }
 }
 
@@ -181,6 +213,44 @@ impl Backend for NativeBackend {
         Tensor::from_f32(&[rows, l, self.model.cfg.vocab], logits)
     }
 
+    fn decode_begin(&self, prompt: &[i32], logits: &mut Vec<f32>) -> Result<DecodeSession> {
+        let state = self.model.decode_begin_state(prompt, logits)?;
+        let mut sess = DecodeSession::new(prompt);
+        sess.set_ext(Box::new(state));
+        Ok(sess)
+    }
+
+    fn decode_step(
+        &self,
+        sess: &mut DecodeSession,
+        token: i32,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let full = self.model.cfg.seqlen;
+        if sess.len() >= full {
+            bail!("decode session is at the window edge (length {full})");
+        }
+        sess.tokens.push(token);
+        match self.step_session(sess, token, logits) {
+            Ok(()) => {
+                sess.steps += 1;
+                Ok(())
+            }
+            Err(e) => {
+                // The token was not consumed by the engine; keep the
+                // session's history consistent with its state.
+                sess.tokens.pop();
+                Err(e)
+            }
+        }
+    }
+
+    fn decode_end(&self, mut sess: DecodeSession) {
+        if let Some(state) = sess.take_ext::<DecodeState>() {
+            self.model.decode_end_state(*state);
+        }
+    }
+
     fn serve_buckets(&self) -> Vec<usize> {
         self.model.bucket_lens()
     }
@@ -202,6 +272,10 @@ impl Backend for NativeBackend {
             serve_forwards: serve.forwards,
             bucket_lens: serve.bucket_lens,
             bucket_hits: serve.bucket_hits,
+            decode_sessions_live: serve.decode_sessions_live,
+            decode_sessions_total: serve.decode_sessions_total,
+            decode_steps: serve.decode_steps,
+            decode_state_bytes: serve.decode_state_bytes,
         })
     }
 

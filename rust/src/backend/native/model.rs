@@ -440,9 +440,11 @@ struct ServeBucket {
 }
 
 /// Persistent inference workspace: one buffer arena plus per-bucket conv
-/// contexts and cached filter spectra. Owned by the model behind a `Mutex`
-/// (the `Backend` forward surface is `&self`), so a steady-state request
-/// allocates nothing — buffers, FFT scratch and spectra all round-trip.
+/// contexts, cached filter spectra, and the decode-path caches (reversed
+/// time-domain filters + per-session accounting). Owned by the model behind
+/// a `Mutex` (the `Backend` forward surface is `&self`), so a steady-state
+/// request allocates nothing — buffers, FFT scratch and spectra all
+/// round-trip.
 #[derive(Default)]
 struct ServeState {
     arena: Arena,
@@ -451,11 +453,26 @@ struct ServeState {
     /// Params epoch the cached spectra were built at.
     epoch: u64,
     forwards: u64,
+    /// Per-block time-domain filters for the streaming decode dot kernel,
+    /// each `(N·D, L)` with every row **reversed** (`causal_dot_step`'s
+    /// layout — reversing once at cache-build time makes each step a
+    /// forward dot). Built lazily per params epoch, like the spectra.
+    decode_filt: Vec<Vec<f32>>,
+    /// Decode sessions currently holding streaming state.
+    sessions_live: u64,
+    /// Decode sessions begun over the model's lifetime.
+    sessions_total: u64,
+    /// Tokens served through the streaming step path.
+    decode_steps: u64,
+    /// f32 elements checked out into live decode states (rings+histories).
+    decode_state_elems: usize,
 }
 
 impl ServeState {
     /// Re-key the state to the current plan ladder and parameter epoch,
-    /// recycling stale cached spectra into the arena.
+    /// recycling stale cached spectra (and decode filters) into the arena.
+    /// Live decode states are *not* touched — they carry their own epoch
+    /// and the session layer re-prefills stale ones from their tokens.
     fn sync(&mut self, epoch: u64, levels: usize) {
         if self.buckets.len() != levels {
             let old = std::mem::take(&mut self.buckets);
@@ -466,6 +483,9 @@ impl ServeState {
                 }
             }
             self.buckets = (0..levels).map(|_| ServeBucket::default()).collect();
+            for f in self.decode_filt.drain(..) {
+                self.arena.put(f);
+            }
             self.epoch = epoch;
         } else if self.epoch != epoch {
             for bkt in self.buckets.iter_mut() {
@@ -474,31 +494,103 @@ impl ServeState {
                     self.arena.put(s.im);
                 }
             }
+            for f in self.decode_filt.drain(..) {
+                self.arena.put(f);
+            }
             self.epoch = epoch;
         }
     }
 
+    /// Bytes held by the input-independent filter caches: per-bucket half
+    /// spectra plus the decode path's reversed time-domain filters.
     fn spec_bytes(&self) -> usize {
-        self.buckets
+        let spectra: usize = self
+            .buckets
             .iter()
             .flat_map(|b| b.spec.iter())
             .map(|s| (s.re.len() + s.im.len()) * std::mem::size_of::<f32>())
-            .sum()
+            .sum();
+        let filt: usize =
+            self.decode_filt.iter().map(|f| f.len() * std::mem::size_of::<f32>()).sum();
+        spectra + filt
     }
 }
 
 /// Snapshot of the serving workspace for the serve report.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
-    /// Inference forward passes executed (one per decode round per batch).
+    /// Inference forward passes executed (streaming decode: one per
+    /// prefill; recompute decode: one per round per batch).
     pub forwards: u64,
     pub arena: ArenaStats,
-    /// Bytes held by cached per-bucket filter spectra.
+    /// Bytes held by the cached per-bucket filter spectra + the decode
+    /// path's reversed time-domain filters.
     pub spec_bytes: usize,
     /// Bucket signal lengths, ascending (last = full L).
     pub bucket_lens: Vec<usize>,
     /// Requests served per bucket, aligned with `bucket_lens`.
     pub bucket_hits: Vec<u64>,
+    /// Decode sessions currently holding streaming state.
+    pub decode_sessions_live: u64,
+    /// Engine-level decode sessions begun over the model's lifetime
+    /// (every state-building prefill counts, including mid-session
+    /// stale-state rebuilds and failed prefill attempts).
+    pub decode_sessions_total: u64,
+    /// Tokens served through the streaming `decode_step_into` path.
+    pub decode_steps: u64,
+    /// Bytes held by live per-session ring buffers / channel histories.
+    pub decode_state_bytes: usize,
+}
+
+// ---------------------------------------------------------------------------
+// streaming decode state (per-request recurrence state)
+// ---------------------------------------------------------------------------
+
+/// Channels per parallel task in the decode-step dot kernel: the per-channel
+/// dots are O(t) each, so a handful of channels amortizes pool dispatch
+/// while keeping enough tasks to balance.
+const DECODE_CH_BLOCK: usize = 16;
+
+/// Per-block streaming state of one decode session.
+struct DecodeBlockState {
+    /// Ring of the last `F−1` pre-short-conv projection rows `(F−1, C)`;
+    /// position `t`'s row lives in slot `t mod (F−1)`. Empty when `F ≤ 1`.
+    short_tail: Vec<f32>,
+    /// Histories of the long-conv inputs `v_0..v_{N−1}`: `N` buffers of
+    /// `(D, L)` channel-major rows, append-only in `t`.
+    hist: Vec<Vec<f32>>,
+}
+
+/// Per-request streaming decode state (DESIGN.md §Decode): everything the
+/// model needs to emit the *next* token in O(L) time without re-running the
+/// prefix. Built by [`NativeModel::decode_begin_state`] (a bucketed-FFT
+/// prefill that captures the histories as a side effect), advanced by
+/// [`NativeModel::decode_step_into`] (time-domain dots against the buffered
+/// histories — no FFT), released by [`NativeModel::decode_end_state`]
+/// (every buffer returns to the serving arena, so steady-state session
+/// churn allocates nothing).
+pub struct DecodeState {
+    /// Positions consumed so far (prompt + generated).
+    pos: usize,
+    /// Params epoch the histories were built at; on mismatch the state is
+    /// stale and the session layer re-prefills from its tokens.
+    epoch: u64,
+    blocks: Vec<DecodeBlockState>,
+}
+
+impl DecodeState {
+    /// Positions consumed so far (prompt + generated).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// f32 elements held by this state's ring/history buffers.
+    fn elems(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.short_tail.len() + b.hist.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -644,6 +736,13 @@ fn dense_bwd_db(dy: &[f32], rows: usize, dout: usize, db: &mut [f32]) {
 const LN_EPS: f32 = 1e-5;
 
 /// Pre-LN layer norm over the last axis; overwrites `y`, `xhat`, `rstd`.
+///
+/// The mean/variance reductions accumulate in **f64** (first slice of the
+/// ROADMAP f64-accumulation audit, DESIGN.md §Decode): the per-row sums are
+/// the only place forward-path round-off grows with the reduction width,
+/// and f64 accumulators cost nothing measurable next to the multiplies.
+/// The per-element normalization stays f32, so `xhat`/`rstd` keep their
+/// dtype and the backward formulas are unchanged.
 fn layer_norm_fwd_into(
     x: &[f32],
     g: &[f32],
@@ -659,17 +758,19 @@ fn layer_norm_fwd_into(
     assert_eq!(rstd.len(), rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
-        let mut mu = 0.0f32;
+        let mut mu = 0.0f64;
         for &v in xr {
-            mu += v;
+            mu += v as f64;
         }
-        mu /= d as f32;
-        let mut var = 0.0f32;
+        mu /= d as f64;
+        let mut var = 0.0f64;
         for &v in xr {
-            var += (v - mu) * (v - mu);
+            let dv = v as f64 - mu;
+            var += dv * dv;
         }
-        var /= d as f32;
-        let rs = 1.0 / (var + LN_EPS).sqrt();
+        var /= d as f64;
+        let rs = (1.0 / (var + LN_EPS as f64).sqrt()) as f32;
+        let mu = mu as f32;
         rstd[r] = rs;
         for i in 0..d {
             let xh = (xr[i] - mu) * rs;
@@ -1679,6 +1780,11 @@ impl NativeModel {
 
     /// Masked mean cross-entropy and its logits gradient (model.py `lm_loss`).
     /// `logits` is consumed and overwritten with `d(loss)/d(logits)`.
+    ///
+    /// The log-sum-exp and the masked loss sum accumulate in **f64** (the
+    /// other first-slice item of the f64-accumulation audit): the exp sum
+    /// runs over the vocab and the loss sum over `B·L` rows, both of which
+    /// drift visibly in f32 at large L (pinned by the drift test below).
     pub fn loss_and_dlogits(
         &self,
         logits: &mut [f32],
@@ -1688,19 +1794,19 @@ impl NativeModel {
         let vsz = self.cfg.vocab;
         let rows = logits.len() / vsz;
         let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-        let mut loss = 0.0f32;
+        let mut loss = 0.0f64;
         for r in 0..rows {
             let row = &mut logits[r * vsz..(r + 1) * vsz];
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut se = 0.0f32;
+            let mut se = 0.0f64;
             for &x in row.iter() {
-                se += (x - mx).exp();
+                se += ((x - mx) as f64).exp();
             }
-            let lse = mx + se.ln();
+            let lse = (mx as f64 + se.ln()) as f32;
             let tgt = (targets[r].max(0) as usize).min(vsz - 1);
             let mk = mask[r];
             if mk > 0.0 {
-                loss += (lse - row[tgt]) * mk;
+                loss += ((lse - row[tgt]) * mk) as f64;
             }
             // dlogits = (softmax − onehot) · mask / denom.
             let scale = mk / denom;
@@ -1709,7 +1815,7 @@ impl NativeModel {
             }
             row[tgt] -= scale;
         }
-        loss / denom
+        (loss / denom as f64) as f32
     }
 
     /// Backward from `dlogits` through the whole model into `grads`
@@ -2029,6 +2135,12 @@ impl NativeModel {
     /// serving sibling of `mixer_fwd`: identical per-row arithmetic, but
     /// recurrence states ping-pong through two arena buffers and the
     /// filters arrive as the bucket's cached spectra.
+    ///
+    /// `capture`, when set (single-row decode prefill), receives the
+    /// streaming side products: the short-conv tail (last `F−1` projection
+    /// rows) and the first `lq` positions of every long-conv input history
+    /// `v_0..v_{N−1}` — exactly the state `decode_step_into` needs to
+    /// continue the sequence one position at a time.
     fn mixer_infer(
         &self,
         bi: usize,
@@ -2039,6 +2151,7 @@ impl NativeModel {
         spec_h: &SpecBank,
         ctxs: &Mutex<Vec<ConvCtx>>,
         arena: &mut Arena,
+        mut capture: Option<(&mut DecodeBlockState, usize)>,
     ) -> Vec<f32> {
         let cfg = &self.cfg;
         let (d, n, f) = (cfg.width, cfg.order, cfg.short_filter);
@@ -2058,6 +2171,18 @@ impl NativeModel {
             c,
             &mut zp,
         );
+        if let Some((ds, lq)) = capture.as_mut() {
+            debug_assert_eq!(b, 1, "decode prefill captures a single row");
+            let f1 = f.saturating_sub(1);
+            if f1 > 0 && bix.short_w.is_some() {
+                // Ring slots for the last F−1 prompt positions (earlier
+                // rows are out of every future tap's reach).
+                for p in lq.saturating_sub(f1)..*lq {
+                    let slot = (p % f1) * c;
+                    ds.short_tail[slot..slot + c].copy_from_slice(&zp[p * c..(p + 1) * c]);
+                }
+            }
+        }
         let zs = match bix.short_w {
             Some(sw) => {
                 let mut zs = arena.take(rows * c);
@@ -2083,6 +2208,16 @@ impl NativeModel {
         let bias = self.p(bix.bias);
         let mut vnext = arena.take(b * d * lb);
         for order in 0..n {
+            if let Some((ds, lq)) = capture.as_mut() {
+                // vcur holds the conv input v_order; bank its first lq
+                // positions as the session's channel history.
+                let lfull = self.cfg.seqlen;
+                let dst = &mut ds.hist[order];
+                for ch in 0..d {
+                    dst[ch * lfull..ch * lfull + *lq]
+                        .copy_from_slice(&vcur[ch * lb..ch * lb + *lq]);
+                }
+            }
             {
                 let vview = SharedMut::new(&mut vnext);
                 pool.par_for_with(
@@ -2168,10 +2303,27 @@ impl NativeModel {
         lq: usize,
         out: &mut Vec<f32>,
     ) -> Result<usize> {
+        self.forward_infer_impl(tokens, b, lq, out, None)
+    }
+
+    /// The bucketed inference forward, optionally capturing streaming
+    /// decode state (`capture` ⇒ `b == 1`): the prefill side of
+    /// [`NativeModel::decode_begin_state`].
+    fn forward_infer_impl(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        lq: usize,
+        out: &mut Vec<f32>,
+        mut capture: Option<&mut DecodeState>,
+    ) -> Result<usize> {
         let cfg = &self.cfg;
         let (d, vsz, lfull) = (cfg.width, cfg.vocab, cfg.seqlen);
         if b == 0 {
             bail!("infer wants at least one row");
+        }
+        if capture.is_some() && b != 1 {
+            bail!("decode prefill captures exactly one row, got {b}");
         }
         if lq == 0 || lq > lfull {
             bail!("infer length {lq} out of range 1..={lfull}");
@@ -2244,7 +2396,9 @@ impl NativeModel {
                 &mut xhat,
                 &mut rstd,
             );
-            let mix = self.mixer_infer(blk, &t1, b, lb, plan, &bucket.spec[blk], ctxs, arena);
+            let cap_blk = capture.as_deref_mut().map(|s| (&mut s.blocks[blk], lq));
+            let mix =
+                self.mixer_infer(blk, &t1, b, lb, plan, &bucket.spec[blk], ctxs, arena, cap_blk);
             for i in 0..rows * d {
                 u[i] += mix[i];
             }
@@ -2331,6 +2485,321 @@ impl NativeModel {
         Ok((out, lb))
     }
 
+    // -- streaming decode (per-request recurrence state) ---------------------
+
+    /// Materialize the reversed time-domain filters of every block (the
+    /// decode dot kernel's layout) into the serving workspace, once per
+    /// params epoch. Caller holds the serve lock.
+    fn ensure_decode_filters(&self, st: &mut ServeState) {
+        if !st.decode_filt.is_empty() {
+            return;
+        }
+        let (l, n, d) = (self.cfg.seqlen, self.cfg.order, self.cfg.width);
+        for bi in 0..self.cfg.depth {
+            let hfilt = self.filter_fwd_len(bi, l, &mut st.arena);
+            let mut rev = st.arena.take(n * d * l);
+            for ch in 0..n * d {
+                let src = &hfilt[ch * l..(ch + 1) * l];
+                let dst = &mut rev[ch * l..(ch + 1) * l];
+                for t in 0..l {
+                    dst[t] = src[l - 1 - t];
+                }
+            }
+            st.arena.put(hfilt);
+            st.decode_filt.push(rev);
+        }
+    }
+
+    /// Begin a streaming decode session: prefill `prompt` through the
+    /// bucketed FFT path (capturing the per-block recurrence state as a
+    /// side effect), write the last position's `(V,)` logits into `logits`,
+    /// and return the live state. Every state buffer is drawn from the
+    /// serving arena; [`NativeModel::decode_end_state`] returns them, so
+    /// steady-state session churn allocates nothing.
+    pub fn decode_begin_state(
+        &self,
+        prompt: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Result<DecodeState> {
+        let cfg = &self.cfg;
+        let (l, d, n, f, vsz) = (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter, cfg.vocab);
+        if prompt.is_empty() || prompt.len() >= l {
+            bail!("prompt length {} out of range (1..{l})", prompt.len());
+        }
+        let p = prompt.len();
+        let c = (n + 1) * d;
+        let f1 = f.saturating_sub(1);
+
+        // Check the state's buffers (and a full-logits scratch) out of the
+        // serving arena.
+        let (mut state, mut scratch) = {
+            let mut guard = self.serve.lock().unwrap();
+            let st = &mut *guard;
+            st.sync(self.epoch, self.bank.levels());
+            let blocks = (0..cfg.depth)
+                .map(|_| DecodeBlockState {
+                    short_tail: if f1 > 0 { st.arena.take(f1 * c) } else { Vec::new() },
+                    hist: (0..n).map(|_| st.arena.take(d * l)).collect(),
+                })
+                .collect();
+            let state = DecodeState { pos: 0, epoch: self.epoch, blocks };
+            st.sessions_live += 1;
+            st.sessions_total += 1;
+            st.decode_state_elems += state.elems();
+            (state, st.arena.take(p * vsz))
+        };
+
+        let res = self.forward_infer_impl(prompt, 1, p, &mut scratch, Some(&mut state));
+        if res.is_ok() {
+            logits.clear();
+            logits.extend_from_slice(&scratch[(p - 1) * vsz..p * vsz]);
+        }
+        self.serve.lock().unwrap().arena.put(scratch);
+        match res {
+            Ok(_) => {
+                state.pos = p;
+                Ok(state)
+            }
+            Err(e) => {
+                self.decode_end_state(state);
+                Err(e)
+            }
+        }
+    }
+
+    /// Advance a session by one token at position `state.pos()`: the long
+    /// convolutions are evaluated as O(t) time-domain dots against the
+    /// buffered histories (no FFT), every other op runs at a single
+    /// position, and all step scratch round-trips through the serving
+    /// arena. Writes the `(V,)` logits row for the new position.
+    ///
+    /// Fails at the window edge or when the state predates a parameter
+    /// update (the session layer then re-prefills from its tokens).
+    pub fn decode_step_into(
+        &self,
+        state: &mut DecodeState,
+        token: i32,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (lfull, d, n, f, vsz) =
+            (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter, cfg.vocab);
+        let c = (n + 1) * d;
+        let dm = cfg.mlp_dim();
+        let t = state.pos;
+        if t >= lfull {
+            bail!("decode session is at the window edge (length {lfull})");
+        }
+        if state.epoch != self.epoch {
+            bail!("decode state predates a parameter update (re-prefill the session)");
+        }
+        let pool = &self.pool;
+
+        let mut guard = self.serve.lock().unwrap();
+        let st = &mut *guard;
+        st.sync(self.epoch, self.bank.levels());
+        self.ensure_decode_filters(st);
+        let ServeState { arena, decode_filt, .. } = &mut *st;
+
+        // Single-position residual stream: embedding + learned position.
+        let embed = self.p(self.layout.ix.embed);
+        let posw = self.p(self.layout.ix.pos);
+        let tok = (token.max(0) as usize).min(vsz - 1);
+        let mut u = arena.take(d);
+        for ch in 0..d {
+            u[ch] = embed[tok * d + ch] + posw[t * d + ch];
+        }
+
+        let mut t1 = arena.take(d);
+        let mut xhat = arena.take(d);
+        let mut rstd = arena.take(1);
+        let mut zp = arena.take(c);
+        let mut zs = arena.take(c);
+        let mut va = arena.take(d);
+        let mut vb = arena.take(d);
+        let mut pre = arena.take(dm);
+        let mut act = arena.take(dm);
+        let mut th = arena.take(dm);
+        let mut z = arena.take(d);
+
+        for blk in 0..cfg.depth {
+            let bix = &self.layout.ix.blocks[blk];
+            let ds = &mut state.blocks[blk];
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln1_g),
+                self.p(bix.ln1_b),
+                1,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.proj_w),
+                Some(self.p(bix.proj_b)),
+                1,
+                d,
+                c,
+                &mut zp,
+            );
+            // Depthwise short conv at one position, taps 1.. served from
+            // the ring of recent projection rows.
+            match bix.short_w {
+                Some(sw) => {
+                    let w = self.p(sw);
+                    for ch in 0..c {
+                        zs[ch] = w[ch * f] * zp[ch];
+                    }
+                    let f1 = f - 1;
+                    for tap in 1..f.min(t + 1) {
+                        let slot = ((t - tap) % f1) * c;
+                        let row = &ds.short_tail[slot..slot + c];
+                        for ch in 0..c {
+                            zs[ch] += w[ch * f + tap] * row[ch];
+                        }
+                    }
+                    if f1 > 0 {
+                        let slot = (t % f1) * c;
+                        ds.short_tail[slot..slot + c].copy_from_slice(&zp);
+                    }
+                }
+                None => zs.copy_from_slice(&zp),
+            }
+
+            // The recurrence (Def. 3.1) at one position: each long conv is
+            // an O(t) dot of the reversed filter against the history.
+            let bias = self.p(bix.bias);
+            let hrev_all = &decode_filt[blk];
+            va.copy_from_slice(&zs[..d]);
+            for order in 0..n {
+                {
+                    // Append v_order[t] to the history, then dot.
+                    let histo = &mut ds.hist[order];
+                    for ch in 0..d {
+                        histo[ch * lfull + t] = va[ch];
+                    }
+                }
+                {
+                    let histo = &ds.hist[order];
+                    let vview = SharedMut::new(&mut vb);
+                    pool.par_for(blocks_of(d, DECODE_CH_BLOCK), |cb| {
+                        let c0 = cb * DECODE_CH_BLOCK;
+                        let c1 = (c0 + DECODE_CH_BLOCK).min(d);
+                        // SAFETY: channel blocks partition `vb`.
+                        let outb = unsafe { vview.slice(c0, c1 - c0) };
+                        for (j, ch) in (c0..c1).enumerate() {
+                            let row = (order * d + ch) * lfull;
+                            let hrev = &hrev_all[row..row + lfull];
+                            let hist = &histo[ch * lfull..ch * lfull + t + 1];
+                            let y = crate::backend::fft::causal_dot_step(hrev, hist)
+                                + bias[order * d + ch] * va[ch];
+                            // Gate x^order lives in slot order+1 of zs.
+                            outb[j] = zs[(order + 1) * d + ch] * y;
+                        }
+                    });
+                }
+                std::mem::swap(&mut va, &mut vb);
+            }
+
+            // Out projection + residual, then the MLP half of the block.
+            dense_fwd_into(
+                pool,
+                &va,
+                self.p(bix.out_w),
+                Some(self.p(bix.out_b)),
+                1,
+                d,
+                d,
+                &mut z,
+            );
+            for ch in 0..d {
+                u[ch] += z[ch];
+            }
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln2_g),
+                self.p(bix.ln2_b),
+                1,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.mlp_w1),
+                Some(self.p(bix.mlp_b1)),
+                1,
+                d,
+                dm,
+                &mut pre,
+            );
+            gelu_fwd_into(pool, &pre, &mut act, &mut th);
+            dense_fwd_into(
+                pool,
+                &act,
+                self.p(bix.mlp_w2),
+                Some(self.p(bix.mlp_b2)),
+                1,
+                dm,
+                d,
+                &mut z,
+            );
+            for ch in 0..d {
+                u[ch] += z[ch];
+            }
+        }
+
+        let ix = &self.layout.ix;
+        layer_norm_fwd_into(
+            &u,
+            self.p(ix.lnf_g),
+            self.p(ix.lnf_b),
+            1,
+            d,
+            &mut t1,
+            &mut xhat,
+            &mut rstd,
+        );
+        logits.clear();
+        logits.resize(vsz, 0.0);
+        dense_fwd_into(pool, &t1, self.p(ix.head), None, 1, d, vsz, logits);
+
+        for v in [u, t1, xhat, rstd, zp, zs, va, vb, pre, act, th, z] {
+            arena.put(v);
+        }
+        st.decode_steps += 1;
+        state.pos = t + 1;
+        Ok(())
+    }
+
+    /// Finish a session: every ring/history buffer returns to the serving
+    /// arena and the live-session accounting is released.
+    pub fn decode_end_state(&self, state: DecodeState) {
+        let mut guard = self.serve.lock().unwrap();
+        let st = &mut *guard;
+        st.decode_state_elems = st.decode_state_elems.saturating_sub(state.elems());
+        st.sessions_live = st.sessions_live.saturating_sub(1);
+        for blk in state.blocks {
+            if blk.short_tail.capacity() > 0 {
+                st.arena.put(blk.short_tail);
+            }
+            for h in blk.hist {
+                st.arena.put(h);
+            }
+        }
+    }
+
+    /// Whether `state` predates the current parameters (the session layer
+    /// re-prefills stale sessions from their token history).
+    pub fn decode_state_stale(&self, state: &DecodeState) -> bool {
+        state.epoch != self.epoch
+    }
+
     /// Serving-workspace snapshot: inference-forward counts, arena
     /// accounting, cached spectra bytes, per-bucket hit counts.
     pub fn serve_stats(&self) -> ServeStats {
@@ -2345,6 +2814,10 @@ impl NativeModel {
             spec_bytes: st.spec_bytes(),
             bucket_lens: self.bank.lens(),
             bucket_hits,
+            decode_sessions_live: st.sessions_live,
+            decode_sessions_total: st.sessions_total,
+            decode_steps: st.decode_steps,
+            decode_state_bytes: st.decode_state_elems * std::mem::size_of::<f32>(),
         }
     }
 
@@ -2715,6 +3188,243 @@ mod tests {
         let after = m.train_arena_stats();
         assert_eq!(warm.allocs, after.allocs, "steady-state training still allocates");
         assert_eq!(warm.hiwater_bytes, after.hiwater_bytes);
+    }
+
+    /// Greedy argmax (mirror of `coordinator::generation::argmax` to keep
+    /// the backend tests free of coordinator imports).
+    fn amax(row: &[f32]) -> i32 {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .unwrap()
+    }
+
+    /// Recompute reference: decode `gen` greedy tokens by re-running the
+    /// growing prefix through the bucketed infer path each round, returning
+    /// the token stream and every sampled-position logits row.
+    fn recompute_decode(m: &NativeModel, prompt: &[i32], gen: usize) -> (Vec<i32>, Vec<Vec<f32>>) {
+        let v = m.cfg.vocab;
+        let mut seq = prompt.to_vec();
+        let (mut toks, mut rows) = (Vec::new(), Vec::new());
+        for _ in 0..gen {
+            let (lg, _) = m.forward_infer(&seq, 1, seq.len()).unwrap();
+            let row = lg[(seq.len() - 1) * v..seq.len() * v].to_vec();
+            let tok = amax(&row);
+            seq.push(tok);
+            toks.push(tok);
+            rows.push(row);
+        }
+        (toks, rows)
+    }
+
+    /// Streamed: one prefill, then `decode_step_into` per token.
+    fn streamed_decode(m: &NativeModel, prompt: &[i32], gen: usize) -> (Vec<i32>, Vec<Vec<f32>>) {
+        let mut logits = Vec::new();
+        let mut st = m.decode_begin_state(prompt, &mut logits).unwrap();
+        let (mut toks, mut rows) = (Vec::new(), Vec::new());
+        rows.push(logits.clone());
+        toks.push(amax(&logits));
+        for _ in 1..gen {
+            let tok = *toks.last().unwrap();
+            m.decode_step_into(&mut st, tok, &mut logits).unwrap();
+            rows.push(logits.clone());
+            toks.push(amax(&logits));
+        }
+        m.decode_end_state(st);
+        (toks, rows)
+    }
+
+    #[test]
+    fn streamed_decode_matches_recompute_across_bucket_boundaries() {
+        // golden_tiny buckets at [8, 16]: a 6-token prompt prefills in the
+        // small bucket and the stream crosses into full-window territory
+        // mid-generation. Greedy tokens must be identical to the
+        // full-recompute path; logits agree to f32 round-off (the FFT of
+        // the recompute path and the time-domain dot of the streamed path
+        // round differently — bitwise equality is impossible in principle,
+        // DESIGN.md §Decode).
+        let m = tiny();
+        let prompt = vec![3i32, 5, 7, 2, 9, 4];
+        let gen = 8;
+        let (rec_toks, rec_rows) = recompute_decode(&m, &prompt, gen);
+        let (str_toks, str_rows) = streamed_decode(&m, &prompt, gen);
+        assert_eq!(str_toks, rec_toks, "streamed greedy decode diverged from recompute");
+        for (k, (a, b)) in str_rows.iter().zip(rec_rows.iter()).enumerate() {
+            for (ch, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-3 * (1.0 + x.abs().max(y.abs())),
+                    "step {k} ch {ch}: streamed {x} vs recompute {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_decode_is_thread_count_invariant() {
+        // The per-channel dots are serial within a channel and channels
+        // partition the output, so streamed logits must be bitwise equal
+        // for any worker count.
+        let mut m1 = tiny();
+        let mut m3 = tiny();
+        m1.set_threads(1);
+        m3.set_threads(3);
+        let prompt = vec![1i32, 8, 2, 6];
+        let (t1, r1) = streamed_decode(&m1, &prompt, 6);
+        let (t3, r3) = streamed_decode(&m3, &prompt, 6);
+        assert_eq!(t1, t3);
+        assert_eq!(r1, r3, "thread count changed streamed decode logits");
+    }
+
+    #[test]
+    fn decode_session_churn_reaches_zero_alloc_steady_state() {
+        // Repeated begin → step → end cycles must stop growing the serving
+        // arena: all session state round-trips through it.
+        let m = tiny();
+        let prompt = vec![2i32, 4, 6];
+        let mut warm = None;
+        for _ in 0..10 {
+            streamed_decode(&m, &prompt, 5);
+            let s = m.serve_stats();
+            let snap = (s.arena.allocs, s.arena.hiwater_bytes);
+            if warm == Some(snap) {
+                break;
+            }
+            warm = Some(snap);
+        }
+        let warm = warm.unwrap();
+        for _ in 0..6 {
+            streamed_decode(&m, &prompt, 5);
+        }
+        let s = m.serve_stats();
+        assert_eq!(
+            (s.arena.allocs, s.arena.hiwater_bytes),
+            warm,
+            "steady-state decode sessions kept allocating"
+        );
+        assert_eq!(s.decode_sessions_live, 0, "sessions leaked");
+        // Warm loop runs ≥ 2 cycles before settling, plus the 6 pinned ones.
+        assert!(s.decode_sessions_total >= 8);
+        assert!(s.decode_steps >= 8 * 4);
+        assert_eq!(s.decode_state_bytes, 0, "state bytes leaked after decode_end");
+        assert!(s.spec_bytes > 0, "decode filters should be cached");
+    }
+
+    #[test]
+    fn decode_state_goes_stale_on_param_updates() {
+        let mut m = micro();
+        let prompt = vec![1i32, 2, 3];
+        let mut logits = Vec::new();
+        let mut st = m.decode_begin_state(&prompt, &mut logits).unwrap();
+        m.decode_step_into(&mut st, 5, &mut logits).unwrap();
+        assert!(!m.decode_state_stale(&st));
+        // An optimizer step bumps the params epoch: the streamed state must
+        // refuse to keep extrapolating from pre-update histories.
+        let (b, l, v) = (m.cfg.batch, m.cfg.seqlen, m.cfg.vocab);
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| i % v as i32).collect();
+        let mask = vec![1.0f32; b * l];
+        m.train_step(&tokens, &tokens, &mask, b).unwrap();
+        assert!(m.decode_state_stale(&st));
+        assert!(m.decode_step_into(&mut st, 5, &mut logits).is_err());
+        m.decode_end_state(st);
+        // A fresh session tracks the new parameters.
+        let st2 = m.decode_begin_state(&prompt, &mut logits).unwrap();
+        assert!(!m.decode_state_stale(&st2));
+        m.decode_end_state(st2);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_window_sessions() {
+        let m = micro(); // L = 8
+        let mut logits = Vec::new();
+        assert!(m.decode_begin_state(&[], &mut logits).is_err());
+        assert!(m.decode_begin_state(&[1; 8], &mut logits).is_err());
+        let mut st = m.decode_begin_state(&[1; 7], &mut logits).unwrap();
+        m.decode_step_into(&mut st, 2, &mut logits).unwrap(); // position 7
+        let err = m.decode_step_into(&mut st, 2, &mut logits);
+        assert!(err.is_err(), "stepped past the window edge");
+        m.decode_end_state(st);
+    }
+
+    #[test]
+    fn f64_accumulation_bounds_drift_at_8k() {
+        // First slice of the f64-accumulation audit (DESIGN.md §Decode):
+        // LN statistics and the CE log-sum-exp accumulate in f64. Pin the
+        // drift at reduction width 8192 against (a) an exact f64 reference
+        // and (b) the old f32-accumulated arithmetic.
+        let d = 8192usize;
+        let mut rng = Pcg::new(99);
+        // Large common mode: the f32 mean sum loses absolute precision and
+        // the variance then suffers cancellation.
+        let x: Vec<f32> = (0..d).map(|_| 3.0e4 + rng.normal()).collect();
+        let mu64 = x.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var64 =
+            x.iter().map(|&v| (v as f64 - mu64) * (v as f64 - mu64)).sum::<f64>() / d as f64;
+        let rs_ref = 1.0 / (var64 + LN_EPS as f64).sqrt();
+        // Old path: f32 accumulators (the pre-PR-4 kernel, inlined).
+        let mut mu32 = 0.0f32;
+        for &v in &x {
+            mu32 += v;
+        }
+        mu32 /= d as f32;
+        let mut var32 = 0.0f32;
+        for &v in &x {
+            var32 += (v - mu32) * (v - mu32);
+        }
+        var32 /= d as f32;
+        let rs32 = 1.0 / (var32 + LN_EPS).sqrt();
+        // Shipped kernel.
+        let (g, b) = (vec![1.0f32; d], vec![0.0f32; d]);
+        let (mut y, mut xh, mut rstd) = (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; 1]);
+        layer_norm_fwd_into(&x, &g, &b, 1, d, &mut y, &mut xh, &mut rstd);
+        let err_new = ((rstd[0] as f64) - rs_ref).abs() / rs_ref;
+        let err_old = ((rs32 as f64) - rs_ref).abs() / rs_ref;
+        assert!(err_new <= 5e-6, "f64-accumulated rstd drifted: {err_new}");
+        assert!(
+            err_new <= err_old,
+            "f64 accumulation did not improve on f32: {err_new} vs {err_old}"
+        );
+
+        // Log-sum-exp over an 8192-wide support: f64 accumulation of the
+        // exp sum must track the exact value tighter than the f32 sum.
+        let logits: Vec<f32> = (0..d).map(|_| rng.normal() * 3.0).collect();
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse_ref = mx as f64
+            + logits.iter().map(|&v| ((v - mx) as f64).exp()).sum::<f64>().ln();
+        let mut se32 = 0.0f32;
+        for &v in &logits {
+            se32 += (v - mx).exp();
+        }
+        let lse32 = (mx + se32.ln()) as f64;
+        let mut se64 = 0.0f64;
+        for &v in &logits {
+            se64 += ((v - mx) as f64).exp();
+        }
+        let lse64 = (mx as f64 + se64.ln()) as f32 as f64; // shipped: f64 sum, f32 store
+        assert!((lse64 - lse_ref).abs() <= (lse32 - lse_ref).abs() + 1e-6);
+        assert!((lse64 - lse_ref).abs() / lse_ref.abs() <= 1e-6);
+
+        // End-to-end: the shipped masked CE at 8K rows stays within 1e-5
+        // relative of a full-f64 mirror.
+        let m = micro();
+        let v = m.cfg.vocab;
+        let rows = 8192usize;
+        let mut lg: Vec<f32> = (0..rows * v).map(|_| rng.normal() * 2.0).collect();
+        let targets: Vec<i32> = (0..rows).map(|_| rng.usize_below(v) as i32).collect();
+        let mask = vec![1.0f32; rows];
+        let mut ref_loss = 0.0f64;
+        for r in 0..rows {
+            let row = &lg[r * v..(r + 1) * v];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let lse = mx + row.iter().map(|&x| (x as f64 - mx).exp()).sum::<f64>().ln();
+            ref_loss += lse - row[targets[r] as usize] as f64;
+        }
+        ref_loss /= rows as f64;
+        let got = m.loss_and_dlogits(&mut lg, &targets, &mask) as f64;
+        assert!(
+            (got - ref_loss).abs() / ref_loss.abs() <= 1e-5,
+            "CE drifted from the f64 mirror: {got} vs {ref_loss}"
+        );
     }
 
     #[test]

@@ -6,11 +6,20 @@
 //! serving trade-off between padding waste and queueing latency; the policy
 //! sweep is benchmarked in `benches/server.rs`.
 //!
-//! With shape-bucketed plans (`Batcher::take_batch_by_key`), a released
-//! batch additionally shares one *shape bucket*: the oldest request picks
-//! the bucket and the batch is filled with the queued requests of that
-//! bucket in FIFO order, so a short prompt is never padded to the full
-//! compiled length just because a long prompt was queued beside it.
+//! The **session-based** server (streaming decode, DESIGN.md §Decode) has
+//! no shape coupling between co-resident requests — each session prefills
+//! at its own prompt length and then steps one position at a time — so it
+//! admits FIFO via `Batcher::take_up_to`: the release policy above decides
+//! *when* the worker starts decoding from idle, and free capacity is
+//! refilled continuously while sessions are in flight.
+//!
+//! `Batcher::take_batch_by_key` remains for whole-batch consumers (the
+//! recompute decode path, `decode_batch_recompute`-style serving, or any
+//! engine whose released batch must share one *shape bucket*): the oldest
+//! request picks the bucket and the batch is filled with the queued
+//! requests of that bucket in FIFO order, so a short prompt is never
+//! padded to the full compiled length just because a long prompt was
+//! queued beside it.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -63,10 +72,16 @@ impl<T> Batcher<T> {
         })
     }
 
+    /// Pop up to `n` requests, FIFO — the session server's admission path
+    /// (capacity refill is `capacity − live_sessions`, not `batch_size`).
+    pub fn take_up_to(&mut self, n: usize) -> Vec<T> {
+        let k = self.queue.len().min(n);
+        self.queue.drain(..k).map(|(_, x)| x).collect()
+    }
+
     /// Pop up to `batch_size` requests, FIFO.
     pub fn take_batch(&mut self) -> Vec<T> {
-        let n = self.queue.len().min(self.batch_size);
-        self.queue.drain(..n).map(|(_, x)| x).collect()
+        self.take_up_to(self.batch_size)
     }
 
     /// Pop up to `batch_size` requests that share the *oldest* request's
@@ -125,6 +140,19 @@ mod tests {
         let b: Batcher<u32> = Batcher::new(2, Duration::from_millis(0));
         assert!(!b.ready(Instant::now()));
         assert_eq!(b.time_to_deadline(Instant::now()), None);
+    }
+
+    #[test]
+    fn take_up_to_respects_the_cap_and_fifo() {
+        let mut b = Batcher::new(8, Duration::from_secs(1));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push_at(now, i);
+        }
+        assert_eq!(b.take_up_to(2), vec![0, 1]);
+        assert_eq!(b.take_up_to(0), Vec::<i32>::new());
+        assert_eq!(b.take_up_to(99), vec![2, 3, 4]);
+        assert!(b.is_empty());
     }
 
     #[test]

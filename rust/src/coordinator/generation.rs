@@ -1,16 +1,23 @@
 //! Autoregressive decoding + token sampling.
 //!
 //! Hyena has no KV cache (it is convolutional; the paper defers fast
-//! autoregressive inference to future work), so decoding recomputes the
-//! forward pass per generated token. Each round runs through
-//! [`Backend::infer`] at the *current* frontier length rather than the full
-//! compiled window, so backends with shape-bucketed plans (the native
-//! engine) transform short sequences at small FFT sizes and grow buckets
-//! only as the sequences lengthen.
+//! autoregressive inference to future work), but its long convolutions
+//! admit **stateful streaming decode**: keep the per-block conv-input
+//! histories resident and each new token costs one O(L) time-domain dot
+//! per channel instead of an O(L log L) re-transform of the whole prefix
+//! (DESIGN.md §Decode). [`decode_batch`] therefore runs a *session loop*
+//! over [`Backend::decode_begin`]/[`Backend::decode_step`]: one prefill
+//! per request (through the engine's bucketed plans), then one step per
+//! token, with finished rows dropping out as they stop. Engines without a
+//! streaming path fall back to the trait default — recompute the growing
+//! prefix through [`Backend::infer`] each step — which is exactly the
+//! behaviour [`decode_batch_recompute`] preserves as the reference
+//! implementation (equivalence is pinned by tests and gated by
+//! `benches/native_decode.rs`).
 
 use anyhow::{bail, Result};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, DecodeSession};
 use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
@@ -42,8 +49,17 @@ pub fn sample_token(row: &[f32], s: Sampling, rng: &mut Pcg) -> i32 {
                 return argmax(row);
             }
             if top_k > 0 && top_k < idx.len() {
-                idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+                // O(V) selection instead of a full O(V log V) vocab sort
+                // per token. The comparator is a strict total order (logit
+                // descending, index ascending on ties), so the selected set
+                // — and, after the O(k log k) sort of the survivors, the
+                // exact ordering — is identical to the old full-sort path
+                // (pinned by `top_k_selection_matches_full_sort`).
+                let by_logit_desc =
+                    |a: &usize, b: &usize| row[*b].total_cmp(&row[*a]).then(a.cmp(b));
+                idx.select_nth_unstable_by(top_k - 1, by_logit_desc);
                 idx.truncate(top_k);
+                idx.sort_unstable_by(by_logit_desc);
             }
             let mx = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
             if !mx.is_finite() {
@@ -67,17 +83,41 @@ pub fn argmax(row: &[f32]) -> i32 {
         .unwrap_or(0)
 }
 
-/// Decode a *batch* of prompts together.
+/// Validate a decode request against the model window; returns `(L, V)`.
+fn check_decode_shapes(
+    model: &dyn Backend,
+    prompts: &[Vec<i32>],
+    max_new: &[usize],
+) -> Result<(usize, usize)> {
+    let b = model.manifest().batch()?;
+    let l = model.manifest().seqlen()?;
+    let v = model.manifest().vocab()?;
+    if prompts.len() > b {
+        bail!("{} prompts > compiled batch {}", prompts.len(), b);
+    }
+    if prompts.len() != max_new.len() {
+        bail!("{} prompts but {} max_new budgets", prompts.len(), max_new.len());
+    }
+    for s in prompts {
+        if s.is_empty() || s.len() >= l {
+            bail!("prompt length {} out of range (1..{})", s.len(), l);
+        }
+    }
+    Ok((l, v))
+}
+
+/// Decode a *batch* of prompts as resident streaming sessions.
 ///
-/// `prompts` are token id vectors (each < seqlen). Each round assembles the
-/// live rows at the current frontier length (the longest sequence so far)
-/// and runs [`Backend::infer`], which rounds the length up to the engine's
-/// smallest covering plan bucket — short prompts are served at a fraction
-/// of the full-window cost and buckets grow as the sequences lengthen. Rows
-/// shorter than the frontier are padded with 0 inside the engine; causality
-/// guarantees pad positions after a row's frontier cannot affect its
-/// next-token logits. Each row stops after its own `max_new` tokens or at
-/// the model's window edge. Returns the generated suffixes.
+/// One [`Backend::decode_begin`] prefill per request (the engine routes it
+/// through its smallest covering plan bucket), then rounds of
+/// [`Backend::decode_step`] over the still-live rows in row order — a row
+/// retires after its own `max_new` tokens or at the model's window edge,
+/// and retired rows stop costing anything (session-level row compaction).
+/// The native engine serves each step at O(L) from its per-session
+/// recurrence state; engines without a streaming path inherit the trait
+/// default, which recomputes the prefix through [`Backend::infer`] —
+/// functionally today's [`decode_batch_recompute`]. Returns the generated
+/// suffixes.
 pub fn decode_batch(
     model: &dyn Backend,
     prompts: &[Vec<i32>],
@@ -85,18 +125,86 @@ pub fn decode_batch(
     sampling: Sampling,
     rng: &mut Pcg,
 ) -> Result<Vec<Vec<i32>>> {
-    let b = model.manifest().batch()?;
-    let l = model.manifest().seqlen()?;
-    let v = model.manifest().vocab()?;
-    if prompts.len() > b {
-        bail!("{} prompts > compiled batch {}", prompts.len(), b);
-    }
-    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
-    for s in &seqs {
-        if s.is_empty() || s.len() >= l {
-            bail!("prompt length {} out of range (1..{})", s.len(), l);
+    let (l, _v) = check_decode_shapes(model, prompts, max_new)?;
+    let rows = prompts.len();
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];
+    let mut sessions: Vec<Option<DecodeSession>> = Vec::with_capacity(rows);
+    let mut logits = Vec::new();
+
+    // Prefill round: one session per request; sample its first token.
+    // Row order matches the step rounds so the rng stream is identical to
+    // the recompute loop's round-major order.
+    let mut result = Ok(());
+    for r in 0..rows {
+        if max_new[r] == 0 {
+            sessions.push(None);
+            continue;
+        }
+        match model.decode_begin(&prompts[r], &mut logits) {
+            Ok(sess) => {
+                out[r].push(sample_token(&logits, sampling, rng));
+                sessions.push(Some(sess));
+            }
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
         }
     }
+
+    // Step rounds over the live rows.
+    while result.is_ok() {
+        let mut stepped = false;
+        for r in 0..rows {
+            if sessions[r].is_none() {
+                continue;
+            }
+            // Retire: budget exhausted or (prompt + generated) at the
+            // window edge. The last sampled token needs no step.
+            if out[r].len() >= max_new[r] || prompts[r].len() + out[r].len() >= l {
+                model.decode_end(sessions[r].take().expect("session checked live"));
+                continue;
+            }
+            let tok = *out[r].last().expect("live row has a sampled token");
+            let sess = sessions[r].as_mut().expect("session checked live");
+            if let Err(e) = model.decode_step(sess, tok, &mut logits) {
+                result = Err(e);
+                break;
+            }
+            out[r].push(sample_token(&logits, sampling, rng));
+            stepped = true;
+        }
+        if !stepped {
+            break;
+        }
+    }
+    for sess in sessions.into_iter().flatten() {
+        model.decode_end(sess);
+    }
+    result.map(|_| out)
+}
+
+/// Decode a *batch* of prompts by full-prefix recompute — the pre-streaming
+/// reference path, kept for engines/tests/benches that want it explicitly.
+///
+/// Each round assembles the live rows at the current frontier length (the
+/// longest sequence so far) and runs [`Backend::infer`], which rounds the
+/// length up to the engine's smallest covering plan bucket — short prompts
+/// are served at a fraction of the full-window cost and buckets grow as
+/// the sequences lengthen. Rows shorter than the frontier are padded with
+/// 0 inside the engine; causality guarantees pad positions after a row's
+/// frontier cannot affect its next-token logits. Each row stops after its
+/// own `max_new` tokens or at the model's window edge. Returns the
+/// generated suffixes.
+pub fn decode_batch_recompute(
+    model: &dyn Backend,
+    prompts: &[Vec<i32>],
+    max_new: &[usize],
+    sampling: Sampling,
+    rng: &mut Pcg,
+) -> Result<Vec<Vec<i32>>> {
+    let (l, v) = check_decode_shapes(model, prompts, max_new)?;
+    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
     let rows = seqs.len();
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];
     let max_rounds = max_new.iter().copied().max().unwrap_or(0);
@@ -132,14 +240,15 @@ pub fn decode_batch(
 }
 
 /// Per-position logits row accessor used by few-shot scoring: returns the
-/// log-softmax score of `target` at position `pos` of row `r`.
+/// log-softmax score of `target` at position `pos` of row `r`. The exp sum
+/// accumulates in f64 (f64-accumulation audit, DESIGN.md §Decode).
 pub fn logprob_at(logits: &Tensor, r: usize, pos: usize, target: i32) -> Result<f32> {
     let shape = logits.shape();
     let (l, v) = (shape[1], shape[2]);
     let lf = logits.as_f32()?;
     let row = &lf[(r * l + pos) * v..(r * l + pos + 1) * v];
     let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+    let lse = (mx as f64 + row.iter().map(|x| ((x - mx) as f64).exp()).sum::<f64>().ln()) as f32;
     Ok(row[target as usize] - lse)
 }
 
@@ -214,6 +323,37 @@ mod tests {
         // All--inf rows degenerate deterministically too.
         let ninf = [f32::NEG_INFINITY, f32::NEG_INFINITY];
         let _ = sample_token(&ninf, Sampling::Temperature { t: 1.0, top_k: 0 }, &mut rng);
+    }
+
+    #[test]
+    fn top_k_selection_matches_full_sort() {
+        // The O(V) select_nth path must reproduce the old full-sort
+        // truncation exactly — same survivors, same order — including on
+        // rows with repeated logit values (ties break by ascending index
+        // under the strict total order, matching the stable sort).
+        let mut rng = Pcg::new(17);
+        for case in 0..200 {
+            let v = 2 + rng.usize_below(64);
+            let row: Vec<f32> = (0..v)
+                .map(|_| if rng.f32() < 0.3 { 1.0 } else { rng.normal() })
+                .collect();
+            let top_k = 1 + rng.usize_below(v);
+            // Reference: the pre-PR-4 implementation (stable full sort by
+            // logit descending, then truncate).
+            let mut want: Vec<usize> = (0..v).filter(|&i| !row[i].is_nan()).collect();
+            want.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+            want.truncate(top_k);
+            // The shipped path, reproduced on the same support.
+            let mut got: Vec<usize> = (0..v).filter(|&i| !row[i].is_nan()).collect();
+            if top_k > 0 && top_k < got.len() {
+                let by_logit_desc =
+                    |a: &usize, b: &usize| row[*b].total_cmp(&row[*a]).then(a.cmp(b));
+                got.select_nth_unstable_by(top_k - 1, by_logit_desc);
+                got.truncate(top_k);
+                got.sort_unstable_by(by_logit_desc);
+            }
+            assert_eq!(got, want, "case {case}: selection diverged (top_k={top_k})");
+        }
     }
 
     #[test]

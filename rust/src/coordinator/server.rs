@@ -1,23 +1,29 @@
-//! Threaded inference server with dynamic batching (serving-path L3).
+//! Threaded inference server with resident decode sessions (serving L3).
 //!
 //! XLA handles are `!Send` (and backends in general need not be), so the
 //! worker thread *constructs* its own [`Backend`] from the artifact path;
 //! clients and worker exchange plain host data (`Vec<i32>` token ids) over
-//! mpsc channels. The worker drains the queue through the `Batcher` policy
-//! (full-batch or deadline) and decodes the whole batch together —
-//! request-level continuous batching (iteration-level rebatching has no
-//! payoff without a KV cache; the paper defers fast autoregressive
-//! inference to future work).
+//! mpsc channels.
 //!
-//! **Shape-bucketed routing.** Each request is keyed by the smallest plan
-//! bucket (`Backend::serve_buckets`) covering its terminal length
-//! (`prompt + max_new`), and a released batch contains only requests of the
-//! oldest request's bucket. Decoding then runs through `Backend::infer` at
-//! the live frontier length, so short prompts are served at a fraction of
-//! the full-window FLOPs instead of being padded to the compiled L
-//! (DESIGN.md §Serving). The response reports the routed bucket
-//! (`bucket_len`) so callers — and `scripts/check.sh serve-smoke` — can
-//! detect a full-pad fallback.
+//! **Session loop.** The worker keeps up to `batch_size` *live decode
+//! sessions* ([`Backend::decode_begin`]): each is prefilled once at its own
+//! prompt length (routed through the engine's smallest covering plan
+//! bucket) and then advanced one token per round via
+//! [`Backend::decode_step`] — on the native engine an O(L) time-domain dot
+//! against per-session recurrence state, no prefix recompute (DESIGN.md
+//! §Decode). Sessions persist across batching rounds: finished requests
+//! retire and reply individually, and freed capacity is refilled from the
+//! queue *between token rounds* (iteration-level continuous batching —
+//! which now pays off precisely because sessions are stateful). Because
+//! sessions are shape-independent, admission is FIFO (`take_up_to`); the
+//! `Batcher` release policy (full batch or oldest-deadline) only decides
+//! when the worker starts decoding from idle. Each request keeps its own
+//! sampling policy.
+//!
+//! The response reports the prefill bucket (`bucket_len`) so callers — and
+//! `scripts/check.sh decode-smoke` — can detect a full-pad prefill, and
+//! `Backend::mem_report` exposes session counts / streamed-step counts so
+//! `--stream-decode` can verify the engine is actually streaming.
 //!
 //! The worker's native backend captures the process-wide worker pool
 //! (`util::pool`) at construction, so the server's forward passes and any
@@ -31,9 +37,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{self, Backend, BackendKind, MemReport};
+use crate::backend::{self, Backend, BackendKind, DecodeSession, MemReport};
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::generation::{decode_batch, Sampling};
+use crate::coordinator::generation::{sample_token, Sampling};
 use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
@@ -50,10 +56,13 @@ pub struct GenerateResponse {
     pub queue_time: Duration,
     /// Wall time from submission to completion.
     pub total_time: Duration,
-    /// How many requests shared the batch (observability).
+    /// Highest number of co-resident sessions observed while this request
+    /// was live (observability).
     pub batch_occupancy: usize,
-    /// Plan bucket the request was routed to (== compiled seqlen when the
-    /// engine has no shape buckets — the full-pad fallback).
+    /// Plan bucket the request's *prefill* was routed to (== compiled
+    /// seqlen when the engine has no shape buckets — the full-pad
+    /// fallback). Decode steps after prefill are bucket-free: they run at
+    /// a single position from the session state.
     pub bucket_len: usize,
 }
 
@@ -186,31 +195,49 @@ impl Server {
     }
 }
 
-/// Smallest bucket covering a request's terminal length (prompt + budget),
-/// clamped into the ladder — requests that will outgrow every bucket route
-/// to the largest (the full compiled length).
-fn bucket_for(env: &Envelope, buckets: &[usize]) -> usize {
-    let terminal = env.req.prompt.len() + env.req.max_new;
+/// Smallest bucket covering a prompt (the prefill's routing), clamped into
+/// the ladder — prompts that outgrow every bucket route to the largest
+/// (the full compiled length).
+fn bucket_for_prompt(prompt_len: usize, buckets: &[usize]) -> usize {
     buckets
         .iter()
         .copied()
-        .find(|&b| b >= terminal)
+        .find(|&b| b >= prompt_len)
         .or_else(|| buckets.last().copied())
-        .unwrap_or(terminal)
+        .unwrap_or(prompt_len)
+}
+
+/// One resident decode session inside the worker.
+struct LiveSession {
+    sess: DecodeSession,
+    reply: Sender<Result<GenerateResponse>>,
+    submitted: Instant,
+    entered: Instant,
+    sampling: Sampling,
+    max_new: usize,
+    prompt_len: usize,
+    bucket_len: usize,
+    /// Highest co-residency observed while live.
+    occupancy: usize,
+    /// Generated tokens; the last one is pending its decode step.
+    out: Vec<i32>,
 }
 
 fn worker_loop(
     model: Box<dyn Backend>,
     rx: Receiver<Msg>,
     shutdown: Receiver<()>,
-    batch_size: usize,
+    capacity: usize,
     max_wait: Duration,
     seed: u64,
 ) {
-    let mut batcher: Batcher<Envelope> = Batcher::new(batch_size, max_wait);
+    let mut batcher: Batcher<Envelope> = Batcher::new(capacity, max_wait);
     let mut rng = Pcg::with_stream(seed, 0x5e44);
-    // The plan ladder is fixed for the worker's lifetime.
+    // The plan ladder and window are fixed for the worker's lifetime.
     let buckets = model.serve_buckets();
+    let l_full = model.manifest().seqlen().unwrap_or(usize::MAX);
+    let mut live: Vec<LiveSession> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
     let handle = |msg: Msg, batcher: &mut Batcher<Envelope>| match msg {
         Msg::Gen(env) => batcher.push(env),
         Msg::Mem(reply) => {
@@ -218,24 +245,43 @@ fn worker_loop(
         }
     };
     loop {
-        // Drain everything currently queued on the channel.
+        // Drain everything currently queued on the channel — new arrivals
+        // join between token rounds, not after whole batches.
+        let mut disconnected = false;
         loop {
             match rx.try_recv() {
                 Ok(msg) => handle(msg, &mut batcher),
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
             }
         }
-        if shutdown.try_recv().is_ok() {
+        if disconnected || shutdown.try_recv().is_ok() {
+            // An admitted request always gets its reply (the old loop
+            // finished any batch it had taken before observing shutdown);
+            // queued-but-unadmitted requests are dropped, as before.
+            while !live.is_empty() {
+                step_round(model.as_ref(), &mut live, l_full, &mut rng, &mut logits);
+            }
             return;
         }
         let now = Instant::now();
-        if batcher.ready(now) {
-            let envs = batcher.take_batch_by_key(|env| bucket_for(env, &buckets));
-            serve_batch(model.as_ref(), envs, &buckets, &mut rng);
+        // Admission: while sessions are in flight, freed capacity refills
+        // immediately (sessions are shape-independent, so there is nothing
+        // to co-schedule); from idle, the batching policy (full batch or
+        // oldest-deadline) decides when decoding starts.
+        if live.len() < capacity && (!live.is_empty() || batcher.ready(now)) {
+            for env in batcher.take_up_to(capacity - live.len()) {
+                admit(model.as_ref(), env, &buckets, l_full, &mut live, &mut rng, &mut logits);
+            }
+        }
+        if !live.is_empty() {
+            step_round(model.as_ref(), &mut live, l_full, &mut rng, &mut logits);
             continue;
         }
-        // Sleep until the oldest deadline or a short poll tick.
+        // Idle: sleep until the oldest deadline or a short poll tick.
         let wait = batcher
             .time_to_deadline(now)
             .unwrap_or(Duration::from_millis(2))
@@ -247,33 +293,104 @@ fn worker_loop(
     }
 }
 
-fn serve_batch(model: &dyn Backend, envs: Vec<Envelope>, buckets: &[usize], rng: &mut Pcg) {
-    let occupancy = envs.len();
+/// Prefill one request into a live session and sample its first token.
+fn admit(
+    model: &dyn Backend,
+    env: Envelope,
+    buckets: &[usize],
+    l_full: usize,
+    live: &mut Vec<LiveSession>,
+    rng: &mut Pcg,
+    logits: &mut Vec<f32>,
+) {
     let entered = Instant::now();
-    let bucket_len = envs.first().map(|e| bucket_for(e, buckets)).unwrap_or(0);
-    let prompts: Vec<Vec<i32>> = envs.iter().map(|e| e.req.prompt.clone()).collect();
-    let max_new: Vec<usize> = envs.iter().map(|e| e.req.max_new).collect();
-    // All requests in a batch share one sampling config (first wins); the
-    // executed graph is identical either way, this just simplifies the loop.
-    let sampling = envs.first().map(|e| e.req.sampling).unwrap_or(Sampling::Greedy);
-
-    match decode_batch(model, &prompts, &max_new, sampling, rng) {
-        Ok(outputs) => {
-            for (env, tokens) in envs.into_iter().zip(outputs) {
-                let resp = GenerateResponse {
-                    tokens,
-                    queue_time: entered.duration_since(env.submitted),
-                    total_time: env.submitted.elapsed(),
-                    batch_occupancy: occupancy,
-                    bucket_len,
-                };
-                let _ = env.reply.send(Ok(resp));
-            }
+    let Envelope { req, submitted, reply } = env;
+    // Malformed prompts error out even on the zero-budget fast path (the
+    // old whole-batch loop validated every request through decode_batch).
+    if req.prompt.is_empty() || req.prompt.len() >= l_full {
+        let _ = reply.send(Err(anyhow!(
+            "prompt length {} out of range (1..{l_full})",
+            req.prompt.len()
+        )));
+        return;
+    }
+    let bucket_len = bucket_for_prompt(req.prompt.len(), buckets);
+    if req.max_new == 0 {
+        let _ = reply.send(Ok(GenerateResponse {
+            tokens: Vec::new(),
+            queue_time: entered.duration_since(submitted),
+            total_time: submitted.elapsed(),
+            batch_occupancy: live.len() + 1,
+            bucket_len,
+        }));
+        return;
+    }
+    match model.decode_begin(&req.prompt, logits) {
+        Ok(sess) => {
+            let first = sample_token(logits, req.sampling, rng);
+            live.push(LiveSession {
+                sess,
+                reply,
+                submitted,
+                entered,
+                sampling: req.sampling,
+                max_new: req.max_new,
+                prompt_len: req.prompt.len(),
+                bucket_len,
+                occupancy: 1,
+                out: vec![first],
+            });
         }
         Err(e) => {
-            let msg = format!("{e:#}");
-            for env in envs {
-                let _ = env.reply.send(Err(anyhow!("{msg}")));
+            let _ = reply.send(Err(e));
+        }
+    }
+}
+
+/// Advance every live session by one token; retired sessions reply and
+/// free their engine state.
+fn step_round(
+    model: &dyn Backend,
+    live: &mut Vec<LiveSession>,
+    l_full: usize,
+    rng: &mut Pcg,
+    logits: &mut Vec<f32>,
+) {
+    let occ = live.len();
+    for s in live.iter_mut() {
+        s.occupancy = s.occupancy.max(occ);
+    }
+    let mut i = 0;
+    while i < live.len() {
+        let done = {
+            let s = &live[i];
+            s.out.len() >= s.max_new || s.prompt_len + s.out.len() >= l_full
+        };
+        if done {
+            let LiveSession { sess, reply, submitted, entered, bucket_len, occupancy, out, .. } =
+                live.remove(i);
+            model.decode_end(sess);
+            let _ = reply.send(Ok(GenerateResponse {
+                tokens: out,
+                queue_time: entered.duration_since(submitted),
+                total_time: submitted.elapsed(),
+                batch_occupancy: occupancy,
+                bucket_len,
+            }));
+            continue;
+        }
+        let tok = *live[i].out.last().expect("live session has a sampled token");
+        let sampling = live[i].sampling;
+        match model.decode_step(&mut live[i].sess, tok, logits) {
+            Ok(()) => {
+                let next = sample_token(logits, sampling, rng);
+                live[i].out.push(next);
+                i += 1;
+            }
+            Err(e) => {
+                let s = live.remove(i);
+                model.decode_end(s.sess);
+                let _ = s.reply.send(Err(anyhow!("{:#}", e)));
             }
         }
     }

@@ -37,7 +37,7 @@ use hyena::util::cli::Args;
 use hyena::util::rng::Pcg;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["quiet", "greedy", "mixed", "require-buckets"]);
+    let args = Args::parse(&["quiet", "greedy", "mixed", "require-buckets", "stream-decode"]);
     // Size the shared worker pool before any backend is constructed (models
     // capture the pool at load time).
     if let Some(t) = args.get("threads") {
@@ -61,7 +61,7 @@ fn main() -> Result<()> {
                 "usage: hyena <list|info|train|eval|serve|dump-filters> \
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
                  [--steps N] [--seed S] [--buckets N] [--mixed] \
-                 [--require-buckets]"
+                 [--require-buckets] [--stream-decode]"
             );
             Ok(())
         }
@@ -298,11 +298,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let mut total = Duration::ZERO;
-    let mut routed: Vec<(usize, usize)> = Vec::new(); // (terminal len, bucket)
+    let mut total_tokens = 0usize;
+    let mut routed: Vec<(usize, usize)> = Vec::new(); // (prompt len, bucket)
     for (i, h) in handles.into_iter().enumerate() {
         let resp = h.recv().map_err(|_| anyhow!("worker died"))??;
         total += resp.total_time;
-        routed.push((reqs[i].0.len() + reqs[i].1, resp.bucket_len));
+        total_tokens += resp.tokens.len();
+        routed.push((reqs[i].0.len(), resp.bucket_len));
         println!(
             "  req {i:>3}: prompt {:>4} -> {} tokens, bucket {:>5}, queue {:?}, \
              total {:?}, batch x{}",
@@ -316,35 +318,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("mean latency {:?}", total / n_req as u32);
 
-    // Serve report: bucket routing + workspace high-water marks.
+    // Serve report: bucket routing, decode sessions, workspace high-water.
     if let Some(mem) = server.handle.mem_report() {
         println!(
             "serve report: {} inference forwards, buckets {:?}, hits {:?}",
             mem.serve_forwards, mem.bucket_lens, mem.bucket_hits
         );
         println!(
-            "  serve arena hiwater {} KiB ({} allocs), cached spectra {} KiB",
+            "  decode sessions: {} begun ({} live), {} streamed steps, \
+             session state {} KiB",
+            mem.decode_sessions_total,
+            mem.decode_sessions_live,
+            mem.decode_steps,
+            mem.decode_state_bytes / 1024
+        );
+        println!(
+            "  serve arena hiwater {} KiB ({} allocs), cached filters {} KiB",
             mem.serve_arena_hiwater_bytes / 1024,
             mem.serve_arena_allocs,
             mem.serve_spec_bytes / 1024
         );
         if args.flag("require-buckets") {
-            // The serve-smoke gate: every request must have been routed to
-            // the smallest bucket covering its terminal length — a short
-            // prompt landing in the full-L bucket is the padding waste this
-            // path exists to remove.
+            // The smoke gate: every request's *prefill* must have been
+            // routed to the smallest bucket covering its prompt — a short
+            // prompt prefilled through the full-L plan is the padding waste
+            // this path exists to remove. (Decode steps after prefill are
+            // bucket-free: they run at a single position from the session
+            // state.)
             if mem.bucket_lens.len() < 2 {
                 bail!("--require-buckets: engine reports a single bucket ({:?})", mem.bucket_lens);
             }
             let full = *mem.bucket_lens.last().unwrap();
             let mut expect_below_full = false;
-            for (i, &(terminal, got)) in routed.iter().enumerate() {
-                let want =
-                    mem.bucket_lens.iter().copied().find(|&b| b >= terminal).unwrap_or(full);
+            for (i, &(plen, got)) in routed.iter().enumerate() {
+                let want = mem.bucket_lens.iter().copied().find(|&b| b >= plen).unwrap_or(full);
                 expect_below_full |= want < full;
                 if got != want {
                     bail!(
-                        "--require-buckets: request {i} (terminal len {terminal}) \
+                        "--require-buckets: request {i} (prompt len {plen}) \
                          was routed to bucket {got}, expected {want} — full-pad fallback"
                     );
                 }
@@ -352,14 +363,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // The check above recomputes the router's own formula, so it
             // cannot see an engine-side regression. bucket_hits is counted
             // at the point of *plan selection* inside the inference
-            // forward: if short requests exist but every executed forward
+            // forward: if short prompts exist but every executed prefill
             // ran the full plan, the serving path is full-padding.
             if expect_below_full {
                 let below: u64 =
                     mem.bucket_hits.iter().take(mem.bucket_hits.len().saturating_sub(1)).sum();
                 if below == 0 {
                     bail!(
-                        "--require-buckets: short requests were present but every \
+                        "--require-buckets: short prompts were present but every \
                          inference forward executed the full-{full} plan \
                          (hits {:?}) — full-pad fallback in the engine",
                         mem.bucket_hits
@@ -368,8 +379,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             println!("bucket routing verified: no full-pad fallback");
         }
+        if args.flag("stream-decode") {
+            // The decode-smoke gate: generation must have flowed through
+            // resident sessions and the streaming step path, not prefix
+            // recompute. Every request begins a session; every generated
+            // token beyond a request's first costs exactly one streamed
+            // step, so the counters are fully determined.
+            if mem.decode_sessions_total < n_req as u64 {
+                bail!(
+                    "--stream-decode: {} requests but only {} decode sessions begun \
+                     — the server is not session-based",
+                    n_req,
+                    mem.decode_sessions_total
+                );
+            }
+            let want_steps = total_tokens.saturating_sub(n_req) as u64;
+            if mem.decode_steps < want_steps {
+                bail!(
+                    "--stream-decode: {total_tokens} tokens generated across {n_req} \
+                     requests but only {} streamed steps (expected ≥ {want_steps}) \
+                     — decode is recomputing prefixes",
+                    mem.decode_steps
+                );
+            }
+            if mem.decode_sessions_live != 0 {
+                bail!(
+                    "--stream-decode: {} sessions still live after all replies \
+                     — session state is leaking",
+                    mem.decode_sessions_live
+                );
+            }
+            println!(
+                "streaming decode verified: {} sessions, {} streamed steps",
+                mem.decode_sessions_total, mem.decode_steps
+            );
+        }
     } else if args.flag("require-buckets") {
         bail!("--require-buckets: backend exposes no serve report");
+    } else if args.flag("stream-decode") {
+        bail!("--stream-decode: backend exposes no serve report");
     }
     server.stop();
     Ok(())

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use hyena::backend::native::{NativeConfig, NativeModel};
 use hyena::backend::{self, Backend, BackendKind};
-use hyena::coordinator::generation::{decode_batch, Sampling};
+use hyena::coordinator::generation::{decode_batch, decode_batch_recompute, Sampling};
 use hyena::coordinator::server::{GenerateRequest, Server};
 use hyena::coordinator::trainer::{eval_accuracy, Trainer};
 use hyena::runtime::checkpoint::Checkpoint;
@@ -122,6 +122,74 @@ fn decode_is_pad_invariant_natively() {
     )
     .unwrap();
     assert_eq!(solo[0], duo[0], "batch padding leaked across rows");
+}
+
+#[test]
+fn streamed_decode_batch_matches_recompute_with_compaction() {
+    // The session loop (prefill once, then O(L) steps) must emit exactly
+    // the token streams of the full-recompute reference — including when
+    // rows retire at different times (max_new staggering exercises the
+    // session-level row compaction) and when streams cross the engine's
+    // bucket boundary mid-generation (golden_tiny buckets at [8, 16]).
+    let model = native("golden_tiny", 0);
+    let prompts =
+        vec![vec![3i32, 5, 7], vec![9i32, 1, 2, 6, 11, 4], vec![8i32, 8, 1, 13, 2]];
+    let max_new = [2usize, 9, 5];
+    let mut rng_a = Pcg::new(5);
+    let mut rng_b = Pcg::new(5);
+    let streamed =
+        decode_batch(model.as_ref(), &prompts, &max_new, Sampling::Greedy, &mut rng_a).unwrap();
+    let recomputed =
+        decode_batch_recompute(model.as_ref(), &prompts, &max_new, Sampling::Greedy, &mut rng_b)
+            .unwrap();
+    assert_eq!(streamed, recomputed, "streamed sessions diverged from recompute");
+    for (r, out) in streamed.iter().enumerate() {
+        assert_eq!(out.len(), max_new[r], "row {r} emitted a wrong token count");
+    }
+    // Decode-session accounting flowed through the Backend surface: one
+    // session per row, one streamed step per token after each row's first,
+    // nothing live afterwards.
+    let mem = model.mem_report().expect("native backend reports memory");
+    assert_eq!(mem.decode_sessions_total, 3);
+    assert_eq!(mem.decode_sessions_live, 0, "sessions leaked");
+    let want_steps: usize = max_new.iter().map(|&m| m - 1).sum();
+    assert_eq!(mem.decode_steps, want_steps as u64, "steps were recomputed, not streamed");
+    assert_eq!(mem.decode_state_bytes, 0, "session state bytes leaked");
+}
+
+#[test]
+fn streamed_decode_survives_param_updates_mid_session() {
+    // A parameter update between steps makes the resident state stale; the
+    // backend must transparently re-prefill from the session's tokens and
+    // keep generating (token-identically vs a fresh recompute of the same
+    // sequence under the new parameters).
+    let mut model = native("golden_tiny", 0);
+    let mut logits = Vec::new();
+    let prompt = vec![4i32, 9, 2];
+    let mut sess = model.decode_begin(&prompt, &mut logits).unwrap();
+    let t0 = hyena::coordinator::generation::argmax(&logits);
+    model.decode_step(&mut sess, t0, &mut logits).unwrap();
+    let t1 = hyena::coordinator::generation::argmax(&logits);
+
+    // Train one step: epoch bumps, resident histories go stale.
+    let task = RecallTask::new(16, 8, 2);
+    let mut rng = Pcg::new(2);
+    let batch = task.sample_batch(&mut rng).to_tensors();
+    model.train_step(&batch).unwrap();
+
+    model.decode_step(&mut sess, t1, &mut logits).unwrap();
+    let t2 = hyena::coordinator::generation::argmax(&logits);
+    model.decode_end(sess);
+
+    // Reference under the new parameters: the same sequence recomputed.
+    let seq = vec![prompt[0], prompt[1], prompt[2], t0, t1];
+    let v = model.manifest().vocab().unwrap();
+    let full = model.infer(&seq, 1, seq.len()).unwrap();
+    let wf = full.as_f32().unwrap();
+    let want = hyena::coordinator::generation::argmax(
+        &wf[(seq.len() - 1) * v..seq.len() * v],
+    );
+    assert_eq!(t2, want, "stale-state rebuild diverged from recompute");
 }
 
 #[test]

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke]
+# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
@@ -11,12 +11,21 @@
 #                inference path, and (2) the real server must survive mixed-
 #                length traffic with every request routed to its smallest
 #                covering bucket (no full-pad fallback, no panics).
+#   decode-smoke streaming-decode gate: (1) the native_decode bench must
+#                show streamed per-token decode ≥ 2× faster than the
+#                full-recompute path at L = 4096 with token-identical
+#                greedy output, and (2) the real server must stream mixed-
+#                length traffic through resident sessions (every generated
+#                token beyond a request's first served by decode_step, no
+#                prefix recompute, no leaked sessions, no panics).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Fail fast, before any sub-target: every mode below needs cargo.
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "error: cargo not found on PATH." >&2
-    echo "This container lacks a Rust toolchain; install one (rustup) to run the gate." >&2
+    echo "error: cargo not found on PATH — scripts/check.sh (and all its" >&2
+    echo "smoke targets) drive cargo fmt/clippy/build/test/bench." >&2
+    echo "Install a Rust toolchain (https://rustup.rs) and re-run." >&2
     exit 1
 fi
 
@@ -34,6 +43,17 @@ if [ "${1:-}" = "serve-smoke" ]; then
     cargo run --release --bin hyena -- serve --model lm_hyena_s --backend native \
         --requests 12 --mixed --require-buckets --greedy --threads 2 --seed 0
     echo "check.sh: serve-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "decode-smoke" ]; then
+    echo "==> decode-smoke: native_decode bench gate (--smoke, 2 threads)"
+    cargo bench --bench native_decode -- --smoke --threads 2
+    echo "==> decode-smoke: live server, mixed-length streamed sessions enforced"
+    cargo run --release --bin hyena -- serve --model lm_hyena_s --backend native \
+        --requests 12 --mixed --stream-decode --require-buckets --greedy \
+        --threads 2 --seed 0
+    echo "check.sh: decode-smoke green"
     exit 0
 fi
 

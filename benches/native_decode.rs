@@ -17,16 +17,24 @@
 //! Run: `cargo bench --bench native_decode -- [--iters 8] [--gen 32]
 //!        [--threads N] [--out BENCH_native.json] [--smoke]`
 //!
-//! `--smoke` (the `scripts/check.sh decode-smoke` perf gate) shrinks the
-//! run and fails hard if streamed decode is not ≥ 2× faster per token
-//! than full-recompute decode on the large (L = 4096) case.
+//! `--smoke` (the `scripts/check.sh decode-smoke` / `kernel-smoke` perf
+//! gates) shrinks the run and fails hard if (a) streamed decode is not
+//! ≥ 2× faster per token than full-recompute decode on the large
+//! (L = 4096) case, or (b) batched stepping (`decode_step_batch` at
+//! occupancy 4 — one stacked dense pass per block per round) does not beat
+//! serial per-session stepping by ≥ 1.1× per token at L = 1024.
+//!
+//! A greedy-stream fingerprint (FNV-1a over every token of every measured
+//! stream) is printed at the end; `kernel-smoke` compares it across
+//! `HYENA_KERNEL=scalar|simd` runs to pin cross-kernel greedy
+//! token-identity end-to-end.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
-use hyena::backend::native::{NativeBackend, NativeConfig};
-use hyena::backend::Backend;
+use hyena::backend::native::{kernels, NativeBackend, NativeConfig};
+use hyena::backend::{Backend, DecodeSession};
 use hyena::coordinator::generation::{argmax, decode_batch, decode_batch_recompute, Sampling};
 use hyena::report::{merge_bench_json, Table};
 use hyena::util::cli::Args;
@@ -57,6 +65,102 @@ fn time_runs<F: FnMut() -> i32>(iters: usize, mut f: F) -> Summary {
     s
 }
 
+/// FNV-1a running fold over a token stream (the cross-kernel fingerprint).
+fn fnv_fold(h: &mut u64, toks: &[i32]) {
+    for &t in toks {
+        *h ^= t as u32 as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// Serial occupancy-`occ` stepping: begin one session per prompt, then
+/// `gen − 1` rounds of per-session `decode_step`. Returns the greedy
+/// streams and the measured ms per generated token (steps only — the
+/// prefill cost is identical on both sides and excluded).
+fn occupancy_serial(
+    backend: &NativeBackend,
+    prompts: &[Vec<i32>],
+    gen: usize,
+    iters: usize,
+) -> (Vec<Vec<i32>>, f64) {
+    let occ = prompts.len();
+    let mut streams: Vec<Vec<i32>> = Vec::new();
+    let mut s = Summary::new();
+    let mut logits = Vec::new();
+    for i in 0..=iters {
+        let mut sessions: Vec<DecodeSession> = Vec::with_capacity(occ);
+        let mut toks: Vec<i32> = Vec::with_capacity(occ);
+        streams = vec![Vec::new(); occ];
+        for (r, p) in prompts.iter().enumerate() {
+            sessions.push(backend.decode_begin(p, &mut logits).unwrap());
+            toks.push(argmax(&logits));
+            streams[r].push(toks[r]);
+        }
+        let t0 = Instant::now();
+        for _ in 1..gen {
+            for r in 0..occ {
+                backend.decode_step(&mut sessions[r], toks[r], &mut logits).unwrap();
+                toks[r] = argmax(&logits);
+                streams[r].push(toks[r]);
+            }
+        }
+        let per = t0.elapsed().as_secs_f64() / ((gen - 1) * occ) as f64;
+        for sess in sessions {
+            backend.decode_end(sess);
+        }
+        if i > 0 {
+            s.push(per);
+        }
+    }
+    (streams, s.p50() * 1e3)
+}
+
+/// Batched occupancy-`occ` stepping: the same rounds through one
+/// `decode_step_batch` call each.
+fn occupancy_batched(
+    backend: &NativeBackend,
+    prompts: &[Vec<i32>],
+    gen: usize,
+    iters: usize,
+) -> (Vec<Vec<i32>>, f64) {
+    let occ = prompts.len();
+    let v = backend.manifest().vocab().unwrap();
+    let mut streams: Vec<Vec<i32>> = Vec::new();
+    let mut s = Summary::new();
+    let mut logits = Vec::new();
+    let mut packed = Vec::new();
+    for i in 0..=iters {
+        let mut sessions: Vec<DecodeSession> = Vec::with_capacity(occ);
+        let mut toks: Vec<i32> = Vec::with_capacity(occ);
+        streams = vec![Vec::new(); occ];
+        for (r, p) in prompts.iter().enumerate() {
+            sessions.push(backend.decode_begin(p, &mut logits).unwrap());
+            toks.push(argmax(&logits));
+            streams[r].push(toks[r]);
+        }
+        let t0 = Instant::now();
+        for _ in 1..gen {
+            let results = {
+                let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+                backend.decode_step_batch(&mut refs, &toks, &mut packed)
+            };
+            for (r, res) in results.into_iter().enumerate() {
+                res.unwrap();
+                toks[r] = argmax(&packed[r * v..(r + 1) * v]);
+                streams[r].push(toks[r]);
+            }
+        }
+        let per = t0.elapsed().as_secs_f64() / ((gen - 1) * occ) as f64;
+        for sess in sessions {
+            backend.decode_end(sess);
+        }
+        if i > 0 {
+            s.push(per);
+        }
+    }
+    (streams, s.p50() * 1e3)
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(&["smoke"]);
     let smoke = args.flag("smoke");
@@ -78,7 +182,15 @@ fn main() -> Result<()> {
         ],
     );
     let mut json_rows: Vec<Json> = Vec::new();
+    let mut batch_rows: Vec<Json> = Vec::new();
     let mut smoke_ok = true;
+    let mut batch_gate_ok = true;
+    // FNV-1a over every measured greedy stream: kernel-smoke compares this
+    // across HYENA_KERNEL=scalar|simd runs (cross-kernel token identity).
+    let mut fp = 0xcbf2_9ce4_8422_2325u64;
+
+    let active = kernels::active();
+    println!("kernel dispatch: {} ({})", active.name, active.isa);
 
     for &l in &[1024usize, 4096] {
         let cfg = config_at(l)?;
@@ -180,6 +292,57 @@ fn main() -> Result<()> {
         if l == 4096 && ratio < 2.0 {
             smoke_ok = false;
         }
+        for stream in &out_rec {
+            fnv_fold(&mut fp, stream);
+        }
+
+        // Batched decode stepping at occupancy 4: the server's token round
+        // as one decode_step_batch call vs a per-session loop.
+        let occ = 4usize;
+        let prompts4: Vec<Vec<i32>> = (0..occ)
+            .map(|r| {
+                let mut p = prompt.clone();
+                p[0] = ((r * 13 + 1) % v) as i32;
+                p
+            })
+            .collect();
+        let (serial_streams, serial_ms) = occupancy_serial(&backend, &prompts4, gen, iters);
+        let (batched_streams, batched_ms) = occupancy_batched(&backend, &prompts4, gen, iters);
+        assert_eq!(
+            serial_streams, batched_streams,
+            "batched stepping diverged from serial at L={l}"
+        );
+        for stream in &batched_streams {
+            fnv_fold(&mut fp, stream);
+        }
+        let bratio = serial_ms / batched_ms.max(1e-12);
+        println!(
+            "  occupancy {occ}: serial {serial_ms:>9.3} ms/tok   batched \
+             {batched_ms:>9.3} ms/tok   ({bratio:.2}x, token-identical)"
+        );
+        table.row(vec![
+            l.to_string(),
+            plen.to_string(),
+            format!("{gen} (occ {occ})"),
+            format!("{serial_ms:.3} (serial steps)"),
+            format!("{batched_ms:.3} (batched)"),
+            "-".to_string(),
+            format!("{bratio:.2}"),
+        ]);
+        batch_rows.push(Json::obj(vec![
+            ("seqlen", Json::num(l as f64)),
+            ("occupancy", Json::num(occ as f64)),
+            ("prompt_len", Json::num(plen as f64)),
+            ("new_tokens", Json::num(gen as f64)),
+            ("serial_ms_per_tok", Json::num(serial_ms)),
+            ("batched_ms_per_tok", Json::num(batched_ms)),
+            ("speedup", Json::num(bratio)),
+        ]));
+        // The kernel-smoke gate: at the dense-dominated length the batched
+        // round must beat per-session stepping at occupancy 4.
+        if l == 1024 && bratio < 1.1 {
+            batch_gate_ok = false;
+        }
 
         // Session accounting must balance: every begin ended, state freed.
         let stats = backend.model().serve_stats();
@@ -210,11 +373,27 @@ fn main() -> Result<()> {
         }
     }
 
+    merge_bench_json(
+        Path::new(&out_path),
+        "decode_batch",
+        Json::obj(vec![
+            ("kernel", Json::str(active.name)),
+            ("threads", Json::num(threads as f64)),
+            ("rows", Json::Arr(batch_rows)),
+        ]),
+    )?;
     table.emit("native_decode");
-    println!("bench ledger -> {out_path} (key: decode)");
+    println!("greedy fingerprint: {fp:016x}");
+    println!("bench ledger -> {out_path} (keys: decode, decode_batch)");
 
     if smoke && !smoke_ok {
         bail!("decode-smoke gate: streamed decode was not ≥ 2× faster per token at L=4096");
+    }
+    if smoke && !batch_gate_ok {
+        bail!(
+            "kernel-smoke gate: batched decode_step_batch was not ≥ 1.1× serial \
+             stepping at occupancy 4, L=1024"
+        );
     }
     Ok(())
 }

@@ -1,19 +1,31 @@
-//! Threaded training-step bench for the native backend: one full optimizer
-//! step (forward + backward + AdamW) at 1 thread vs N threads on the same
-//! fixed batch and seed. The row-parallel engine is write-disjoint with
-//! serial per-row arithmetic, so the losses must agree bit-for-bit — the
-//! bench asserts that while measuring the speedup.
+//! Threaded training-step bench + kernel micro-axes for the native backend.
 //!
-//! Results print as a table and persist into `BENCH_native.json` (key
-//! `train_step`) next to the FFTConv numbers (EXPERIMENTS.md §Perf Native).
+//! Two sections (DESIGN.md §Kernels, §Perf):
+//!
+//! 1. **Kernel micro-axes** — the dispatched microkernels (dense axpy, the
+//!    decode dot, GELU, FFT butterfly sweep, spectrum pointwise product)
+//!    timed directly against both dispatch tables (scalar vs SIMD) on
+//!    identically seeded buffers (numeric agreement is pinned by the
+//!    kernel property tests, not re-checked here). Persisted
+//!    under `BENCH_native.json` key `kernels`. Under `--smoke` (the
+//!    `scripts/check.sh kernel-smoke` gate) the SIMD table must beat scalar
+//!    by ≥ 1.5× on the dense-axpy and decode-dot axes when the CPU has a
+//!    SIMD table at all.
+//! 2. **Full optimizer step** at 1 thread vs N threads on the same fixed
+//!    batch and seed (bitwise-equal losses asserted; key `train_step`).
+//!
+//! The active dispatch table (what `HYENA_KERNEL` resolved to on this CPU)
+//! is printed and — when forced via the environment — verified, so the gate
+//! checks what actually ran rather than trusting the env var.
 //!
 //! Run: `cargo bench --bench native_step -- [--model lm_hyena_s]
-//!        [--iters 5] [--threads N] [--out BENCH_native.json]`
+//!        [--iters 5] [--threads N] [--out BENCH_native.json] [--smoke]`
 
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
+use hyena::backend::native::kernels::{self, Kernels};
 use hyena::backend::native::{NativeConfig, NativeModel};
 use hyena::report::{merge_bench_json, Table};
 use hyena::util::cli::Args;
@@ -44,13 +56,186 @@ fn bench_steps(
     Ok((s, last))
 }
 
+/// Median ns/op of `f` over `iters` timed passes of `reps` calls each
+/// (first pass is warmup).
+fn time_axis<F: FnMut()>(iters: usize, reps: usize, mut f: F) -> f64 {
+    let mut s = Summary::new();
+    for i in 0..=iters {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        if i > 0 {
+            s.push(t0.elapsed().as_secs_f64() / reps as f64);
+        }
+    }
+    s.p50() * 1e9
+}
+
+struct Axis {
+    name: &'static str,
+    len: usize,
+    scalar_ns: f64,
+    simd_ns: Option<f64>,
+}
+
+/// Time every microkernel under one table; returns (axis ns ops, sink).
+fn run_table(k: &'static Kernels, iters: usize) -> Vec<(&'static str, usize, f64, f32)> {
+    let mut rng = Pcg::new(42);
+    let mut out = Vec::new();
+
+    // dense-axpy: the dense microkernel's inner row update (dout = 1024).
+    {
+        let n = 1024usize;
+        let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ns = time_axis(iters, 2048, || (k.axpy)(&mut y, &w, 1.0000001));
+        out.push(("dense-axpy", n, ns, y[0]));
+    }
+    // decode-dot: the streaming-decode reduction (history length 4096).
+    {
+        let n = 4096usize;
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut sink = 0.0f32;
+        let ns = time_axis(iters, 1024, || sink += (k.dot)(&a, &b));
+        out.push(("decode-dot", n, ns, sink));
+    }
+    // gelu: one ELEM_BLOCK-sized chunk.
+    {
+        let n = 4096usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let (mut y, mut th) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let ns = time_axis(iters, 64, || (k.gelu_fwd)(&x, &mut y, &mut th));
+        out.push(("gelu", n, ns, y[0]));
+    }
+    // butterfly: a full stage sweep at FFT size 4096 (one forward's worth
+    // of butterfly passes, bit-reversal excluded).
+    {
+        let n = 4096usize;
+        let mut tw_re = Vec::with_capacity(n / 2);
+        let mut tw_im = Vec::with_capacity(n / 2);
+        for j in 0..n / 2 {
+            let ang = -2.0 * std::f64::consts::PI * j as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        let mut re: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut im: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ns = time_axis(iters, 16, || {
+            let mut len = 2usize;
+            while len <= n {
+                (k.butterfly_pass)(&mut re, &mut im, &tw_re, &tw_im, len, false);
+                len <<= 1;
+            }
+        });
+        out.push(("butterfly-4k", n, ns, re[0]));
+    }
+    // spec-mul: half-spectrum pointwise product at 2049 bins (L = 2048).
+    {
+        let n = 2049usize;
+        let ar: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ai: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let br: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let bi: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let (mut pr, mut pi) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let ns = time_axis(iters, 512, || (k.spec_mul)(&ar, &ai, &br, &bi, &mut pr, &mut pi));
+        out.push(("spec-mul", n, ns, pr[0]));
+    }
+    out
+}
+
+fn bench_kernels(iters: usize) -> Vec<Axis> {
+    let scalar = run_table(&kernels::SCALAR, iters);
+    let simd = kernels::simd_table().map(|t| run_table(t, iters));
+    scalar
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, len, scalar_ns, _))| Axis {
+            name,
+            len,
+            scalar_ns,
+            simd_ns: simd.as_ref().map(|s| s[i].2),
+        })
+        .collect()
+}
+
 fn main() -> Result<()> {
-    let args = Args::parse(&[]);
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
     let name = args.get_or("model", "lm_hyena_s").to_string();
-    let iters = args.get_usize("iters", 5);
+    let iters = args.get_usize("iters", if smoke { 2 } else { 5 });
     let threads = args.get_usize("threads", pool::default_threads()).max(1);
     let out_path = args.get_or("out", "BENCH_native.json").to_string();
 
+    // Which dispatch table actually runs — and, when the environment forces
+    // one, verify the dispatcher honoured it (the kernel-smoke contract).
+    let active = kernels::active();
+    println!("kernel dispatch: {} ({})", active.name, active.isa);
+    match std::env::var("HYENA_KERNEL").ok().as_deref() {
+        Some("scalar") if active.name != "scalar" => {
+            bail!("HYENA_KERNEL=scalar but the {} table is active", active.name)
+        }
+        Some("simd") if kernels::simd_table().is_some() && active.name != "simd" => {
+            bail!("HYENA_KERNEL=simd on a SIMD-capable CPU but the scalar table is active")
+        }
+        _ => {}
+    }
+
+    // -- kernel micro-axes ---------------------------------------------------
+    let axes = bench_kernels(iters.max(3));
+    let mut ktable = Table::new(
+        "§Perf Native — kernel micro-axes (scalar vs SIMD dispatch)",
+        &["axis", "len", "scalar ns/op", "simd ns/op", "speedup"],
+    );
+    let mut krows: Vec<Json> = Vec::new();
+    let mut gate_ok = true;
+    for ax in &axes {
+        let (simd_s, speedup) = match ax.simd_ns {
+            Some(ns) => (format!("{ns:.0}"), ax.scalar_ns / ns.max(1e-9)),
+            None => ("-".to_string(), 1.0),
+        };
+        println!(
+            "kernel {:>12}  len {:>5}  scalar {:>9.0} ns  simd {:>9} ns  ({speedup:.2}x)",
+            ax.name, ax.len, ax.scalar_ns, simd_s
+        );
+        ktable.row(vec![
+            ax.name.to_string(),
+            ax.len.to_string(),
+            format!("{:.0}", ax.scalar_ns),
+            simd_s,
+            format!("{speedup:.2}"),
+        ]);
+        krows.push(Json::obj(vec![
+            ("axis", Json::str(ax.name)),
+            ("len", Json::num(ax.len as f64)),
+            ("scalar_ns", Json::num(ax.scalar_ns)),
+            ("simd_ns", ax.simd_ns.map(Json::num).unwrap_or(Json::Null)),
+            ("speedup", Json::num(speedup)),
+        ]));
+        // The kernel-smoke gate: the SIMD table must carry the dense and
+        // decode-dot axes by ≥ 1.5× wherever a SIMD table exists.
+        if ax.simd_ns.is_some()
+            && (ax.name == "dense-axpy" || ax.name == "decode-dot")
+            && speedup < 1.5
+        {
+            eprintln!("kernel-smoke: axis {} speedup {speedup:.2} < 1.5", ax.name);
+            gate_ok = false;
+        }
+    }
+    ktable.emit("native_kernels");
+    merge_bench_json(
+        Path::new(&out_path),
+        "kernels",
+        Json::obj(vec![
+            ("active", Json::str(active.name)),
+            ("isa", Json::str(active.isa)),
+            ("simd_available", Json::Bool(kernels::simd_table().is_some())),
+            ("axes", Json::Arr(krows)),
+        ]),
+    )?;
+
+    // -- full optimizer step, 1 vs N threads ---------------------------------
     let cfg = NativeConfig::builtin(&name)
         .ok_or_else(|| anyhow!("no built-in native config named {name:?}"))?;
     let (b, l, v) = (cfg.batch, cfg.seqlen, cfg.vocab);
@@ -99,6 +284,7 @@ fn main() -> Result<()> {
         "train_step",
         Json::obj(vec![
             ("model", Json::str(&name)),
+            ("kernel", Json::str(active.name)),
             ("batch", Json::num(b as f64)),
             ("seqlen", Json::num(l as f64)),
             ("iters", Json::num(iters as f64)),
@@ -110,6 +296,10 @@ fn main() -> Result<()> {
             ("final_loss", Json::num(loss_n as f64)),
         ]),
     )?;
-    println!("bench ledger -> {out_path} (key: train_step)");
+    println!("bench ledger -> {out_path} (keys: kernels, train_step)");
+
+    if smoke && !gate_ok {
+        bail!("kernel-smoke gate: SIMD did not win ≥ 1.5x on the dense/dot micro-axes");
+    }
     Ok(())
 }

@@ -1,0 +1,210 @@
+"""Numpy mirrors of the native backend's SIMD kernel subsystem.
+
+The Rust dispatch tables (rust/src/backend/native/kernels/) cannot be
+executed in a container without cargo, so this module mirrors their
+algorithms 1:1 in float32 numpy and pins the DESIGN.md §Kernels numerics
+contract. numpy-only on purpose: unlike test_kernels.py (jax + hypothesis),
+it runs on a bare python3 + numpy image.
+"""
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Native-backend SIMD kernel mirrors (numpy-only — no jax below this line).
+#
+# The Rust SIMD tables (rust/src/backend/native/kernels/{simd,neon}.rs)
+# cannot be executed here (no cargo in this container), so these tests
+# mirror their *algorithms* 1:1 in float32 numpy and pin the numerics
+# contract of DESIGN.md §Kernels:
+#   * the Cephes-style polynomial exp/tanh behind the SIMD GELU agrees with
+#     libm to well inside the 1e-5 kernel contract,
+#   * the paired-lane dot (f32 lane partials reduced in f64) is at least as
+#     tight as the serial f32 dot against an exact f64 reference,
+#   * lane-blocked butterfly stages are bitwise the scalar stage (no
+#     accumulation ⇒ reassociation-free).
+# ---------------------------------------------------------------------------
+
+F32 = np.float32
+
+_EXP_HI = F32(88.3762626647950)
+_EXP_LO = F32(-88.3762626647949)
+_LOG2EF = F32(1.44269504088896341)
+_EXP_C1 = F32(0.693359375)
+_EXP_C2 = F32(-2.12194440e-4)
+_EXP_P = [
+    F32(1.9875691500e-4),
+    F32(1.3981999507e-3),
+    F32(8.3334519073e-3),
+    F32(4.1665795894e-2),
+    F32(1.6666665459e-1),
+    F32(5.0000001201e-1),
+]
+_GELU_C = F32(0.7978846)
+_GELU_A = F32(0.044715)
+
+
+def _exp_poly_f32(x):
+    """1:1 float32 mirror of `exp256` in kernels/simd.rs (same op order)."""
+    x = np.clip(np.asarray(x, F32), _EXP_LO, _EXP_HI)
+    fx = np.floor(x * _LOG2EF + F32(0.5)).astype(F32)
+    r = ((x - fx * _EXP_C1) - fx * _EXP_C2).astype(F32)
+    z = (r * r).astype(F32)
+    y = np.full_like(r, _EXP_P[0])
+    for p in _EXP_P[1:]:
+        y = (y * r + p).astype(F32)
+    y = (y * z + r + F32(1.0)).astype(F32)
+    n = fx.astype(np.int32)
+    pow2n = np.left_shift(n + np.int32(127), 23).view(F32)
+    return (y * pow2n).astype(F32)
+
+
+def _tanh_poly_f32(x):
+    """1:1 float32 mirror of `tanh256`: sign(x)·(1 − 2/(e^{2|x|}+1))."""
+    x = np.asarray(x, F32)
+    ax = np.abs(x)
+    e = _exp_poly_f32(ax + ax)
+    t = (F32(1.0) - (F32(2.0) / (e + F32(1.0))).astype(F32)).astype(F32)
+    return np.copysign(t, x).astype(F32)
+
+
+class TestSimdKernelMirrors:
+    def test_poly_exp_matches_libm(self):
+        # Domain note: near the negative clamp (x ≲ −87) the result is
+        # subnormal in f32 and the 2^n exponent scaling flushes to zero —
+        # the classic Cephes edge. The tanh path only ever evaluates
+        # exp(2|x|) ≥ 1, so the kernel never sees that regime; the mirror
+        # pins the regime it does use: [−80, 88.37].
+        rng = np.random.default_rng(0)
+        x = np.concatenate(
+            [
+                rng.normal(0.0, 3.0, 4096),
+                np.linspace(-80.0, 88.0, 512),
+                np.array([0.0, -0.0, 1e-6, -1e-6, 88.37]),
+            ]
+        ).astype(F32)
+        got = _exp_poly_f32(x).astype(np.float64)
+        want = np.exp(x.astype(np.float64))
+        rel = np.abs(got - want) / np.maximum(want, 1e-300)
+        assert rel.max() < 1e-6, f"poly exp drifted: {rel.max()}"
+
+    def test_poly_tanh_and_gelu_meet_kernel_contract(self):
+        rng = np.random.default_rng(1)
+        v = np.concatenate(
+            [
+                rng.normal(0.0, 2.0, 4096),
+                np.linspace(-12.0, 12.0, 512),
+                np.array([0.0, 1e-4, -1e-4, 50.0, -50.0]),
+            ]
+        ).astype(F32)
+        inner = (_GELU_C * (v + _GELU_A * ((v * v) * v))).astype(F32)
+        t = _tanh_poly_f32(inner).astype(np.float64)
+        t_ref = np.tanh(inner.astype(np.float64))
+        rel_t = np.abs(t - t_ref) / (1.0 + np.maximum(np.abs(t), np.abs(t_ref)))
+        assert rel_t.max() < 1e-5, f"poly tanh drifted: {rel_t.max()}"
+        # GELU output under the same 1e-5 relative contract.
+        y = (F32(0.5) * v * (F32(1.0) + t.astype(F32))).astype(np.float64)
+        y_ref = 0.5 * v.astype(np.float64) * (1.0 + t_ref)
+        rel_y = np.abs(y - y_ref) / (1.0 + np.maximum(np.abs(y), np.abs(y_ref)))
+        assert rel_y.max() < 1e-5, f"poly gelu drifted: {rel_y.max()}"
+        # tanh saturates monotonically to ±1 (no polynomial blow-up).
+        assert abs(float(_tanh_poly_f32(np.array([30.0], F32))[0]) - 1.0) < 1e-7
+        assert abs(float(_tanh_poly_f32(np.array([-30.0], F32))[0]) + 1.0) < 1e-7
+
+    @staticmethod
+    def _dot_paired_lanes(a, b, lanes=8):
+        """1:1 mirror of `dot_avx2`: two f32 lane accumulators (16/iter),
+        one more 8-wide pass, f64 reduction of lanes + scalar tail."""
+        a = np.asarray(a, F32)
+        b = np.asarray(b, F32)
+        n = len(a)
+        acc0 = np.zeros(lanes, F32)
+        acc1 = np.zeros(lanes, F32)
+        i = 0
+        while i + 2 * lanes <= n:
+            acc0 = (acc0 + (a[i : i + lanes] * b[i : i + lanes]).astype(F32)).astype(F32)
+            acc1 = (
+                acc1
+                + (a[i + lanes : i + 2 * lanes] * b[i + lanes : i + 2 * lanes]).astype(F32)
+            ).astype(F32)
+            i += 2 * lanes
+        if i + lanes <= n:
+            acc0 = (acc0 + (a[i : i + lanes] * b[i : i + lanes]).astype(F32)).astype(F32)
+            i += lanes
+        s = float(acc0.astype(np.float64).sum() + acc1.astype(np.float64).sum())
+        for k in range(i, n):
+            s += float(a[k]) * float(b[k])
+        return F32(s)
+
+    def test_paired_lane_dot_is_no_looser_than_serial_f32(self):
+        rng = np.random.default_rng(2)
+        d = 8192
+        # Positive operands: condition number ~1, the audit's regime.
+        a = (0.5 + 0.5 * rng.random(d)).astype(F32)
+        b = (0.5 + 0.5 * rng.random(d)).astype(F32)
+        exact = float(a.astype(np.float64) @ b.astype(np.float64))
+        serial = F32(0.0)
+        for k in range(d):
+            serial = F32(serial + F32(a[k] * b[k]))
+        err_serial = abs(float(serial) - exact) / exact
+        err_lanes = abs(float(self._dot_paired_lanes(a, b)) - exact) / exact
+        assert err_serial < 5e-4, f"serial f32 dot out of audit bounds: {err_serial}"
+        assert err_lanes <= err_serial + 1e-7, (
+            f"paired-lane dot looser than serial: {err_lanes} vs {err_serial}"
+        )
+        # Tail handling: non-multiple-of-lane lengths agree with f64 tightly.
+        for n in [1, 7, 17, 100]:
+            x, y = a[:n], b[:n]
+            want = float(x.astype(np.float64) @ y.astype(np.float64))
+            got = float(self._dot_paired_lanes(x, y))
+            assert abs(got - want) / (1.0 + abs(want)) < 1e-6
+
+    @staticmethod
+    def _butterfly_stage(re, im, tw_re, tw_im, length, inverse, block=None):
+        """Mirror of `butterfly_pass`: scalar when block is None, else
+        lane-blocked in chunks of `block` (vector path)."""
+        re, im = re.copy(), im.copy()
+        n = len(re)
+        step = n // length
+        half = length // 2
+        for start in range(0, n, length):
+            ks = 0
+            if block is not None:
+                while ks + block <= half:
+                    idx = np.arange(ks, ks + block)
+                    wr = tw_re[idx * step]
+                    wi = (-tw_im[idx * step] if inverse else tw_im[idx * step]).astype(F32)
+                    a, b = start + idx, start + idx + half
+                    tr = (re[b] * wr - im[b] * wi).astype(F32)
+                    ti = (re[b] * wi + im[b] * wr).astype(F32)
+                    re[b] = (re[a] - tr).astype(F32)
+                    im[b] = (im[a] - ti).astype(F32)
+                    re[a] = (re[a] + tr).astype(F32)
+                    im[a] = (im[a] + ti).astype(F32)
+                    ks += block
+            for k in range(ks, half):
+                wr = tw_re[k * step]
+                wi = F32(-tw_im[k * step]) if inverse else tw_im[k * step]
+                a, b = start + k, start + k + half
+                tr = F32(re[b] * wr - im[b] * wi)
+                ti = F32(re[b] * wi + im[b] * wr)
+                re[b], im[b] = F32(re[a] - tr), F32(im[a] - ti)
+                re[a], im[a] = F32(re[a] + tr), F32(im[a] + ti)
+        return re, im
+
+    def test_lane_blocked_butterflies_are_bitwise_scalar(self):
+        rng = np.random.default_rng(3)
+        n = 256
+        k = np.arange(n // 2)
+        tw_re = np.cos(-2.0 * np.pi * k / n).astype(F32)
+        tw_im = np.sin(-2.0 * np.pi * k / n).astype(F32)
+        re = rng.normal(size=n).astype(F32)
+        im = rng.normal(size=n).astype(F32)
+        for inverse in [False, True]:
+            length = 2
+            while length <= n:
+                s_re, s_im = self._butterfly_stage(re, im, tw_re, tw_im, length, inverse)
+                v_re, v_im = self._butterfly_stage(
+                    re, im, tw_re, tw_im, length, inverse, block=8
+                )
+                assert np.array_equal(s_re, v_re), f"re diverged at len={length}"
+                assert np.array_equal(s_im, v_im), f"im diverged at len={length}"
+                length <<= 1

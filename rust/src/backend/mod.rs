@@ -67,8 +67,19 @@ pub struct MemReport {
     /// fallbacks do not count — zero here under decode traffic is direct
     /// evidence the engine is re-running prefixes).
     pub decode_steps: u64,
+    /// Batched decode rounds served through the engine's
+    /// `decode_step_batch` fast path (zero for engines that only loop the
+    /// serial step).
+    pub decode_step_batches: u64,
+    /// Session-tokens served by those batched rounds (Σ rows per round).
+    pub decode_step_batch_rows: u64,
     /// Bytes held by live per-session ring buffers / channel histories.
     pub decode_state_bytes: usize,
+    /// Name of the engine's active compute-kernel dispatch table
+    /// (`"scalar"` / `"simd"`; empty for engines without one). Benches and
+    /// the `kernel-smoke` gate verify which path actually ran through this
+    /// field rather than trusting `HYENA_KERNEL`.
+    pub kernel: String,
 }
 
 /// One autoregressive decode request in flight (DESIGN.md §Decode).
@@ -257,6 +268,52 @@ pub trait Backend {
                 Err(e)
             }
         }
+    }
+
+    /// Advance several sessions by one token each — the server's token
+    /// round as **one engine call**. `logits` receives the `rows` `(V,)`
+    /// rows packed; the return value carries one outcome per session, in
+    /// order (a failed row's logits slice is zeroed and its token is not
+    /// consumed, exactly like [`Backend::decode_step`]).
+    ///
+    /// The default loops [`Backend::decode_step`] — correct for any engine
+    /// (pjrt untouched). The native backend overrides it to stack all live
+    /// sessions' current positions into one `(rows, D)` dense pass per
+    /// block (histories stay per-session), recovering dense-kernel row
+    /// blocking at high occupancy (DESIGN.md §Kernels).
+    fn decode_step_batch(
+        &self,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Vec<Result<()>> {
+        assert_eq!(
+            sessions.len(),
+            tokens.len(),
+            "decode_step_batch wants one token per session"
+        );
+        let v = match self.manifest().vocab() {
+            Ok(v) => v,
+            Err(e) => {
+                logits.clear();
+                return sessions.iter().map(|_| Err(anyhow::anyhow!("{e:#}"))).collect();
+            }
+        };
+        logits.clear();
+        logits.resize(sessions.len() * v, 0.0);
+        let mut row = Vec::new();
+        sessions
+            .iter_mut()
+            .zip(tokens.iter())
+            .enumerate()
+            .map(|(i, (sess, &tok))| {
+                let res = self.decode_step(sess, tok, &mut row);
+                if res.is_ok() {
+                    logits[i * v..(i + 1) * v].copy_from_slice(&row);
+                }
+                res
+            })
+            .collect()
     }
 
     /// Finish a session, releasing any engine-private state back to the
@@ -482,6 +539,56 @@ mod tests {
         fallback.decode_step(&mut edge, 2, &mut logits).unwrap();
         assert!(fallback.decode_step(&mut edge, 2, &mut logits).is_err());
         fallback.decode_end(edge);
+    }
+
+    #[test]
+    fn default_decode_step_batch_is_the_serial_loop() {
+        // The trait-default batched round must behave exactly like looping
+        // decode_step row by row — same logits, same token histories, and
+        // per-row errors (window edge) that leave the other rows fine.
+        let dir = PathBuf::from("artifacts/golden_tiny");
+        let fallback = PadOnly(load(BackendKind::Native, &dir, 0).unwrap());
+        let v = fallback.manifest().vocab().unwrap();
+        let mut lg = Vec::new();
+        let mut a = fallback.decode_begin(&[1, 2, 3], &mut lg).unwrap();
+        let mut b = fallback.decode_begin(&[4, 5], &mut lg).unwrap();
+        // Serial reference on identical twin sessions.
+        let mut ra = fallback.decode_begin(&[1, 2, 3], &mut lg).unwrap();
+        let mut rb = fallback.decode_begin(&[4, 5], &mut lg).unwrap();
+        let mut packed = Vec::new();
+        for round in 0..3 {
+            let toks = [round as i32 + 6, round as i32 + 9];
+            let mut want = Vec::new();
+            fallback.decode_step(&mut ra, toks[0], &mut lg).unwrap();
+            want.extend_from_slice(&lg);
+            fallback.decode_step(&mut rb, toks[1], &mut lg).unwrap();
+            want.extend_from_slice(&lg);
+            let results = {
+                let mut sessions = [&mut a, &mut b];
+                fallback.decode_step_batch(&mut sessions, &toks, &mut packed)
+            };
+            assert_eq!(results.len(), 2);
+            assert!(results.iter().all(Result::is_ok));
+            assert_eq!(packed.len(), 2 * v);
+            assert_eq!(packed, want, "default batch diverged at round {round}");
+        }
+        assert_eq!(a.tokens(), ra.tokens());
+        assert_eq!(b.tokens(), rb.tokens());
+        // Per-row failure: run one session to the window edge; its row
+        // errors, the other still steps.
+        let mut edge = fallback.decode_begin(&[1; 15], &mut lg).unwrap();
+        fallback.decode_step(&mut edge, 2, &mut lg).unwrap(); // length 16 = L
+        let results = {
+            let mut sessions = [&mut edge, &mut a];
+            fallback.decode_step_batch(&mut sessions, &[1, 2], &mut packed)
+        };
+        assert!(results[0].is_err(), "window-edge row should fail");
+        assert!(results[1].is_ok(), "healthy row should step");
+        assert!(packed[..v].iter().all(|&x| x == 0.0), "failed row logits not zeroed");
+        fallback.decode_end(edge);
+        for s in [a, b, ra, rb] {
+            fallback.decode_end(s);
+        }
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! Vectorized kernel subsystem: runtime-dispatched SIMD microkernels
+//! (DESIGN.md §Kernels).
+//!
+//! Every hot inner loop of the native engine — the dense microkernel's
+//! axpy/dot block, the FFT butterfly passes and spectrum pointwise
+//! products, the streaming-decode dot, GELU, and the gating elementwise
+//! ops — routes through a [`Kernels`] dispatch table chosen **once** per
+//! process:
+//!
+//! * [`SCALAR`] holds the pre-existing loop bodies verbatim, so the scalar
+//!   path is bitwise identical to the engine before this subsystem existed
+//!   (pinned by the tests below).
+//! * The SIMD table holds explicit 8-lane AVX2 kernels on x86-64
+//!   (`simd.rs`, selected at runtime via `is_x86_feature_detected!`) and
+//!   4-lane NEON kernels on aarch64 (`neon.rs`, baseline ISA — no runtime
+//!   probe needed). Per-element kernels (axpy, gating, spectrum products,
+//!   butterflies) perform exactly the scalar arithmetic per lane (no FMA
+//!   contraction), so they agree with the scalar table bitwise; reduction
+//!   kernels (dot) split the sum across lanes and reduce the lane partials
+//!   in f64, so they agree to f32 round-off and sit *inside* the engine's
+//!   f64-accumulation audit bounds (DESIGN.md §Decode); the SIMD GELU uses
+//!   a polynomial `exp` (Cephes coefficients) whose tanh agrees with libm
+//!   to ≲1e-6 relative.
+//!
+//! Selection: `HYENA_KERNEL=scalar|simd|auto` (default `auto` = SIMD when
+//! the CPU supports it). The active table's name is surfaced through
+//! `Backend::mem_report` and the serve report, so benches and the
+//! `scripts/check.sh kernel-smoke` gate can verify which path actually ran
+//! rather than trusting the environment.
+
+// Unsafe policy: the dispatch layer (this file) and the scalar table are
+// `unsafe`-free (`scalar.rs` forbids it); the only `unsafe` in the
+// subsystem lives in the SIMD tables (`simd.rs`/`neon.rs`), each carrying
+// its module-level safety argument.
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::OnceLock;
+
+/// sqrt(2/pi) — tanh-GELU constant (jax.nn.gelu default).
+pub const GELU_C: f32 = 0.797_884_6;
+/// Cubic coefficient of the tanh-GELU argument.
+pub const GELU_A: f32 = 0.044_715;
+
+/// One dispatch table of hot-loop microkernels. All entries are plain `fn`
+/// pointers so the table is a `'static` constant and call sites pay one
+/// indirect call per *row/block*, never per element.
+pub struct Kernels {
+    /// Table name: `"scalar"` or `"simd"` (what gates match on).
+    pub name: &'static str,
+    /// Instruction set behind the table: `"portable"`, `"avx2"`, `"neon"`.
+    pub isa: &'static str,
+    /// `y[i] += a · w[i]` — the dense microkernel's inner row update and
+    /// the recurrence's bias term (`c += bias ⊙ v`).
+    pub axpy: fn(y: &mut [f32], w: &[f32], a: f32),
+    /// `Σ_i a[i]·b[i]` — the dense backward `dx` reduction and the
+    /// streaming-decode dot ([`crate::backend::fft::causal_dot_step`]).
+    pub dot: fn(a: &[f32], b: &[f32]) -> f32,
+    /// `out[t] = gate[t·stride] · c[t]` — the Hyena gating elementwise op
+    /// (gates live strided inside the `(·, (N+1)D)` projection rows).
+    pub gate_mul: fn(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize),
+    /// Tanh-GELU forward over a contiguous chunk: writes `y` and the cached
+    /// tanh term `th`.
+    pub gelu_fwd: fn(x: &[f32], y: &mut [f32], th: &mut [f32]),
+    /// One radix-2 butterfly stage (`len` = current butterfly span) over
+    /// the full `(re, im)` buffers; `inverse` conjugates the twiddles.
+    pub butterfly_pass:
+        fn(re: &mut [f32], im: &mut [f32], tw_re: &[f32], tw_im: &[f32], len: usize, inverse: bool),
+    /// Pointwise half-spectrum product `P = A·B` (causal convolution).
+    pub spec_mul: fn(
+        a_re: &[f32],
+        a_im: &[f32],
+        b_re: &[f32],
+        b_im: &[f32],
+        p_re: &mut [f32],
+        p_im: &mut [f32],
+    ),
+    /// Pointwise half-spectrum product `P = conj(A)·B` (causal correlation,
+    /// the convolution adjoint).
+    pub spec_mul_conj: fn(
+        a_re: &[f32],
+        a_im: &[f32],
+        b_re: &[f32],
+        b_im: &[f32],
+        p_re: &mut [f32],
+        p_im: &mut [f32],
+    ),
+}
+
+/// The scalar table: the engine's pre-subsystem loop bodies, verbatim.
+pub static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    isa: "portable",
+    axpy: scalar::axpy,
+    dot: scalar::dot,
+    gate_mul: scalar::gate_mul,
+    gelu_fwd: scalar::gelu_fwd,
+    butterfly_pass: scalar::butterfly_pass,
+    spec_mul: scalar::spec_mul,
+    spec_mul_conj: scalar::spec_mul_conj,
+};
+
+/// The SIMD table for this CPU, if it has one: AVX2 on x86-64 (runtime
+/// detection — the one place the ISA probe happens), NEON on aarch64
+/// (baseline, always present).
+#[cfg(target_arch = "x86_64")]
+pub fn simd_table() -> Option<&'static Kernels> {
+    if is_x86_feature_detected!("avx2") {
+        Some(&simd::AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub fn simd_table() -> Option<&'static Kernels> {
+    Some(&neon::NEON)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn simd_table() -> Option<&'static Kernels> {
+    None
+}
+
+/// A parsed `HYENA_KERNEL` value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// SIMD when the CPU supports it, scalar otherwise (the default).
+    Auto,
+    /// Force the scalar table (bitwise-reproducible reference path).
+    Scalar,
+    /// Force the SIMD table; falls back to scalar when the CPU lacks it
+    /// (gates must check the *reported* name, not the request).
+    Simd,
+}
+
+impl KernelChoice {
+    /// Parse a `HYENA_KERNEL` spelling; `None` for unknown values.
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "simd" => Some(KernelChoice::Simd),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve a choice against an (optionally absent) SIMD table. Pure — the
+/// selection policy in one testable place.
+pub fn resolve(choice: KernelChoice, simd: Option<&'static Kernels>) -> &'static Kernels {
+    match choice {
+        KernelChoice::Scalar => &SCALAR,
+        KernelChoice::Auto | KernelChoice::Simd => simd.unwrap_or(&SCALAR),
+    }
+}
+
+/// Selection for an explicit `HYENA_KERNEL` value (`None` = unset) against
+/// this CPU's SIMD table. Unknown values fall back to `auto` with a
+/// warning (a serving process should not die on a typo'd tuning knob).
+/// Pure in the environment — this is what the forcing tests exercise, so
+/// they never mutate the process env under a parallel test harness.
+pub fn select_from(env: Option<&str>) -> &'static Kernels {
+    let choice = match env {
+        Some(v) => KernelChoice::parse(v).unwrap_or_else(|| {
+            eprintln!("warning: HYENA_KERNEL={v:?} is not scalar|simd|auto; using auto");
+            KernelChoice::Auto
+        }),
+        None => KernelChoice::Auto,
+    };
+    resolve(choice, simd_table())
+}
+
+/// Perform the selection `active()` caches: read `HYENA_KERNEL`, resolve
+/// against this CPU's SIMD table.
+pub fn select() -> &'static Kernels {
+    select_from(std::env::var("HYENA_KERNEL").ok().as_deref())
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide dispatch table, selected once on first use. Hot loops
+/// fetch this once per kernel entry point (an atomic load), then call
+/// through plain `fn` pointers.
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(select)
+}
+
+/// Name of the active table (`"scalar"` / `"simd"`), for reports and gates.
+pub fn active_name() -> &'static str {
+    active().name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn signal(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn rel(a: f32, b: f32) -> f32 {
+        (a - b).abs() / (1.0 + a.abs().max(b.abs()))
+    }
+
+    // -- scalar table pinned bitwise to the pre-subsystem loop bodies -------
+
+    #[test]
+    fn scalar_axpy_is_bitwise_the_original_loop() {
+        let mut rng = Pcg::new(1);
+        for &n in &[1usize, 7, 8, 64, 257] {
+            let w = signal(&mut rng, n);
+            let a = rng.normal();
+            let mut y = signal(&mut rng, n);
+            let mut want = y.clone();
+            // Pre-PR dense_fwd_into inner block, verbatim.
+            for o in 0..n {
+                want[o] += a * w[o];
+            }
+            (SCALAR.axpy)(&mut y, &w, a);
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scalar_dot_is_bitwise_the_original_loop() {
+        let mut rng = Pcg::new(2);
+        for &n in &[1usize, 5, 8, 100, 513] {
+            let a = signal(&mut rng, n);
+            let b = signal(&mut rng, n);
+            // Pre-PR dense_bwd_dx_into / causal_dot_step inner, verbatim.
+            let mut acc = 0.0f32;
+            for o in 0..n {
+                acc += a[o] * b[o];
+            }
+            assert_eq!((SCALAR.dot)(&a, &b), acc, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scalar_gate_mul_is_bitwise_the_original_loop() {
+        let mut rng = Pcg::new(3);
+        let (l, stride) = (33usize, 5usize);
+        let c = signal(&mut rng, l);
+        let gate = signal(&mut rng, l * stride);
+        let mut out = vec![0.0f32; l];
+        let mut want = vec![0.0f32; l];
+        for t in 0..l {
+            want[t] = gate[t * stride] * c[t];
+        }
+        (SCALAR.gate_mul)(&mut out, &c, &gate, stride);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn scalar_gelu_is_bitwise_the_original_loop() {
+        let mut rng = Pcg::new(4);
+        let n = 97usize;
+        let x = signal(&mut rng, n);
+        let (mut y, mut th) = (vec![0.0f32; n], vec![0.0f32; n]);
+        (SCALAR.gelu_fwd)(&x, &mut y, &mut th);
+        for i in 0..n {
+            let v = x[i];
+            let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+            assert_eq!(th[i], t);
+            assert_eq!(y[i], 0.5 * v * (1.0 + t));
+        }
+    }
+
+    #[test]
+    fn scalar_spec_mul_is_bitwise_the_original_loop() {
+        let mut rng = Pcg::new(5);
+        let bins = 65usize;
+        let (ar, ai) = (signal(&mut rng, bins), signal(&mut rng, bins));
+        let (br, bi) = (signal(&mut rng, bins), signal(&mut rng, bins));
+        let (mut pr, mut pi) = (vec![0.0f32; bins], vec![0.0f32; bins]);
+        (SCALAR.spec_mul)(&ar, &ai, &br, &bi, &mut pr, &mut pi);
+        for k in 0..bins {
+            assert_eq!(pr[k], ar[k] * br[k] - ai[k] * bi[k]);
+            assert_eq!(pi[k], ar[k] * bi[k] + ai[k] * br[k]);
+        }
+        (SCALAR.spec_mul_conj)(&ar, &ai, &br, &bi, &mut pr, &mut pi);
+        for k in 0..bins {
+            assert_eq!(pr[k], ar[k] * br[k] + ai[k] * bi[k]);
+            assert_eq!(pi[k], ar[k] * bi[k] - ai[k] * br[k]);
+        }
+    }
+
+    #[test]
+    fn scalar_butterfly_pass_is_bitwise_the_original_stage_loop() {
+        let mut rng = Pcg::new(6);
+        let n = 64usize;
+        // Twiddles exactly as Fft::new builds them.
+        let mut tw_re = Vec::with_capacity(n / 2);
+        let mut tw_im = Vec::with_capacity(n / 2);
+        for k in 0..n / 2 {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        for inverse in [false, true] {
+            let re0 = signal(&mut rng, n);
+            let im0 = signal(&mut rng, n);
+            let mut len = 2usize;
+            while len <= n {
+                let (mut re, mut im) = (re0.clone(), im0.clone());
+                let (mut wre, mut wim) = (re0.clone(), im0.clone());
+                (SCALAR.butterfly_pass)(&mut re, &mut im, &tw_re, &tw_im, len, inverse);
+                // Pre-PR Fft::run stage body, verbatim.
+                {
+                    let step = n / len;
+                    let half = len / 2;
+                    let mut start = 0usize;
+                    while start < n {
+                        for k in 0..half {
+                            let wr = tw_re[k * step];
+                            let wi =
+                                if inverse { -tw_im[k * step] } else { tw_im[k * step] };
+                            let a = start + k;
+                            let b = a + half;
+                            let tr = wre[b] * wr - wim[b] * wi;
+                            let ti = wre[b] * wi + wim[b] * wr;
+                            wre[b] = wre[a] - tr;
+                            wim[b] = wim[a] - ti;
+                            wre[a] += tr;
+                            wim[a] += ti;
+                        }
+                        start += len;
+                    }
+                }
+                assert_eq!(re, wre, "len={len} inverse={inverse}");
+                assert_eq!(im, wim, "len={len} inverse={inverse}");
+                len <<= 1;
+            }
+        }
+    }
+
+    // -- scalar vs SIMD agreement (skipped on CPUs without a SIMD table) ----
+
+    #[test]
+    fn simd_elementwise_kernels_match_scalar_bitwise() {
+        // axpy / gate_mul / spec products / butterflies perform the exact
+        // scalar arithmetic per lane (mul + add, no FMA), so the agreement
+        // is bitwise, including non-multiple-of-lane tails.
+        let Some(simd) = simd_table() else { return };
+        let mut rng = Pcg::new(7);
+        for &n in &[1usize, 3, 8, 9, 16, 31, 64, 257, 1000] {
+            let w = signal(&mut rng, n);
+            let a = rng.normal();
+            let y0 = signal(&mut rng, n);
+            let (mut ys, mut yv) = (y0.clone(), y0.clone());
+            (SCALAR.axpy)(&mut ys, &w, a);
+            (simd.axpy)(&mut yv, &w, a);
+            assert_eq!(ys, yv, "axpy n={n}");
+
+            let stride = 1 + rng.usize_below(6);
+            let c = signal(&mut rng, n);
+            let gate = signal(&mut rng, n * stride);
+            let (mut os, mut ov) = (vec![0.0f32; n], vec![0.0f32; n]);
+            (SCALAR.gate_mul)(&mut os, &c, &gate, stride);
+            (simd.gate_mul)(&mut ov, &c, &gate, stride);
+            assert_eq!(os, ov, "gate_mul n={n} stride={stride}");
+
+            let (ar, ai) = (signal(&mut rng, n), signal(&mut rng, n));
+            let (br, bi) = (signal(&mut rng, n), signal(&mut rng, n));
+            let (mut prs, mut pis) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut prv, mut piv) = (vec![0.0f32; n], vec![0.0f32; n]);
+            (SCALAR.spec_mul)(&ar, &ai, &br, &bi, &mut prs, &mut pis);
+            (simd.spec_mul)(&ar, &ai, &br, &bi, &mut prv, &mut piv);
+            assert_eq!((&prs, &pis), (&prv, &piv), "spec_mul n={n}");
+            (SCALAR.spec_mul_conj)(&ar, &ai, &br, &bi, &mut prs, &mut pis);
+            (simd.spec_mul_conj)(&ar, &ai, &br, &bi, &mut prv, &mut piv);
+            assert_eq!((&prs, &pis), (&prv, &piv), "spec_mul_conj n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_butterfly_pass_matches_scalar_bitwise() {
+        let Some(simd) = simd_table() else { return };
+        let mut rng = Pcg::new(8);
+        for &n in &[2usize, 8, 32, 256, 2048] {
+            let mut tw_re = Vec::with_capacity(n / 2);
+            let mut tw_im = Vec::with_capacity(n / 2);
+            for k in 0..n / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                tw_re.push(ang.cos() as f32);
+                tw_im.push(ang.sin() as f32);
+            }
+            for inverse in [false, true] {
+                let re0 = signal(&mut rng, n);
+                let im0 = signal(&mut rng, n);
+                let mut len = 2usize;
+                while len <= n {
+                    let (mut rs, mut is) = (re0.clone(), im0.clone());
+                    let (mut rv, mut iv) = (re0.clone(), im0.clone());
+                    (SCALAR.butterfly_pass)(&mut rs, &mut is, &tw_re, &tw_im, len, inverse);
+                    (simd.butterfly_pass)(&mut rv, &mut iv, &tw_re, &tw_im, len, inverse);
+                    assert_eq!(rs, rv, "re n={n} len={len} inverse={inverse}");
+                    assert_eq!(is, iv, "im n={n} len={len} inverse={inverse}");
+                    len <<= 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot_matches_scalar_within_reduction_tolerance() {
+        // The SIMD dot reassociates the sum (lane partials, reduced in
+        // f64), so the agreement bound is the property-test contract:
+        // ≤ 1e-5 relative.
+        let Some(simd) = simd_table() else { return };
+        let mut rng = Pcg::new(9);
+        for &n in &[1usize, 7, 8, 15, 16, 17, 100, 4096] {
+            let a = signal(&mut rng, n);
+            let b = signal(&mut rng, n);
+            let s = (SCALAR.dot)(&a, &b);
+            let v = (simd.dot)(&a, &b);
+            assert!(rel(s, v) <= 1e-5, "dot n={n}: scalar {s} vs simd {v}");
+        }
+    }
+
+    #[test]
+    fn simd_gelu_matches_scalar_within_poly_tolerance() {
+        // The SIMD tanh is a Cephes-style polynomial exp; ≲1e-6 relative
+        // against libm, well inside the 1e-5 kernel contract.
+        let Some(simd) = simd_table() else { return };
+        let mut rng = Pcg::new(10);
+        let n = 1003usize;
+        let mut x = signal(&mut rng, n);
+        // Hit the saturating and near-zero regimes explicitly.
+        x[0] = 0.0;
+        x[1] = 12.0;
+        x[2] = -12.0;
+        x[3] = 1e-4;
+        x[4] = -88.0;
+        x[5] = 88.0;
+        let (mut ys, mut ts) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut yv, mut tv) = (vec![0.0f32; n], vec![0.0f32; n]);
+        (SCALAR.gelu_fwd)(&x, &mut ys, &mut ts);
+        (simd.gelu_fwd)(&x, &mut yv, &mut tv);
+        for i in 0..n {
+            assert!(
+                rel(ys[i], yv[i]) <= 1e-5,
+                "gelu x={}: scalar {} vs simd {}",
+                x[i],
+                ys[i],
+                yv[i]
+            );
+            assert!(
+                rel(ts[i], tv[i]) <= 1e-5,
+                "tanh x={}: scalar {} vs simd {}",
+                x[i],
+                ts[i],
+                tv[i]
+            );
+        }
+    }
+
+    // -- f64-accumulation audit: the dot reduction at width 8K -------------
+
+    #[test]
+    fn f64_accumulation_bounds_dot_drift_at_8k() {
+        // §Decode-audit extension to the new kernels: at reduction width
+        // 8192 (positive operands — condition number ~1), the scalar f32
+        // dot drifts by at most 5e-4 relative against an exact f64
+        // reference, and the SIMD dot (lane partials reduced in f64) must
+        // be at least as tight — never looser than the scalar bound.
+        let d = 8192usize;
+        let mut rng = Pcg::new(11);
+        let a: Vec<f32> = (0..d).map(|_| 0.5 + 0.5 * rng.f32()).collect();
+        let b: Vec<f32> = (0..d).map(|_| 0.5 + 0.5 * rng.f32()).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let s = (SCALAR.dot)(&a, &b) as f64;
+        let err_scalar = (s - exact).abs() / exact;
+        assert!(err_scalar <= 5e-4, "scalar dot drifted: {err_scalar}");
+        if let Some(simd) = simd_table() {
+            let v = (simd.dot)(&a, &b) as f64;
+            let err_simd = (v - exact).abs() / exact;
+            assert!(err_simd <= 5e-4, "simd dot drifted: {err_simd}");
+            assert!(
+                err_simd <= err_scalar + 1e-7,
+                "simd dot ({err_simd}) looser than scalar ({err_scalar})"
+            );
+        }
+    }
+
+    // -- selection policy ---------------------------------------------------
+
+    #[test]
+    fn choice_parsing_and_resolution() {
+        assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse(" SIMD "), Some(KernelChoice::Simd));
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse(""), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("avx512"), None);
+
+        let fake_simd: Option<&'static Kernels> = simd_table();
+        // Scalar always forces the scalar table.
+        assert_eq!(resolve(KernelChoice::Scalar, fake_simd).name, "scalar");
+        assert_eq!(resolve(KernelChoice::Scalar, None).name, "scalar");
+        // Auto/Simd take the SIMD table when present, scalar otherwise.
+        assert_eq!(resolve(KernelChoice::Auto, None).name, "scalar");
+        assert_eq!(resolve(KernelChoice::Simd, None).name, "scalar");
+        if let Some(t) = fake_simd {
+            assert_eq!(resolve(KernelChoice::Auto, fake_simd).name, t.name);
+            assert_eq!(resolve(KernelChoice::Simd, fake_simd).name, "simd");
+        }
+    }
+
+    #[test]
+    fn env_override_forces_the_scalar_table() {
+        // `select_from` is `select()` minus the env read (pure), so the
+        // forcing knob is testable without mutating the process
+        // environment — a set_var here would race other tests' first
+        // `active()` initialization under the parallel test harness.
+        assert_eq!(select_from(Some("scalar")).name, "scalar");
+        assert_eq!(select_from(Some("SCALAR ")).name, "scalar");
+        let forced = select_from(Some("simd"));
+        match simd_table() {
+            Some(t) => assert_eq!(forced.name, t.name),
+            None => assert_eq!(forced.name, "scalar"),
+        }
+        // Unknown values warn and fall back to auto, never panic.
+        let fallback = select_from(Some("definitely-not-a-kernel"));
+        assert_eq!(fallback.name, select_from(None).name);
+        // And `select()` agrees with `select_from` on the ambient env.
+        assert_eq!(
+            select().name,
+            select_from(std::env::var("HYENA_KERNEL").ok().as_deref()).name
+        );
+    }
+
+    #[test]
+    fn active_table_is_consistent_with_selection_policy() {
+        // Whatever the environment says, the cached table must be one of
+        // the two real tables and agree with its own name.
+        let k = active();
+        assert!(k.name == "scalar" || k.name == "simd");
+        assert_eq!(active_name(), k.name);
+        if k.name == "simd" {
+            assert!(simd_table().is_some(), "simd table active on a CPU without one");
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! NEON f32x4 microkernels for aarch64 (DESIGN.md §Kernels).
+//!
+//! # Safety argument
+//!
+//! NEON (Advanced SIMD) is a baseline feature of every aarch64 target Rust
+//! supports, so unlike the AVX2 table there is no runtime probe: the
+//! intrinsics are always valid to execute. The `unsafe` blocks below exist
+//! only because the `core::arch::aarch64` intrinsics are declared `unsafe
+//! fn`; all loads/stores are unaligned (`vld1q`/`vst1q`) on indices proved
+//! in-bounds by the loop structure, with the same slice-length contracts
+//! as the scalar kernels.
+//!
+//! # Numerics contract
+//!
+//! Identical to the AVX2 table (`simd.rs`): per-element kernels use
+//! separate mul/add (no FMA contraction — bitwise the scalar table), the
+//! dot reduces paired-lane partials + tail in f64, and GELU's tanh runs
+//! the same Cephes-style polynomial exp (mirrored by
+//! `python/tests/test_native_kernels.py`).
+
+// Cephes coefficients are quoted at full precision; index loops mirror the
+// scalar reference bodies one-to-one.
+#![allow(clippy::excessive_precision, clippy::needless_range_loop)]
+
+use core::arch::aarch64::*;
+
+use super::{Kernels, GELU_A, GELU_C};
+
+/// The NEON table, handed out by `kernels::simd_table()` on aarch64.
+pub static NEON: Kernels = Kernels {
+    name: "simd",
+    isa: "neon",
+    axpy,
+    dot,
+    gate_mul,
+    gelu_fwd,
+    butterfly_pass,
+    spec_mul,
+    spec_mul_conj,
+};
+
+fn axpy(y: &mut [f32], w: &[f32], a: f32) {
+    assert_eq!(y.len(), w.len(), "axpy length mismatch");
+    let n = y.len();
+    let (yp, wp) = (y.as_mut_ptr(), w.as_ptr());
+    let mut i = 0usize;
+    // SAFETY: NEON is baseline on aarch64; indices are in-bounds.
+    unsafe {
+        let av = vdupq_n_f32(a);
+        while i + 4 <= n {
+            let yv = vld1q_f32(yp.add(i));
+            let wv = vld1q_f32(wp.add(i));
+            // mul + add, not FMA: bitwise the scalar `y[o] += a * w[o]`.
+            vst1q_f32(yp.add(i), vaddq_f32(yv, vmulq_f32(av, wv)));
+            i += 4;
+        }
+    }
+    while i < n {
+        y[i] += a * w[i];
+        i += 1;
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut l0 = [0.0f32; 4];
+    let mut l1 = [0.0f32; 4];
+    let mut i = 0usize;
+    // SAFETY: NEON is baseline on aarch64; indices are in-bounds.
+    unsafe {
+        // Paired-lane accumulation: two 4-lane partials.
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        while i + 8 <= n {
+            let p0 = vmulq_f32(vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            let p1 = vmulq_f32(vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+            acc0 = vaddq_f32(acc0, p0);
+            acc1 = vaddq_f32(acc1, p1);
+            i += 8;
+        }
+        if i + 4 <= n {
+            let p = vmulq_f32(vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            acc0 = vaddq_f32(acc0, p);
+            i += 4;
+        }
+        vst1q_f32(l0.as_mut_ptr(), acc0);
+        vst1q_f32(l1.as_mut_ptr(), acc1);
+    }
+    // Reduce lane partials and the tail in f64 (f64-accumulation audit).
+    let mut s = 0.0f64;
+    for k in 0..4 {
+        s += l0[k] as f64;
+        s += l1[k] as f64;
+    }
+    while i < n {
+        s += a[i] as f64 * b[i] as f64;
+        i += 1;
+    }
+    s as f32
+}
+
+fn gate_mul(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
+    assert_eq!(out.len(), c.len(), "gate_mul length mismatch");
+    assert!(
+        out.is_empty() || (out.len() - 1) * stride < gate.len(),
+        "gate_mul gate column out of bounds"
+    );
+    let n = out.len();
+    let (op, cp) = (out.as_mut_ptr(), c.as_ptr());
+    let mut i = 0usize;
+    // SAFETY: NEON is baseline on aarch64; indices are in-bounds.
+    unsafe {
+        if stride == 1 {
+            while i + 4 <= n {
+                let g = vld1q_f32(gate.as_ptr().add(i));
+                let cv = vld1q_f32(cp.add(i));
+                vst1q_f32(op.add(i), vmulq_f32(g, cv));
+                i += 4;
+            }
+        } else {
+            let mut buf = [0.0f32; 4];
+            while i + 4 <= n {
+                for (j, slot) in buf.iter_mut().enumerate() {
+                    *slot = gate[(i + j) * stride];
+                }
+                let g = vld1q_f32(buf.as_ptr());
+                let cv = vld1q_f32(cp.add(i));
+                vst1q_f32(op.add(i), vmulq_f32(g, cv));
+                i += 4;
+            }
+        }
+    }
+    while i < n {
+        out[i] = gate[i * stride] * c[i];
+        i += 1;
+    }
+}
+
+fn spec_mul(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    spec_mul_impl(a_re, a_im, b_re, b_im, p_re, p_im, false);
+}
+
+fn spec_mul_conj(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    spec_mul_impl(a_re, a_im, b_re, b_im, p_re, p_im, true);
+}
+
+fn spec_mul_impl(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+    conj: bool,
+) {
+    let n = p_re.len();
+    // Unconditional: the vector body below uses raw pointers.
+    assert!(
+        p_im.len() == n
+            && a_re.len() >= n
+            && a_im.len() >= n
+            && b_re.len() >= n
+            && b_im.len() >= n,
+        "spec_mul length mismatch"
+    );
+    let mut k = 0usize;
+    // SAFETY: NEON is baseline on aarch64; indices are in-bounds.
+    unsafe {
+        while k + 4 <= n {
+            let ar = vld1q_f32(a_re.as_ptr().add(k));
+            let ai = vld1q_f32(a_im.as_ptr().add(k));
+            let br = vld1q_f32(b_re.as_ptr().add(k));
+            let bi = vld1q_f32(b_im.as_ptr().add(k));
+            let rr = vmulq_f32(ar, br);
+            let ii = vmulq_f32(ai, bi);
+            let ri = vmulq_f32(ar, bi);
+            let ir = vmulq_f32(ai, br);
+            let (pr, pi) = if conj {
+                (vaddq_f32(rr, ii), vsubq_f32(ri, ir))
+            } else {
+                (vsubq_f32(rr, ii), vaddq_f32(ri, ir))
+            };
+            vst1q_f32(p_re.as_mut_ptr().add(k), pr);
+            vst1q_f32(p_im.as_mut_ptr().add(k), pi);
+            k += 4;
+        }
+    }
+    while k < n {
+        if conj {
+            p_re[k] = a_re[k] * b_re[k] + a_im[k] * b_im[k];
+            p_im[k] = a_re[k] * b_im[k] - a_im[k] * b_re[k];
+        } else {
+            p_re[k] = a_re[k] * b_re[k] - a_im[k] * b_im[k];
+            p_im[k] = a_re[k] * b_im[k] + a_im[k] * b_re[k];
+        }
+        k += 1;
+    }
+}
+
+fn butterfly_pass(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    len: usize,
+    inverse: bool,
+) {
+    let nn = re.len();
+    assert_eq!(im.len(), nn, "butterfly re/im length mismatch");
+    assert!(len >= 2 && len <= nn && nn % len == 0, "butterfly span {len} invalid for n={nn}");
+    assert!(
+        tw_re.len() >= nn / 2 && tw_im.len() >= nn / 2,
+        "butterfly twiddle table too short"
+    );
+    if len / 2 < 4 {
+        super::scalar::butterfly_pass(re, im, tw_re, tw_im, len, inverse);
+        return;
+    }
+    let n = re.len();
+    let step = n / len;
+    let half = len / 2;
+    let sign = if inverse { -1.0f32 } else { 1.0f32 };
+    let (rp, ip) = (re.as_mut_ptr(), im.as_mut_ptr());
+    let mut wr_buf = [0.0f32; 4];
+    let mut wi_buf = [0.0f32; 4];
+    let mut start = 0usize;
+    while start < n {
+        let mut k = 0usize;
+        while k + 4 <= half {
+            for j in 0..4 {
+                wr_buf[j] = tw_re[(k + j) * step];
+                wi_buf[j] = sign * tw_im[(k + j) * step];
+            }
+            // SAFETY: NEON is baseline on aarch64; b = a + half ≥ a + 4,
+            // so the two 4-lane windows are disjoint and in-bounds.
+            unsafe {
+                let wr = vld1q_f32(wr_buf.as_ptr());
+                let wi = vld1q_f32(wi_buf.as_ptr());
+                let a = start + k;
+                let b = a + half;
+                let rb = vld1q_f32(rp.add(b));
+                let ib = vld1q_f32(ip.add(b));
+                let tr = vsubq_f32(vmulq_f32(rb, wr), vmulq_f32(ib, wi));
+                let ti = vaddq_f32(vmulq_f32(rb, wi), vmulq_f32(ib, wr));
+                let ra = vld1q_f32(rp.add(a));
+                let ia = vld1q_f32(ip.add(a));
+                vst1q_f32(rp.add(b), vsubq_f32(ra, tr));
+                vst1q_f32(ip.add(b), vsubq_f32(ia, ti));
+                vst1q_f32(rp.add(a), vaddq_f32(ra, tr));
+                vst1q_f32(ip.add(a), vaddq_f32(ia, ti));
+            }
+            k += 4;
+        }
+        while k < half {
+            let wr = tw_re[k * step];
+            let wi = if inverse { -tw_im[k * step] } else { tw_im[k * step] };
+            let a = start + k;
+            let b = a + half;
+            let tr = re[b] * wr - im[b] * wi;
+            let ti = re[b] * wi + im[b] * wr;
+            re[b] = re[a] - tr;
+            im[b] = im[a] - ti;
+            re[a] += tr;
+            im[a] += ti;
+            k += 1;
+        }
+        start += len;
+    }
+}
+
+// -- polynomial exp / tanh (same constants as simd.rs) ----------------------
+
+const EXP_HI: f32 = 88.3762626647950;
+const EXP_LO: f32 = -88.3762626647949;
+const LOG2EF: f32 = 1.44269504088896341;
+const EXP_C1: f32 = 0.693359375;
+const EXP_C2: f32 = -2.12194440e-4;
+const EXP_P0: f32 = 1.9875691500e-4;
+const EXP_P1: f32 = 1.3981999507e-3;
+const EXP_P2: f32 = 8.3334519073e-3;
+const EXP_P3: f32 = 4.1665795894e-2;
+const EXP_P4: f32 = 1.6666665459e-1;
+const EXP_P5: f32 = 5.0000001201e-1;
+
+/// Cephes-style polynomial exp on 4 lanes (see `simd.rs` for the scheme).
+///
+/// # Safety
+/// NEON only (baseline on aarch64).
+unsafe fn exp_neon(x: float32x4_t) -> float32x4_t {
+    let one = vdupq_n_f32(1.0);
+    let x = vminq_f32(vdupq_n_f32(EXP_HI), vmaxq_f32(vdupq_n_f32(EXP_LO), x));
+    let fx = vrndmq_f32(vaddq_f32(vmulq_f32(x, vdupq_n_f32(LOG2EF)), vdupq_n_f32(0.5)));
+    let r = vsubq_f32(
+        vsubq_f32(x, vmulq_f32(fx, vdupq_n_f32(EXP_C1))),
+        vmulq_f32(fx, vdupq_n_f32(EXP_C2)),
+    );
+    let r2 = vmulq_f32(r, r);
+    let mut y = vdupq_n_f32(EXP_P0);
+    y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EXP_P1));
+    y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EXP_P2));
+    y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EXP_P3));
+    y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EXP_P4));
+    y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EXP_P5));
+    y = vaddq_f32(vaddq_f32(vmulq_f32(y, r2), r), one);
+    let n = vcvtq_s32_f32(fx); // fx is an exact integer after floor
+    let pow2n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(n, vdupq_n_s32(127))));
+    vmulq_f32(y, pow2n)
+}
+
+/// `tanh(x) = sign(x)·(1 − 2/(e^{2|x|}+1))` on 4 lanes.
+///
+/// # Safety
+/// NEON only (baseline on aarch64).
+unsafe fn tanh_neon(x: float32x4_t) -> float32x4_t {
+    let sign_mask = vdupq_n_u32(0x8000_0000);
+    let bits = vreinterpretq_u32_f32(x);
+    let sign = vandq_u32(bits, sign_mask);
+    let ax = vabsq_f32(x);
+    let e = exp_neon(vaddq_f32(ax, ax));
+    let one = vdupq_n_f32(1.0);
+    let two = vdupq_n_f32(2.0);
+    let t = vsubq_f32(one, vdivq_f32(two, vaddq_f32(e, one)));
+    vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(t), sign))
+}
+
+fn gelu_fwd(x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "gelu length mismatch");
+    assert_eq!(x.len(), th.len(), "gelu length mismatch");
+    let n = x.len();
+    let (xp, yp, tp) = (x.as_ptr(), y.as_mut_ptr(), th.as_mut_ptr());
+    let mut i = 0usize;
+    // SAFETY: NEON is baseline on aarch64; indices are in-bounds.
+    unsafe {
+        let c = vdupq_n_f32(GELU_C);
+        let a = vdupq_n_f32(GELU_A);
+        let half = vdupq_n_f32(0.5);
+        let one = vdupq_n_f32(1.0);
+        while i + 4 <= n {
+            let v = vld1q_f32(xp.add(i));
+            let v3 = vmulq_f32(vmulq_f32(v, v), v);
+            let inner = vmulq_f32(c, vaddq_f32(v, vmulq_f32(a, v3)));
+            let t = tanh_neon(inner);
+            vst1q_f32(tp.add(i), t);
+            vst1q_f32(yp.add(i), vmulq_f32(vmulq_f32(half, v), vaddq_f32(one, t)));
+            i += 4;
+        }
+    }
+    while i < n {
+        let v = x[i];
+        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+        th[i] = t;
+        y[i] = 0.5 * v * (1.0 + t);
+        i += 1;
+    }
+}

@@ -1,0 +1,128 @@
+//! Scalar reference kernels — the engine's pre-subsystem inner loops,
+//! moved here **verbatim** (DESIGN.md §Kernels).
+//!
+//! These bodies are the single source of the scalar path's numerics: the
+//! dispatch table routes the same call sites that used to inline these
+//! loops, so `HYENA_KERNEL=scalar` reproduces the pre-subsystem engine
+//! bitwise (pinned by the tests in `kernels/mod.rs` against inlined copies
+//! of the original loops, and end-to-end by the thread-invariance and
+//! serving equality tests). Do not "improve" the arithmetic here — any
+//! reassociation breaks that contract; put fast variants in the SIMD
+//! tables instead.
+
+// The index-based loops are the verbatim pre-subsystem bodies; iterator
+// rewrites would obscure the bitwise-pinning contract. The reference table
+// is `unsafe`-free by construction (kernel-subsystem unsafe policy:
+// intrinsics live only in simd.rs/neon.rs).
+#![forbid(unsafe_code)]
+#![allow(clippy::needless_range_loop)]
+
+use super::{GELU_A, GELU_C};
+
+/// `y[i] += a · w[i]` — `dense_fwd_into`/`dense_bwd_dw_into` inner block
+/// and the recurrence bias update, verbatim.
+pub fn axpy(y: &mut [f32], w: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), w.len());
+    for o in 0..y.len() {
+        y[o] += a * w[o];
+    }
+}
+
+/// `Σ_i a[i]·b[i]` — `dense_bwd_dx_into` inner reduction and
+/// `causal_dot_step`, verbatim (serial f32 accumulation in index order).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for o in 0..a.len() {
+        acc += a[o] * b[o];
+    }
+    acc
+}
+
+/// `out[t] = gate[t·stride] · c[t]` — the mixer gating elementwise op,
+/// verbatim (the gate column lives strided inside the projection rows).
+pub fn gate_mul(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
+    debug_assert_eq!(out.len(), c.len());
+    debug_assert!(out.len() == 0 || (out.len() - 1) * stride < gate.len());
+    for t in 0..out.len() {
+        out[t] = gate[t * stride] * c[t];
+    }
+}
+
+/// Tanh-approximate GELU forward over one contiguous chunk — the
+/// `gelu_fwd_into` element body, verbatim. Writes `y` and the cached tanh.
+pub fn gelu_fwd(x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), th.len());
+    for i in 0..x.len() {
+        let v = x[i];
+        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+        th[i] = t;
+        y[i] = 0.5 * v * (1.0 + t);
+    }
+}
+
+/// One radix-2 butterfly stage — the `Fft::run` stage body, verbatim.
+/// At stage `len`, butterfly `k` uses twiddle `w_{k·(n/len)}`; `inverse`
+/// conjugates it.
+pub fn butterfly_pass(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    len: usize,
+    inverse: bool,
+) {
+    let n = re.len();
+    debug_assert_eq!(im.len(), n);
+    let step = n / len;
+    let half = len / 2;
+    let mut start = 0usize;
+    while start < n {
+        for k in 0..half {
+            let wr = tw_re[k * step];
+            let wi = if inverse { -tw_im[k * step] } else { tw_im[k * step] };
+            let a = start + k;
+            let b = a + half;
+            let tr = re[b] * wr - im[b] * wi;
+            let ti = re[b] * wi + im[b] * wr;
+            re[b] = re[a] - tr;
+            im[b] = im[a] - ti;
+            re[a] += tr;
+            im[a] += ti;
+        }
+        start += len;
+    }
+}
+
+/// Pointwise half-spectrum product `P = A·B` — the `conv_spec_slices_into`
+/// inner loop, verbatim.
+pub fn spec_mul(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    for k in 0..p_re.len() {
+        p_re[k] = a_re[k] * b_re[k] - a_im[k] * b_im[k];
+        p_im[k] = a_re[k] * b_im[k] + a_im[k] * b_re[k];
+    }
+}
+
+/// Pointwise half-spectrum product `P = conj(A)·B` — the
+/// `corr_spec_slices_into` inner loop, verbatim.
+pub fn spec_mul_conj(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    for k in 0..p_re.len() {
+        p_re[k] = a_re[k] * b_re[k] + a_im[k] * b_im[k];
+        p_im[k] = a_re[k] * b_im[k] - a_im[k] * b_re[k];
+    }
+}

@@ -1,0 +1,457 @@
+//! AVX2 f32x8 microkernels for x86-64 (DESIGN.md §Kernels).
+//!
+//! # Safety argument (the only `unsafe` in the kernel subsystem)
+//!
+//! Every `#[target_feature(enable = "avx2")]` function in this file is
+//! reachable **only** through the [`AVX2`] dispatch table, and that table
+//! is handed out exclusively by `kernels::simd_table()`, which returns it
+//! only after `is_x86_feature_detected!("avx2")` succeeds at runtime. The
+//! public entries of the table are safe wrappers whose single `unsafe`
+//! block encodes exactly that invariant: "this table exists ⇒ the CPU has
+//! AVX2". No other precondition is required — the intrinsics used here are
+//! plain loads/stores/arithmetic on slice bounds that every wrapper
+//! `assert!`s **unconditionally** (release builds included: the raw-pointer
+//! bodies must never see mismatched lengths where the scalar kernels would
+//! merely panic on slice indexing), with all vector loads/stores on
+//! indices proved in-bounds by the loop structure given those asserts.
+//!
+//! # Numerics contract
+//!
+//! * Per-element kernels (`axpy`, `gate_mul`, `spec_mul`, `spec_mul_conj`,
+//!   `butterfly_pass`) use separate `mul`/`add`/`sub` — **no FMA
+//!   contraction** — so every lane performs exactly the scalar arithmetic
+//!   and the results are bitwise identical to the scalar table.
+//! * `dot` splits the sum into two 8-lane accumulators (paired-lane
+//!   accumulation: 16 partial sums) and reduces lanes + tail in **f64**,
+//!   which reassociates the sum but tightens it — drift at 8K-wide
+//!   reductions is pinned to be no looser than the scalar kernel by
+//!   `f64_accumulation_bounds_dot_drift_at_8k`.
+//! * `gelu_fwd` evaluates tanh through a Cephes-style polynomial `exp`
+//!   (`exp2` scaling + degree-5 polynomial, the classic `exp_ps`
+//!   coefficients), accurate to ≲1e-6 relative vs libm — inside the 1e-5
+//!   scalar-agreement contract. The non-multiple-of-8 tail falls back to
+//!   libm tanh (bitwise the scalar kernel).
+
+// Cephes coefficients are quoted at full precision; index loops mirror the
+// scalar reference bodies one-to-one.
+#![allow(clippy::excessive_precision, clippy::needless_range_loop)]
+
+use core::arch::x86_64::*;
+
+use super::{Kernels, GELU_A, GELU_C};
+
+/// The AVX2 table. Only `kernels::simd_table()` may hand this out (see the
+/// module-level safety argument).
+pub static AVX2: Kernels = Kernels {
+    name: "simd",
+    isa: "avx2",
+    axpy,
+    dot,
+    gate_mul,
+    gelu_fwd,
+    butterfly_pass,
+    spec_mul,
+    spec_mul_conj,
+};
+
+// ---------------------------------------------------------------------------
+// safe wrappers (dispatch-table entries)
+// ---------------------------------------------------------------------------
+
+fn axpy(y: &mut [f32], w: &[f32], a: f32) {
+    assert_eq!(y.len(), w.len(), "axpy length mismatch");
+    // SAFETY: `AVX2` is only reachable after runtime AVX2 detection
+    // (module-level safety argument); slice bounds are asserted above.
+    unsafe { axpy_avx2(y, w, a) }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    // SAFETY: as above.
+    unsafe { dot_avx2(a, b) }
+}
+
+fn gate_mul(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
+    assert_eq!(out.len(), c.len(), "gate_mul length mismatch");
+    assert!(
+        out.is_empty() || (out.len() - 1) * stride < gate.len(),
+        "gate_mul gate column out of bounds"
+    );
+    // SAFETY: as above.
+    unsafe { gate_mul_avx2(out, c, gate, stride) }
+}
+
+fn gelu_fwd(x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "gelu length mismatch");
+    assert_eq!(x.len(), th.len(), "gelu length mismatch");
+    // SAFETY: as above.
+    unsafe { gelu_fwd_avx2(x, y, th) }
+}
+
+fn butterfly_pass(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    len: usize,
+    inverse: bool,
+) {
+    let n = re.len();
+    assert_eq!(im.len(), n, "butterfly re/im length mismatch");
+    assert!(len >= 2 && len <= n && n % len == 0, "butterfly span {len} invalid for n={n}");
+    assert!(tw_re.len() >= n / 2 && tw_im.len() >= n / 2, "butterfly twiddle table too short");
+    // Stages with fewer than 8 butterflies per block gain nothing from
+    // vectorizing; run the verbatim scalar stage (bitwise-identical math).
+    if len / 2 < 8 {
+        super::scalar::butterfly_pass(re, im, tw_re, tw_im, len, inverse);
+        return;
+    }
+    // SAFETY: as above.
+    unsafe { butterfly_pass_avx2(re, im, tw_re, tw_im, len, inverse) }
+}
+
+fn spec_mul(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    assert_spec_lens(a_re, a_im, b_re, b_im, p_re, p_im);
+    // SAFETY: as above.
+    unsafe { spec_mul_avx2(a_re, a_im, b_re, b_im, p_re, p_im, false) }
+}
+
+fn spec_mul_conj(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    assert_spec_lens(a_re, a_im, b_re, b_im, p_re, p_im);
+    // SAFETY: as above.
+    unsafe { spec_mul_avx2(a_re, a_im, b_re, b_im, p_re, p_im, true) }
+}
+
+/// Length contract of the spectrum product kernels: every input covers the
+/// `p_re.len()` output bins (unconditional — the bodies use raw pointers).
+fn assert_spec_lens(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &[f32],
+    p_im: &[f32],
+) {
+    let n = p_re.len();
+    assert!(
+        p_im.len() == n
+            && a_re.len() >= n
+            && a_im.len() >= n
+            && b_re.len() >= n
+            && b_im.len() >= n,
+        "spec_mul length mismatch"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(y: &mut [f32], w: &[f32], a: f32) {
+    let n = y.len();
+    let av = _mm256_set1_ps(a);
+    let (yp, wp) = (y.as_mut_ptr(), w.as_ptr());
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let yv = _mm256_loadu_ps(yp.add(i));
+        let wv = _mm256_loadu_ps(wp.add(i));
+        // mul + add, not FMA: bitwise the scalar `y[o] += a * w[o]`.
+        _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, wv)));
+        i += 8;
+    }
+    while i < n {
+        y[i] += a * w[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    // Paired-lane accumulation: two independent 8-lane partials break the
+    // add dependency chain and halve rounding depth.
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let p0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)));
+        let p1 =
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(i + 8)), _mm256_loadu_ps(bp.add(i + 8)));
+        acc0 = _mm256_add_ps(acc0, p0);
+        acc1 = _mm256_add_ps(acc1, p1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let p = _mm256_mul_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)));
+        acc0 = _mm256_add_ps(acc0, p);
+        i += 8;
+    }
+    // Reduce the 16 lane partials and the scalar tail in f64 — keeps the
+    // decode dot inside the engine's f64-accumulation audit bounds.
+    let mut l0 = [0.0f32; 8];
+    let mut l1 = [0.0f32; 8];
+    _mm256_storeu_ps(l0.as_mut_ptr(), acc0);
+    _mm256_storeu_ps(l1.as_mut_ptr(), acc1);
+    let mut s = 0.0f64;
+    for k in 0..8 {
+        s += l0[k] as f64;
+        s += l1[k] as f64;
+    }
+    while i < n {
+        s += a[i] as f64 * b[i] as f64;
+        i += 1;
+    }
+    s as f32
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gate_mul_avx2(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
+    let n = out.len();
+    let (op, cp) = (out.as_mut_ptr(), c.as_ptr());
+    let mut i = 0usize;
+    if stride == 1 {
+        while i + 8 <= n {
+            let g = _mm256_loadu_ps(gate.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(cp.add(i));
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(g, cv));
+            i += 8;
+        }
+    } else {
+        let mut buf = [0.0f32; 8];
+        while i + 8 <= n {
+            // Strided gather of the gate column (scalar loads), vector
+            // multiply against the contiguous c row. Per-element math is
+            // exactly the scalar kernel's.
+            for (j, slot) in buf.iter_mut().enumerate() {
+                *slot = gate[(i + j) * stride];
+            }
+            let g = _mm256_loadu_ps(buf.as_ptr());
+            let cv = _mm256_loadu_ps(cp.add(i));
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(g, cv));
+            i += 8;
+        }
+    }
+    while i < n {
+        out[i] = gate[i * stride] * c[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn spec_mul_avx2(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+    conj: bool,
+) {
+    let n = p_re.len();
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let ar = _mm256_loadu_ps(a_re.as_ptr().add(k));
+        let ai = _mm256_loadu_ps(a_im.as_ptr().add(k));
+        let br = _mm256_loadu_ps(b_re.as_ptr().add(k));
+        let bi = _mm256_loadu_ps(b_im.as_ptr().add(k));
+        let rr = _mm256_mul_ps(ar, br);
+        let ii = _mm256_mul_ps(ai, bi);
+        let ri = _mm256_mul_ps(ar, bi);
+        let ir = _mm256_mul_ps(ai, br);
+        let (pr, pi) = if conj {
+            // conj(A)·B: re = ar·br + ai·bi, im = ar·bi − ai·br.
+            (_mm256_add_ps(rr, ii), _mm256_sub_ps(ri, ir))
+        } else {
+            // A·B: re = ar·br − ai·bi, im = ar·bi + ai·br.
+            (_mm256_sub_ps(rr, ii), _mm256_add_ps(ri, ir))
+        };
+        _mm256_storeu_ps(p_re.as_mut_ptr().add(k), pr);
+        _mm256_storeu_ps(p_im.as_mut_ptr().add(k), pi);
+        k += 8;
+    }
+    while k < n {
+        if conj {
+            p_re[k] = a_re[k] * b_re[k] + a_im[k] * b_im[k];
+            p_im[k] = a_re[k] * b_im[k] - a_im[k] * b_re[k];
+        } else {
+            p_re[k] = a_re[k] * b_re[k] - a_im[k] * b_im[k];
+            p_im[k] = a_re[k] * b_im[k] + a_im[k] * b_re[k];
+        }
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn butterfly_pass_avx2(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    len: usize,
+    inverse: bool,
+) {
+    let n = re.len();
+    let step = n / len;
+    let half = len / 2;
+    let sign = if inverse { -1.0f32 } else { 1.0f32 };
+    let (rp, ip) = (re.as_mut_ptr(), im.as_mut_ptr());
+    let mut wr_buf = [0.0f32; 8];
+    let mut wi_buf = [0.0f32; 8];
+    let mut start = 0usize;
+    while start < n {
+        let mut k = 0usize;
+        while k + 8 <= half {
+            if step == 1 {
+                // Final stage: twiddles are contiguous.
+                wr_buf.copy_from_slice(&tw_re[k..k + 8]);
+                for (j, slot) in wi_buf.iter_mut().enumerate() {
+                    *slot = sign * tw_im[k + j];
+                }
+            } else {
+                for j in 0..8 {
+                    wr_buf[j] = tw_re[(k + j) * step];
+                    wi_buf[j] = sign * tw_im[(k + j) * step];
+                }
+            }
+            let wr = _mm256_loadu_ps(wr_buf.as_ptr());
+            let wi = _mm256_loadu_ps(wi_buf.as_ptr());
+            let a = start + k;
+            let b = a + half;
+            // b = a + half ≥ a + 8, so the two 8-lane windows are disjoint.
+            let rb = _mm256_loadu_ps(rp.add(b));
+            let ib = _mm256_loadu_ps(ip.add(b));
+            // tr = re[b]·wr − im[b]·wi ; ti = re[b]·wi + im[b]·wr
+            // (mul + add/sub, no FMA — bitwise the scalar stage).
+            let tr = _mm256_sub_ps(_mm256_mul_ps(rb, wr), _mm256_mul_ps(ib, wi));
+            let ti = _mm256_add_ps(_mm256_mul_ps(rb, wi), _mm256_mul_ps(ib, wr));
+            let ra = _mm256_loadu_ps(rp.add(a));
+            let ia = _mm256_loadu_ps(ip.add(a));
+            _mm256_storeu_ps(rp.add(b), _mm256_sub_ps(ra, tr));
+            _mm256_storeu_ps(ip.add(b), _mm256_sub_ps(ia, ti));
+            _mm256_storeu_ps(rp.add(a), _mm256_add_ps(ra, tr));
+            _mm256_storeu_ps(ip.add(a), _mm256_add_ps(ia, ti));
+            k += 8;
+        }
+        // Tail butterflies of this block: the verbatim scalar body.
+        while k < half {
+            let wr = tw_re[k * step];
+            let wi = if inverse { -tw_im[k * step] } else { tw_im[k * step] };
+            let a = start + k;
+            let b = a + half;
+            let tr = re[b] * wr - im[b] * wi;
+            let ti = re[b] * wi + im[b] * wr;
+            re[b] = re[a] - tr;
+            im[b] = im[a] - ti;
+            re[a] += tr;
+            im[a] += ti;
+            k += 1;
+        }
+        start += len;
+    }
+}
+
+// -- polynomial exp / tanh ---------------------------------------------------
+
+// Cephes `expf` constants (the classic `exp_ps` from sse_mathfun): exp(x) =
+// 2^round(x·log2e) · P(r) with Cody–Waite range reduction; |rel err| ≲ 2e-7
+// over the clamped domain. Mirrored 1:1 by
+// `python/tests/test_native_kernels.py`.
+const EXP_HI: f32 = 88.3762626647950;
+const EXP_LO: f32 = -88.3762626647949;
+const LOG2EF: f32 = 1.44269504088896341;
+const EXP_C1: f32 = 0.693359375;
+const EXP_C2: f32 = -2.12194440e-4;
+const EXP_P0: f32 = 1.9875691500e-4;
+const EXP_P1: f32 = 1.3981999507e-3;
+const EXP_P2: f32 = 8.3334519073e-3;
+const EXP_P3: f32 = 4.1665795894e-2;
+const EXP_P4: f32 = 1.6666665459e-1;
+const EXP_P5: f32 = 5.0000001201e-1;
+
+#[target_feature(enable = "avx2")]
+unsafe fn exp256(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    let x = _mm256_min_ps(_mm256_set1_ps(EXP_HI), _mm256_max_ps(_mm256_set1_ps(EXP_LO), x));
+    // fx = floor(x·log2e + 0.5)  (round to nearest).
+    let fx = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_mul_ps(x, _mm256_set1_ps(LOG2EF)),
+        _mm256_set1_ps(0.5),
+    ));
+    // Cody–Waite: r = x − fx·C1 − fx·C2.
+    let r = _mm256_sub_ps(
+        _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(EXP_C1))),
+        _mm256_mul_ps(fx, _mm256_set1_ps(EXP_C2)),
+    );
+    let r2 = _mm256_mul_ps(r, r);
+    let mut y = _mm256_set1_ps(EXP_P0);
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P1));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P2));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P3));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P4));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P5));
+    y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, r2), r), one);
+    // Scale by 2^fx via the exponent field.
+    let n = _mm256_cvtps_epi32(fx);
+    let pow2n =
+        _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(n, _mm256_set1_epi32(127))));
+    _mm256_mul_ps(y, pow2n)
+}
+
+/// `tanh(x) = sign(x) · (1 − 2/(e^{2|x|} + 1))` — monotone, saturates
+/// cleanly (the exp clamp at 88.37 sends the correction term to ~1e-38).
+#[target_feature(enable = "avx2")]
+unsafe fn tanh256(x: __m256) -> __m256 {
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let sign = _mm256_and_ps(x, sign_mask);
+    let ax = _mm256_andnot_ps(sign_mask, x);
+    let e = exp256(_mm256_add_ps(ax, ax));
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let t = _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e, one)));
+    _mm256_or_ps(t, sign)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gelu_fwd_avx2(x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    let n = x.len();
+    let (xp, yp, tp) = (x.as_ptr(), y.as_mut_ptr(), th.as_mut_ptr());
+    let c = _mm256_set1_ps(GELU_C);
+    let a = _mm256_set1_ps(GELU_A);
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(xp.add(i));
+        let v3 = _mm256_mul_ps(_mm256_mul_ps(v, v), v);
+        let inner = _mm256_mul_ps(c, _mm256_add_ps(v, _mm256_mul_ps(a, v3)));
+        let t = tanh256(inner);
+        _mm256_storeu_ps(tp.add(i), t);
+        let g = _mm256_mul_ps(_mm256_mul_ps(half, v), _mm256_add_ps(one, t));
+        _mm256_storeu_ps(yp.add(i), g);
+        i += 8;
+    }
+    // Tail: the verbatim scalar body (libm tanh).
+    while i < n {
+        let v = x[i];
+        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+        th[i] = t;
+        y[i] = 0.5 * v * (1.0 + t);
+        i += 1;
+    }
+}

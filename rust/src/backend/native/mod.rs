@@ -10,6 +10,7 @@
 //! (DESIGN.md §1/§2).
 
 pub mod config;
+pub mod kernels;
 pub mod model;
 
 use std::path::Path;
@@ -245,6 +246,146 @@ impl Backend for NativeBackend {
         }
     }
 
+    fn decode_step_batch(
+        &self,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Vec<Result<()>> {
+        assert_eq!(
+            sessions.len(),
+            tokens.len(),
+            "decode_step_batch wants one token per session"
+        );
+        let full = self.model.cfg.seqlen;
+        let v = self.model.cfg.vocab;
+        let rows = sessions.len();
+
+        // Common case: every row is fresh and in sync. Run the whole round
+        // as one engine call writing **directly into `logits`** — no
+        // intermediate packed buffer, no per-row copy; the only per-round
+        // heap traffic is two rows-sized pointer Vecs (the engine's own
+        // scratch is arena-pinned).
+        let all_fast = sessions.iter_mut().all(|s| {
+            let len = s.len();
+            len < full
+                && s
+                    .ext_mut::<DecodeState>()
+                    .map_or(false, |st| st.pos() == len && !self.model.decode_state_stale(st))
+        });
+        if all_fast {
+            let mut states: Vec<Box<DecodeState>> = sessions
+                .iter_mut()
+                .map(|s| s.take_ext::<DecodeState>().expect("probed fast above"))
+                .collect();
+            let res = {
+                let mut refs: Vec<&mut DecodeState> =
+                    states.iter_mut().map(|b| &mut **b).collect();
+                self.model.decode_step_batch_into(&mut refs, tokens, logits)
+            };
+            match res {
+                Ok(()) => {
+                    for (i, state) in states.into_iter().enumerate() {
+                        sessions[i].tokens.push(tokens[i]);
+                        sessions[i].steps += 1;
+                        sessions[i].set_ext(state);
+                    }
+                    return (0..rows).map(|_| Ok(())).collect();
+                }
+                Err(_) => {
+                    // Unexpected (rows were probed); restore the states and
+                    // attribute errors per row through the general path.
+                    for (i, state) in states.into_iter().enumerate() {
+                        sessions[i].set_ext(state);
+                    }
+                }
+            }
+        }
+
+        let mut results: Vec<Option<Result<()>>> = Vec::with_capacity(rows);
+        results.resize_with(rows, || None);
+        logits.clear();
+        logits.resize(rows * v, 0.0);
+
+        // Partition the round: sessions with fresh in-sync streaming state
+        // take the batched fast path; stale/missing-state sessions (and
+        // window-edge rows, which fail) go through the serial step, which
+        // transparently rebuilds state from the session's tokens.
+        let mut fast_ix: Vec<usize> = Vec::new();
+        let mut fast_states: Vec<Box<DecodeState>> = Vec::new();
+        let mut fast_toks: Vec<i32> = Vec::new();
+        let mut slow_ix: Vec<usize> = Vec::new();
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            if sess.len() >= full {
+                results[i] = Some(Err(anyhow!(
+                    "decode session is at the window edge (length {full})"
+                )));
+                continue;
+            }
+            match sess.take_ext::<DecodeState>() {
+                Some(state)
+                    if !self.model.decode_state_stale(&state)
+                        && state.pos() == sess.len() =>
+                {
+                    fast_ix.push(i);
+                    fast_toks.push(tokens[i]);
+                    fast_states.push(state);
+                }
+                Some(state) => {
+                    // Stale (or out of sync): release it now; the serial
+                    // path re-prefills from the session's tokens.
+                    self.model.decode_end_state(*state);
+                    slow_ix.push(i);
+                }
+                None => slow_ix.push(i),
+            }
+        }
+
+        if !fast_ix.is_empty() {
+            let mut packed = Vec::new();
+            let batch_res = {
+                let mut refs: Vec<&mut DecodeState> =
+                    fast_states.iter_mut().map(|b| &mut **b).collect();
+                self.model.decode_step_batch_into(&mut refs, &fast_toks, &mut packed)
+            };
+            match batch_res {
+                Ok(()) => {
+                    for (j, state) in fast_states.into_iter().enumerate() {
+                        let i = fast_ix[j];
+                        sessions[i].tokens.push(fast_toks[j]);
+                        sessions[i].steps += 1;
+                        sessions[i].set_ext(state);
+                        logits[i * v..(i + 1) * v]
+                            .copy_from_slice(&packed[j * v..(j + 1) * v]);
+                        results[i] = Some(Ok(()));
+                    }
+                }
+                Err(_) => {
+                    // Unexpected batch-level failure (the rows were
+                    // pre-validated): restore the states untouched and let
+                    // the serial path attribute errors per session.
+                    for (j, state) in fast_states.into_iter().enumerate() {
+                        sessions[fast_ix[j]].set_ext(state);
+                        slow_ix.push(fast_ix[j]);
+                    }
+                }
+            }
+        }
+
+        let mut row = Vec::new();
+        for &i in &slow_ix {
+            let res = self.decode_step(&mut *sessions[i], tokens[i], &mut row);
+            if res.is_ok() {
+                logits[i * v..(i + 1) * v].copy_from_slice(&row);
+            }
+            results[i] = Some(res);
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every decode_step_batch row is resolved"))
+            .collect()
+    }
+
     fn decode_end(&self, mut sess: DecodeSession) {
         if let Some(state) = sess.take_ext::<DecodeState>() {
             self.model.decode_end_state(*state);
@@ -275,7 +416,10 @@ impl Backend for NativeBackend {
             decode_sessions_live: serve.decode_sessions_live,
             decode_sessions_total: serve.decode_sessions_total,
             decode_steps: serve.decode_steps,
+            decode_step_batches: serve.decode_step_batches,
+            decode_step_batch_rows: serve.decode_step_batch_rows,
             decode_state_bytes: serve.decode_state_bytes,
+            kernel: kernels::active_name().to_string(),
         })
     }
 
@@ -384,5 +528,72 @@ mod tests {
         let b = backend("golden_tiny");
         let h = b.dump_filters().unwrap();
         assert_eq!(h.shape(), &[2, 32, 16]);
+    }
+
+    #[test]
+    fn decode_step_batch_streams_and_rebuilds_stale_rows() {
+        // Through the Backend surface: a batched round must (a) serve
+        // fresh rows through the batched fast path, (b) transparently
+        // re-prefill a session whose engine state was dropped (the slow
+        // path), and (c) keep both token-identical to serial stepping.
+        let mut b = backend("golden_tiny");
+        let v = b.manifest().vocab().unwrap();
+        let mut lg = Vec::new();
+        let mut s1 = b.decode_begin(&[1, 2, 3], &mut lg).unwrap();
+        let mut s2 = b.decode_begin(&[4, 5, 6, 7], &mut lg).unwrap();
+        // Reference twins, stepped serially.
+        let mut r1 = b.decode_begin(&[1, 2, 3], &mut lg).unwrap();
+        let mut r2 = b.decode_begin(&[4, 5, 6, 7], &mut lg).unwrap();
+        let mut packed = Vec::new();
+        for round in 0..3 {
+            if round == 1 {
+                // Make s2's engine state stale mid-stream: a parameter
+                // update bumps the epoch for every session equally, so
+                // drop s2's state instead — the batch must rebuild it from
+                // the session tokens (the None → slow path).
+                if let Some(st) = s2.take_ext::<DecodeState>() {
+                    b.model().decode_end_state(*st);
+                }
+            }
+            let toks = [(round % 9) as i32, ((round + 3) % 9) as i32];
+            let mut want = Vec::new();
+            b.decode_step(&mut r1, toks[0], &mut lg).unwrap();
+            want.extend_from_slice(&lg);
+            b.decode_step(&mut r2, toks[1], &mut lg).unwrap();
+            want.extend_from_slice(&lg);
+            let results = {
+                let mut sessions = [&mut s1, &mut s2];
+                b.decode_step_batch(&mut sessions, &toks, &mut packed)
+            };
+            assert!(results.iter().all(Result::is_ok), "round {round}: {results:?}");
+            assert_eq!(packed.len(), 2 * v);
+            // The rebuilt row re-prefills through the FFT path, so its
+            // logits agree to round-off; the fresh row is bitwise.
+            for (ch, (&x, &y)) in packed.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-3 * (1.0 + x.abs().max(y.abs())),
+                    "round {round} ch {ch}: batched {x} vs serial {y}"
+                );
+            }
+            assert_eq!(s1.tokens(), r1.tokens());
+            assert_eq!(s2.tokens(), r2.tokens());
+        }
+        let mem = b.mem_report().unwrap();
+        assert!(mem.decode_step_batches >= 1, "no batched rounds recorded");
+        assert!(mem.decode_step_batch_rows >= 2);
+        assert!(mem.kernel == "scalar" || mem.kernel == "simd");
+        for s in [s1, s2, r1, r2] {
+            b.decode_end(s);
+        }
+        let mem = b.mem_report().unwrap();
+        assert_eq!(mem.decode_sessions_live, 0, "sessions leaked");
+        assert_eq!(mem.decode_state_bytes, 0, "state bytes leaked");
+    }
+
+    #[test]
+    fn mem_report_names_the_active_kernel_table() {
+        let b = backend("native_micro");
+        let mem = b.mem_report().unwrap();
+        assert_eq!(mem.kernel, kernels::active_name());
     }
 }

@@ -42,6 +42,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::fft::{CausalConv, ConvWorkspace, PlanBank};
 use crate::backend::native::config::NativeConfig;
+use crate::backend::native::kernels::{self, GELU_A, GELU_C};
 use crate::util::pool::{self, SharedMut, WorkerPool};
 use crate::util::rng::Pcg;
 
@@ -368,6 +369,7 @@ impl Scratch {
                 filt,
                 hfilt,
                 spec_h,
+                spec_v,
                 vs,
                 cs,
                 y_mix,
@@ -400,6 +402,11 @@ impl Scratch {
             let SpecBank { re, im, .. } = spec_h;
             self.arena.put(re);
             self.arena.put(im);
+            for bank in spec_v {
+                let SpecBank { re, im, .. } = bank;
+                self.arena.put(re);
+                self.arena.put(im);
+            }
         }
     }
 }
@@ -464,6 +471,11 @@ struct ServeState {
     sessions_total: u64,
     /// Tokens served through the streaming step path.
     decode_steps: u64,
+    /// Batched decode rounds served through `decode_step_batch_into`
+    /// (every call counts, including rows == 1).
+    step_batch_calls: u64,
+    /// Session-tokens served by those batched rounds (Σ rows per call).
+    step_batch_rows: u64,
     /// f32 elements checked out into live decode states (rings+histories).
     decode_state_elems: usize,
 }
@@ -536,8 +548,13 @@ pub struct ServeStats {
     /// (every state-building prefill counts, including mid-session
     /// stale-state rebuilds and failed prefill attempts).
     pub decode_sessions_total: u64,
-    /// Tokens served through the streaming `decode_step_into` path.
+    /// Tokens served through the streaming `decode_step_into` path
+    /// (single-session and batched steps both count, per row).
     pub decode_steps: u64,
+    /// Batched decode rounds served through `decode_step_batch_into`.
+    pub decode_step_batches: u64,
+    /// Session-tokens served by those batched rounds (Σ rows per call).
+    pub decode_step_batch_rows: u64,
     /// Bytes held by live per-session ring buffers / channel histories.
     pub decode_state_bytes: usize,
 }
@@ -610,7 +627,8 @@ fn blocks_of(n: usize, blk: usize) -> usize {
 
 /// `y[r, o] = b[o] + Σ_i x[r, i] w[i, o]`, cache-blocked over row blocks
 /// (each streamed `w` row is applied to the whole block) and parallel over
-/// blocks. Overwrites `y`.
+/// blocks. The inner row update runs through the dispatched axpy microkernel
+/// (DESIGN.md §Kernels). Overwrites `y`.
 fn dense_fwd_into(
     pool: &WorkerPool,
     x: &[f32],
@@ -624,6 +642,7 @@ fn dense_fwd_into(
     assert_eq!(x.len(), rows * din);
     assert_eq!(w.len(), din * dout);
     assert_eq!(y.len(), rows * dout);
+    let k = kernels::active();
     let yv = SharedMut::new(y);
     pool.par_for(blocks_of(rows, DENSE_BLOCK), |blk| {
         let r0 = blk * DENSE_BLOCK;
@@ -644,15 +663,14 @@ fn dense_fwd_into(
                     continue;
                 }
                 let yrow = &mut yblk[rr * dout..(rr + 1) * dout];
-                for o in 0..dout {
-                    yrow[o] += xv * wrow[o];
-                }
+                (k.axpy)(yrow, wrow, xv);
             }
         }
     });
 }
 
-/// `dx = dy @ wᵀ`, blocked + parallel over row blocks. Overwrites `dx`.
+/// `dx = dy @ wᵀ`, blocked + parallel over row blocks; the per-row
+/// reduction runs through the dispatched dot microkernel. Overwrites `dx`.
 fn dense_bwd_dx_into(
     pool: &WorkerPool,
     dy: &[f32],
@@ -665,6 +683,7 @@ fn dense_bwd_dx_into(
     assert_eq!(dy.len(), rows * dout);
     assert_eq!(w.len(), din * dout);
     assert_eq!(dx.len(), rows * din);
+    let k = kernels::active();
     let dxv = SharedMut::new(dx);
     pool.par_for(blocks_of(rows, DENSE_BLOCK), |blk| {
         let r0 = blk * DENSE_BLOCK;
@@ -675,11 +694,7 @@ fn dense_bwd_dx_into(
             let wrow = &w[i * dout..(i + 1) * dout];
             for rr in 0..(r1 - r0) {
                 let dyrow = &dy[(r0 + rr) * dout..(r0 + rr + 1) * dout];
-                let mut acc = 0.0f32;
-                for o in 0..dout {
-                    acc += dyrow[o] * wrow[o];
-                }
-                dxblk[rr * din + i] = acc;
+                dxblk[rr * din + i] = (k.dot)(dyrow, wrow);
             }
         }
     });
@@ -700,6 +715,7 @@ fn dense_bwd_dw_into(
     assert_eq!(x.len(), rows * din);
     assert_eq!(dy.len(), rows * dout);
     assert_eq!(dw.len(), din * dout);
+    let k = kernels::active();
     let dwv = SharedMut::new(dw);
     pool.par_for(blocks_of(din, DENSE_BLOCK), |blk| {
         let i0 = blk * DENSE_BLOCK;
@@ -715,9 +731,7 @@ fn dense_bwd_dw_into(
                     continue;
                 }
                 let dwrow = &mut dwblk[ii * dout..(ii + 1) * dout];
-                for o in 0..dout {
-                    dwrow[o] += xv * dyrow[o];
-                }
+                (k.axpy)(dwrow, dyrow, xv);
             }
         }
     });
@@ -815,15 +829,14 @@ fn layer_norm_bwd_into(
     }
 }
 
-const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
-const GELU_A: f32 = 0.044_715;
-
 /// Tanh-approximate GELU (jax.nn.gelu default); overwrites `y` and the
-/// cached `tanh` term. Parallel over element blocks (tanh dominates).
+/// cached `tanh` term. Parallel over element blocks, each chunk evaluated
+/// by the dispatched GELU microkernel (tanh dominates).
 fn gelu_fwd_into(pool: &WorkerPool, x: &[f32], y: &mut [f32], th: &mut [f32]) {
     let n = x.len();
     assert_eq!(y.len(), n);
     assert_eq!(th.len(), n);
+    let k = kernels::active();
     let yv = SharedMut::new(y);
     let tv = SharedMut::new(th);
     pool.par_for(blocks_of(n, ELEM_BLOCK), |blk| {
@@ -832,12 +845,7 @@ fn gelu_fwd_into(pool: &WorkerPool, x: &[f32], y: &mut [f32], th: &mut [f32]) {
         // SAFETY: element blocks partition `y` and `th`.
         let ys = unsafe { yv.slice(s, e - s) };
         let ts = unsafe { tv.slice(s, e - s) };
-        for (j, i) in (s..e).enumerate() {
-            let v = x[i];
-            let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
-            ts[j] = t;
-            ys[j] = 0.5 * v * (1.0 + t);
-        }
+        (k.gelu_fwd)(&x[s..e], ys, ts);
     });
 }
 
@@ -966,6 +974,11 @@ struct BlockCache {
     /// Cached half spectra of every filter row `(N·D, bins)` — computed in
     /// `mixer_fwd`, reused by `mixer_bwd` (no re-FFT of the filters).
     spec_h: SpecBank,
+    /// Cached half spectra of every recurrence-state row: one `(B·D, bins)`
+    /// bank per order, written as a side effect of the forward convolution
+    /// and reused by `mixer_bwd`'s correlation adjoints (no re-FFT of the
+    /// states — ROADMAP "cache spec_v").
+    spec_v: Vec<SpecBank>,
     /// Recurrence states `v_0..v_N`, each `(B, D, L)`.
     vs: Vec<Vec<f32>>,
     /// Pre-gate responses `c_0..c_{N−1}`, each `(B, D, L)`.
@@ -997,6 +1010,7 @@ struct BlockCacheParts {
     filt: FilterCache,
     hfilt: Vec<f32>,
     spec_h: SpecBank,
+    spec_v: Vec<SpecBank>,
     vs: Vec<Vec<f32>>,
     cs: Vec<Vec<f32>>,
     y_mix: Vec<f32>,
@@ -1010,6 +1024,7 @@ struct BlockCachePartsRef<'a> {
     filt: &'a FilterCache,
     hfilt: &'a [f32],
     spec_h: &'a SpecBank,
+    spec_v: &'a [SpecBank],
     vs: &'a [Vec<f32>],
     cs: &'a [Vec<f32>],
     y_mix: &'a [f32],
@@ -1388,16 +1403,28 @@ impl NativeModel {
         }
 
         // The recurrence (Def. 3.1): v ← x^n ⊙ (h^n ∗ v + bias_n ⊙ v).
+        // The spectrum of every recurrence-state row is written into a
+        // per-order bank (`spec_v`) as a side effect of the convolution:
+        // `mixer_bwd` reuses the cached spectra instead of re-transforming
+        // `v` — ~25% of the backward transforms for ~2× recurrence-state
+        // activation memory (ROADMAP "cache spec_v"; DESIGN.md §Perf).
         let bias = self.p(bix.bias);
+        let bins = self.conv().spec_len();
+        let kn = kernels::active();
         let mut vs = vec![v0];
         let mut cs = Vec::with_capacity(n);
+        let mut spec_v = Vec::with_capacity(n);
         for order in 0..n {
             let vprev = vs.last().unwrap();
             let mut cbuf = sc.arena.take(b * d * l);
             let mut vnext = sc.arena.take(b * d * l);
+            let mut sv_re = sc.arena.take(b * d * bins);
+            let mut sv_im = sc.arena.take(b * d * bins);
             {
                 let cview = SharedMut::new(&mut cbuf);
                 let vview = SharedMut::new(&mut vnext);
+                let sre_v = SharedMut::new(&mut sv_re);
+                let sim_v = SharedMut::new(&mut sv_im);
                 let ctxs = &sc.conv_ctxs;
                 pool.par_for_with(
                     b * d,
@@ -1406,29 +1433,28 @@ impl NativeModel {
                         let (bb, ch) = (rix / d, rix % d);
                         let row = rix * l; // (bb·d + ch)·l
                         let vrow = &vprev[row..row + l];
-                        // SAFETY: index rix exclusively owns conv/gate row rix.
+                        // SAFETY: index rix exclusively owns conv/gate row
+                        // rix and spectrum-bank row rix.
                         let crow = unsafe { cview.slice(row, l) };
                         let vnrow = unsafe { vview.slice(row, l) };
-                        let mut sv = ctx.ws.take_spectrum();
-                        self.conv().spectrum_into(vrow, &mut ctx.ws, &mut sv);
+                        let sre = unsafe { sre_v.slice(rix * bins, bins) };
+                        let sim = unsafe { sim_v.slice(rix * bins, bins) };
+                        self.conv().spectrum_slices_into(vrow, &mut ctx.ws, sre, sim);
                         let (hre, him) = spec_h.row(order * d + ch);
-                        self.conv().conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
-                        ctx.ws.put_spectrum(sv);
+                        self.conv().conv_spec_slices_into(hre, him, sre, sim, &mut ctx.ws, crow);
                         let bv = bias[order * d + ch];
-                        for t in 0..l {
-                            crow[t] += bv * vrow[t];
-                        }
-                        for t in 0..l {
-                            // Gate x^order lives in slot order+1 of zs.
-                            let gate = zs[(bb * l + t) * c + (order + 1) * d + ch];
-                            vnrow[t] = gate * crow[t];
-                        }
+                        (kn.axpy)(crow, vrow, bv);
+                        // Gate x^order lives in slot order+1 of zs (stride
+                        // C down the time axis).
+                        let gbase = (bb * l) * c + (order + 1) * d + ch;
+                        (kn.gate_mul)(vnrow, crow, &zs[gbase..], c);
                     },
                     |ctx| put_ctx(ctxs, ctx),
                 );
             }
             cs.push(cbuf);
             vs.push(vnext);
+            spec_v.push(SpecBank { re: sv_re, im: sv_im, bins });
         }
 
         // Back to (B, L, D) and the output projection.
@@ -1453,7 +1479,7 @@ impl NativeModel {
             d,
             &mut out,
         );
-        (out, BlockCacheParts { zp, zs, filt, hfilt, spec_h, vs, cs, y_mix })
+        (out, BlockCacheParts { zp, zs, filt, hfilt, spec_h, spec_v, vs, cs, y_mix })
     }
 
     /// Mixer backward: returns `d(t1)`, accumulates all mixer grads. The
@@ -1477,7 +1503,7 @@ impl NativeModel {
         let bix = &self.layout.ix.blocks[bi];
         let rows = b * l;
         let pool = &self.pool;
-        let BlockCachePartsRef { zp, zs, filt, hfilt: _, spec_h, vs, cs, y_mix } = *parts;
+        let BlockCachePartsRef { zp, zs, filt, hfilt: _, spec_h, spec_v, vs, cs, y_mix } = *parts;
 
         // Out projection.
         dense_bwd_dw_into(pool, y_mix, dout, rows, d, d, self.layout.slice_mut(grads, bix.out_w));
@@ -1546,11 +1572,19 @@ impl NativeModel {
                             bias_acc += acc;
                             // Convolution adjoints:
                             // dh += corr(v, dc); dv = corr(h, dc) + bias⊙dc.
+                            // The spectrum of v was cached by mixer_fwd
+                            // (`spec_v`), so only dc is transformed here.
                             let mut s_dc = ctx.ws.take_spectrum();
                             self.conv().spectrum_into(dc, &mut ctx.ws, &mut s_dc);
-                            let mut s_v = ctx.ws.take_spectrum();
-                            self.conv().spectrum_into(vrow, &mut ctx.ws, &mut s_v);
-                            self.conv().corr_spec_into(&s_v, &s_dc, &mut ctx.ws, &mut ctx.b);
+                            let (vre, vim) = spec_v[order].row(bb * d + ch);
+                            self.conv().corr_spec_slices_into(
+                                vre,
+                                vim,
+                                &s_dc.re,
+                                &s_dc.im,
+                                &mut ctx.ws,
+                                &mut ctx.b,
+                            );
                             for t in 0..l {
                                 dh_row[t] += ctx.b[t];
                             }
@@ -1567,7 +1601,6 @@ impl NativeModel {
                                 dvp[t] = ctx.b[t] + bv * dc[t];
                             }
                             ctx.ws.put_spectrum(s_dc);
-                            ctx.ws.put_spectrum(s_v);
                         }
                         unsafe {
                             *gb_v.at(ch) += bias_acc;
@@ -1736,6 +1769,7 @@ impl NativeModel {
                 filt: parts.filt,
                 hfilt: parts.hfilt,
                 spec_h: parts.spec_h,
+                spec_v: parts.spec_v,
                 vs: parts.vs,
                 cs: parts.cs,
                 y_mix: parts.y_mix,
@@ -1940,6 +1974,7 @@ impl NativeModel {
                 filt: &bc.filt,
                 hfilt: &bc.hfilt,
                 spec_h: &bc.spec_h,
+                spec_v: &bc.spec_v,
                 vs: &bc.vs,
                 cs: &bc.cs,
                 y_mix: &bc.y_mix,
@@ -2206,6 +2241,7 @@ impl NativeModel {
 
         // The recurrence (Def. 3.1): v ← x^n ⊙ (h^n ∗ v + bias_n ⊙ v).
         let bias = self.p(bix.bias);
+        let kn = kernels::active();
         let mut vnext = arena.take(b * d * lb);
         for order in 0..n {
             if let Some((ds, lq)) = capture.as_mut() {
@@ -2236,14 +2272,10 @@ impl NativeModel {
                         plan.conv_spec_slices_into(hre, him, &sv.re, &sv.im, &mut ctx.ws, crow);
                         ctx.ws.put_spectrum(sv);
                         let bv = bias[order * d + ch];
-                        for t in 0..lb {
-                            crow[t] += bv * vrow[t];
-                        }
-                        for t in 0..lb {
-                            // Gate x^order lives in slot order+1 of zs.
-                            let gate = zs[(bb * lb + t) * c + (order + 1) * d + ch];
-                            vnrow[t] = gate * crow[t];
-                        }
+                        (kn.axpy)(crow, vrow, bv);
+                        // Gate x^order lives in slot order+1 of zs.
+                        let gbase = (bb * lb) * c + (order + 1) * d + ch;
+                        (kn.gate_mul)(vnrow, crow, &zs[gbase..], c);
                     },
                     |ctx| put_ctx(ctxs, ctx),
                 );
@@ -2575,6 +2607,11 @@ impl NativeModel {
     ///
     /// Fails at the window edge or when the state predates a parameter
     /// update (the session layer then re-prefills from its tokens).
+    ///
+    /// KEEP IN SYNC with [`NativeModel::decode_step_batch_into`]: the two
+    /// bodies are the same per-token forward at rows = 1 vs rows = N, and
+    /// `decode_step_batch_is_bitwise_identical_to_serial_steps` pins their
+    /// bitwise agreement — any arithmetic change must land in both.
     pub fn decode_step_into(
         &self,
         state: &mut DecodeState,
@@ -2777,6 +2814,263 @@ impl NativeModel {
         Ok(())
     }
 
+    /// Advance `rows` decode sessions by one token each in a **single
+    /// engine call** (ROADMAP "batched decode steps"): the current
+    /// positions of all live sessions are stacked into one `(rows, ·)`
+    /// dense pass per block — LN, projection, out/MLP matmuls and the head
+    /// all run at `rows` rows, recovering the dense microkernel's row
+    /// blocking that per-session stepping forfeits at rows = 1 — while the
+    /// per-session state stays per-session: short-conv rings and channel
+    /// histories are appended row-by-row and the long-conv dots read each
+    /// row's own history (parallel over rows × channel blocks).
+    ///
+    /// Per-row arithmetic is exactly [`NativeModel::decode_step_into`]'s
+    /// (the dense kernels compute each row independently, LN/GELU are
+    /// per-row/per-element), so batched logits are **bitwise identical** to
+    /// stepping the same sessions serially — pinned by tests and the
+    /// batched-decode bench. All scratch comes from the serving arena:
+    /// steady-state rounds at a fixed occupancy allocate nothing.
+    ///
+    /// Writes `rows` `(V,)` logits rows, packed, into `logits`. Fails
+    /// without touching any state if a session is at the window edge or
+    /// stale (callers pre-filter and route those through the serial path).
+    ///
+    /// KEEP IN SYNC with [`NativeModel::decode_step_into`] (same body at
+    /// rows = 1; bitwise agreement is test-pinned — change both or
+    /// neither).
+    pub fn decode_step_batch_into(
+        &self,
+        states: &mut [&mut DecodeState],
+        tokens: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (lfull, d, n, f, vsz) =
+            (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter, cfg.vocab);
+        let c = (n + 1) * d;
+        let dm = cfg.mlp_dim();
+        let rows = states.len();
+        if rows == 0 {
+            bail!("decode_step_batch wants at least one session");
+        }
+        if tokens.len() != rows {
+            bail!("{} tokens for {rows} sessions", tokens.len());
+        }
+        // Validate every row before mutating anything: a batch either runs
+        // whole or fails whole (the backend layer pre-filters, so a failure
+        // here is a caller bug, not a serving condition).
+        for (r, st) in states.iter().enumerate() {
+            if st.pos >= lfull {
+                bail!("session {r} is at the window edge (length {lfull})");
+            }
+            if st.epoch != self.epoch {
+                bail!("session {r} predates a parameter update (re-prefill it)");
+            }
+        }
+        let pos0: Vec<usize> = states.iter().map(|s| s.pos).collect();
+        let pool = &self.pool;
+
+        let mut guard = self.serve.lock().unwrap();
+        let st = &mut *guard;
+        st.sync(self.epoch, self.bank.levels());
+        self.ensure_decode_filters(st);
+        let ServeState { arena, decode_filt, .. } = &mut *st;
+
+        // Stacked single-position residual stream (rows, D).
+        let embed = self.p(self.layout.ix.embed);
+        let posw = self.p(self.layout.ix.pos);
+        let mut u = arena.take(rows * d);
+        for r in 0..rows {
+            let tok = (tokens[r].max(0) as usize).min(vsz - 1);
+            let t = pos0[r];
+            for ch in 0..d {
+                u[r * d + ch] = embed[tok * d + ch] + posw[t * d + ch];
+            }
+        }
+
+        let mut t1 = arena.take(rows * d);
+        let mut xhat = arena.take(rows * d);
+        let mut rstd = arena.take(rows);
+        let mut zp = arena.take(rows * c);
+        let mut zs = arena.take(rows * c);
+        let mut va = arena.take(rows * d);
+        let mut vb = arena.take(rows * d);
+        let mut pre = arena.take(rows * dm);
+        let mut act = arena.take(rows * dm);
+        let mut th = arena.take(rows * dm);
+        let mut z = arena.take(rows * d);
+
+        for blk in 0..cfg.depth {
+            let bix = &self.layout.ix.blocks[blk];
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln1_g),
+                self.p(bix.ln1_b),
+                rows,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.proj_w),
+                Some(self.p(bix.proj_b)),
+                rows,
+                d,
+                c,
+                &mut zp,
+            );
+            // Depthwise short conv at one position per row, taps 1..
+            // served from each session's ring of recent projection rows.
+            match bix.short_w {
+                Some(sw) => {
+                    let w = self.p(sw);
+                    let f1 = f - 1;
+                    for r in 0..rows {
+                        let t = pos0[r];
+                        let ds = &mut states[r].blocks[blk];
+                        let zpr = &zp[r * c..(r + 1) * c];
+                        let zsr = &mut zs[r * c..(r + 1) * c];
+                        for ch in 0..c {
+                            zsr[ch] = w[ch * f] * zpr[ch];
+                        }
+                        for tap in 1..f.min(t + 1) {
+                            let slot = ((t - tap) % f1) * c;
+                            let row = &ds.short_tail[slot..slot + c];
+                            for ch in 0..c {
+                                zsr[ch] += w[ch * f + tap] * row[ch];
+                            }
+                        }
+                        if f1 > 0 {
+                            let slot = (t % f1) * c;
+                            ds.short_tail[slot..slot + c].copy_from_slice(zpr);
+                        }
+                    }
+                }
+                None => zs.copy_from_slice(&zp),
+            }
+
+            // The recurrence at one position per row: histories append
+            // per-session, then every (row, channel-block) dot runs on the
+            // pool against that row's own history.
+            let bias = self.p(bix.bias);
+            let hrev_all = &decode_filt[blk];
+            for r in 0..rows {
+                va[r * d..(r + 1) * d].copy_from_slice(&zs[r * c..r * c + d]);
+            }
+            for order in 0..n {
+                for r in 0..rows {
+                    let t = pos0[r];
+                    let hist = &mut states[r].blocks[blk].hist[order];
+                    for ch in 0..d {
+                        hist[ch * lfull + t] = va[r * d + ch];
+                    }
+                }
+                {
+                    let sref: &[&mut DecodeState] = &*states;
+                    let vview = SharedMut::new(&mut vb);
+                    let nblk = blocks_of(d, DECODE_CH_BLOCK);
+                    pool.par_for(rows * nblk, |task| {
+                        let (r, cb) = (task / nblk, task % nblk);
+                        let t = pos0[r];
+                        let histo = &sref[r].blocks[blk].hist[order];
+                        let c0 = cb * DECODE_CH_BLOCK;
+                        let c1 = (c0 + DECODE_CH_BLOCK).min(d);
+                        // SAFETY: (row, channel-block) tasks partition `vb`.
+                        let outb = unsafe { vview.slice(r * d + c0, c1 - c0) };
+                        for (j, ch) in (c0..c1).enumerate() {
+                            let rowix = (order * d + ch) * lfull;
+                            let hrev = &hrev_all[rowix..rowix + lfull];
+                            let hist = &histo[ch * lfull..ch * lfull + t + 1];
+                            let y = crate::backend::fft::causal_dot_step(hrev, hist)
+                                + bias[order * d + ch] * va[r * d + ch];
+                            // Gate x^order lives in slot order+1 of zs.
+                            outb[j] = zs[r * c + (order + 1) * d + ch] * y;
+                        }
+                    });
+                }
+                std::mem::swap(&mut va, &mut vb);
+            }
+
+            // Out projection + residual, then the MLP half of the block.
+            dense_fwd_into(
+                pool,
+                &va,
+                self.p(bix.out_w),
+                Some(self.p(bix.out_b)),
+                rows,
+                d,
+                d,
+                &mut z,
+            );
+            for i in 0..rows * d {
+                u[i] += z[i];
+            }
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln2_g),
+                self.p(bix.ln2_b),
+                rows,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.mlp_w1),
+                Some(self.p(bix.mlp_b1)),
+                rows,
+                d,
+                dm,
+                &mut pre,
+            );
+            gelu_fwd_into(pool, &pre, &mut act, &mut th);
+            dense_fwd_into(
+                pool,
+                &act,
+                self.p(bix.mlp_w2),
+                Some(self.p(bix.mlp_b2)),
+                rows,
+                dm,
+                d,
+                &mut z,
+            );
+            for i in 0..rows * d {
+                u[i] += z[i];
+            }
+        }
+
+        let ix = &self.layout.ix;
+        layer_norm_fwd_into(
+            &u,
+            self.p(ix.lnf_g),
+            self.p(ix.lnf_b),
+            rows,
+            d,
+            &mut t1,
+            &mut xhat,
+            &mut rstd,
+        );
+        logits.clear();
+        logits.resize(rows * vsz, 0.0);
+        dense_fwd_into(pool, &t1, self.p(ix.head), None, rows, d, vsz, logits);
+
+        for v in [u, t1, xhat, rstd, zp, zs, va, vb, pre, act, th, z] {
+            arena.put(v);
+        }
+        st.decode_steps += rows as u64;
+        st.step_batch_calls += 1;
+        st.step_batch_rows += rows as u64;
+        for s in states.iter_mut() {
+            s.pos += 1;
+        }
+        Ok(())
+    }
+
     /// Finish a session: every ring/history buffer returns to the serving
     /// arena and the live-session accounting is released.
     pub fn decode_end_state(&self, state: DecodeState) {
@@ -2817,6 +3111,8 @@ impl NativeModel {
             decode_sessions_live: st.sessions_live,
             decode_sessions_total: st.sessions_total,
             decode_steps: st.decode_steps,
+            decode_step_batches: st.step_batch_calls,
+            decode_step_batch_rows: st.step_batch_rows,
             decode_state_bytes: st.decode_state_elems * std::mem::size_of::<f32>(),
         }
     }
@@ -3344,6 +3640,115 @@ mod tests {
         let err = m.decode_step_into(&mut st, 2, &mut logits);
         assert!(err.is_err(), "stepped past the window edge");
         m.decode_end_state(st);
+    }
+
+    #[test]
+    fn decode_step_batch_is_bitwise_identical_to_serial_steps() {
+        // The batched round runs each row through exactly the serial
+        // step's arithmetic (dense kernels are per-row independent, LN and
+        // GELU are per-row/per-element, dots read per-session histories),
+        // so logits must agree bit-for-bit — including rows at different
+        // positions.
+        let m = tiny();
+        let prompts: [&[i32]; 3] = [&[3, 5, 7], &[9, 1, 2, 6, 11], &[4, 4]];
+        let mut lg = Vec::new();
+        let mut serial: Vec<DecodeState> =
+            prompts.iter().map(|p| m.decode_begin_state(p, &mut lg).unwrap()).collect();
+        let mut batched: Vec<DecodeState> =
+            prompts.iter().map(|p| m.decode_begin_state(p, &mut lg).unwrap()).collect();
+        let v = m.cfg.vocab;
+        let mut packed = Vec::new();
+        for round in 0..5 {
+            let toks: Vec<i32> = (0..3).map(|r| ((round * 3 + r) % v) as i32).collect();
+            let mut want = Vec::new();
+            for (r, st) in serial.iter_mut().enumerate() {
+                m.decode_step_into(st, toks[r], &mut lg).unwrap();
+                want.extend_from_slice(&lg);
+            }
+            let mut refs: Vec<&mut DecodeState> = batched.iter_mut().collect();
+            m.decode_step_batch_into(&mut refs, &toks, &mut packed).unwrap();
+            assert_eq!(packed, want, "batched logits diverged at round {round}");
+        }
+        for st in serial.into_iter().chain(batched) {
+            m.decode_end_state(st);
+        }
+        let stats = m.serve_stats();
+        assert_eq!(stats.decode_step_batches, 5);
+        assert_eq!(stats.decode_step_batch_rows, 15);
+        // Serial steps + batched rows both count as streamed tokens.
+        assert_eq!(stats.decode_steps, 30);
+    }
+
+    #[test]
+    fn decode_step_batch_validates_rows_before_touching_state() {
+        let mut m = micro(); // L = 8
+        let mut lg = Vec::new();
+        let mut packed = Vec::new();
+        // Window edge: a full session in the batch fails the whole call.
+        let mut edge = m.decode_begin_state(&[1; 7], &mut lg).unwrap();
+        m.decode_step_into(&mut edge, 2, &mut lg).unwrap(); // position 7
+        let pos_before = edge.pos();
+        {
+            let mut refs: Vec<&mut DecodeState> = vec![&mut edge];
+            assert!(m.decode_step_batch_into(&mut refs, &[3], &mut packed).is_err());
+        }
+        assert_eq!(edge.pos(), pos_before, "failed batch advanced a session");
+        m.decode_end_state(edge);
+        // Stale epoch: refused (the backend layer re-prefills instead).
+        let mut st = m.decode_begin_state(&[1, 2, 3], &mut lg).unwrap();
+        let (b, l, v) = (m.cfg.batch, m.cfg.seqlen, m.cfg.vocab);
+        let tokens: Vec<i32> = (0..(b * l) as i32).map(|i| i % v as i32).collect();
+        let mask = vec![1.0f32; b * l];
+        m.train_step(&tokens, &tokens, &mask, b).unwrap();
+        {
+            let mut refs: Vec<&mut DecodeState> = vec![&mut st];
+            assert!(m.decode_step_batch_into(&mut refs, &[1], &mut packed).is_err());
+        }
+        m.decode_end_state(st);
+    }
+
+    #[test]
+    fn decode_step_batch_steady_state_is_zero_alloc() {
+        // Repeated (begin 3 sessions → 4 batched rounds → end) cycles must
+        // stop growing the serving arena, like the serial session churn.
+        let m = tiny();
+        let prompts: [&[i32]; 3] = [&[2, 4, 6], &[1, 3], &[5, 7, 9, 11]];
+        let mut cycle = || {
+            let mut lg = Vec::new();
+            let mut packed = Vec::new();
+            let mut states: Vec<DecodeState> =
+                prompts.iter().map(|p| m.decode_begin_state(p, &mut lg).unwrap()).collect();
+            for round in 0..4 {
+                let toks = [round as i32, round as i32 + 1, round as i32 + 2];
+                let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+                m.decode_step_batch_into(&mut refs, &toks, &mut packed).unwrap();
+            }
+            for st in states {
+                m.decode_end_state(st);
+            }
+        };
+        let mut warm = None;
+        for _ in 0..10 {
+            cycle();
+            let s = m.serve_stats();
+            let snap = (s.arena.allocs, s.arena.hiwater_bytes);
+            if warm == Some(snap) {
+                break;
+            }
+            warm = Some(snap);
+        }
+        let warm = warm.unwrap();
+        for _ in 0..6 {
+            cycle();
+        }
+        let s = m.serve_stats();
+        assert_eq!(
+            (s.arena.allocs, s.arena.hiwater_bytes),
+            warm,
+            "steady-state batched decode kept allocating"
+        );
+        assert_eq!(s.decode_sessions_live, 0, "sessions leaked");
+        assert_eq!(s.decode_state_bytes, 0, "state bytes leaked");
     }
 
     #[test]

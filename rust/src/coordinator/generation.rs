@@ -110,9 +110,10 @@ fn check_decode_shapes(
 ///
 /// One [`Backend::decode_begin`] prefill per request (the engine routes it
 /// through its smallest covering plan bucket), then rounds of
-/// [`Backend::decode_step`] over the still-live rows in row order — a row
-/// retires after its own `max_new` tokens or at the model's window edge,
-/// and retired rows stop costing anything (session-level row compaction).
+/// [`Backend::decode_step_batch`] over the still-live rows — one engine
+/// call per token round, stepping every row at once — where a row retires
+/// after its own `max_new` tokens or at the model's window edge, and
+/// retired rows stop costing anything (session-level row compaction).
 /// The native engine serves each step at O(L) from its per-session
 /// recurrence state; engines without a streaming path inherit the trait
 /// default, which recomputes the prefix through [`Backend::infer`] —
@@ -125,7 +126,7 @@ pub fn decode_batch(
     sampling: Sampling,
     rng: &mut Pcg,
 ) -> Result<Vec<Vec<i32>>> {
-    let (l, _v) = check_decode_shapes(model, prompts, max_new)?;
+    let (l, vocab) = check_decode_shapes(model, prompts, max_new)?;
     let rows = prompts.len();
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];
     let mut sessions: Vec<Option<DecodeSession>> = Vec::with_capacity(rows);
@@ -152,30 +153,50 @@ pub fn decode_batch(
         }
     }
 
-    // Step rounds over the live rows.
+    // Step rounds over the live rows — every round is one batched engine
+    // call (`Backend::decode_step_batch`; the native engine stacks all
+    // rows into one dense pass per block, other engines loop the serial
+    // step). Sampling stays per row in row order, so the rng stream — and
+    // therefore every token stream — is identical to the serial loop.
+    let mut packed = Vec::new();
     while result.is_ok() {
-        let mut stepped = false;
+        // Retire: budget exhausted or (prompt + generated) at the window
+        // edge. The last sampled token needs no step.
         for r in 0..rows {
-            if sessions[r].is_none() {
-                continue;
-            }
-            // Retire: budget exhausted or (prompt + generated) at the
-            // window edge. The last sampled token needs no step.
-            if out[r].len() >= max_new[r] || prompts[r].len() + out[r].len() >= l {
+            if sessions[r].is_some()
+                && (out[r].len() >= max_new[r] || prompts[r].len() + out[r].len() >= l)
+            {
                 model.decode_end(sessions[r].take().expect("session checked live"));
-                continue;
             }
-            let tok = *out[r].last().expect("live row has a sampled token");
-            let sess = sessions[r].as_mut().expect("session checked live");
-            if let Err(e) = model.decode_step(sess, tok, &mut logits) {
-                result = Err(e);
+        }
+        // Gather the still-live rows.
+        let mut ix: Vec<usize> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        let results = {
+            let mut refs: Vec<&mut DecodeSession> = Vec::new();
+            for (r, slot) in sessions.iter_mut().enumerate() {
+                if let Some(sess) = slot.as_mut() {
+                    ix.push(r);
+                    toks.push(*out[r].last().expect("live row has a sampled token"));
+                    refs.push(sess);
+                }
+            }
+            if refs.is_empty() {
                 break;
             }
-            out[r].push(sample_token(&logits, sampling, rng));
-            stepped = true;
-        }
-        if !stepped {
-            break;
+            model.decode_step_batch(&mut refs, &toks, &mut packed)
+        };
+        for (j, res) in results.into_iter().enumerate() {
+            match res {
+                Ok(()) => {
+                    let row = &packed[j * vocab..(j + 1) * vocab];
+                    out[ix[j]].push(sample_token(row, sampling, rng));
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
         }
     }
     for sess in sessions.into_iter().flatten() {

@@ -347,8 +347,31 @@ fn admit(
     }
 }
 
-/// Advance every live session by one token; retired sessions reply and
-/// free their engine state.
+/// Reply to and drop one finished/failed session.
+fn retire(model: &dyn Backend, s: LiveSession, err: Option<anyhow::Error>) {
+    let LiveSession { sess, reply, submitted, entered, bucket_len, occupancy, out, .. } = s;
+    model.decode_end(sess);
+    let _ = reply.send(match err {
+        None => Ok(GenerateResponse {
+            tokens: out,
+            queue_time: entered.duration_since(submitted),
+            total_time: submitted.elapsed(),
+            batch_occupancy: occupancy,
+            bucket_len,
+        }),
+        Some(e) => Err(anyhow!("{:#}", e)),
+    });
+}
+
+/// Advance every live session by one token **in a single batched engine
+/// call** (`Backend::decode_step_batch`): the native engine stacks every
+/// session's current position into one `(rows, D)` dense pass per block,
+/// recovering dense-kernel row blocking at high occupancy (DESIGN.md
+/// §Kernels); engines without the override loop the serial step, which is
+/// behaviour-identical. Finished sessions retire first and reply; failed
+/// rows reply their error individually. Sampling runs per row in row
+/// order, so the rng stream — and therefore every token stream — is
+/// identical to the old serial round.
 fn step_round(
     model: &dyn Backend,
     live: &mut Vec<LiveSession>,
@@ -360,6 +383,7 @@ fn step_round(
     for s in live.iter_mut() {
         s.occupancy = s.occupancy.max(occ);
     }
+    // Retire finished sessions before the round.
     let mut i = 0;
     while i < live.len() {
         let done = {
@@ -367,31 +391,40 @@ fn step_round(
             s.out.len() >= s.max_new || s.prompt_len + s.out.len() >= l_full
         };
         if done {
-            let LiveSession { sess, reply, submitted, entered, bucket_len, occupancy, out, .. } =
-                live.remove(i);
-            model.decode_end(sess);
-            let _ = reply.send(Ok(GenerateResponse {
-                tokens: out,
-                queue_time: entered.duration_since(submitted),
-                total_time: submitted.elapsed(),
-                batch_occupancy: occupancy,
-                bucket_len,
-            }));
-            continue;
+            let s = live.remove(i);
+            retire(model, s, None);
+        } else {
+            i += 1;
         }
-        let tok = *live[i].out.last().expect("live session has a sampled token");
-        let sampling = live[i].sampling;
-        match model.decode_step(&mut live[i].sess, tok, logits) {
+    }
+    if live.is_empty() {
+        return;
+    }
+    // One batched step over everyone still live.
+    let tokens: Vec<i32> =
+        live.iter().map(|s| *s.out.last().expect("live session has a sampled token")).collect();
+    let results = {
+        let mut sessions: Vec<&mut DecodeSession> =
+            live.iter_mut().map(|s| &mut s.sess).collect();
+        model.decode_step_batch(&mut sessions, &tokens, logits)
+    };
+    let rows = live.len();
+    debug_assert_eq!(results.len(), rows);
+    let v = logits.len() / rows;
+    // Sample (or fail) per row in row order; collect failures for removal.
+    let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
+    for (r, res) in results.into_iter().enumerate() {
+        match res {
             Ok(()) => {
-                let next = sample_token(logits, sampling, rng);
-                live[i].out.push(next);
-                i += 1;
+                let row = &logits[r * v..(r + 1) * v];
+                let next = sample_token(row, live[r].sampling, rng);
+                live[r].out.push(next);
             }
-            Err(e) => {
-                let s = live.remove(i);
-                model.decode_end(s.sess);
-                let _ = s.reply.send(Err(anyhow!("{:#}", e)));
-            }
+            Err(e) => failed.push((r, e)),
         }
+    }
+    for (r, e) in failed.into_iter().rev() {
+        let s = live.remove(r);
+        retire(model, s, Some(e));
     }
 }

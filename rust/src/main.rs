@@ -321,15 +321,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Serve report: bucket routing, decode sessions, workspace high-water.
     if let Some(mem) = server.handle.mem_report() {
         println!(
-            "serve report: {} inference forwards, buckets {:?}, hits {:?}",
-            mem.serve_forwards, mem.bucket_lens, mem.bucket_hits
+            "serve report: {} inference forwards, buckets {:?}, hits {:?}, kernel {}",
+            mem.serve_forwards,
+            mem.bucket_lens,
+            mem.bucket_hits,
+            if mem.kernel.is_empty() { "-" } else { &mem.kernel }
         );
         println!(
-            "  decode sessions: {} begun ({} live), {} streamed steps, \
-             session state {} KiB",
+            "  decode sessions: {} begun ({} live), {} streamed steps \
+             ({} batched rounds x {} rows), session state {} KiB",
             mem.decode_sessions_total,
             mem.decode_sessions_live,
             mem.decode_steps,
+            mem.decode_step_batches,
+            mem.decode_step_batch_rows,
             mem.decode_state_bytes / 1024
         );
         println!(

@@ -78,11 +78,16 @@ impl Pcg {
     }
 
     /// Sample an index from unnormalized non-negative weights.
+    ///
+    /// The weight total and the cumulative walk accumulate in **f64**
+    /// (f64-accumulation audit, DESIGN.md §Decode): this is the softmax
+    /// inner reduction of temperature sampling, and at vocab-sized supports
+    /// an f32 running sum visibly skews the tail of the distribution.
     pub fn weighted(&mut self, weights: &[f32]) -> usize {
-        let total: f32 = weights.iter().sum();
-        let mut r = self.f32() * total;
-        for (i, w) in weights.iter().enumerate() {
-            r -= w;
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        let mut r = self.f32() as f64 * total;
+        for (i, &w) in weights.iter().enumerate() {
+            r -= w as f64;
             if r < 0.0 {
                 return i;
             }

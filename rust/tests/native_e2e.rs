@@ -230,6 +230,55 @@ fn server_round_trip_native() {
 }
 
 #[test]
+fn server_batched_rounds_match_single_session_greedy_streams() {
+    // The server's token round is now one `decode_step_batch` call over
+    // every live session. Under greedy sampling the responses must be
+    // token-identical to decoding each prompt alone through the serial
+    // session path — batching changes wall-clock shape, never tokens.
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+    )
+    .unwrap();
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10, 11, 1]];
+    let max_new = 5usize;
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            server.handle.submit(GenerateRequest {
+                prompt: p.clone(),
+                max_new,
+                sampling: Sampling::Greedy,
+            })
+        })
+        .collect();
+    let responses: Vec<Vec<i32>> =
+        handles.into_iter().map(|h| h.recv().unwrap().unwrap().tokens).collect();
+    // Every generated token beyond a request's first came from a streamed
+    // step, and every round went through the batched entry point.
+    let mem = server.handle.mem_report().expect("native worker reports memory");
+    assert_eq!(mem.decode_steps, (prompts.len() * (max_new - 1)) as u64);
+    assert!(mem.decode_step_batches >= 1, "server rounds did not use decode_step_batch");
+    assert_eq!(mem.decode_step_batch_rows, mem.decode_steps);
+    assert_eq!(mem.decode_sessions_live, 0);
+    server.stop();
+    // Serial single-request reference on a fresh model (greedy ⇒ rng-free).
+    let model = native("golden_tiny", 0);
+    let mut rng = Pcg::new(0);
+    for (p, got) in prompts.iter().zip(&responses) {
+        let want =
+            decode_batch(model.as_ref(), &[p.clone()], &[max_new], Sampling::Greedy, &mut rng)
+                .unwrap();
+        assert_eq!(got, &want[0], "batched server stream diverged for prompt {p:?}");
+    }
+}
+
+#[test]
 fn server_routes_mixed_lengths_to_their_buckets() {
     let server = Server::start_kind(
         BackendKind::Native,

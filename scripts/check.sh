@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke]
+# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke|kernel-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
@@ -18,6 +18,15 @@
 #                length traffic through resident sessions (every generated
 #                token beyond a request's first served by decode_step, no
 #                prefix recompute, no leaked sessions, no panics).
+#   kernel-smoke vectorized-kernel gate (DESIGN.md §Kernels): runs the
+#                native_step kernel micro-axes and the native_decode
+#                batched-stepping axis under HYENA_KERNEL=scalar and
+#                HYENA_KERNEL=simd. Fails if the dispatcher does not honour
+#                the forcing env, if SIMD does not win ≥ 1.5× on the
+#                dense-axpy / decode-dot micro-axes (on SIMD-capable CPUs),
+#                if batched decode_step_batch does not beat serial stepping
+#                at occupancy 4, or if the greedy token streams differ
+#                between the scalar and SIMD kernel paths.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -54,6 +63,28 @@ if [ "${1:-}" = "decode-smoke" ]; then
         --requests 12 --mixed --stream-decode --require-buckets --greedy \
         --threads 2 --seed 0
     echo "check.sh: decode-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "kernel-smoke" ]; then
+    echo "==> kernel-smoke: kernel micro-axes, scalar dispatch forced"
+    HYENA_KERNEL=scalar cargo bench --bench native_step -- --smoke --threads 2
+    echo "==> kernel-smoke: kernel micro-axes + SIMD gate (1.5x dense/dot where supported)"
+    HYENA_KERNEL=simd cargo bench --bench native_step -- --smoke --threads 2
+    echo "==> kernel-smoke: batched decode stepping (occupancy 4) + greedy fingerprints"
+    log_scalar=$(mktemp); log_simd=$(mktemp)
+    HYENA_KERNEL=scalar cargo bench --bench native_decode -- --smoke --threads 2 | tee "$log_scalar"
+    HYENA_KERNEL=simd cargo bench --bench native_decode -- --smoke --threads 2 | tee "$log_simd"
+    fp_scalar=$(grep -o 'greedy fingerprint: [0-9a-f]*' "$log_scalar" | tail -1)
+    fp_simd=$(grep -o 'greedy fingerprint: [0-9a-f]*' "$log_simd" | tail -1)
+    rm -f "$log_scalar" "$log_simd"
+    if [ -z "$fp_scalar" ] || [ "$fp_scalar" != "$fp_simd" ]; then
+        echo "kernel-smoke: greedy streams diverged between scalar and simd kernels" >&2
+        echo "  scalar: ${fp_scalar:-<missing>}   simd: ${fp_simd:-<missing>}" >&2
+        exit 1
+    fi
+    echo "kernel-smoke: scalar/simd greedy fingerprints match (${fp_scalar#*: })"
+    echo "check.sh: kernel-smoke green"
     exit 0
 fi
 

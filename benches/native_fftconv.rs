@@ -15,6 +15,13 @@
 //!
 //! `--smoke` is the CI gate (`scripts/check.sh bench-smoke`): small sizes,
 //! and a hard failure if the real-FFT path is not faster than direct at 8K.
+//!
+//! `--longctx` switches to the long-context axis (`scripts/check.sh
+//! longctx-smoke`): stream `--max-l` samples (64K default, 1M capable)
+//! through the chunked overlap-save plan at `--chunk`-sized blocks and
+//! gate it ≤ 1e-4 relative against the monolithic O(L log L) plan, timing
+//! both and recording the O(chunk)-vs-O(L) working-set gap under the
+//! `longctx` key of the ledger.
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -22,7 +29,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 use hyena::backend::fft::{
-    causal_conv_direct, random_signal, CausalConv, ComplexCausalConv, ConvWorkspace, Spectrum,
+    causal_conv_direct, random_signal, CausalConv, ChunkedCausalConv, ComplexCausalConv,
+    ConvWorkspace, Spectrum,
 };
 use hyena::report::{merge_bench_json, Table};
 use hyena::util::cli::Args;
@@ -74,8 +82,134 @@ fn conv_rows(
     );
 }
 
+/// The `--longctx` axis: chunked overlap-save streaming vs the monolithic
+/// plan over one long channel — the single-channel core of the engine's
+/// chunked prefill (`forward_infer_chunked`). The ≤ 1e-4 relative bound is
+/// the same contract the engine's unit tests and the numpy mirror
+/// (`python/tests/test_overlap_save.py`) pin; here it gates a real 64K+
+/// signal, and the run fails hard if the bound breaks.
+fn run_longctx(args: &Args) -> Result<()> {
+    let l = args.get_usize("max-l", 65536);
+    let chunk = args.get_usize("chunk", 8192).clamp(2, l);
+    let iters = args.get_usize("iters", 3).max(1);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let mut rng = Pcg::new(7);
+    // Engine geometry: filter support == chunk == the compiled seqlen, so
+    // every block beyond the first carries filter-1 samples of history.
+    let h = random_signal(&mut rng, chunk);
+    let v = random_signal(&mut rng, l);
+    let plan_c = ChunkedCausalConv::new(chunk, chunk);
+    let nchunks = (l + chunk - 1) / chunk;
+
+    // Timed chunked stream: plan, workspace, scratch and carry all live
+    // outside the loop — zero allocation per block, like the engine.
+    let mut ws = plan_c.workspace();
+    let mut hs = ws.take_spectrum();
+    plan_c.filter_spectrum_slices_into(&h, &mut ws, &mut hs.re, &mut hs.im);
+    let mut buf = vec![0.0f32; plan_c.fft_size()];
+    let mut carry: Vec<f32> = Vec::with_capacity(plan_c.carry_len());
+    let mut y_chunked = vec![0.0f32; l];
+    let chunked = time_runs(iters, || {
+        carry.clear();
+        let mut g0 = 0usize;
+        while g0 < l {
+            let cl = chunk.min(l - g0);
+            plan_c.process_chunk_slices_into(
+                &hs.re,
+                &hs.im,
+                &carry,
+                &v[g0..g0 + cl],
+                &mut ws,
+                &mut buf,
+                &mut y_chunked[g0..g0 + cl],
+            );
+            plan_c.update_carry(&mut carry, &v[g0..g0 + cl]);
+            g0 += cl;
+        }
+        y_chunked[l - 1]
+    });
+
+    // Monolithic oracle: one transform at next_pow2(2L) with the filter
+    // zero-extended to full support.
+    let plan_m = CausalConv::new(l);
+    let mut h_full = vec![0.0f32; l];
+    h_full[..chunk].copy_from_slice(&h);
+    let mut wsm = plan_m.workspace();
+    let mut sh = wsm.take_spectrum();
+    let mut sv = wsm.take_spectrum();
+    let mut y_mono = vec![0.0f32; l];
+    let mono = time_runs(iters, || {
+        plan_m.spectrum_into(&h_full, &mut wsm, &mut sh);
+        plan_m.spectrum_into(&v, &mut wsm, &mut sv);
+        plan_m.conv_spec_into(&sh, &sv, &mut wsm, &mut y_mono);
+        y_mono[l - 1]
+    });
+
+    let max_rel = y_chunked
+        .iter()
+        .zip(&y_mono)
+        .map(|(x, y)| (x - y).abs() / (1.0 + x.abs().max(y.abs())))
+        .fold(0.0f32, f32::max);
+
+    // Working-set estimate (bytes): FFT-sized scratch + spectra + signal
+    // buffers each path needs *beyond the input/output rows themselves* —
+    // the O(chunk) vs O(L) gap the chunked prefill exists to open.
+    let chunked_work = 4 * (4 * plan_c.fft_size() + plan_c.carry_len() + chunk);
+    let mono_work = 4 * (4 * plan_m.fft_size() + l);
+
+    println!(
+        "longctx L={l}: chunked ({nchunks} x {chunk}) {:.3} ms vs monolithic {:.3} ms, \
+         max rel err {max_rel:.2e}, working set {} KiB vs {} KiB",
+        chunked.p50() * 1e3,
+        mono.p50() * 1e3,
+        chunked_work / 1024,
+        mono_work / 1024,
+    );
+    let mut table = Table::new(
+        "§Perf Longctx — chunked overlap-save vs monolithic FFT",
+        &["L", "chunk", "chunks", "chunked p50 ms", "mono p50 ms", "max rel err",
+          "chunked work KiB", "mono work KiB"],
+    );
+    table.row(vec![
+        l.to_string(),
+        chunk.to_string(),
+        nchunks.to_string(),
+        format!("{:.3}", chunked.p50() * 1e3),
+        format!("{:.3}", mono.p50() * 1e3),
+        format!("{max_rel:.2e}"),
+        (chunked_work / 1024).to_string(),
+        (mono_work / 1024).to_string(),
+    ]);
+    table.emit("native_fftconv_longctx");
+    merge_bench_json(
+        Path::new(&out_path),
+        "longctx",
+        Json::obj(vec![
+            ("l", Json::num(l as f64)),
+            ("chunk", Json::num(chunk as f64)),
+            ("chunks", Json::num(nchunks as f64)),
+            ("fft_size", Json::num(plan_c.fft_size() as f64)),
+            ("chunked_ms", Json::num(chunked.p50() * 1e3)),
+            ("monolithic_ms", Json::num(mono.p50() * 1e3)),
+            ("max_rel_err", Json::num(max_rel as f64)),
+            ("chunked_work_bytes", Json::num(chunked_work as f64)),
+            ("monolithic_work_bytes", Json::num(mono_work as f64)),
+        ]),
+    )?;
+    println!("bench ledger -> {out_path} (key: longctx)");
+
+    if !(max_rel <= 1e-4) {
+        bail!("longctx gate: chunked prefill diverged from monolithic ({max_rel:.2e} > 1e-4)");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
-    let args = Args::parse(&["smoke"]);
+    let args = Args::parse(&["smoke", "longctx"]);
+    if args.flag("longctx") {
+        return run_longctx(&args);
+    }
     let smoke = args.flag("smoke");
     let max_l = args.get_usize("max-l", if smoke { 8192 } else { 65536 });
     let iters_cap = args.get_usize("iters", if smoke { 8 } else { 32 });

@@ -1,0 +1,198 @@
+"""Numpy mirror of the Rust `ChunkedCausalConv` (rust/src/backend/fft.rs).
+
+Overlap-save block convolution is the same linear causal convolution the
+monolithic FFT computes: each block transforms [carry (filter-1 preceding
+input samples) ++ chunk], multiplies by the filter spectrum, inverse
+transforms, and keeps the outputs past the carry. This mirror pins the
+algorithm 1:1 — plan geometry (fft size = next_pow2(chunk + filter - 1)),
+carry semantics (all history so far, capped at filter - 1), ragged final
+chunks, the chunk < filter rejection — so the exactness contract of
+DESIGN.md §Long-context stays executable in cargo-less containers.
+
+Pure numpy; no repo imports, no jax, no hypothesis.
+"""
+import numpy as np
+import pytest
+
+
+def next_pow2(n):
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class OverlapSave:
+    """Mirror of ChunkedCausalConv: fixed chunk/filter geometry, streaming
+    carry, per-block rfft/spec-mul/irfft."""
+
+    def __init__(self, chunk, filter_len, fft_size=None):
+        if filter_len == 0 or chunk < filter_len:
+            raise ValueError(f"invalid overlap-save plan: chunk {chunk} < filter {filter_len}")
+        n = fft_size if fft_size is not None else max(2, next_pow2(chunk + filter_len - 1))
+        if n < chunk + filter_len - 1:
+            raise ValueError("fft size cannot hold chunk + filter - 1")
+        self.chunk = chunk
+        self.filter = filter_len
+        self.n = n
+
+    @property
+    def carry_len(self):
+        return self.filter - 1
+
+    def filter_spectrum(self, h):
+        assert len(h) <= self.filter
+        return np.fft.rfft(h, n=self.n)
+
+    def process_chunk(self, hspec, carry, chunk_in):
+        w, cl = len(carry), len(chunk_in)
+        assert w < self.filter
+        assert 1 <= cl <= self.chunk
+        x = np.concatenate([carry, chunk_in])
+        y = np.fft.irfft(hspec * np.fft.rfft(x, n=self.n), n=self.n)
+        return y[w : w + cl]
+
+    def update_carry(self, carry, chunk_in):
+        w = self.filter - 1
+        if w == 0:
+            return chunk_in[:0]
+        return np.concatenate([carry, chunk_in])[-w:]
+
+    def conv_streaming(self, h, v):
+        hspec = self.filter_spectrum(h)
+        carry = v[:0]
+        out = []
+        g0 = 0
+        while g0 < len(v):
+            cl = min(self.chunk, len(v) - g0)
+            block = v[g0 : g0 + cl]
+            out.append(self.process_chunk(hspec, carry, block))
+            carry = self.update_carry(carry, block)
+            g0 += cl
+        return np.concatenate(out) if out else v[:0]
+
+
+def causal_conv_direct(h_full, v):
+    """Reference O(L^2) causal conv, mirroring the Rust reference."""
+    l = len(v)
+    y = np.zeros(l, dtype=np.float64)
+    for t in range(l):
+        for s in range(t + 1):
+            y[t] += h_full[t - s] * v[s]
+    return y
+
+
+def monolithic_fft_conv(h_full, v):
+    """The monolithic CausalConv path: one FFT at next_pow2(2L)."""
+    l = len(v)
+    n = max(2, next_pow2(2 * l))
+    return np.fft.irfft(np.fft.rfft(h_full, n=n) * np.fft.rfft(v, n=n), n=n)[:l]
+
+
+def pad_filter(h, l):
+    h_full = np.zeros(l, dtype=h.dtype)
+    support = min(len(h), l)
+    h_full[:support] = h[:support]
+    return h_full
+
+
+def test_overlap_save_sweep_matches_direct_and_monolithic():
+    # (L, chunk, filter) sweep including ragged final chunks and blocks
+    # shorter than the carry — the same sweep the Rust property test runs.
+    rng = np.random.default_rng(0)
+    for case in range(200):
+        f = int(rng.integers(1, 17))
+        chunk = f + int(rng.integers(0, 24))
+        l = int(rng.integers(1, 201))
+        h = rng.standard_normal(f)
+        v = rng.standard_normal(l)
+        plan = OverlapSave(chunk, f)
+        got = plan.conv_streaming(h, v)
+        h_full = pad_filter(h, l)
+        direct = causal_conv_direct(h_full, v)
+        mono = monolithic_fft_conv(h_full, v)
+        assert got.shape == (l,)
+        np.testing.assert_allclose(got, direct, rtol=1e-9, atol=1e-9, err_msg=f"case {case}")
+        np.testing.assert_allclose(got, mono, rtol=1e-9, atol=1e-9, err_msg=f"case {case}")
+
+
+def test_overlap_save_float32_meets_rel_tolerance_vs_monolithic():
+    # The acceptance bound of the Rust engine is stated in f32: chunked vs
+    # monolithic <= 1e-4 relative. Run the mirror in float32 to pin it.
+    rng = np.random.default_rng(1)
+    for l, chunk, f in [(1000, 64, 64), (777, 100, 33), (4096, 256, 256)]:
+        h = rng.standard_normal(f).astype(np.float32)
+        v = rng.standard_normal(l).astype(np.float32)
+        got = OverlapSave(chunk, f).conv_streaming(h, v).astype(np.float32)
+        mono = monolithic_fft_conv(pad_filter(h, l), v).astype(np.float32)
+        denom = 1.0 + np.maximum(np.abs(got), np.abs(mono))
+        assert np.max(np.abs(got - mono) / denom) <= 1e-4
+
+
+def test_chunk_equals_filter_edge():
+    rng = np.random.default_rng(2)
+    for l in (5, 8, 9, 37, 64):
+        c = 8
+        h = rng.standard_normal(c)
+        v = rng.standard_normal(l)
+        got = OverlapSave(c, c).conv_streaming(h, v)
+        want = causal_conv_direct(pad_filter(h, l), v)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_filter_one_has_no_carry():
+    rng = np.random.default_rng(3)
+    plan = OverlapSave(6, 1)
+    assert plan.carry_len == 0
+    v = rng.standard_normal(20)
+    np.testing.assert_allclose(plan.conv_streaming(np.array([1.5]), v), 1.5 * v, rtol=1e-12)
+
+
+def test_ragged_final_chunk_and_short_stream():
+    # Streams shorter than one chunk, and streams whose final block is
+    # ragged (L % chunk != 0), must both be exact.
+    rng = np.random.default_rng(4)
+    for l in (3, 7, 8, 15, 17, 30):
+        f, chunk = 4, 8
+        h = rng.standard_normal(f)
+        v = rng.standard_normal(l)
+        got = OverlapSave(chunk, f).conv_streaming(h, v)
+        want = causal_conv_direct(pad_filter(h, l), v)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_chunk_smaller_than_filter_is_rejected():
+    with pytest.raises(ValueError):
+        OverlapSave(4, 5)
+    with pytest.raises(ValueError):
+        OverlapSave(4, 0)
+    with pytest.raises(ValueError):
+        OverlapSave(0, 1)
+    # chunk == filter is the legal edge.
+    OverlapSave(4, 4)
+    OverlapSave(1, 1)
+
+
+def test_single_chunk_at_monolithic_fft_size_is_bitwise():
+    # When the chunked plan runs at the monolithic plan's FFT size and the
+    # whole signal fits one chunk (empty carry), the op sequence is the
+    # monolithic transform itself — equality is exact, not approximate.
+    rng = np.random.default_rng(5)
+    for l in (8, 16, 33, 100):
+        n = max(2, next_pow2(2 * l))
+        h = rng.standard_normal(l)
+        v = rng.standard_normal(l)
+        got = OverlapSave(l, l, fft_size=n).conv_streaming(h, v)
+        want = monolithic_fft_conv(h, v)
+        assert np.array_equal(got, want), f"L={l} not bitwise"
+
+
+def test_carry_accumulates_history_capped_at_filter_minus_one():
+    plan = OverlapSave(8, 5)
+    v = np.arange(20, dtype=np.float64)
+    carry = v[:0]
+    for g0 in range(0, 20, 8):
+        block = v[g0 : g0 + 8]
+        carry = plan.update_carry(carry, block)
+        want = v[max(0, g0 + len(block) - 4) : g0 + len(block)]
+        assert np.array_equal(carry, want)

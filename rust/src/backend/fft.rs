@@ -284,7 +284,12 @@ pub struct ConvWorkspace {
 impl ConvWorkspace {
     /// Workspace sized for `plan` (usable with any plan of the same size).
     pub fn new(plan: &CausalConv) -> ConvWorkspace {
-        let n = plan.fft_size();
+        Self::with_fft_size(plan.fft_size())
+    }
+
+    /// Workspace for a raw FFT size (shared by [`CausalConv`] and
+    /// [`ChunkedCausalConv`] plans of the same transform size).
+    pub fn with_fft_size(n: usize) -> ConvWorkspace {
         ConvWorkspace { n, sre: vec![0.0; n / 2], sim: vec![0.0; n / 2], pool: Vec::new() }
     }
 
@@ -483,6 +488,219 @@ impl CausalConv {
 }
 
 // ---------------------------------------------------------------------------
+// chunked (overlap-save) causal convolution
+// ---------------------------------------------------------------------------
+
+/// Overlap-save causal convolution: stream an arbitrary-length signal
+/// through fixed-size FFT chunks (DESIGN.md §Long-context).
+///
+/// For a filter of support `F` (zero beyond `F−1` taps back) the causal conv
+/// at position `p` only reads `v[p−F+1 ..= p]`. Overlap-save exploits this:
+/// each block transforms `[carry (last W = F−1 input samples) ++ chunk]`,
+/// multiplies by the filter spectrum, inverse-transforms, and keeps only the
+/// `chunk` outputs past the carry — those are *exactly* the linear-conv
+/// outputs, because every one of them has its full `F`-tap history inside
+/// the block. Work is O(chunk·log chunk) per chunk and the working set is
+/// O(chunk), independent of the total stream length; the result is the same
+/// linear convolution the monolithic FFT computes (same math, different
+/// rounding — and *bitwise* identical on the first chunk, where the empty
+/// carry makes the block transform literally the monolithic transform).
+///
+/// Wraparound safety: outputs are read at block positions `p ≥ w` (the
+/// carry length actually present, `w ≤ W`). Circular contamination from the
+/// linear support `w + cl + F − 1 > n` only lands at positions
+/// `p ≤ w + cl + F − 2 − n`, and the plan guarantees
+/// `n ≥ chunk + F − 1 ≥ cl + F − 1`, so every contaminated position sits
+/// strictly below `w` — never read.
+///
+/// The invariant `chunk ≥ filter` keeps the carry no longer than one chunk
+/// (`try_new` rejects `chunk < filter`); the degenerate `chunk == filter`
+/// case is legal and tested.
+pub struct ChunkedCausalConv {
+    chunk: usize,
+    filter: usize,
+    rfft: RealFft,
+}
+
+impl ChunkedCausalConv {
+    /// Plan for `chunk`-sample blocks under a filter of support `filter`.
+    /// Returns `None` when `filter == 0` or `chunk < filter` (the carry
+    /// would outgrow the block and overlap-save no longer applies).
+    pub fn try_new(chunk: usize, filter: usize) -> Option<ChunkedCausalConv> {
+        if filter == 0 || chunk < filter {
+            return None;
+        }
+        let n = (chunk + filter - 1).next_power_of_two().max(2);
+        Some(ChunkedCausalConv { chunk, filter, rfft: RealFft::new(n) })
+    }
+
+    /// Panicking [`ChunkedCausalConv::try_new`].
+    pub fn new(chunk: usize, filter: usize) -> ChunkedCausalConv {
+        Self::try_new(chunk, filter)
+            .unwrap_or_else(|| panic!("invalid overlap-save plan: chunk {chunk} < filter {filter}"))
+    }
+
+    /// Plan at an explicit FFT size `n` (power of two ≥ chunk + filter − 1).
+    ///
+    /// The model passes its full bucket's `fft_size()` here: with
+    /// `chunk == filter == L` that is `next_pow2(2L)` — the *same* transform
+    /// the monolithic path runs, so cached filter spectra, workspaces and
+    /// first-chunk bitwise equality all carry over.
+    pub fn with_fft_size(chunk: usize, filter: usize, n: usize) -> ChunkedCausalConv {
+        assert!(filter >= 1 && chunk >= filter, "chunk {chunk} < filter {filter}");
+        assert!(
+            n.is_power_of_two() && n >= (chunk + filter - 1).max(2),
+            "fft size {n} cannot hold chunk {chunk} + filter {filter} - 1"
+        );
+        ChunkedCausalConv { chunk, filter, rfft: RealFft::new(n) }
+    }
+
+    /// Block length streamed per transform.
+    pub fn chunk_len(&self) -> usize {
+        self.chunk
+    }
+
+    /// Filter support (taps beyond this are treated as zero).
+    pub fn filter_len(&self) -> usize {
+        self.filter
+    }
+
+    /// Overlap carried between blocks: `filter − 1` input samples.
+    pub fn carry_len(&self) -> usize {
+        self.filter - 1
+    }
+
+    /// FFT size the plan transforms at.
+    pub fn fft_size(&self) -> usize {
+        self.rfft.size()
+    }
+
+    /// Half-spectrum bins per signal: `fft_size()/2 + 1`.
+    pub fn spec_len(&self) -> usize {
+        self.rfft.spec_len()
+    }
+
+    /// Allocate a workspace sized for this plan (interchangeable with any
+    /// [`CausalConv`] workspace of the same FFT size).
+    pub fn workspace(&self) -> ConvWorkspace {
+        ConvWorkspace::with_fft_size(self.fft_size())
+    }
+
+    /// Half spectrum of the filter (computed once per stream; `h.len()` may
+    /// be anything ≤ `filter`, shorter filters are zero-extended).
+    pub fn filter_spectrum_slices_into(
+        &self,
+        h: &[f32],
+        ws: &mut ConvWorkspace,
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) {
+        assert!(h.len() <= self.filter, "filter longer than the plan's support");
+        assert_eq!(ws.n, self.fft_size(), "workspace size != plan size");
+        self.rfft.forward(h, &mut ws.sre, &mut ws.sim, out_re, out_im);
+    }
+
+    /// One overlap-save block: convolve `chunk_in` (`1 ..= chunk` samples —
+    /// the final block of a stream may be ragged) against the cached filter
+    /// spectrum `(h_re, h_im)`, given `carry` = the input samples
+    /// immediately preceding this block (all history so far, capped at
+    /// `carry_len()`; empty on the first block). Writes the `chunk_in.len()`
+    /// linear-convolution outputs for this block's positions into `out`.
+    ///
+    /// `buf` is caller scratch of length ≥ `carry.len() + chunk_in.len()`
+    /// (at most `fft_size()`); it holds the block input and then its inverse
+    /// transform, so a worker can reuse one buffer across every block.
+    pub fn process_chunk_slices_into(
+        &self,
+        h_re: &[f32],
+        h_im: &[f32],
+        carry: &[f32],
+        chunk_in: &[f32],
+        ws: &mut ConvWorkspace,
+        buf: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let (w, cl) = (carry.len(), chunk_in.len());
+        assert!(w < self.filter, "carry {w} ≥ filter support {}", self.filter);
+        assert!(cl >= 1 && cl <= self.chunk, "chunk input {cl} outside 1..={}", self.chunk);
+        assert_eq!(out.len(), cl, "output length != chunk input length");
+        assert!(buf.len() >= w + cl, "scratch buffer shorter than carry + chunk");
+        assert_eq!(ws.n, self.fft_size(), "workspace size != plan size");
+
+        buf[..w].copy_from_slice(carry);
+        buf[w..w + cl].copy_from_slice(chunk_in);
+        let bins = self.spec_len();
+        let mut x = ws.take_spectrum();
+        self.rfft.forward(&buf[..w + cl], &mut ws.sre, &mut ws.sim, &mut x.re, &mut x.im);
+        let mut p = ws.take_spectrum();
+        (kernels::active().spec_mul)(
+            &h_re[..bins],
+            &h_im[..bins],
+            &x.re[..bins],
+            &x.im[..bins],
+            &mut p.re[..bins],
+            &mut p.im[..bins],
+        );
+        self.rfft.inverse(&p.re, &p.im, &mut ws.sre, &mut ws.sim, &mut buf[..w + cl]);
+        out.copy_from_slice(&buf[w..w + cl]);
+        ws.put_spectrum(x);
+        ws.put_spectrum(p);
+    }
+
+    /// Roll `chunk_in` into `carry` so the next block sees the last
+    /// `carry_len()` input samples (fewer while the stream is still shorter
+    /// than the carry).
+    pub fn update_carry(&self, carry: &mut Vec<f32>, chunk_in: &[f32]) {
+        let w = self.filter - 1;
+        if w == 0 {
+            carry.clear();
+            return;
+        }
+        let cl = chunk_in.len();
+        if cl >= w {
+            carry.clear();
+            carry.extend_from_slice(&chunk_in[cl - w..]);
+        } else {
+            let keep = (carry.len() + cl).min(w) - cl;
+            let drop = carry.len() - keep;
+            carry.drain(..drop);
+            carry.extend_from_slice(chunk_in);
+        }
+    }
+
+    /// Stream a whole signal through the plan (allocating convenience — the
+    /// reference driver the tests, benches and numpy mirror all share).
+    /// `h.len()` ≤ `filter`; returns the `v.len()` causal-conv outputs.
+    pub fn conv_streaming(&self, h: &[f32], v: &[f32]) -> Vec<f32> {
+        assert!(h.len() <= self.filter, "filter longer than the plan's support");
+        let mut ws = self.workspace();
+        let mut hs = ws.take_spectrum();
+        self.filter_spectrum_slices_into(h, &mut ws, &mut hs.re, &mut hs.im);
+        let mut buf = vec![0.0f32; self.fft_size()];
+        let mut carry: Vec<f32> = Vec::new();
+        let mut y = vec![0.0f32; v.len()];
+        let mut g0 = 0usize;
+        while g0 < v.len() {
+            let cl = self.chunk.min(v.len() - g0);
+            let chunk_in = &v[g0..g0 + cl];
+            self.process_chunk_slices_into(
+                &hs.re,
+                &hs.im,
+                &carry,
+                chunk_in,
+                &mut ws,
+                &mut buf,
+                &mut y[g0..g0 + cl],
+            );
+            self.update_carry(&mut carry, chunk_in);
+            g0 += cl;
+        }
+        ws.put_spectrum(hs);
+        y
+    }
+}
+
+// ---------------------------------------------------------------------------
 // shape-bucketed plan bank
 // ---------------------------------------------------------------------------
 
@@ -502,6 +720,13 @@ pub const MIN_BUCKET_LEN: usize = 8;
 pub struct PlanBank {
     /// Plans sorted ascending by signal length; the last is the full length.
     plans: Vec<CausalConv>,
+    /// Extended-context plans at doubling lengths above the full bucket
+    /// (`2L, 4L, …` until the configured max context is covered). These are
+    /// the *monolithic* long-context plans — the reference/validation path
+    /// for prompts beyond the compiled window, while the chunked
+    /// overlap-save engine does the streaming work (DESIGN.md
+    /// §Long-context). Empty unless built [`PlanBank::with_context`].
+    ext: Vec<CausalConv>,
 }
 
 impl PlanBank {
@@ -520,7 +745,20 @@ impl PlanBank {
         }
         lens.sort_unstable();
         lens.dedup();
-        PlanBank { plans: lens.into_iter().map(CausalConv::new).collect() }
+        PlanBank { plans: lens.into_iter().map(CausalConv::new).collect(), ext: Vec::new() }
+    }
+
+    /// [`PlanBank::new`] plus an extended ladder of monolithic plans at
+    /// doubling lengths `2·full, 4·full, …` until `max_context` is covered
+    /// (`max_context ≤ full` leaves the ladder empty).
+    pub fn with_context(full: usize, levels: usize, max_context: usize) -> PlanBank {
+        let mut bank = Self::new(full, levels);
+        let mut l = full;
+        while l < max_context {
+            l *= 2;
+            bank.ext.push(CausalConv::new(l));
+        }
+        bank
     }
 
     /// Bucket signal lengths, ascending (the last is the full length).
@@ -547,6 +785,27 @@ impl PlanBank {
     /// The full-length plan (the training path's single plan).
     pub fn full(&self) -> &CausalConv {
         self.plans.last().expect("plan bank is never empty")
+    }
+
+    /// Extended-ladder signal lengths, ascending (empty without
+    /// [`PlanBank::with_context`]).
+    pub fn ext_lens(&self) -> Vec<usize> {
+        self.ext.iter().map(|p| p.len()).collect()
+    }
+
+    /// Longest length any plan in the bank covers (the admission bound for
+    /// extended-context prefill).
+    pub fn max_len(&self) -> usize {
+        self.ext.last().map_or_else(|| self.full().len(), |p| p.len())
+    }
+
+    /// Smallest plan — full bucket or extended ladder — covering length `l`
+    /// (`None` above [`PlanBank::max_len`]).
+    pub fn ext_plan(&self, l: usize) -> Option<&CausalConv> {
+        if l <= self.full().len() {
+            return Some(self.full());
+        }
+        self.ext.iter().find(|p| p.len() >= l)
     }
 }
 
@@ -1036,5 +1295,134 @@ mod tests {
                 want[t]
             );
         }
+    }
+
+    #[test]
+    fn longctx_overlap_save_matches_direct_and_monolithic_sweep() {
+        // Satellite: chunked-vs-monolithic agreement across a sweep of
+        // (L, chunk, filter) including ragged final chunks and chunk ==
+        // filter. The direct O(L²) conv anchors correctness; the monolithic
+        // FFT plan anchors the ≤1e-4 rel chunked-vs-monolithic contract.
+        Prop::new("overlap-save == direct/monolithic").cases(64).check(|rng| {
+            let f = 1 + rng.usize_below(16);
+            let chunk = f + rng.usize_below(24);
+            let l = 1 + rng.usize_below(200);
+            let plan = ChunkedCausalConv::new(chunk, f);
+            prop_assert!(plan.carry_len() == f - 1, "carry != filter-1");
+            let h = random_signal(rng, f);
+            let v = random_signal(rng, l);
+            let got = plan.conv_streaming(&h, &v);
+
+            let mut h_full = vec![0.0f32; l];
+            let support = f.min(l);
+            h_full[..support].copy_from_slice(&h[..support]);
+            let direct = causal_conv_direct(&h_full, &v);
+            let mono = CausalConv::new(l).conv(&h_full, &v);
+            for t in 0..l {
+                prop_assert!(
+                    close(got[t], direct[t], 2e-3),
+                    "direct L={l} c={chunk} f={f} t={t}: {} vs {}",
+                    got[t],
+                    direct[t]
+                );
+                prop_assert!(
+                    close(got[t], mono[t], 1e-4),
+                    "monolithic L={l} c={chunk} f={f} t={t}: {} vs {}",
+                    got[t],
+                    mono[t]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn longctx_overlap_save_rejects_chunk_smaller_than_filter() {
+        assert!(ChunkedCausalConv::try_new(4, 5).is_none());
+        assert!(ChunkedCausalConv::try_new(0, 1).is_none());
+        assert!(ChunkedCausalConv::try_new(4, 0).is_none());
+        // chunk == filter is the legal edge, not a rejection.
+        assert!(ChunkedCausalConv::try_new(4, 4).is_some());
+        assert!(ChunkedCausalConv::try_new(1, 1).is_some());
+    }
+
+    #[test]
+    fn longctx_overlap_save_edge_geometries() {
+        let mut rng = Pcg::new(7);
+        // chunk == filter: every block past the first carries a full
+        // chunk-minus-one overlap.
+        for (l, c) in [(37usize, 8usize), (8, 8), (5, 8), (64, 8), (9, 8)] {
+            let plan = ChunkedCausalConv::new(c, c);
+            let h = random_signal(&mut rng, c);
+            let v = random_signal(&mut rng, l);
+            let got = plan.conv_streaming(&h, &v);
+            let mut h_full = vec![0.0f32; l];
+            let support = c.min(l);
+            h_full[..support].copy_from_slice(&h[..support]);
+            let want = causal_conv_direct(&h_full, &v);
+            for t in 0..l {
+                assert!(
+                    close(got[t], want[t], 2e-3),
+                    "L={l} c=f={c} t={t}: {} vs {}",
+                    got[t],
+                    want[t]
+                );
+            }
+        }
+        // filter == 1: no carry at all, blocks are independent.
+        let plan = ChunkedCausalConv::new(6, 1);
+        assert_eq!(plan.carry_len(), 0);
+        let h = [1.5f32];
+        let v = random_signal(&mut rng, 20);
+        let got = plan.conv_streaming(&h, &v);
+        for t in 0..20 {
+            assert!(close(got[t], 1.5 * v[t], 1e-5), "t={t}");
+        }
+    }
+
+    #[test]
+    fn longctx_single_chunk_is_bitwise_monolithic_at_matched_fft_size() {
+        // The exactness contract's strong half: when the chunked plan runs
+        // at the monolithic plan's FFT size and the whole signal fits one
+        // chunk (empty carry), the transform sequence is *identical* —
+        // outputs must match bit for bit, not just within tolerance.
+        let mut rng = Pcg::new(29);
+        for l in [8usize, 16, 33, 100] {
+            let mono = CausalConv::new(l);
+            let plan = ChunkedCausalConv::with_fft_size(l, l, mono.fft_size());
+            assert_eq!(plan.fft_size(), mono.fft_size());
+            let h = random_signal(&mut rng, l);
+            let v = random_signal(&mut rng, l);
+            let want = mono.conv(&h, &v);
+            let got = plan.conv_streaming(&h, &v);
+            for t in 0..l {
+                assert!(
+                    got[t].to_bits() == want[t].to_bits(),
+                    "L={l} t={t}: {} vs {} not bitwise",
+                    got[t],
+                    want[t]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn longctx_plan_bank_ext_ladder() {
+        let bank = PlanBank::with_context(16, 2, 100);
+        assert_eq!(bank.lens(), vec![8, 16], "base ladder must be untouched");
+        assert_eq!(bank.ext_lens(), vec![32, 64, 128]);
+        assert_eq!(bank.max_len(), 128);
+        assert_eq!(bank.ext_plan(10).unwrap().len(), 16);
+        assert_eq!(bank.ext_plan(16).unwrap().len(), 16);
+        assert_eq!(bank.ext_plan(17).unwrap().len(), 32);
+        assert_eq!(bank.ext_plan(40).unwrap().len(), 64);
+        assert_eq!(bank.ext_plan(128).unwrap().len(), 128);
+        assert!(bank.ext_plan(129).is_none());
+        // Without a context extension the ladder stays empty and max_len is
+        // the full bucket.
+        let plain = PlanBank::new(16, 2);
+        assert!(plain.ext_lens().is_empty());
+        assert_eq!(plain.max_len(), 16);
+        assert_eq!(PlanBank::with_context(16, 2, 16).ext_lens(), Vec::<usize>::new());
     }
 }

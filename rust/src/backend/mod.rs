@@ -80,6 +80,23 @@ pub struct MemReport {
     /// the `kernel-smoke` gate verify which path actually ran through this
     /// field rather than trusting `HYENA_KERNEL`.
     pub kernel: String,
+    /// Longest prompt + generation the engine admits — the compiled seqlen
+    /// unless the engine supports context extension (`--max-context`).
+    pub max_context: usize,
+    /// Extended monolithic plan lengths above the serving buckets,
+    /// ascending (empty without a context extension). These back the
+    /// exactness oracle, not the serving path.
+    pub ext_bucket_lens: Vec<usize>,
+    /// Prompts served through the chunked overlap-save prefill (zero for
+    /// engines without one).
+    pub prefill_chunked: u64,
+    /// Total overlap-save chunks processed across those prefills.
+    pub prefill_chunks: u64,
+    /// Peak bytes one chunked prefill checked out of the serving workspace
+    /// (carries + per-chunk activations + block buffers). O(chunk), not
+    /// O(prompt): at a fixed model this gauge must match between a 4K and a
+    /// 64K prompt — the ISSUE's long-context memory gate.
+    pub prefill_chunk_bytes: usize,
 }
 
 /// One autoregressive decode request in flight (DESIGN.md §Decode).
@@ -329,6 +346,27 @@ pub trait Backend {
     /// Rebuild the serving bucket ladder with `levels` buckets (1 disables
     /// bucketing). No-op for engines without shape bucketing.
     fn set_serve_buckets(&mut self, _levels: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Longest decode session (prompt + generation) the engine admits. The
+    /// default is the compiled window; engines with chunked long-context
+    /// prefill report their extended `--max-context` bound, and the
+    /// coordinator's admission/retirement logic keys off this instead of
+    /// the raw seqlen.
+    /// (Manifests without a compiled seqlen report an unbounded window, as
+    /// the serving loop always has.)
+    fn decode_window(&self) -> usize {
+        self.manifest().seqlen().unwrap_or(usize::MAX)
+    }
+
+    /// Extend the decode window to `n` positions (`--max-context`). Engines
+    /// without a long-context path accept only the compiled window.
+    fn set_max_context(&mut self, n: usize) -> Result<()> {
+        let full = self.manifest().seqlen()?;
+        if n != full {
+            bail!("this backend cannot extend the context window past {full}");
+        }
         Ok(())
     }
 

@@ -227,9 +227,9 @@ impl Backend for NativeBackend {
         token: i32,
         logits: &mut Vec<f32>,
     ) -> Result<()> {
-        let full = self.model.cfg.seqlen;
+        let full = self.model.max_context();
         if sess.len() >= full {
-            bail!("decode session is at the window edge (length {full})");
+            bail!("decode session is at the context edge (length {full})");
         }
         sess.tokens.push(token);
         match self.step_session(sess, token, logits) {
@@ -257,7 +257,7 @@ impl Backend for NativeBackend {
             tokens.len(),
             "decode_step_batch wants one token per session"
         );
-        let full = self.model.cfg.seqlen;
+        let full = self.model.max_context();
         let v = self.model.cfg.vocab;
         let rows = sessions.len();
 
@@ -318,7 +318,7 @@ impl Backend for NativeBackend {
         for (i, sess) in sessions.iter_mut().enumerate() {
             if sess.len() >= full {
                 results[i] = Some(Err(anyhow!(
-                    "decode session is at the window edge (length {full})"
+                    "decode session is at the context edge (length {full})"
                 )));
                 continue;
             }
@@ -401,6 +401,14 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    fn decode_window(&self) -> usize {
+        self.model.max_context()
+    }
+
+    fn set_max_context(&mut self, n: usize) -> Result<()> {
+        self.model.set_max_context(n)
+    }
+
     fn mem_report(&self) -> Option<MemReport> {
         let train = self.model.train_arena_stats();
         let serve = self.model.serve_stats();
@@ -419,6 +427,11 @@ impl Backend for NativeBackend {
             decode_step_batches: serve.decode_step_batches,
             decode_step_batch_rows: serve.decode_step_batch_rows,
             decode_state_bytes: serve.decode_state_bytes,
+            max_context: serve.max_context,
+            ext_bucket_lens: serve.ext_bucket_lens,
+            prefill_chunked: serve.prefill_chunked,
+            prefill_chunks: serve.prefill_chunks,
+            prefill_chunk_bytes: serve.prefill_chunk_bytes,
             kernel: kernels::active_name().to_string(),
         })
     }

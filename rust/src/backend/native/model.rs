@@ -40,7 +40,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-use crate::backend::fft::{CausalConv, ConvWorkspace, PlanBank};
+use crate::backend::fft::{CausalConv, ChunkedCausalConv, ConvWorkspace, PlanBank};
 use crate::backend::native::config::NativeConfig;
 use crate::backend::native::kernels::{self, GELU_A, GELU_C};
 use crate::util::pool::{self, SharedMut, WorkerPool};
@@ -478,6 +478,34 @@ struct ServeState {
     step_batch_rows: u64,
     /// f32 elements checked out into live decode states (rings+histories).
     decode_state_elems: usize,
+    /// Overlap-save plan of the chunked prefill path (lazy; shares the full
+    /// bucket's FFT size, so spectra and conv workspaces are reused).
+    chunked: Option<ChunkedCausalConv>,
+    /// Pooled per-worker overlap-save block buffers (length = full-bucket
+    /// FFT size) — `ConvCtx::a/b` are only `L` long, a block is up to
+    /// `2L − 1`.
+    chunk_bufs: Mutex<Vec<Vec<f32>>>,
+    /// Prompts served through the chunked overlap-save prefill.
+    prefill_chunked: u64,
+    /// Total overlap-save chunks processed across those prefills.
+    prefill_chunks: u64,
+    /// Peak f32 elements a single chunked prefill checked out (carries +
+    /// per-chunk activations + block buffers) — the O(chunk) gauge: it must
+    /// not grow with the prompt length.
+    prefill_chunk_elems: usize,
+}
+
+/// Pop a pooled overlap-save block buffer (or build one at `n`).
+fn take_chunk_buf(pool: &Mutex<Vec<Vec<f32>>>, n: usize) -> Vec<f32> {
+    let mut b = pool.lock().unwrap().pop().unwrap_or_default();
+    if b.len() < n {
+        b.resize(n, 0.0);
+    }
+    b
+}
+
+fn put_chunk_buf(pool: &Mutex<Vec<Vec<f32>>>, b: Vec<f32>) {
+    pool.lock().unwrap().push(b);
 }
 
 impl ServeState {
@@ -557,6 +585,21 @@ pub struct ServeStats {
     pub decode_step_batch_rows: u64,
     /// Bytes held by live per-session ring buffers / channel histories.
     pub decode_state_bytes: usize,
+    /// Longest prompt + generation the engine admits (= seqlen unless
+    /// extended with `set_max_context`).
+    pub max_context: usize,
+    /// Extended monolithic plan lengths above the full bucket, ascending
+    /// (empty without a context extension).
+    pub ext_bucket_lens: Vec<usize>,
+    /// Prompts served through the chunked overlap-save prefill.
+    pub prefill_chunked: u64,
+    /// Total overlap-save chunks processed across those prefills.
+    pub prefill_chunks: u64,
+    /// Peak bytes one chunked prefill checked out of the serving arena
+    /// (carries + per-chunk activations + block buffers). O(chunk): at a
+    /// fixed model this number is the same for a 4K and a 64K prompt —
+    /// pinned by the longctx e2e tests.
+    pub prefill_chunk_bytes: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -1044,8 +1087,14 @@ pub struct NativeModel {
     v: Vec<f32>,
     pub step: u64,
     /// Causal-conv plans at halving bucket lengths; the largest is the full
-    /// seqlen plan the training path runs on (`NativeModel::conv`).
+    /// seqlen plan the training path runs on (`NativeModel::conv`). Holds
+    /// the extended monolithic ladder too when `max_context > seqlen`.
     bank: PlanBank,
+    /// Longest prompt + generation the serving paths admit. Defaults to
+    /// `cfg.seqlen`; raised by [`NativeModel::set_max_context`], which
+    /// routes long prefills through the chunked overlap-save engine and
+    /// decode through the sliding-window step (DESIGN.md §Long-context).
+    max_context: usize,
     /// Positional encoding `(L, 2K+1)` (App. D.3) — constant.
     pe: Vec<f32>,
     /// Decay window `(N, D, L)` (Eq. 7 modulation) — constant.
@@ -1098,6 +1147,7 @@ impl NativeModel {
 
         let mut model = NativeModel {
             bank: PlanBank::new(l, DEFAULT_BUCKET_LEVELS),
+            max_context: l,
             params: vec![0.0f32; layout.total],
             m: Vec::new(),
             v: Vec::new(),
@@ -1127,10 +1177,32 @@ impl NativeModel {
 
     /// Rebuild the serving plan ladder with `levels` buckets (1 = unbucketed)
     /// and invalidate the serving workspace. The full-length plan is always
-    /// kept, so the training path is unaffected.
+    /// kept, so the training path is unaffected; a context extension set via
+    /// [`NativeModel::set_max_context`] is preserved.
     pub fn set_bucket_levels(&mut self, levels: usize) {
-        self.bank = PlanBank::new(self.cfg.seqlen, levels);
+        self.bank = PlanBank::with_context(self.cfg.seqlen, levels, self.max_context);
         *self.serve.lock().unwrap() = ServeState::default();
+    }
+
+    /// Longest prompt + generation the serving paths admit.
+    pub fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    /// Extend (or restore) the serving context to `n` positions. Prompts
+    /// beyond `seqlen` prefill through the chunked overlap-save engine in
+    /// O(chunk) memory; decode past `seqlen` runs on a sliding window of the
+    /// last `seqlen` positions (the filters' support — DESIGN.md
+    /// §Long-context). Also builds the extended monolithic plan ladder
+    /// (`2L, 4L, … ≥ n`) used by the exactness-reference path.
+    pub fn set_max_context(&mut self, n: usize) -> Result<()> {
+        if n < self.cfg.seqlen {
+            bail!("max context {n} below the compiled window {}", self.cfg.seqlen);
+        }
+        self.max_context = n;
+        self.bank = PlanBank::with_context(self.cfg.seqlen, self.bank.levels(), n);
+        *self.serve.lock().unwrap() = ServeState::default();
+        Ok(())
     }
 
     /// Record that parameters changed out-of-band (checkpoint restore), so
@@ -2335,6 +2407,9 @@ impl NativeModel {
         lq: usize,
         out: &mut Vec<f32>,
     ) -> Result<usize> {
+        if lq > self.cfg.seqlen && b == 1 {
+            return self.forward_infer_chunked_impl(tokens, lq, out, true, None);
+        }
         self.forward_infer_impl(tokens, b, lq, out, None)
     }
 
@@ -2517,6 +2592,599 @@ impl NativeModel {
         Ok((out, lb))
     }
 
+    // -- chunked overlap-save prefill (extended context) ---------------------
+
+    /// Chunked overlap-save prefill (DESIGN.md §Long-context): stream one
+    /// row of `lq` tokens (`lq ≤ max_context`) through the network in
+    /// `⌈lq / L⌉` blocks of the compiled length `L = seqlen`, carrying the
+    /// temporal state between blocks — the `F−1` preceding projection rows
+    /// for each short conv and the `L−1` preceding inputs for each long
+    /// conv (the filters' support is `L`, so positions further back are a
+    /// sliding window the model never reads). Every activation is sized by
+    /// the chunk, so a 64K+ prompt never allocates an O(L_prompt) buffer;
+    /// the per-call working set is recorded in `prefill_chunk_bytes`.
+    ///
+    /// The overlap-save plan runs at the full bucket's FFT size, so the
+    /// bucket's cached filter spectra and conv workspaces are reused and a
+    /// prompt of exactly `L` tokens (one full chunk, empty carries) is
+    /// **bitwise identical** to the monolithic full-bucket path; multi-chunk
+    /// prompts agree with the monolithic extended reference
+    /// ([`NativeModel::forward_infer_ext_reference`]) to f32 round-off
+    /// (≤ 1e-4 rel at the conv, pinned by tests). Positions beyond `L`
+    /// share the last learned position-embedding row.
+    ///
+    /// `want_all` ⇒ `out` gets all `(lq, V)` logits; otherwise only the
+    /// final position's `(V,)` row (the decode-prefill shape, keeping the
+    /// output O(V) instead of O(lq·V)). `capture` receives the streaming
+    /// decode state exactly as the bucketed prefill would produce it.
+    /// Returns the chunk length (= the full bucket length).
+    fn forward_infer_chunked_impl(
+        &self,
+        tokens: &[i32],
+        lq: usize,
+        out: &mut Vec<f32>,
+        want_all: bool,
+        mut capture: Option<&mut DecodeState>,
+    ) -> Result<usize> {
+        let cfg = &self.cfg;
+        let (d, vsz, lfull) = (cfg.width, cfg.vocab, cfg.seqlen);
+        let (n, f) = (cfg.order, cfg.short_filter);
+        let c = (n + 1) * d;
+        let f1 = f.saturating_sub(1);
+        let dm = cfg.mlp_dim();
+        if lq == 0 || lq > self.max_context {
+            bail!("chunked infer length {lq} out of range 1..={}", self.max_context);
+        }
+        if tokens.len() != lq {
+            bail!("tokens length {} != length {lq} (chunked prefill is single-row)", tokens.len());
+        }
+        let chunk = lfull;
+        let wlen = lfull - 1;
+        let nchunks = lq.div_ceil(chunk);
+        let bucket_ix = self.bank.levels() - 1;
+        let plan = self.bank.full();
+        let nfft = plan.fft_size();
+        let pool = &self.pool;
+
+        let mut guard = self.serve.lock().unwrap();
+        let st = &mut *guard;
+        st.sync(self.epoch, self.bank.levels());
+
+        // The overlap-save plan shares the full bucket's FFT size (chunk ==
+        // filter == L ⇒ chunk + L − 1 ≤ next_pow2(2L)).
+        if st.chunked.as_ref().map(|p| p.fft_size()) != Some(nfft) {
+            st.chunked = Some(ChunkedCausalConv::with_fft_size(chunk, lfull, nfft));
+        }
+        // Materialize the full bucket's filter spectra once per params epoch
+        // (identical to the monolithic path's cache — same transform size).
+        if st.buckets[bucket_ix].spec.is_empty() {
+            for blk in 0..cfg.depth {
+                let hfilt = self.filter_fwd_len(blk, lfull, &mut st.arena);
+                let spec = self.spectra_rows(
+                    &hfilt,
+                    n * d,
+                    lfull,
+                    plan,
+                    &st.buckets[bucket_ix].ctxs,
+                    &mut st.arena,
+                );
+                st.arena.put(hfilt);
+                st.buckets[bucket_ix].spec.push(spec);
+            }
+        }
+
+        let ServeState { arena, buckets, chunked, chunk_bufs, .. } = &mut *st;
+        let chunked = chunked.as_ref().expect("overlap-save plan built above");
+        let bucket = &buckets[bucket_ix];
+        let ctxs = &bucket.ctxs;
+
+        // Per-call working set, all O(chunk): activations sized by the
+        // chunk plus the per-block carries. `taken` tallies every checkout
+        // so `prefill_chunk_bytes` is a measured gauge, not an estimate.
+        let mut taken = 0usize;
+        let mut take = |arena: &mut Arena, len: usize| {
+            taken += len;
+            arena.take(len)
+        };
+        let mut u = take(arena, chunk * d);
+        let mut t1 = take(arena, chunk * d);
+        let mut xhat = take(arena, chunk * d);
+        let mut rstd = take(arena, chunk);
+        let mut zp = take(arena, chunk * c);
+        let mut zs = take(arena, chunk * c);
+        let mut vcur = take(arena, chunk * d);
+        let mut vnext = take(arena, chunk * d);
+        let mut y_mix = take(arena, chunk * d);
+        let mut mix = take(arena, chunk * d);
+        let mut pre = take(arena, chunk * dm);
+        let mut act = take(arena, chunk * dm);
+        let mut th = take(arena, chunk * dm);
+        let mut z = take(arena, chunk * d);
+        let mut logits = take(arena, chunk * vsz);
+        let has_short = f1 > 0 && self.layout.ix.blocks.iter().all(|b| b.short_w.is_some());
+        let mut short_carry: Vec<Vec<f32>> = (0..cfg.depth)
+            .map(|_| if has_short { take(arena, f1 * c) } else { Vec::new() })
+            .collect();
+        let mut long_carry: Vec<Vec<f32>> =
+            (0..cfg.depth * n).map(|_| take(arena, d * wlen)).collect();
+
+        let embed = self.p(self.layout.ix.embed);
+        let posw = self.p(self.layout.ix.pos);
+        let ix = &self.layout.ix;
+        let kn = kernels::active();
+
+        out.clear();
+        if want_all {
+            out.reserve(lq * vsz);
+        }
+
+        let (mut g0, mut ck) = (0usize, 0usize);
+        while g0 < lq {
+            let cl = chunk.min(lq - g0);
+            let rows = cl;
+
+            // Embedding + learned positions (clamped to the last row beyond
+            // the compiled window — the sliding-window convention shared
+            // with the extended decode step).
+            for t in 0..cl {
+                let tok = (tokens[g0 + t].max(0) as usize).min(vsz - 1);
+                let pt = (g0 + t).min(lfull - 1);
+                let dst = t * d;
+                let emb = &embed[tok * d..(tok + 1) * d];
+                let ps = &posw[pt * d..(pt + 1) * d];
+                for ch in 0..d {
+                    u[dst + ch] = emb[ch] + ps[ch];
+                }
+            }
+
+            for blk in 0..cfg.depth {
+                let bix = &self.layout.ix.blocks[blk];
+                layer_norm_fwd_into(
+                    &u[..rows * d],
+                    self.p(bix.ln1_g),
+                    self.p(bix.ln1_b),
+                    rows,
+                    d,
+                    &mut t1[..rows * d],
+                    &mut xhat[..rows * d],
+                    &mut rstd[..rows],
+                );
+                dense_fwd_into(
+                    pool,
+                    &t1[..rows * d],
+                    self.p(bix.proj_w),
+                    Some(self.p(bix.proj_b)),
+                    rows,
+                    d,
+                    c,
+                    &mut zp[..rows * c],
+                );
+                if let Some(stt) = capture.as_deref_mut() {
+                    if f1 > 0 && bix.short_w.is_some() {
+                        // Ring slots for the last F−1 prompt positions that
+                        // fall inside this chunk (global slot index, the
+                        // layout `decode_step_into` reads).
+                        let ds = &mut stt.blocks[blk];
+                        for p0 in lq.saturating_sub(f1).max(g0)..g0 + cl {
+                            let slot = (p0 % f1) * c;
+                            let t = p0 - g0;
+                            ds.short_tail[slot..slot + c]
+                                .copy_from_slice(&zp[t * c..(t + 1) * c]);
+                        }
+                    }
+                }
+                // Depthwise short conv, taps beyond the chunk head served
+                // from the carried projection rows (same zero-init +
+                // ascending-tap accumulation as `short_conv_fwd_into`, so
+                // the first chunk is bitwise the monolithic conv).
+                match bix.short_w {
+                    Some(sw) => {
+                        let w = self.p(sw);
+                        let zsr = &mut zs[..rows * c];
+                        zsr.fill(0.0);
+                        for t in 0..cl {
+                            let yrow = t * c;
+                            for tap in 0..f.min(g0 + t + 1) {
+                                let row: &[f32] = if tap <= t {
+                                    &zp[(t - tap) * c..(t - tap + 1) * c]
+                                } else {
+                                    let j = f1 - (tap - t);
+                                    &short_carry[blk][j * c..(j + 1) * c]
+                                };
+                                for ch in 0..c {
+                                    zsr[yrow + ch] += w[ch * f + tap] * row[ch];
+                                }
+                            }
+                        }
+                        if g0 + cl < lq && f1 > 0 {
+                            debug_assert!(cl >= f1, "chunk shorter than the short-conv carry");
+                            short_carry[blk].copy_from_slice(&zp[(cl - f1) * c..cl * c]);
+                        }
+                    }
+                    None => zs[..rows * c].copy_from_slice(&zp[..rows * c]),
+                }
+
+                // Value slot → channel-major (D, cl).
+                for t in 0..cl {
+                    let src = t * c;
+                    for ch in 0..d {
+                        vcur[ch * cl + t] = zs[src + ch];
+                    }
+                }
+
+                // The recurrence (Def. 3.1), long convs via overlap-save.
+                let bias = self.p(bix.bias);
+                let spec_h = &bucket.spec[blk];
+                let w_cur = if ck == 0 { 0 } else { wlen };
+                for order in 0..n {
+                    if let Some(stt) = capture.as_deref_mut() {
+                        // Feed the session's sliding channel history: keep
+                        // the last `lfull` conv-input samples seen so far.
+                        let dst = &mut stt.blocks[blk].hist[order];
+                        let fill = g0.min(lfull);
+                        if cl >= lfull {
+                            for ch in 0..d {
+                                dst[ch * lfull..(ch + 1) * lfull].copy_from_slice(
+                                    &vcur[ch * cl + (cl - lfull)..ch * cl + cl],
+                                );
+                            }
+                        } else if fill + cl <= lfull {
+                            for ch in 0..d {
+                                dst[ch * lfull + fill..ch * lfull + fill + cl]
+                                    .copy_from_slice(&vcur[ch * cl..ch * cl + cl]);
+                            }
+                        } else {
+                            let shift = fill + cl - lfull;
+                            for ch in 0..d {
+                                let row = &mut dst[ch * lfull..(ch + 1) * lfull];
+                                row.copy_within(shift..fill, 0);
+                                row[fill - shift..fill - shift + cl]
+                                    .copy_from_slice(&vcur[ch * cl..ch * cl + cl]);
+                            }
+                        }
+                    }
+                    {
+                        let carry_all = &long_carry[blk * n + order];
+                        let zs_ro = &zs[..rows * c];
+                        let vview = SharedMut::new(&mut vnext[..d * cl]);
+                        pool.par_for_with(
+                            d,
+                            || (take_ctx(ctxs, plan), take_chunk_buf(chunk_bufs, nfft)),
+                            |(ctx, buf), ch| {
+                                let vrow = &vcur[ch * cl..ch * cl + cl];
+                                let carry = &carry_all[ch * wlen..ch * wlen + w_cur];
+                                let (hre, him) = spec_h.row(order * d + ch);
+                                let crow = &mut ctx.a[..cl];
+                                chunked.process_chunk_slices_into(
+                                    hre,
+                                    him,
+                                    carry,
+                                    vrow,
+                                    &mut ctx.ws,
+                                    buf,
+                                    crow,
+                                );
+                                let bv = bias[order * d + ch];
+                                (kn.axpy)(crow, vrow, bv);
+                                // SAFETY: channel ch exclusively owns output
+                                // row ch of vnext.
+                                let vnrow = unsafe { vview.slice(ch * cl, cl) };
+                                // Gate x^order lives in slot order+1 of zs.
+                                let gbase = (order + 1) * d + ch;
+                                (kn.gate_mul)(vnrow, crow, &zs_ro[gbase..], c);
+                            },
+                            |(ctx, buf)| {
+                                put_ctx(ctxs, ctx);
+                                put_chunk_buf(chunk_bufs, buf);
+                            },
+                        );
+                    }
+                    // Roll the long-conv carry (last L−1 inputs of this
+                    // order) before vcur becomes the next order's input.
+                    if g0 + cl < lq && wlen > 0 {
+                        debug_assert_eq!(cl, chunk, "only the final chunk may be ragged");
+                        let dst = &mut long_carry[blk * n + order];
+                        for ch in 0..d {
+                            dst[ch * wlen..(ch + 1) * wlen]
+                                .copy_from_slice(&vcur[ch * cl + (cl - wlen)..ch * cl + cl]);
+                        }
+                    }
+                    std::mem::swap(&mut vcur, &mut vnext);
+                }
+
+                // Back to (cl, D) and the output projection + residual.
+                for t in 0..cl {
+                    let dst = t * d;
+                    for ch in 0..d {
+                        y_mix[dst + ch] = vcur[ch * cl + t];
+                    }
+                }
+                dense_fwd_into(
+                    pool,
+                    &y_mix[..rows * d],
+                    self.p(bix.out_w),
+                    Some(self.p(bix.out_b)),
+                    rows,
+                    d,
+                    d,
+                    &mut mix[..rows * d],
+                );
+                for i in 0..rows * d {
+                    u[i] += mix[i];
+                }
+                layer_norm_fwd_into(
+                    &u[..rows * d],
+                    self.p(bix.ln2_g),
+                    self.p(bix.ln2_b),
+                    rows,
+                    d,
+                    &mut t1[..rows * d],
+                    &mut xhat[..rows * d],
+                    &mut rstd[..rows],
+                );
+                dense_fwd_into(
+                    pool,
+                    &t1[..rows * d],
+                    self.p(bix.mlp_w1),
+                    Some(self.p(bix.mlp_b1)),
+                    rows,
+                    d,
+                    dm,
+                    &mut pre[..rows * dm],
+                );
+                gelu_fwd_into(
+                    pool,
+                    &pre[..rows * dm],
+                    &mut act[..rows * dm],
+                    &mut th[..rows * dm],
+                );
+                dense_fwd_into(
+                    pool,
+                    &act[..rows * dm],
+                    self.p(bix.mlp_w2),
+                    Some(self.p(bix.mlp_b2)),
+                    rows,
+                    dm,
+                    d,
+                    &mut z[..rows * d],
+                );
+                for i in 0..rows * d {
+                    u[i] += z[i];
+                }
+            }
+
+            layer_norm_fwd_into(
+                &u[..rows * d],
+                self.p(ix.lnf_g),
+                self.p(ix.lnf_b),
+                rows,
+                d,
+                &mut t1[..rows * d],
+                &mut xhat[..rows * d],
+                &mut rstd[..rows],
+            );
+            dense_fwd_into(
+                pool,
+                &t1[..rows * d],
+                self.p(ix.head),
+                None,
+                rows,
+                d,
+                vsz,
+                &mut logits[..rows * vsz],
+            );
+            if want_all {
+                out.extend_from_slice(&logits[..rows * vsz]);
+            } else if g0 + cl >= lq {
+                out.extend_from_slice(&logits[(cl - 1) * vsz..cl * vsz]);
+            }
+
+            g0 += cl;
+            ck += 1;
+        }
+
+        for v in [u, t1, xhat, rstd, zp, zs, vcur, vnext, y_mix, mix, pre, act, th, z, logits] {
+            arena.put(v);
+        }
+        for v in short_carry {
+            if v.capacity() > 0 {
+                arena.put(v);
+            }
+        }
+        for v in long_carry {
+            arena.put(v);
+        }
+        let buf_elems: usize = chunk_bufs.lock().unwrap().iter().map(|b| b.capacity()).sum();
+
+        st.forwards += 1;
+        st.buckets[bucket_ix].hits += 1;
+        st.prefill_chunked += 1;
+        st.prefill_chunks += nchunks as u64;
+        st.prefill_chunk_elems = st.prefill_chunk_elems.max(taken + buf_elems);
+        Ok(chunk)
+    }
+
+    /// Allocating convenience around the chunked prefill: all `(lq, V)`
+    /// logits of a single row plus the chunk length used (tests/benches).
+    pub fn forward_infer_chunked(&self, tokens: &[i32], lq: usize) -> Result<(Vec<f32>, usize)> {
+        let mut out = Vec::new();
+        let lb = self.forward_infer_chunked_impl(tokens, lq, &mut out, true, None)?;
+        Ok((out, lb))
+    }
+
+    /// Monolithic extended-context forward — the allocating reference the
+    /// chunked engine is validated against (unit/e2e tests and the longctx
+    /// bench gate). One row, `lq ≤ bank.max_len()`, each long conv run as a
+    /// single FFT on the extended plan covering `lq` with the filter
+    /// zero-extended past its support `L` — the same sliding-window
+    /// semantics the chunked path streams, without the chunking. O(lq)
+    /// memory by construction; not a serving path.
+    pub fn forward_infer_ext_reference(&self, tokens: &[i32], lq: usize) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, vsz, lfull) = (cfg.width, cfg.vocab, cfg.seqlen);
+        let (n, f) = (cfg.order, cfg.short_filter);
+        let c = (n + 1) * d;
+        let dm = cfg.mlp_dim();
+        if lq == 0 || lq > self.bank.max_len() {
+            bail!("reference length {lq} out of range 1..={}", self.bank.max_len());
+        }
+        if tokens.len() != lq {
+            bail!("tokens length {} != length {lq}", tokens.len());
+        }
+        let plan = self.bank.ext_plan(lq).expect("lq ≤ max_len has a plan");
+        let lp = plan.len();
+        let pool = &self.pool;
+
+        let embed = self.p(self.layout.ix.embed);
+        let posw = self.p(self.layout.ix.pos);
+        let mut u = vec![0.0f32; lq * d];
+        for t in 0..lq {
+            let tok = (tokens[t].max(0) as usize).min(vsz - 1);
+            let pt = t.min(lfull - 1);
+            for ch in 0..d {
+                u[t * d + ch] = embed[tok * d + ch] + posw[pt * d + ch];
+            }
+        }
+
+        let mut arena = Arena::default();
+        let mut t1 = vec![0.0f32; lq * d];
+        let mut xhat = vec![0.0f32; lq * d];
+        let mut rstd = vec![0.0f32; lq];
+        for blk in 0..cfg.depth {
+            let bix = &self.layout.ix.blocks[blk];
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln1_g),
+                self.p(bix.ln1_b),
+                lq,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            let mut zp = vec![0.0f32; lq * c];
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.proj_w),
+                Some(self.p(bix.proj_b)),
+                lq,
+                d,
+                c,
+                &mut zp,
+            );
+            let mut zs = vec![0.0f32; lq * c];
+            match bix.short_w {
+                Some(sw) => short_conv_fwd_into(pool, self.p(sw), &zp, 1, lq, c, f, &mut zs),
+                None => zs.copy_from_slice(&zp),
+            }
+
+            // Channel-major conv inputs; filters zero-extended to lp.
+            let hfilt = self.filter_fwd_len(blk, lfull, &mut arena);
+            let bias = self.p(bix.bias);
+            let mut vcur = vec![0.0f32; d * lq];
+            for t in 0..lq {
+                for ch in 0..d {
+                    vcur[ch * lq + t] = zs[t * c + ch];
+                }
+            }
+            let mut h_pad = vec![0.0f32; lp];
+            let mut v_pad = vec![0.0f32; lp];
+            for order in 0..n {
+                let mut vnext = vec![0.0f32; d * lq];
+                for ch in 0..d {
+                    h_pad.fill(0.0);
+                    h_pad[..lfull].copy_from_slice(
+                        &hfilt[(order * d + ch) * lfull..(order * d + ch + 1) * lfull],
+                    );
+                    v_pad.fill(0.0);
+                    v_pad[..lq].copy_from_slice(&vcur[ch * lq..(ch + 1) * lq]);
+                    let y = plan.conv(&h_pad, &v_pad);
+                    let bv = bias[order * d + ch];
+                    for t in 0..lq {
+                        let yt = y[t] + bv * vcur[ch * lq + t];
+                        vnext[ch * lq + t] = zs[t * c + (order + 1) * d + ch] * yt;
+                    }
+                }
+                vcur = vnext;
+            }
+            arena.put(hfilt);
+
+            let mut y_mix = vec![0.0f32; lq * d];
+            for t in 0..lq {
+                for ch in 0..d {
+                    y_mix[t * d + ch] = vcur[ch * lq + t];
+                }
+            }
+            let mut mixo = vec![0.0f32; lq * d];
+            dense_fwd_into(
+                pool,
+                &y_mix,
+                self.p(bix.out_w),
+                Some(self.p(bix.out_b)),
+                lq,
+                d,
+                d,
+                &mut mixo,
+            );
+            for i in 0..lq * d {
+                u[i] += mixo[i];
+            }
+            layer_norm_fwd_into(
+                &u,
+                self.p(bix.ln2_g),
+                self.p(bix.ln2_b),
+                lq,
+                d,
+                &mut t1,
+                &mut xhat,
+                &mut rstd,
+            );
+            let mut pre = vec![0.0f32; lq * dm];
+            dense_fwd_into(
+                pool,
+                &t1,
+                self.p(bix.mlp_w1),
+                Some(self.p(bix.mlp_b1)),
+                lq,
+                d,
+                dm,
+                &mut pre,
+            );
+            let mut act = vec![0.0f32; lq * dm];
+            let mut th = vec![0.0f32; lq * dm];
+            gelu_fwd_into(pool, &pre, &mut act, &mut th);
+            let mut z = vec![0.0f32; lq * d];
+            dense_fwd_into(
+                pool,
+                &act,
+                self.p(bix.mlp_w2),
+                Some(self.p(bix.mlp_b2)),
+                lq,
+                dm,
+                d,
+                &mut z,
+            );
+            for i in 0..lq * d {
+                u[i] += z[i];
+            }
+        }
+        let ix = &self.layout.ix;
+        layer_norm_fwd_into(
+            &u,
+            self.p(ix.lnf_g),
+            self.p(ix.lnf_b),
+            lq,
+            d,
+            &mut t1,
+            &mut xhat,
+            &mut rstd,
+        );
+        let mut logits = vec![0.0f32; lq * vsz];
+        dense_fwd_into(pool, &t1, self.p(ix.head), None, lq, d, vsz, &mut logits);
+        Ok(logits)
+    }
+
     // -- streaming decode (per-request recurrence state) ---------------------
 
     /// Materialize the reversed time-domain filters of every block (the
@@ -2542,28 +3210,56 @@ impl NativeModel {
         }
     }
 
-    /// Begin a streaming decode session: prefill `prompt` through the
-    /// bucketed FFT path (capturing the per-block recurrence state as a
-    /// side effect), write the last position's `(V,)` logits into `logits`,
-    /// and return the live state. Every state buffer is drawn from the
-    /// serving arena; [`NativeModel::decode_end_state`] returns them, so
+    /// Begin a streaming decode session: prefill `prompt` (capturing the
+    /// per-block recurrence state as a side effect), write the last
+    /// position's `(V,)` logits into `logits`, and return the live state.
+    /// Prompts that fit the compiled window run the bucketed FFT path;
+    /// longer ones (up to `max_context − 1`) stream through the chunked
+    /// overlap-save prefill. Every state buffer is drawn from the serving
+    /// arena; [`NativeModel::decode_end_state`] returns them, so
     /// steady-state session churn allocates nothing.
     pub fn decode_begin_state(
         &self,
         prompt: &[i32],
         logits: &mut Vec<f32>,
     ) -> Result<DecodeState> {
+        self.decode_begin_impl(prompt, logits, false)
+    }
+
+    /// [`NativeModel::decode_begin_state`] forced through the chunked
+    /// overlap-save prefill even when the prompt fits the compiled window —
+    /// the equivalence-test entry: greedy streams seeded by the chunked and
+    /// bucketed prefills must be token-identical.
+    pub fn decode_begin_state_chunked(
+        &self,
+        prompt: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Result<DecodeState> {
+        self.decode_begin_impl(prompt, logits, true)
+    }
+
+    fn decode_begin_impl(
+        &self,
+        prompt: &[i32],
+        logits: &mut Vec<f32>,
+        force_chunked: bool,
+    ) -> Result<DecodeState> {
         let cfg = &self.cfg;
         let (l, d, n, f, vsz) = (cfg.seqlen, cfg.width, cfg.order, cfg.short_filter, cfg.vocab);
-        if prompt.is_empty() || prompt.len() >= l {
-            bail!("prompt length {} out of range (1..{l})", prompt.len());
+        let mc = self.max_context;
+        if prompt.is_empty() || prompt.len() >= mc {
+            bail!("prompt length {} out of range (1..{mc})", prompt.len());
         }
         let p = prompt.len();
         let c = (n + 1) * d;
         let f1 = f.saturating_sub(1);
+        let use_chunked = force_chunked || p >= l;
 
-        // Check the state's buffers (and a full-logits scratch) out of the
-        // serving arena.
+        // Check the state's buffers (and, for the bucketed path, a
+        // full-logits scratch) out of the serving arena. The history rows
+        // stay (D, L) regardless of prompt length: beyond the window they
+        // hold the last L conv inputs (the filters' support), the sliding
+        // window the extended decode step maintains.
         let (mut state, mut scratch) = {
             let mut guard = self.serve.lock().unwrap();
             let st = &mut *guard;
@@ -2578,17 +3274,28 @@ impl NativeModel {
             st.sessions_live += 1;
             st.sessions_total += 1;
             st.decode_state_elems += state.elems();
-            (state, st.arena.take(p * vsz))
+            let scratch = if use_chunked { Vec::new() } else { st.arena.take(p * vsz) };
+            (state, scratch)
         };
 
-        let res = self.forward_infer_impl(prompt, 1, p, &mut scratch, Some(&mut state));
-        if res.is_ok() {
-            logits.clear();
-            logits.extend_from_slice(&scratch[(p - 1) * vsz..p * vsz]);
-        }
-        self.serve.lock().unwrap().arena.put(scratch);
+        let res = if use_chunked {
+            // The chunked engine writes the final row's logits directly
+            // (want_all = false): the output stays O(V), not O(p·V).
+            self.forward_infer_chunked_impl(prompt, p, logits, false, Some(&mut state))
+                .map(|_| ())
+        } else {
+            let r = self
+                .forward_infer_impl(prompt, 1, p, &mut scratch, Some(&mut state))
+                .map(|_| ());
+            if r.is_ok() {
+                logits.clear();
+                logits.extend_from_slice(&scratch[(p - 1) * vsz..p * vsz]);
+            }
+            self.serve.lock().unwrap().arena.put(scratch);
+            r
+        };
         match res {
-            Ok(_) => {
+            Ok(()) => {
                 state.pos = p;
                 Ok(state)
             }
@@ -2605,7 +3312,12 @@ impl NativeModel {
     /// position, and all step scratch round-trips through the serving
     /// arena. Writes the `(V,)` logits row for the new position.
     ///
-    /// Fails at the window edge or when the state predates a parameter
+    /// Beyond the compiled window (`t ≥ seqlen`, reachable once
+    /// `max_context > seqlen`) the step keeps decoding against the sliding
+    /// window: the filters' support is `seqlen`, so the history rows shift
+    /// left by one and the position embedding clamps to its last row.
+    ///
+    /// Fails at the context edge or when the state predates a parameter
     /// update (the session layer then re-prefills from its tokens).
     ///
     /// KEEP IN SYNC with [`NativeModel::decode_step_batch_into`]: the two
@@ -2624,8 +3336,8 @@ impl NativeModel {
         let c = (n + 1) * d;
         let dm = cfg.mlp_dim();
         let t = state.pos;
-        if t >= lfull {
-            bail!("decode session is at the window edge (length {lfull})");
+        if t >= self.max_context {
+            bail!("decode session is at the context edge (length {})", self.max_context);
         }
         if state.epoch != self.epoch {
             bail!("decode state predates a parameter update (re-prefill the session)");
@@ -2642,9 +3354,10 @@ impl NativeModel {
         let embed = self.p(self.layout.ix.embed);
         let posw = self.p(self.layout.ix.pos);
         let tok = (token.max(0) as usize).min(vsz - 1);
+        let pt = t.min(lfull - 1);
         let mut u = arena.take(d);
         for ch in 0..d {
-            u[ch] = embed[tok * d + ch] + posw[t * d + ch];
+            u[ch] = embed[tok * d + ch] + posw[pt * d + ch];
         }
 
         let mut t1 = arena.take(d);
@@ -2711,12 +3424,23 @@ impl NativeModel {
             let bias = self.p(bix.bias);
             let hrev_all = &decode_filt[blk];
             va.copy_from_slice(&zs[..d]);
+            let hl = (t + 1).min(lfull);
             for order in 0..n {
                 {
-                    // Append v_order[t] to the history, then dot.
+                    // Append v_order[t] to the history, then dot. Beyond
+                    // the window the row slides left by one: the filters'
+                    // support is lfull, so older samples are never read.
                     let histo = &mut ds.hist[order];
-                    for ch in 0..d {
-                        histo[ch * lfull + t] = va[ch];
+                    if t < lfull {
+                        for ch in 0..d {
+                            histo[ch * lfull + t] = va[ch];
+                        }
+                    } else {
+                        for ch in 0..d {
+                            let row = &mut histo[ch * lfull..(ch + 1) * lfull];
+                            row.copy_within(1.., 0);
+                            row[lfull - 1] = va[ch];
+                        }
                     }
                 }
                 {
@@ -2730,7 +3454,7 @@ impl NativeModel {
                         for (j, ch) in (c0..c1).enumerate() {
                             let row = (order * d + ch) * lfull;
                             let hrev = &hrev_all[row..row + lfull];
-                            let hist = &histo[ch * lfull..ch * lfull + t + 1];
+                            let hist = &histo[ch * lfull..ch * lfull + hl];
                             let y = crate::backend::fft::causal_dot_step(hrev, hist)
                                 + bias[order * d + ch] * va[ch];
                             // Gate x^order lives in slot order+1 of zs.
@@ -2860,8 +3584,8 @@ impl NativeModel {
         // whole or fails whole (the backend layer pre-filters, so a failure
         // here is a caller bug, not a serving condition).
         for (r, st) in states.iter().enumerate() {
-            if st.pos >= lfull {
-                bail!("session {r} is at the window edge (length {lfull})");
+            if st.pos >= self.max_context {
+                bail!("session {r} is at the context edge (length {})", self.max_context);
             }
             if st.epoch != self.epoch {
                 bail!("session {r} predates a parameter update (re-prefill it)");
@@ -2882,9 +3606,9 @@ impl NativeModel {
         let mut u = arena.take(rows * d);
         for r in 0..rows {
             let tok = (tokens[r].max(0) as usize).min(vsz - 1);
-            let t = pos0[r];
+            let pt = pos0[r].min(lfull - 1);
             for ch in 0..d {
-                u[r * d + ch] = embed[tok * d + ch] + posw[t * d + ch];
+                u[r * d + ch] = embed[tok * d + ch] + posw[pt * d + ch];
             }
         }
 
@@ -2964,8 +3688,18 @@ impl NativeModel {
                 for r in 0..rows {
                     let t = pos0[r];
                     let hist = &mut states[r].blocks[blk].hist[order];
-                    for ch in 0..d {
-                        hist[ch * lfull + t] = va[r * d + ch];
+                    if t < lfull {
+                        for ch in 0..d {
+                            hist[ch * lfull + t] = va[r * d + ch];
+                        }
+                    } else {
+                        // Sliding window beyond the compiled length (see
+                        // decode_step_into).
+                        for ch in 0..d {
+                            let row = &mut hist[ch * lfull..(ch + 1) * lfull];
+                            row.copy_within(1.., 0);
+                            row[lfull - 1] = va[r * d + ch];
+                        }
                     }
                 }
                 {
@@ -2980,10 +3714,11 @@ impl NativeModel {
                         let c1 = (c0 + DECODE_CH_BLOCK).min(d);
                         // SAFETY: (row, channel-block) tasks partition `vb`.
                         let outb = unsafe { vview.slice(r * d + c0, c1 - c0) };
+                        let hl = (t + 1).min(lfull);
                         for (j, ch) in (c0..c1).enumerate() {
                             let rowix = (order * d + ch) * lfull;
                             let hrev = &hrev_all[rowix..rowix + lfull];
-                            let hist = &histo[ch * lfull..ch * lfull + t + 1];
+                            let hist = &histo[ch * lfull..ch * lfull + hl];
                             let y = crate::backend::fft::causal_dot_step(hrev, hist)
                                 + bias[order * d + ch] * va[r * d + ch];
                             // Gate x^order lives in slot order+1 of zs.
@@ -3114,6 +3849,11 @@ impl NativeModel {
             decode_step_batches: st.step_batch_calls,
             decode_step_batch_rows: st.step_batch_rows,
             decode_state_bytes: st.decode_state_elems * std::mem::size_of::<f32>(),
+            max_context: self.max_context,
+            ext_bucket_lens: self.bank.ext_lens(),
+            prefill_chunked: st.prefill_chunked,
+            prefill_chunks: st.prefill_chunks,
+            prefill_chunk_bytes: st.prefill_chunk_elems * std::mem::size_of::<f32>(),
         }
     }
 
@@ -3844,5 +4584,150 @@ mod tests {
         let early: f32 = (0..n * d).map(|ch| h[ch * l].abs()).sum();
         let late: f32 = (0..n * d).map(|ch| h[ch * l + l - 1].abs()).sum();
         assert!(early > late, "window not decaying: {early} vs {late}");
+    }
+
+    // -- chunked overlap-save prefill / extended context ---------------------
+
+    fn assert_rel_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}: elem {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn longctx_chunked_prefill_is_bitwise_monolithic_at_full_bucket() {
+        // One full chunk with empty carries runs the exact monolithic op
+        // sequence at the same FFT size: the ISSUE's bitwise gate.
+        let m = tiny(); // L = 16
+        let l = m.cfg.seqlen;
+        let tokens: Vec<i32> = (0..l as i32).map(|i| (i * 5 + 1) % m.cfg.vocab as i32).collect();
+        let (want, _) = m.forward_infer(&tokens, 1, l).unwrap();
+        let (got, chunk) = m.forward_infer_chunked(&tokens, l).unwrap();
+        assert_eq!(chunk, l);
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "elem {i}: chunked {g} != monolithic {w}");
+        }
+        let s = m.serve_stats();
+        assert_eq!(s.prefill_chunked, 1);
+        assert_eq!(s.prefill_chunks, 1);
+    }
+
+    #[test]
+    fn longctx_multi_chunk_prefill_matches_ext_reference() {
+        // Prompts past the compiled window stream in L-sized chunks with
+        // carried state; the monolithic extended plan (one big FFT, filters
+        // zero-extended past their support) is the oracle.
+        let mut m = tiny(); // L = 16
+        m.set_max_context(64).unwrap();
+        assert_eq!(m.max_context(), 64);
+        for lq in [17usize, 32, 40, 61] {
+            let tokens: Vec<i32> =
+                (0..lq as i32).map(|i| (i * 7 + 3) % m.cfg.vocab as i32).collect();
+            let (got, _) = m.forward_infer_chunked(&tokens, lq).unwrap();
+            let want = m.forward_infer_ext_reference(&tokens, lq).unwrap();
+            assert_rel_close(&got, &want, 1e-3, &format!("chunked vs ext reference at {lq}"));
+        }
+        let s = m.serve_stats();
+        assert_eq!(s.ext_bucket_lens, vec![32, 64]);
+        assert_eq!(s.prefill_chunks, 2 + 2 + 3 + 4);
+        // forward_infer_into routes long single-row requests automatically.
+        let tokens: Vec<i32> = (0..20).collect();
+        let mut out = Vec::new();
+        m.forward_infer_into(&tokens, 1, 20, &mut out).unwrap();
+        assert_eq!(out.len(), 20 * m.cfg.vocab);
+    }
+
+    #[test]
+    fn longctx_decode_beyond_window_matches_ext_reference() {
+        // A 40-token prompt (2.5 chunks) prefills a decode session; each
+        // subsequent step runs the sliding-window recurrence past the
+        // compiled length. The growing-prefix ext reference pins every
+        // logits row.
+        let mut m = tiny(); // L = 16
+        m.set_max_context(64).unwrap();
+        let v = m.cfg.vocab;
+        let prompt: Vec<i32> = (0..40i32).map(|i| (i * 3 + 2) % v as i32).collect();
+        let mut lg = Vec::new();
+        let mut st = m.decode_begin_state(&prompt, &mut lg).unwrap();
+        assert_eq!(st.pos(), 40);
+        let mut seq = prompt.clone();
+        for step in 0..6 {
+            let want = m.forward_infer_ext_reference(&seq, seq.len()).unwrap();
+            let last = &want[(seq.len() - 1) * v..seq.len() * v];
+            assert_rel_close(&lg, last, 1e-3, &format!("decode step {step}"));
+            let tok = amax(&lg);
+            assert_eq!(tok, amax(last), "greedy token diverged at step {step}");
+            m.decode_step_into(&mut st, tok, &mut lg).unwrap();
+            seq.push(tok);
+        }
+        m.decode_end_state(st);
+    }
+
+    #[test]
+    fn longctx_forced_chunked_begin_matches_bucketed_begin() {
+        // Below the window the two prefills transform the same math at the
+        // same full-bucket FFT size (the bucketed path pads rows, the
+        // chunked path doesn't), so logits agree to round-off and greedy
+        // continuations are token-identical.
+        let m = tiny();
+        let prompt = vec![3i32, 5, 7, 2, 9, 4, 1, 8, 6, 2, 4, 10];
+        let (mut lg_a, mut lg_b) = (Vec::new(), Vec::new());
+        let mut sa = m.decode_begin_state(&prompt, &mut lg_a).unwrap();
+        let mut sb = m.decode_begin_state_chunked(&prompt, &mut lg_b).unwrap();
+        assert_rel_close(&lg_a, &lg_b, 1e-3, "prefill logits");
+        for step in 0..6 {
+            let (ta, tb) = (amax(&lg_a), amax(&lg_b));
+            assert_eq!(ta, tb, "greedy streams diverged at step {step}");
+            m.decode_step_into(&mut sa, ta, &mut lg_a).unwrap();
+            m.decode_step_into(&mut sb, tb, &mut lg_b).unwrap();
+            assert_rel_close(&lg_a, &lg_b, 1e-3, &format!("step {step} logits"));
+        }
+        m.decode_end_state(sa);
+        m.decode_end_state(sb);
+    }
+
+    #[test]
+    fn longctx_prefill_activation_bytes_are_o_chunk() {
+        // The ISSUE's memory gate at model scale: the chunked working set
+        // is sized by the chunk, so a prompt 8× longer must not move the
+        // per-prefill high-water gauge.
+        let mut m = tiny(); // L = 16
+        m.set_max_context(2048).unwrap();
+        let v = m.cfg.vocab as i32;
+        let short: Vec<i32> = (0..100i32).map(|i| i % v).collect();
+        let mut out = Vec::new();
+        m.forward_infer_chunked_impl(&short, short.len(), &mut out, false, None).unwrap();
+        let gauge = m.serve_stats().prefill_chunk_bytes;
+        assert!(gauge > 0);
+        let long: Vec<i32> = (0..800i32).map(|i| i % v).collect();
+        m.forward_infer_chunked_impl(&long, long.len(), &mut out, false, None).unwrap();
+        let s = m.serve_stats();
+        assert_eq!(
+            s.prefill_chunk_bytes, gauge,
+            "chunked prefill working set grew with prompt length"
+        );
+        assert_eq!(s.prefill_chunked, 2);
+        assert_eq!(s.prefill_chunks, 7 + 50);
+    }
+
+    #[test]
+    fn longctx_set_max_context_validates_and_rebuilds_ladder() {
+        let mut m = tiny(); // L = 16
+        assert_eq!(m.max_context(), 16);
+        assert!(m.set_max_context(8).is_err(), "shrinking below seqlen must fail");
+        m.set_max_context(100).unwrap();
+        assert_eq!(m.serve_stats().ext_bucket_lens, vec![32, 64, 128]);
+        // The bucketed serving ladder is unchanged.
+        assert_eq!(m.serve_stats().bucket_lens, vec![8, 16]);
+        // Prompts past max_context are still rejected.
+        let tokens = vec![1i32; 101];
+        assert!(m.forward_infer_chunked(&tokens, 101).is_err());
+        let mut lg = Vec::new();
+        assert!(m.decode_begin_state(&vec![1i32; 100], &mut lg).is_err());
     }
 }

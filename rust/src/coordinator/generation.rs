@@ -83,14 +83,18 @@ pub fn argmax(row: &[f32]) -> i32 {
         .unwrap_or(0)
 }
 
-/// Validate a decode request against the model window; returns `(L, V)`.
+/// Validate a decode request against a context window of `l` tokens;
+/// returns `V`. Streaming decode passes [`Backend::decode_window`] (which
+/// the native engine extends past the compiled shape via `--max-context`);
+/// the recompute path passes the compiled `seqlen`, since it replays whole
+/// prefixes through the bucketed [`Backend::infer`].
 fn check_decode_shapes(
     model: &dyn Backend,
     prompts: &[Vec<i32>],
     max_new: &[usize],
-) -> Result<(usize, usize)> {
+    l: usize,
+) -> Result<usize> {
     let b = model.manifest().batch()?;
-    let l = model.manifest().seqlen()?;
     let v = model.manifest().vocab()?;
     if prompts.len() > b {
         bail!("{} prompts > compiled batch {}", prompts.len(), b);
@@ -103,7 +107,7 @@ fn check_decode_shapes(
             bail!("prompt length {} out of range (1..{})", s.len(), l);
         }
     }
-    Ok((l, v))
+    Ok(v)
 }
 
 /// Decode a *batch* of prompts as resident streaming sessions.
@@ -114,6 +118,12 @@ fn check_decode_shapes(
 /// call per token round, stepping every row at once — where a row retires
 /// after its own `max_new` tokens or at the model's window edge, and
 /// retired rows stop costing anything (session-level row compaction).
+/// Rounds are admission-shaped: the engine call sees live rows sorted by
+/// history length, while sampling consumes the rng in original row order,
+/// so every token stream is invariant under the shaping permutation.
+/// The window is [`Backend::decode_window`], which the native engine can
+/// extend past the compiled shape (`--max-context`); prompts beyond the
+/// largest plan bucket prefill through the chunked overlap-save path.
 /// The native engine serves each step at O(L) from its per-session
 /// recurrence state; engines without a streaming path inherit the trait
 /// default, which recomputes the prefix through [`Backend::infer`] —
@@ -126,7 +136,8 @@ pub fn decode_batch(
     sampling: Sampling,
     rng: &mut Pcg,
 ) -> Result<Vec<Vec<i32>>> {
-    let (l, vocab) = check_decode_shapes(model, prompts, max_new)?;
+    let l = model.decode_window();
+    let vocab = check_decode_shapes(model, prompts, max_new, l)?;
     let rows = prompts.len();
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];
     let mut sessions: Vec<Option<DecodeSession>> = Vec::with_capacity(rows);
@@ -169,25 +180,42 @@ pub fn decode_batch(
                 model.decode_end(sessions[r].take().expect("session checked live"));
             }
         }
-        // Gather the still-live rows.
-        let mut ix: Vec<usize> = Vec::new();
-        let mut toks: Vec<i32> = Vec::new();
+        // Gather the still-live rows, then shape the round: the engine
+        // sees the rows sorted by history length (shortest first), so
+        // same-length sessions sit adjacent in the batched pass and the
+        // per-row O(t) dot work ramps monotonically across the round.
+        // The sort key is (length, row), a strict total order — round
+        // composition is deterministic regardless of arrival order.
+        let mut live: Vec<(usize, &mut DecodeSession)> = Vec::new();
+        for (r, slot) in sessions.iter_mut().enumerate() {
+            if let Some(sess) = slot.as_mut() {
+                live.push((r, sess));
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+        live.sort_by_key(|(r, sess)| (sess.len(), *r));
+        let ix: Vec<usize> = live.iter().map(|(r, _)| *r).collect();
+        let toks: Vec<i32> = ix
+            .iter()
+            .map(|&r| *out[r].last().expect("live row has a sampled token"))
+            .collect();
         let results = {
-            let mut refs: Vec<&mut DecodeSession> = Vec::new();
-            for (r, slot) in sessions.iter_mut().enumerate() {
-                if let Some(sess) = slot.as_mut() {
-                    ix.push(r);
-                    toks.push(*out[r].last().expect("live row has a sampled token"));
-                    refs.push(sess);
-                }
-            }
-            if refs.is_empty() {
-                break;
-            }
+            let mut refs: Vec<&mut DecodeSession> =
+                live.into_iter().map(|(_, sess)| sess).collect();
             model.decode_step_batch(&mut refs, &toks, &mut packed)
         };
-        for (j, res) in results.into_iter().enumerate() {
-            match res {
+        // Sample in ascending *original* row order, not engine-row order:
+        // the rng stream — and therefore every token stream — must be
+        // identical whatever permutation the round shaping picked
+        // (`sorted_rounds_keep_token_streams_identical` pins this).
+        let mut order: Vec<usize> = (0..ix.len()).collect();
+        order.sort_unstable_by_key(|&j| ix[j]);
+        let mut results: Vec<Option<Result<()>>> =
+            results.into_iter().map(Some).collect();
+        for &j in &order {
+            match results[j].take().expect("each engine row visited once") {
                 Ok(()) => {
                     let row = &packed[j * vocab..(j + 1) * vocab];
                     out[ix[j]].push(sample_token(row, sampling, rng));
@@ -224,7 +252,8 @@ pub fn decode_batch_recompute(
     sampling: Sampling,
     rng: &mut Pcg,
 ) -> Result<Vec<Vec<i32>>> {
-    let (l, v) = check_decode_shapes(model, prompts, max_new)?;
+    let l = model.manifest().seqlen()?;
+    let v = check_decode_shapes(model, prompts, max_new, l)?;
     let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
     let rows = seqs.len();
     let mut out: Vec<Vec<i32>> = vec![Vec::new(); rows];

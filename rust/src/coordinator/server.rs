@@ -138,12 +138,15 @@ impl Server {
         params: Option<Vec<Tensor>>,
     ) -> Result<Server> {
         let kind = BackendKind::detect(&artifact_dir)?;
-        Self::start_kind(kind, artifact_dir, seed, max_wait, params, None)
+        Self::start_kind(kind, artifact_dir, seed, max_wait, params, None, None)
     }
 
     /// Start with an explicitly chosen engine (the CLI's `--backend`) and,
     /// optionally, an explicit serving bucket-ladder depth (the CLI's
-    /// `--buckets`; `None` keeps the engine default).
+    /// `--buckets`; `None` keeps the engine default) and an extended
+    /// context window (the CLI's `--max-context`; `None` keeps the
+    /// compiled window — engines without chunked prefill reject other
+    /// values at startup).
     pub fn start_kind(
         kind: BackendKind,
         artifact_dir: PathBuf,
@@ -151,6 +154,7 @@ impl Server {
         max_wait: Duration,
         params: Option<Vec<Tensor>>,
         buckets: Option<usize>,
+        max_context: Option<usize>,
     ) -> Result<Server> {
         let (tx, rx) = channel::<Msg>();
         let (sd_tx, sd_rx) = channel::<()>();
@@ -164,6 +168,9 @@ impl Server {
                     }
                     if let Some(levels) = buckets {
                         m.set_serve_buckets(levels)?;
+                    }
+                    if let Some(n) = max_context {
+                        m.set_max_context(n)?;
                     }
                     Ok(m)
                 }) {
@@ -233,9 +240,12 @@ fn worker_loop(
 ) {
     let mut batcher: Batcher<Envelope> = Batcher::new(capacity, max_wait);
     let mut rng = Pcg::with_stream(seed, 0x5e44);
-    // The plan ladder and window are fixed for the worker's lifetime.
+    // The plan ladder and window are fixed for the worker's lifetime. The
+    // window is the engine's decode window, which `--max-context` can
+    // extend past the compiled shape (prompts beyond the largest plan
+    // bucket prefill through the chunked overlap-save path).
     let buckets = model.serve_buckets();
-    let l_full = model.manifest().seqlen().unwrap_or(usize::MAX);
+    let l_full = model.decode_window();
     let mut live: Vec<LiveSession> = Vec::new();
     let mut logits: Vec<f32> = Vec::new();
     let handle = |msg: Msg, batcher: &mut Batcher<Envelope>| match msg {
@@ -369,9 +379,11 @@ fn retire(model: &dyn Backend, s: LiveSession, err: Option<anyhow::Error>) {
 /// recovering dense-kernel row blocking at high occupancy (DESIGN.md
 /// §Kernels); engines without the override loop the serial step, which is
 /// behaviour-identical. Finished sessions retire first and reply; failed
-/// rows reply their error individually. Sampling runs per row in row
-/// order, so the rng stream — and therefore every token stream — is
-/// identical to the old serial round.
+/// rows reply their error individually. The round is admission-shaped:
+/// the engine sees the rows sorted by history length (ties by admission
+/// order), so same-length sessions sit adjacent in the dense pass, but
+/// sampling runs per row in *admission* order — the rng stream, and
+/// therefore every token stream, is identical to the unshaped round.
 fn step_round(
     model: &dyn Backend,
     live: &mut Vec<LiveSession>,
@@ -400,23 +412,41 @@ fn step_round(
     if live.is_empty() {
         return;
     }
-    // One batched step over everyone still live.
-    let tokens: Vec<i32> =
-        live.iter().map(|s| *s.out.last().expect("live session has a sampled token")).collect();
+    // One batched step over everyone still live, shaped by history
+    // length: (length, admission index) is a strict total order, so the
+    // round composition is deterministic.
+    let rows = live.len();
+    let perm: Vec<usize>;
     let results = {
+        let mut by_len: Vec<(usize, &mut LiveSession)> =
+            live.iter_mut().enumerate().collect();
+        by_len.sort_by_key(|(r, s)| (s.sess.len(), *r));
+        perm = by_len.iter().map(|(r, _)| *r).collect();
+        let tokens: Vec<i32> = by_len
+            .iter()
+            .map(|(_, s)| *s.out.last().expect("live session has a sampled token"))
+            .collect();
         let mut sessions: Vec<&mut DecodeSession> =
-            live.iter_mut().map(|s| &mut s.sess).collect();
+            by_len.into_iter().map(|(_, s)| &mut s.sess).collect();
         model.decode_step_batch(&mut sessions, &tokens, logits)
     };
-    let rows = live.len();
     debug_assert_eq!(results.len(), rows);
     let v = logits.len() / rows;
-    // Sample (or fail) per row in row order; collect failures for removal.
+    // Engine row holding admission row `r`.
+    let mut inv = vec![0usize; rows];
+    for (j, &r) in perm.iter().enumerate() {
+        inv[r] = j;
+    }
+    // Sample (or fail) per row in admission order; collect failures for
+    // removal.
+    let mut results: Vec<Option<anyhow::Result<()>>> =
+        results.into_iter().map(Some).collect();
     let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
-    for (r, res) in results.into_iter().enumerate() {
-        match res {
+    for r in 0..rows {
+        let j = inv[r];
+        match results[j].take().expect("each engine row resolves one session") {
             Ok(()) => {
-                let row = &logits[r * v..(r + 1) * v];
+                let row = &logits[j * v..(j + 1) * v];
                 let next = sample_token(row, live[r].sampling, rng);
                 live[r].out.push(next);
             }

@@ -60,7 +60,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: hyena <list|info|train|eval|serve|dump-filters> \
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
-                 [--steps N] [--seed S] [--buckets N] [--mixed] \
+                 [--steps N] [--seed S] [--buckets N] [--max-context N] [--mixed] \
                  [--require-buckets] [--stream-decode]"
             );
             Ok(())
@@ -245,6 +245,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.get_usize("requests", 16);
     let seed = args.get_u64("seed", 0);
     let buckets = args.get("buckets").and_then(|v| v.parse::<usize>().ok());
+    let max_context = args.get("max-context").and_then(|v| v.parse::<usize>().ok());
     let mixed = args.flag("mixed");
     let dir = hyena::artifact(&name);
     let kind = backend_kind(args, &dir)?;
@@ -260,9 +261,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (probe.manifest().seqlen()?, probe.manifest().vocab()?)
         }
     };
-    let server =
-        Server::start_kind(kind, dir, seed as i32, Duration::from_millis(20), None, buckets)?;
+    let server = Server::start_kind(
+        kind,
+        dir,
+        seed as i32,
+        Duration::from_millis(20),
+        None,
+        buckets,
+        max_context,
+    )?;
     println!("server up (backend: {}); firing {n_req} requests", kind.name());
+    // The serving window: the compiled shape unless --max-context extended
+    // it (prompts past the largest bucket prefill via overlap-save chunks).
+    let l = max_context.unwrap_or(l).max(l);
     let mut rng = Pcg::new(seed);
     let sampling = if args.flag("greedy") {
         Sampling::Greedy
@@ -343,6 +354,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             mem.serve_arena_allocs,
             mem.serve_spec_bytes / 1024
         );
+        if !mem.ext_bucket_lens.is_empty() || mem.prefill_chunked > 0 {
+            println!(
+                "  long-context: window {}, ext buckets {:?}, {} chunked prefills \
+                 ({} chunks), chunk workspace {} KiB",
+                mem.max_context,
+                mem.ext_bucket_lens,
+                mem.prefill_chunked,
+                mem.prefill_chunks,
+                mem.prefill_chunk_bytes / 1024
+            );
+        }
         if args.flag("require-buckets") {
             // The smoke gate: every request's *prefill* must have been
             // routed to the smallest bucket covering its prompt — a short

@@ -9,7 +9,9 @@ use std::time::Duration;
 
 use hyena::backend::native::{NativeConfig, NativeModel};
 use hyena::backend::{self, Backend, BackendKind};
-use hyena::coordinator::generation::{decode_batch, decode_batch_recompute, Sampling};
+use hyena::coordinator::generation::{
+    argmax, decode_batch, decode_batch_recompute, sample_token, Sampling,
+};
 use hyena::coordinator::server::{GenerateRequest, Server};
 use hyena::coordinator::trainer::{eval_accuracy, Trainer};
 use hyena::runtime::checkpoint::Checkpoint;
@@ -201,6 +203,7 @@ fn server_round_trip_native() {
         Duration::from_millis(5),
         None,
         None,
+        None,
     )
     .unwrap();
     let handles: Vec<_> = (0..4)
@@ -240,6 +243,7 @@ fn server_batched_rounds_match_single_session_greedy_streams() {
         PathBuf::from("artifacts/golden_tiny"),
         0,
         Duration::from_millis(5),
+        None,
         None,
         None,
     )
@@ -285,6 +289,7 @@ fn server_routes_mixed_lengths_to_their_buckets() {
         PathBuf::from("artifacts/golden_tiny"),
         0,
         Duration::from_millis(5),
+        None,
         None,
         None,
     )
@@ -392,6 +397,186 @@ fn checkpoint_round_trips_through_the_backend_trait() {
     let probe2 = decode_batch(dst.as_ref(), &[vec![1, 2, 3]], &[4], Sampling::Greedy, &mut rng2)
         .unwrap();
     assert_eq!(probe, probe2);
+}
+
+#[test]
+fn longctx_chunked_prefill_is_bitwise_with_bucketed_infer_at_full_bucket() {
+    // The exactness tentpole at the Backend surface: a prompt exactly one
+    // compiled window long prefills through the chunked path (one chunk,
+    // empty carry, the full bucket's FFT plan), and its last-position
+    // logits are bit-for-bit what the monolithic bucketed forward of an
+    // identically seeded model produces.
+    let mut chunked = native("golden_tiny", 0);
+    chunked.set_max_context(64).unwrap();
+    assert_eq!(chunked.decode_window(), 64);
+    let plain = native("golden_tiny", 0);
+    let l = plain.manifest().seqlen().unwrap();
+    let v = plain.manifest().vocab().unwrap();
+    let prompt: Vec<i32> = (0..l as i32).map(|i| i % 29).collect();
+    let mut logits = Vec::new();
+    let sess = chunked.decode_begin(&prompt, &mut logits).unwrap();
+    chunked.decode_end(sess);
+    let mem = chunked.mem_report().unwrap();
+    assert_eq!(mem.prefill_chunked, 1, "a window-length prompt must prefill chunked");
+    assert_eq!(mem.prefill_chunks, 1);
+    let mono = plain.infer(&prompt, 1, l).unwrap();
+    let mf = mono.as_f32().unwrap();
+    let want = &mf[(l - 1) * v..l * v];
+    assert_eq!(logits.len(), v);
+    for (ch, (a, b)) in logits.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {ch}: chunked {a} vs monolithic {b}");
+    }
+}
+
+#[test]
+fn longctx_decode_from_chunked_prefill_survives_epoch_bump() {
+    // A prompt longer than the compiled window prefills through the
+    // overlap-save chunks and decodes greedily; a parameter update lands
+    // mid-session (epoch bump — the resident state goes stale), forcing a
+    // transparent re-prefill that must itself take the chunked path; every
+    // step stays token-identical to recomputing the growing prefix from
+    // scratch through the (also chunked) single-row infer.
+    let mut model = native("golden_tiny", 0);
+    model.set_max_context(64).unwrap();
+    let v = model.manifest().vocab().unwrap();
+    let prompt: Vec<i32> = (0..24).map(|i| 1 + i % 13).collect();
+    let mut logits = Vec::new();
+    let mut sess = model.decode_begin(&prompt, &mut logits).unwrap();
+    let mut seq = prompt.clone();
+    let mut next = argmax(&logits);
+    for step in 0..6 {
+        if step == 3 {
+            let task = RecallTask::new(16, 8, 2);
+            let mut rng = Pcg::new(6);
+            let batch = task.sample_batch(&mut rng).to_tensors();
+            model.train_step(&batch).unwrap();
+        }
+        model.decode_step(&mut sess, next, &mut logits).unwrap();
+        seq.push(next);
+        let full = model.infer(&seq, 1, seq.len()).unwrap();
+        let wf = full.as_f32().unwrap();
+        let want = argmax(&wf[(seq.len() - 1) * v..seq.len() * v]);
+        next = argmax(&logits);
+        assert_eq!(next, want, "step {step} diverged from the chunked recompute");
+    }
+    model.decode_end(sess);
+    let mem = model.mem_report().unwrap();
+    // The begin and the stale rebuild both prefilled chunked (plus the
+    // six single-row recomputes above).
+    assert!(mem.prefill_chunked >= 2, "stale rebuild skipped the chunked path");
+    assert_eq!(mem.decode_sessions_live, 0);
+}
+
+#[test]
+fn sorted_rounds_keep_token_streams_identical() {
+    // decode_batch hands the engine each round's rows sorted by history
+    // length. Under temperature sampling the rng stream is the sharpest
+    // invariant: tokens must match a serial reference that steps and
+    // samples strictly in row order, on prompts whose length order differs
+    // from their row order.
+    let model = native("golden_tiny", 0);
+    let prompts = vec![
+        vec![1i32, 2, 3, 4, 5, 6],
+        vec![7i32, 8],
+        vec![9i32, 10, 11, 12],
+        vec![13i32, 1, 2],
+    ];
+    let n = prompts.len();
+    let max_new = vec![5usize; n];
+    let sampling = Sampling::Temperature { t: 0.8, top_k: 4 };
+    let mut rng_a = Pcg::new(21);
+    let batched =
+        decode_batch(model.as_ref(), &prompts, &max_new, sampling, &mut rng_a).unwrap();
+
+    // Serial reference: same seed, prefill then per-round stepping and
+    // sampling in row order — the rng order decode_batch promises.
+    let mut rng_b = Pcg::new(21);
+    let mut logits = Vec::new();
+    let mut sessions = Vec::new();
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
+    for r in 0..n {
+        let sess = model.decode_begin(&prompts[r], &mut logits).unwrap();
+        out[r].push(sample_token(&logits, sampling, &mut rng_b));
+        sessions.push(sess);
+    }
+    for _round in 1..5 {
+        for r in 0..n {
+            let tok = *out[r].last().unwrap();
+            model.decode_step(&mut sessions[r], tok, &mut logits).unwrap();
+            out[r].push(sample_token(&logits, sampling, &mut rng_b));
+        }
+    }
+    for sess in sessions {
+        model.decode_end(sess);
+    }
+    assert_eq!(batched, out, "round shaping changed a token stream");
+}
+
+#[test]
+fn longctx_server_admits_past_the_compiled_window() {
+    // The server, started with a --max-context window, must admit prompts
+    // beyond the compiled shape, prefill them through the chunked path,
+    // and expose the long-context accounting in its serve report.
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+        Some(64),
+    )
+    .unwrap();
+    let long = server.handle.submit(GenerateRequest {
+        prompt: (0..24).map(|i| 1 + i % 13).collect(),
+        max_new: 4,
+        sampling: Sampling::Greedy,
+    });
+    let short = server.handle.submit(GenerateRequest {
+        prompt: vec![1, 2, 3],
+        max_new: 3,
+        sampling: Sampling::Greedy,
+    });
+    let long = long.recv().unwrap().unwrap();
+    let short = short.recv().unwrap().unwrap();
+    assert_eq!(long.tokens.len(), 4);
+    assert_eq!(short.tokens.len(), 3);
+    // Long prompts route past every bucket to the ladder's largest plan.
+    assert_eq!(long.bucket_len, 16);
+    assert_eq!(short.bucket_len, 8, "short prompts must keep their bucket");
+    let mem = server.handle.mem_report().expect("native worker reports memory");
+    assert_eq!(mem.max_context, 64);
+    assert_eq!(mem.ext_bucket_lens, vec![32, 64]);
+    assert!(mem.prefill_chunked >= 1, "the long prompt did not prefill chunked");
+    assert!(mem.prefill_chunk_bytes > 0);
+    assert_eq!(mem.decode_sessions_live, 0);
+    server.stop();
+}
+
+#[test]
+fn longctx_64k_window_keeps_prefill_bytes_o_chunk() {
+    // The memory acceptance gate of ISSUE 6 at the Backend surface: with a
+    // 64K window, quadrupling the prompt must not move the prefill
+    // activation high-water — the chunked path's working set is O(chunk),
+    // not O(L).
+    let mut model = native("golden_tiny", 0);
+    model.set_max_context(1 << 16).unwrap();
+    fn prefill(model: &dyn Backend, n: usize, logits: &mut Vec<f32>) {
+        let prompt: Vec<i32> = (0..n as i32).map(|i| i % 31).collect();
+        let sess = model.decode_begin(&prompt, logits).unwrap();
+        model.decode_end(sess);
+    }
+    let mut logits = Vec::new();
+    prefill(model.as_ref(), 4096, &mut logits);
+    let b1 = model.mem_report().unwrap().prefill_chunk_bytes;
+    prefill(model.as_ref(), 16384, &mut logits);
+    let mem = model.mem_report().unwrap();
+    assert!(b1 > 0);
+    assert_eq!(mem.prefill_chunk_bytes, b1, "prefill bytes grew with prompt length");
+    assert_eq!(mem.max_context, 1 << 16);
+    assert_eq!(mem.ext_bucket_lens.last(), Some(&(1 << 16)));
+    assert_eq!(mem.prefill_chunked, 2);
+    assert_eq!(mem.prefill_chunks, (4096usize.div_ceil(16) + 16384usize.div_ceil(16)) as u64);
 }
 
 #[test]

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke|kernel-smoke]
+# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
@@ -27,6 +27,14 @@
 #                if batched decode_step_batch does not beat serial stepping
 #                at occupancy 4, or if the greedy token streams differ
 #                between the scalar and SIMD kernel paths.
+#   longctx-smoke long-context gate (DESIGN.md §Long-context): (1) every
+#                longctx_* unit test — chunked prefill bitwise at the full
+#                bucket, ≤ tolerance vs the extended monolithic oracle,
+#                O(chunk) prefill activation bytes, sliding-window decode —
+#                and (2) the native_fftconv --longctx axis: a 64K signal
+#                streamed through 8K overlap-save chunks must stay ≤ 1e-4
+#                relative against the monolithic plan (result persists to
+#                BENCH_native.json under key `longctx`).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +71,15 @@ if [ "${1:-}" = "decode-smoke" ]; then
         --requests 12 --mixed --stream-decode --require-buckets --greedy \
         --threads 2 --seed 0
     echo "check.sh: decode-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "longctx-smoke" ]; then
+    echo "==> longctx-smoke: chunked-prefill exactness + sliding-window unit tests"
+    cargo test --release -q longctx
+    echo "==> longctx-smoke: 64K overlap-save stream vs monolithic plan (<= 1e-4 rel)"
+    cargo bench --bench native_fftconv -- --longctx --max-l 65536 --chunk 8192 --iters 2
+    echo "check.sh: longctx-smoke green"
     exit 0
 fi
 

@@ -26,6 +26,7 @@ TAGS = {
     "PERF_L3": "coordinator_micro.csv",
     # A tag may hold several CSVs (filled in order; missing ones skipped).
     "PERF_NATIVE": ["native_fftconv.csv", "native_step.csv", "native_serve.csv"],
+    "PERF_LONGCTX": "native_fftconv_longctx.csv",
     "PERF_L2": "perf_donation.csv",
 }
 

@@ -1,0 +1,168 @@
+//! Network serving bench: the full wire path — HTTP/1.1 request parsing,
+//! engine admission, SSE token streaming — measured end-to-end with the
+//! chaos loadgen in steady (fault-free) mode. Reports time-to-first-token
+//! and decode pace per token at p50/p99 across concurrent keep-alive
+//! clients, i.e. what the resilience layer costs on top of the in-process
+//! serving numbers in `native_serve` / `native_decode`.
+//!
+//! Results print as a table and persist into `BENCH_native.json` (key
+//! `serve_net`) next to the other native ledgers (EXPERIMENTS.md §Perf
+//! Native).
+//!
+//! Run: `cargo bench --bench native_serve_net -- [--model lm_hyena_s]
+//!        [--clients 8] [--requests 8] [--max-new 16] [--threads N]
+//!        [--out BENCH_native.json] [--smoke]`
+//!
+//! `--smoke` (part of `scripts/check.sh serve-net-smoke`) uses the tiny
+//! golden config and fails hard unless every stream completes, no transport
+//! errors occur, and zero decode sessions leak across the drain.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+use hyena::backend::BackendKind;
+use hyena::backend::native::NativeConfig;
+use hyena::coordinator::server::Server;
+use hyena::net::client::{run_loadgen, LoadGenConfig};
+use hyena::net::server::NetServer;
+use hyena::net::{ChaosConfig, NetConfig};
+use hyena::report::{merge_bench_json, Table};
+use hyena::util::cli::Args;
+use hyena::util::json::Json;
+use hyena::util::pool;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
+    let name = args
+        .get_or("model", if smoke { "golden_tiny" } else { "lm_hyena_s" })
+        .to_string();
+    let clients = args.get_usize("clients", if smoke { 4 } else { 8 });
+    let requests = args.get_usize("requests", if smoke { 4 } else { 8 });
+    let threads = args.get_usize("threads", pool::default_threads()).max(1);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+    pool::configure(threads);
+
+    let cfg = NativeConfig::builtin(&name)
+        .ok_or_else(|| anyhow!("no built-in native config named {name:?}"))?;
+    let (l, vocab) = (cfg.seqlen, cfg.vocab);
+    let max_new = args.get_usize("max-new", (l / 4).clamp(4, 16));
+    let prompt_len =
+        args.get_usize("prompt-len", l / 8).clamp(1, l.saturating_sub(max_new + 1).max(1));
+
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from(format!("artifacts/{name}")),
+        0,
+        Duration::from_millis(2),
+        None,
+        None,
+        None,
+    )?;
+    let net = NetServer::start(
+        server.handle.clone(),
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: clients + 4,
+            quiet: true,
+            ..NetConfig::default()
+        },
+    )?;
+    let addr = net.addr();
+    println!(
+        "{name}: L={l}, capacity {}, {clients} clients x {requests} requests, \
+         prompt {prompt_len} -> {max_new} tokens, {threads} threads",
+        server.handle.capacity()
+    );
+
+    let lcfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests,
+        prompt_len,
+        max_new,
+        vocab,
+        timeout_ms: 0, // perf run: no deadlines
+        chaos: ChaosConfig::off(),
+        burst: false,
+        max_retries: 16,
+        seed: 0,
+        io_timeout_ms: 60_000,
+    };
+    let t0 = Instant::now();
+    let r = run_loadgen(addr, &lcfg);
+    let wall = t0.elapsed().as_secs_f64();
+    let report = net.finish()?;
+    server.stop();
+
+    let total = clients * requests;
+    let (ttfb50, ttfb99) = (r.ttfb_percentile(50.0), r.ttfb_percentile(99.0));
+    let (tok50, tok99) = (r.ms_per_token_percentile(50.0), r.ms_per_token_percentile(99.0));
+    let tok_per_s = r.tokens as f64 / wall.max(1e-9);
+    let mut table = Table::new(
+        "§Perf Native — network serving: HTTP/SSE wire path (steady load)",
+        &["clients", "ok/total", "ttfb p50 ms", "ttfb p99 ms", "ms/token p50", "ms/token p99", "tok/s"],
+    );
+    table.row(vec![
+        clients.to_string(),
+        format!("{}/{}", r.ok, total),
+        format!("{ttfb50:.2}"),
+        format!("{ttfb99:.2}"),
+        format!("{tok50:.3}"),
+        format!("{tok99:.3}"),
+        format!("{tok_per_s:.0}"),
+    ]);
+    table.emit("native_serve_net");
+    println!(
+        "{} ok / {total} ({} x 429 retried, {} stream errors, {} io errors), \
+         {} tokens in {wall:.2}s; drain: {} finished / {} aborted, {} leaked",
+        r.ok,
+        r.rejected_429,
+        r.stream_errors,
+        r.io_errors,
+        r.tokens,
+        report.drain.finished,
+        report.drain.aborted,
+        report.leaked_sessions
+    );
+
+    merge_bench_json(
+        Path::new(&out_path),
+        "serve_net",
+        Json::obj(vec![
+            ("model", Json::str(&name)),
+            ("seqlen", Json::num(l as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("requests", Json::num(total as f64)),
+            ("prompt_len", Json::num(prompt_len as f64)),
+            ("max_new", Json::num(max_new as f64)),
+            ("ok", Json::num(r.ok as f64)),
+            ("rejected_429", Json::num(r.rejected_429 as f64)),
+            ("ttfb_p50_ms", Json::num(ttfb50)),
+            ("ttfb_p99_ms", Json::num(ttfb99)),
+            ("ms_per_token_p50", Json::num(tok50)),
+            ("ms_per_token_p99", Json::num(tok99)),
+            ("tokens_per_s", Json::num(tok_per_s)),
+            ("leaked_sessions", Json::num(report.leaked_sessions as f64)),
+        ]),
+    )?;
+    println!("bench ledger -> {out_path} (key: serve_net)");
+
+    if smoke {
+        if r.ok != total {
+            bail!("serve-net-smoke gate: {} of {total} streams completed", r.ok);
+        }
+        if r.io_errors > 0 || r.stream_errors > 0 {
+            bail!(
+                "serve-net-smoke gate: {} io errors, {} stream errors under steady load",
+                r.io_errors,
+                r.stream_errors
+            );
+        }
+        if report.leaked_sessions > 0 {
+            bail!("serve-net-smoke gate: {} decode sessions leaked", report.leaked_sessions);
+        }
+    }
+    Ok(())
+}

@@ -116,6 +116,7 @@ fn main() -> Result<()> {
                 prompt: prompt.clone(),
                 max_new: 32,
                 sampling: Sampling::Temperature { t: 0.8, top_k: 20 },
+                deadline: None,
             })
         })
         .collect();

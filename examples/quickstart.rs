@@ -62,6 +62,7 @@ fn main() -> Result<()> {
             prompt: vec![1 + i, 4, 1 + i],
             max_new: 4,
             sampling: Sampling::Greedy,
+            deadline: None,
         })?;
         println!(
             "generated {:?} in {:?} (batch x{})",

@@ -56,6 +56,7 @@ fn main() -> Result<()> {
                 prompt,
                 max_new,
                 sampling: Sampling::Greedy,
+                deadline: None,
             }));
         }
         let mut lat = Summary::new();

@@ -84,6 +84,33 @@ impl<T> Batcher<T> {
         self.take_up_to(self.batch_size)
     }
 
+    /// Pop every queued request whose *own* deadline (as exposed by
+    /// `deadline_of`; `None` = never expires) has passed, preserving FIFO
+    /// order among survivors and their original timestamps. The serving
+    /// worker sweeps this between token rounds so a request that expired
+    /// while waiting replies its deadline error immediately instead of
+    /// being admitted to the engine (or worse, sitting behind a long
+    /// decode until `max_wait` releases it).
+    pub fn take_expired(
+        &mut self,
+        now: Instant,
+        deadline_of: impl Fn(&T) -> Option<Instant>,
+    ) -> Vec<T> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(entry) = self.queue.pop_front() {
+            match deadline_of(&entry.1) {
+                Some(d) if now >= d => expired.push(entry.1),
+                _ => rest.push_back(entry),
+            }
+        }
+        self.queue = rest;
+        expired
+    }
+
     /// Pop up to `batch_size` requests that share the *oldest* request's
     /// key (its shape bucket), preserving FIFO order within the key.
     /// Requests with other keys keep their queue positions and timestamps,
@@ -251,6 +278,76 @@ mod tests {
                     popped.iter().filter(|x| x.1 == bucket).map(|x| x.0).collect();
                 prop_assert!(got == want, "bucket {bucket} reordered: {got:?} vs {want:?}");
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn take_expired_sweeps_only_the_dead() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        let now = Instant::now();
+        // (id, deadline): 1 and 3 are expired, 2 has no deadline.
+        let items = [
+            (0u32, Some(now + Duration::from_secs(5))),
+            (1, Some(now - Duration::from_millis(1))),
+            (2, None),
+            (3, Some(now)),
+        ];
+        for &it in &items {
+            b.push_at(now, it);
+        }
+        let dead = b.take_expired(now, |x: &(u32, Option<Instant>)| x.1);
+        assert_eq!(dead.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3]);
+        // Survivors keep FIFO order.
+        assert_eq!(b.take_up_to(9).iter().map(|x| x.0).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn take_expired_on_empty_is_a_noop() {
+        let mut b: Batcher<(u32, Option<Instant>)> = Batcher::new(2, Duration::from_secs(1));
+        assert!(b.take_expired(Instant::now(), |x| x.1).is_empty());
+    }
+
+    /// Property: expired + survivors == pushed (conservation), every swept
+    /// item really was expired, no survivor was, and survivor order is
+    /// FIFO — across arbitrary deadline assignments.
+    #[test]
+    fn prop_take_expired_conserves_and_partitions() {
+        Prop::new("take_expired partition").cases(200).check(|rng| {
+            let mut b = Batcher::new(4, Duration::from_secs(60));
+            let now = Instant::now();
+            let total = 1 + rng.usize_below(40);
+            let items: Vec<(u32, Option<Instant>)> = (0..total)
+                .map(|i| {
+                    let dl = match rng.usize_below(3) {
+                        0 => None,
+                        1 => Some(now - Duration::from_millis(1 + rng.below(50) as u64)),
+                        _ => Some(now + Duration::from_millis(1 + rng.below(50) as u64)),
+                    };
+                    (i as u32, dl)
+                })
+                .collect();
+            for &it in &items {
+                b.push_at(now, it);
+            }
+            let dead = b.take_expired(now, |x: &(u32, Option<Instant>)| x.1);
+            let alive = b.take_up_to(total);
+            prop_assert!(dead.len() + alive.len() == total, "lost/duplicated");
+            prop_assert!(
+                dead.iter().all(|x| x.1.is_some_and(|d| now >= d)),
+                "swept a live request"
+            );
+            prop_assert!(
+                alive.iter().all(|x| x.1.map_or(true, |d| now < d)),
+                "kept an expired request"
+            );
+            let want: Vec<u32> = items
+                .iter()
+                .filter(|x| x.1.map_or(true, |d| now < d))
+                .map(|x| x.0)
+                .collect();
+            let got: Vec<u32> = alive.iter().map(|x| x.0).collect();
+            prop_assert!(got == want, "survivors reordered: {got:?} vs {want:?}");
             Ok(())
         });
     }

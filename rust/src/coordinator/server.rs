@@ -20,6 +20,25 @@
 //! when the worker starts decoding from idle. Each request keeps its own
 //! sampling policy.
 //!
+//! **Streaming + resilience (serving L4, DESIGN.md §Serving-Net).** A
+//! request replies either once ([`Reply::Once`], the original blocking
+//! path) or through a *bounded* [`StreamEvent`] channel
+//! ([`ServerHandle::try_submit_stream`]) that emits every sampled token as
+//! it exists — the network layer flushes each one as an SSE event. The
+//! worker only ever `try_send`s: a full buffer means the client has
+//! stalled past its allowance and the session is evicted; a disconnected
+//! buffer means the client is gone and the session retires silently.
+//! Either way one slow/dead socket can never wedge a decode round for the
+//! other sessions. Per-request deadlines are enforced at three points
+//! (queued, at admission, and swept *between token rounds* so an expired
+//! request retires mid-decode). Admission control is a shared inflight
+//! counter with a hard cap ([`ServerHandle::try_submit`] →
+//! [`AdmitError::Busy`], which the HTTP front end maps to 429 +
+//! Retry-After) — the queue can never grow without bound. Graceful drain
+//! ([`ServerHandle::drain`]) stops admission, finishes live streams up to
+//! a budget, force-retires the rest, and *keeps the worker alive* so
+//! `mem_report` can prove zero leaked sessions afterwards.
+//!
 //! The response reports the prefill bucket (`bucket_len`) so callers — and
 //! `scripts/check.sh decode-smoke` — can detect a full-pad prefill, and
 //! `Backend::mem_report` exposes session counts / streamed-step counts so
@@ -31,7 +50,11 @@
 //! oversubscribing the machine (`--threads` / `HYENA_THREADS`).
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,6 +70,11 @@ pub struct GenerateRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub sampling: Sampling,
+    /// Wall-clock budget from submission. `None` = no deadline. Enforced
+    /// while queued, at admission, and between token rounds; an expired
+    /// streaming request terminates with a [`StreamEvent::Error`] after
+    /// whatever tokens it already produced.
+    pub deadline: Option<Duration>,
 }
 
 #[derive(Debug)]
@@ -66,31 +94,217 @@ pub struct GenerateResponse {
     pub bucket_len: usize,
 }
 
+/// One event on a streaming reply channel. The stream is a strict
+/// grammar: `Token* (Done | Error)` — exactly one terminal, always last.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// One sampled token, emitted the round it was produced.
+    Token(i32),
+    /// Normal completion; `tokens` repeats the full sequence so the
+    /// terminal event is self-contained.
+    Done(GenerateResponse),
+    /// Abnormal termination (engine failure, deadline, slow-client
+    /// eviction, drain abort). `partial` is how many tokens were produced
+    /// before the stream died.
+    Error { message: String, partial: usize },
+}
+
+/// Why a bounded submission was refused (never silently queued).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Inflight cap reached — back off for the hinted duration. The HTTP
+    /// front end maps this to `429` + `Retry-After`.
+    Busy { retry_after: Duration },
+    /// Server is draining and admits nothing new (`503` on the wire).
+    Draining,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Busy { retry_after } => {
+                write!(f, "server busy: retry after {retry_after:?}")
+            }
+            AdmitError::Draining => write!(f, "server draining: not admitting new work"),
+        }
+    }
+}
+
+/// What a graceful drain did (`ServerHandle::drain`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Live sessions that ran to completion within the drain budget.
+    pub finished: usize,
+    /// Live sessions force-retired (error event) at the drain deadline.
+    pub aborted: usize,
+    /// Queued-but-unadmitted requests rejected at drain start.
+    pub dropped_queued: usize,
+}
+
+/// Admission-accounting state shared between every handle clone and the
+/// tickets riding on inflight requests.
+struct ServerShared {
+    /// Requests submitted through a bounded path and not yet replied.
+    inflight: AtomicUsize,
+    /// Hard admission cap: live capacity + allowed queue depth.
+    admit_cap: AtomicUsize,
+    /// Worker session capacity (manifest batch size), for observability.
+    capacity: AtomicUsize,
+    draining: AtomicBool,
+}
+
+/// RAII inflight slot: reserved at submission, released when the request's
+/// reply has been sent and the worker drops its state — every exit path
+/// (reply, retire, eviction, drain drop) releases exactly once, because
+/// release *is* drop. Legacy unbounded submissions carry an empty ticket.
+struct Ticket {
+    shared: Option<Arc<ServerShared>>,
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if let Some(s) = self.shared.take() {
+            s.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// How a request gets its answer back.
+enum Reply {
+    /// Single blocking reply (the original in-process path).
+    Once(Sender<Result<GenerateResponse>>),
+    /// Bounded per-token stream. The worker never blocks on it.
+    Stream(SyncSender<StreamEvent>),
+}
+
+impl Reply {
+    fn send_ok(self, resp: GenerateResponse) {
+        match self {
+            Reply::Once(tx) => {
+                let _ = tx.send(Ok(resp));
+            }
+            Reply::Stream(tx) => {
+                let _ = tx.try_send(StreamEvent::Done(resp));
+            }
+        }
+    }
+
+    fn send_err(self, e: anyhow::Error, partial: usize) {
+        match self {
+            Reply::Once(tx) => {
+                let _ = tx.send(Err(anyhow!("{:#}", e)));
+            }
+            Reply::Stream(tx) => {
+                let _ = tx.try_send(StreamEvent::Error {
+                    message: format!("{:#}", e),
+                    partial,
+                });
+            }
+        }
+    }
+}
+
 struct Envelope {
     req: GenerateRequest,
     submitted: Instant,
-    reply: Sender<Result<GenerateResponse>>,
+    /// Absolute deadline (submission + request budget).
+    deadline: Option<Instant>,
+    reply: Reply,
+    ticket: Ticket,
 }
 
-/// Worker-bound messages: generation work or a serving-stats probe.
+/// Worker-bound messages: generation work, a serving-stats probe, or a
+/// drain order.
 enum Msg {
     Gen(Envelope),
     Mem(Sender<Option<MemReport>>),
+    Drain(Duration, Sender<DrainReport>),
 }
 
 /// Handle used by clients to submit requests (cloneable, Send).
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: Sender<Msg>,
+    shared: Arc<ServerShared>,
 }
 
 impl ServerHandle {
-    /// Submit a request; returns a receiver for the response.
+    fn envelope(&self, req: GenerateRequest, reply: Reply, ticket: Ticket) -> Envelope {
+        let submitted = Instant::now();
+        let deadline = req.deadline.map(|d| submitted + d);
+        Envelope { req, submitted, deadline, reply, ticket }
+    }
+
+    /// Reserve an inflight slot or say exactly why not.
+    fn reserve(&self) -> std::result::Result<Ticket, AdmitError> {
+        if self.shared.draining.load(Ordering::SeqCst) {
+            return Err(AdmitError::Draining);
+        }
+        let cap = self.shared.admit_cap.load(Ordering::SeqCst);
+        let prev = self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= cap {
+            self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(AdmitError::Busy { retry_after: Duration::from_secs(1) });
+        }
+        Ok(Ticket { shared: Some(Arc::clone(&self.shared)) })
+    }
+
+    /// Submit a request; returns a receiver for the response. Unbounded
+    /// (no admission control) — the in-process/benchmark path.
     pub fn submit(&self, req: GenerateRequest) -> Receiver<Result<GenerateResponse>> {
         let (reply_tx, reply_rx) = channel();
-        let env = Envelope { req, submitted: Instant::now(), reply: reply_tx };
+        let env = self.envelope(req, Reply::Once(reply_tx), Ticket { shared: None });
         // If the worker is gone the reply channel closes and the caller
         // observes a RecvError.
+        let _ = self.tx.send(Msg::Gen(env));
+        reply_rx
+    }
+
+    /// Bounded submission: refused with [`AdmitError`] when the inflight
+    /// cap is reached or the server is draining. Never queues unboundedly.
+    pub fn try_submit(
+        &self,
+        req: GenerateRequest,
+    ) -> std::result::Result<Receiver<Result<GenerateResponse>>, AdmitError> {
+        let ticket = self.reserve()?;
+        let (reply_tx, reply_rx) = channel();
+        let env = self.envelope(req, Reply::Once(reply_tx), ticket);
+        let _ = self.tx.send(Msg::Gen(env));
+        Ok(reply_rx)
+    }
+
+    /// Bounded *streaming* submission: each sampled token arrives as a
+    /// [`StreamEvent::Token`] on a channel buffered to `token_buf` events.
+    /// If the consumer falls `token_buf` tokens behind the engine it is
+    /// evicted (its session retires with an error event it may never
+    /// read); if it hangs up, the session retires silently. The terminal
+    /// `Done`/`Error` event needs a buffer slot too, so `token_buf >= 2`.
+    pub fn try_submit_stream(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+    ) -> std::result::Result<Receiver<StreamEvent>, AdmitError> {
+        let ticket = self.reserve()?;
+        Ok(self.submit_stream_with(req, token_buf, ticket))
+    }
+
+    /// Streaming submission without admission control (in-process use).
+    pub fn submit_stream(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+    ) -> Receiver<StreamEvent> {
+        self.submit_stream_with(req, token_buf, Ticket { shared: None })
+    }
+
+    fn submit_stream_with(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+        ticket: Ticket,
+    ) -> Receiver<StreamEvent> {
+        let (reply_tx, reply_rx) = sync_channel(token_buf.max(2));
+        let env = self.envelope(req, Reply::Stream(reply_tx), ticket);
         let _ = self.tx.send(Msg::Gen(env));
         reply_rx
     }
@@ -103,13 +317,55 @@ impl ServerHandle {
     }
 
     /// Snapshot of the worker backend's arena/workspace accounting (the
-    /// serve report; `None` when the engine does not track it).
+    /// serve report; `None` when the engine does not track it). Still
+    /// answered after a drain — that is how the front end proves zero
+    /// leaked sessions.
     pub fn mem_report(&self) -> Option<MemReport> {
         let (tx, rx) = channel();
         if self.tx.send(Msg::Mem(tx)).is_err() {
             return None;
         }
         rx.recv().ok().flatten()
+    }
+
+    /// Worker session capacity (manifest batch size).
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently holding an inflight slot (bounded paths only).
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Set the admission cap to `capacity + queue_cap` (default queue_cap
+    /// is one extra capacity's worth).
+    pub fn set_queue_cap(&self, queue_cap: usize) {
+        let cap = self.shared.capacity.load(Ordering::SeqCst);
+        self.shared.admit_cap.store(cap + queue_cap, Ordering::SeqCst);
+    }
+
+    /// Stop admitting bounded submissions (the drain's first step; also
+    /// flips new `try_submit*` calls to [`AdmitError::Draining`]).
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: stop admission, let live streams finish for up to
+    /// `budget`, force-retire the rest with error events, and report.
+    /// The worker stays alive afterwards (answering `mem_report`, refusing
+    /// generation) until [`Server::stop`].
+    pub fn drain(&self, budget: Duration) -> Option<DrainReport> {
+        self.begin_drain();
+        let (tx, rx) = channel();
+        if self.tx.send(Msg::Drain(budget, tx)).is_err() {
+            return None;
+        }
+        rx.recv().ok()
     }
 }
 
@@ -188,10 +444,21 @@ impl Server {
                 worker_loop(model, rx, sd_rx, batch_size, max_wait, seed as u64);
             })
             .expect("spawn server worker");
-        ready_rx
+        let capacity = ready_rx
             .recv()
             .map_err(|_| anyhow!("server worker died during startup"))??;
-        Ok(Server { handle: ServerHandle { tx }, worker: Some(worker), shutdown: sd_tx })
+        let shared = Arc::new(ServerShared {
+            inflight: AtomicUsize::new(0),
+            // Default queue depth: one extra capacity's worth of waiters.
+            admit_cap: AtomicUsize::new(capacity * 2),
+            capacity: AtomicUsize::new(capacity),
+            draining: AtomicBool::new(false),
+        });
+        Ok(Server {
+            handle: ServerHandle { tx, shared },
+            worker: Some(worker),
+            shutdown: sd_tx,
+        })
     }
 
     pub fn stop(mut self) {
@@ -217,9 +484,11 @@ fn bucket_for_prompt(prompt_len: usize, buckets: &[usize]) -> usize {
 /// One resident decode session inside the worker.
 struct LiveSession {
     sess: DecodeSession,
-    reply: Sender<Result<GenerateResponse>>,
+    reply: Reply,
+    ticket: Ticket,
     submitted: Instant,
     entered: Instant,
+    deadline: Option<Instant>,
     sampling: Sampling,
     max_new: usize,
     prompt_len: usize,
@@ -248,19 +517,16 @@ fn worker_loop(
     let l_full = model.decode_window();
     let mut live: Vec<LiveSession> = Vec::new();
     let mut logits: Vec<f32> = Vec::new();
-    let handle = |msg: Msg, batcher: &mut Batcher<Envelope>| match msg {
-        Msg::Gen(env) => batcher.push(env),
-        Msg::Mem(reply) => {
-            let _ = reply.send(model.mem_report());
-        }
-    };
+    // Post-drain the worker refuses generation but keeps answering Mem.
+    let mut drained = false;
+    let mut drain_req: Option<(Duration, Sender<DrainReport>)> = None;
     loop {
         // Drain everything currently queued on the channel — new arrivals
         // join between token rounds, not after whole batches.
         let mut disconnected = false;
         loop {
             match rx.try_recv() {
-                Ok(msg) => handle(msg, &mut batcher),
+                Ok(msg) => handle_msg(msg, model.as_ref(), &mut batcher, drained, &mut drain_req),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -277,7 +543,46 @@ fn worker_loop(
             }
             return;
         }
+        if let Some((budget, report_tx)) = drain_req.take() {
+            let deadline = Instant::now() + budget;
+            let mut report = DrainReport::default();
+            // Queued-but-unadmitted work is rejected immediately — a drain
+            // only owes completion to sessions that already hold state.
+            let n = batcher.len();
+            for env in batcher.take_up_to(n) {
+                env.reply
+                    .send_err(anyhow!("server draining: request dropped before admission"), 0);
+                report.dropped_queued += 1;
+            }
+            // Let live streams run to completion inside the budget.
+            while !live.is_empty() && Instant::now() < deadline {
+                let before = live.len();
+                step_round(model.as_ref(), &mut live, l_full, &mut rng, &mut logits);
+                report.finished += before - live.len();
+            }
+            // Whatever is still live gets a terminal error event, not a
+            // silent disappearance — and its session state is freed.
+            report.aborted = live.len();
+            for s in live.drain(..) {
+                let partial = s.out.len();
+                retire_with(
+                    model.as_ref(),
+                    s,
+                    Some((anyhow!("server draining: stream aborted at drain deadline"), partial)),
+                );
+            }
+            drained = true;
+            let _ = report_tx.send(report);
+            continue;
+        }
         let now = Instant::now();
+        // Deadline sweep over the queue: a request that expired while
+        // waiting replies its error without ever touching the engine.
+        for env in batcher.take_expired(now, |e: &Envelope| e.deadline) {
+            let waited = now.duration_since(env.submitted);
+            env.reply
+                .send_err(anyhow!("deadline exceeded after {waited:?} in queue"), 0);
+        }
         // Admission: while sessions are in flight, freed capacity refills
         // immediately (sessions are shape-independent, so there is nothing
         // to co-schedule); from idle, the batching policy (full batch or
@@ -298,7 +603,37 @@ fn worker_loop(
             .min(Duration::from_millis(2))
             .max(Duration::from_micros(200));
         if let Ok(msg) = rx.recv_timeout(wait) {
-            handle(msg, &mut batcher);
+            handle_msg(msg, model.as_ref(), &mut batcher, drained, &mut drain_req);
+        }
+    }
+}
+
+fn handle_msg(
+    msg: Msg,
+    model: &dyn Backend,
+    batcher: &mut Batcher<Envelope>,
+    drained: bool,
+    drain_req: &mut Option<(Duration, Sender<DrainReport>)>,
+) {
+    match msg {
+        Msg::Gen(env) => {
+            if drained {
+                env.reply
+                    .send_err(anyhow!("server draining: not admitting new work"), 0);
+            } else {
+                batcher.push(env);
+            }
+        }
+        Msg::Mem(reply) => {
+            let _ = reply.send(model.mem_report());
+        }
+        Msg::Drain(budget, tx) => {
+            if drained {
+                // Idempotent: a second drain finds nothing to do.
+                let _ = tx.send(DrainReport::default());
+            } else {
+                *drain_req = Some((budget, tx));
+            }
         }
     }
 }
@@ -314,35 +649,51 @@ fn admit(
     logits: &mut Vec<f32>,
 ) {
     let entered = Instant::now();
-    let Envelope { req, submitted, reply } = env;
+    let Envelope { req, submitted, deadline, reply, ticket } = env;
+    // A request that expired in the queue gap never touches the engine.
+    if deadline.is_some_and(|d| entered >= d) {
+        let waited = entered.duration_since(submitted);
+        reply.send_err(anyhow!("deadline exceeded after {waited:?} in queue"), 0);
+        return;
+    }
     // Malformed prompts error out even on the zero-budget fast path (the
     // old whole-batch loop validated every request through decode_batch).
     if req.prompt.is_empty() || req.prompt.len() >= l_full {
-        let _ = reply.send(Err(anyhow!(
-            "prompt length {} out of range (1..{l_full})",
-            req.prompt.len()
-        )));
+        reply.send_err(
+            anyhow!("prompt length {} out of range (1..{l_full})", req.prompt.len()),
+            0,
+        );
         return;
     }
     let bucket_len = bucket_for_prompt(req.prompt.len(), buckets);
     if req.max_new == 0 {
-        let _ = reply.send(Ok(GenerateResponse {
+        reply.send_ok(GenerateResponse {
             tokens: Vec::new(),
             queue_time: entered.duration_since(submitted),
             total_time: submitted.elapsed(),
             batch_occupancy: live.len() + 1,
             bucket_len,
-        }));
+        });
         return;
     }
     match model.decode_begin(&req.prompt, logits) {
         Ok(sess) => {
             let first = sample_token(logits, req.sampling, rng);
+            if let Reply::Stream(tx) = &reply {
+                if tx.try_send(StreamEvent::Token(first)).is_err() {
+                    // Client hung up (or stalled) before its first token:
+                    // free the session state immediately.
+                    model.decode_end(sess);
+                    return;
+                }
+            }
             live.push(LiveSession {
                 sess,
                 reply,
+                ticket,
                 submitted,
                 entered,
+                deadline,
                 sampling: req.sampling,
                 max_new: req.max_new,
                 prompt_len: req.prompt.len(),
@@ -352,25 +703,30 @@ fn admit(
             });
         }
         Err(e) => {
-            let _ = reply.send(Err(e));
+            reply.send_err(e, 0);
         }
     }
 }
 
-/// Reply to and drop one finished/failed session.
-fn retire(model: &dyn Backend, s: LiveSession, err: Option<anyhow::Error>) {
+/// Reply to and drop one finished/failed session. `err` carries the token
+/// count already produced (the stream's `partial`).
+fn retire_with(
+    model: &dyn Backend,
+    s: LiveSession,
+    err: Option<(anyhow::Error, usize)>,
+) {
     let LiveSession { sess, reply, submitted, entered, bucket_len, occupancy, out, .. } = s;
     model.decode_end(sess);
-    let _ = reply.send(match err {
-        None => Ok(GenerateResponse {
+    match err {
+        None => reply.send_ok(GenerateResponse {
             tokens: out,
             queue_time: entered.duration_since(submitted),
             total_time: submitted.elapsed(),
             batch_occupancy: occupancy,
             bucket_len,
         }),
-        Some(e) => Err(anyhow!("{:#}", e)),
-    });
+        Some((e, partial)) => reply.send_err(e, partial),
+    }
 }
 
 /// Advance every live session by one token **in a single batched engine
@@ -378,8 +734,10 @@ fn retire(model: &dyn Backend, s: LiveSession, err: Option<anyhow::Error>) {
 /// session's current position into one `(rows, D)` dense pass per block,
 /// recovering dense-kernel row blocking at high occupancy (DESIGN.md
 /// §Kernels); engines without the override loop the serial step, which is
-/// behaviour-identical. Finished sessions retire first and reply; failed
-/// rows reply their error individually. The round is admission-shaped:
+/// behaviour-identical. Finished and deadline-expired sessions retire
+/// first and reply; failed rows reply their error individually; streaming
+/// rows whose consumer stalled (buffer full) or hung up retire after the
+/// round without wedging anyone else. The round is admission-shaped:
 /// the engine sees the rows sorted by history length (ties by admission
 /// order), so same-length sessions sit adjacent in the dense pass, but
 /// sampling runs per row in *admission* order — the rng stream, and
@@ -395,16 +753,28 @@ fn step_round(
     for s in live.iter_mut() {
         s.occupancy = s.occupancy.max(occ);
     }
-    // Retire finished sessions before the round.
+    // Retire finished and deadline-expired sessions before the round (the
+    // mid-decode deadline sweep: an expired request never costs another
+    // engine step).
+    let now = Instant::now();
     let mut i = 0;
     while i < live.len() {
         let done = {
             let s = &live[i];
             s.out.len() >= s.max_new || s.prompt_len + s.out.len() >= l_full
         };
+        let expired = !done && live[i].deadline.is_some_and(|d| now >= d);
         if done {
             let s = live.remove(i);
-            retire(model, s, None);
+            retire_with(model, s, None);
+        } else if expired {
+            let s = live.remove(i);
+            let partial = s.out.len();
+            retire_with(
+                model,
+                s,
+                Some((anyhow!("deadline exceeded after {partial} generated tokens"), partial)),
+            );
         } else {
             i += 1;
         }
@@ -438,7 +808,8 @@ fn step_round(
         inv[r] = j;
     }
     // Sample (or fail) per row in admission order; collect failures for
-    // removal.
+    // removal. Sampling happens for every healthy row *before* any
+    // eviction, so stream pushes can never perturb the rng order.
     let mut results: Vec<Option<anyhow::Result<()>>> =
         results.into_iter().map(Some).collect();
     let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
@@ -449,12 +820,31 @@ fn step_round(
                 let row = &logits[j * v..(j + 1) * v];
                 let next = sample_token(row, live[r].sampling, rng);
                 live[r].out.push(next);
+                if let Reply::Stream(tx) = &live[r].reply {
+                    match tx.try_send(StreamEvent::Token(next)) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => failed.push((
+                            r,
+                            anyhow!(
+                                "slow client: stalled past {} buffered tokens, stream evicted",
+                                // Capacity == buffer len when full.
+                                live[r].out.len()
+                            ),
+                        )),
+                        // Consumer hung up (client disconnect): retire
+                        // silently — sends to a dead channel are no-ops.
+                        Err(TrySendError::Disconnected(_)) => {
+                            failed.push((r, anyhow!("client disconnected mid-stream")))
+                        }
+                    }
+                }
             }
             Err(e) => failed.push((r, e)),
         }
     }
     for (r, e) in failed.into_iter().rev() {
         let s = live.remove(r);
-        retire(model, s, Some(e));
+        let partial = s.out.len();
+        retire_with(model, s, Some((e, partial)));
     }
 }

@@ -15,12 +15,16 @@
 //!   decoding, few-shot harness; backend-agnostic via [`backend::Backend`].
 //! * [`tasks`], [`data`], [`tokenizer`] — the synthetic substrates standing
 //!   in for the paper's datasets (substitution table: DESIGN.md §3).
+//! * [`net`] — dependency-free HTTP/1.1 + SSE serving front end over the
+//!   coordinator server: deadlines, backpressure, chaos injection, graceful
+//!   drain (DESIGN.md §Serving-Net).
 //! * [`metrics`], [`report`], [`util`] — FLOP accounting (App. A.2), table
 //!   emission, JSON/RNG/CLI/property-test substrates.
 pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod tasks;

@@ -5,6 +5,9 @@
 //!   train --model NAME [--steps N]    train on TinyPile (lm_*) or task data
 //!   eval  --model NAME                held-out loss/ppl on TinyPile
 //!   serve --model NAME [--requests N] run the batching server demo
+//!   serve --model NAME --listen ADDR  HTTP/1.1 + SSE network front end
+//!                                     (deadlines, 429 backpressure, drain)
+//!   loadgen --addr HOST:PORT          chaos loadgen against a listener
 //!   dump-filters --model NAME [--out F] write filter CSV (Fig. D.5)
 //!   info  --model NAME                print manifest summary
 //!
@@ -31,13 +34,23 @@ use hyena::coordinator::server::{GenerateRequest, Server};
 use hyena::coordinator::trainer::{eval_loss, Trainer};
 use hyena::data::corpus::{generate, CorpusConfig};
 use hyena::data::dataset::LmBatches;
+use hyena::net::client::LoadGenConfig;
+use hyena::net::server::NetServer;
+use hyena::net::{ChaosConfig, NetConfig};
 use hyena::runtime::checkpoint::Checkpoint;
 use hyena::runtime::Manifest;
 use hyena::util::cli::Args;
 use hyena::util::rng::Pcg;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["quiet", "greedy", "mixed", "require-buckets", "stream-decode"]);
+    let args = Args::parse(&[
+        "quiet",
+        "greedy",
+        "mixed",
+        "require-buckets",
+        "stream-decode",
+        "burst",
+    ]);
     // Size the shared worker pool before any backend is constructed (models
     // capture the pool at load time).
     if let Some(t) = args.get("threads") {
@@ -55,13 +68,15 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("dump-filters") => cmd_dump_filters(&args),
         _ => {
             eprintln!(
-                "usage: hyena <list|info|train|eval|serve|dump-filters> \
+                "usage: hyena <list|info|train|eval|serve|loadgen|dump-filters> \
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
                  [--steps N] [--seed S] [--buckets N] [--max-context N] [--mixed] \
-                 [--require-buckets] [--stream-decode]"
+                 [--require-buckets] [--stream-decode] [--listen ADDR] \
+                 [--addr HOST:PORT] [--chaos SPEC] [--burst]"
             );
             Ok(())
         }
@@ -270,6 +285,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         buckets,
         max_context,
     )?;
+    // `--listen` switches the demo driver off: expose the engine over the
+    // HTTP/SSE front end and serve until drained (SIGTERM/ctrl-c).
+    if let Some(listen) = args.get("listen").map(str::to_string) {
+        return serve_net(args, server, &listen, kind);
+    }
     println!("server up (backend: {}); firing {n_req} requests", kind.name());
     // The serving window: the compiled shape unless --max-context extended
     // it (prompts past the largest bucket prefill via overlap-save chunks).
@@ -305,6 +325,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prompt: prompt.clone(),
                 max_new: *max_new,
                 sampling,
+                deadline: None,
             })
         })
         .collect();
@@ -447,6 +468,139 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--stream-decode: backend exposes no serve report");
     }
     server.stop();
+    Ok(())
+}
+
+/// Resolve `--chaos SPEC` (explicit) or `HYENA_CHAOS` (ambient) — malformed
+/// specs are hard errors so a typo'd chaos run can't silently pass.
+fn chaos_arg(args: &Args) -> Result<ChaosConfig> {
+    match args.get("chaos") {
+        Some(spec) => ChaosConfig::parse(spec).map_err(|e| anyhow!("--chaos: {e}")),
+        None => ChaosConfig::from_env().map_err(|e| anyhow!("HYENA_CHAOS: {e}")),
+    }
+}
+
+/// `serve --listen ADDR`: the HTTP/1.1 + SSE network front end. Runs until
+/// SIGTERM/ctrl-c, then drains (finish live streams, bounded by
+/// `--drain-ms`) and exits nonzero if any decode session leaked.
+fn serve_net(args: &Args, server: Server, listen: &str, kind: BackendKind) -> Result<()> {
+    let cfg = NetConfig {
+        addr: listen.to_string(),
+        conn_threads: args.get_usize("conn-threads", 32),
+        queue_cap: args.get_usize("queue-cap", 0),
+        token_buf: args.get_usize("token-buf", 128),
+        deadline_ms: args.get_u64("deadline-ms", 30_000),
+        drain_ms: args.get_u64("drain-ms", 5_000),
+        io_timeout_ms: args.get_u64("io-timeout-ms", 10_000),
+        max_body_bytes: args.get_usize("max-body-bytes", 4 << 20),
+        chaos: chaos_arg(args)?,
+        quiet: args.flag("quiet"),
+    };
+    if !cfg.chaos.is_off() {
+        println!(
+            "chaos enabled: disconnect {:.2} stall {:.2} garbage {:.2} \
+             (stall_ms {}, seed {})",
+            cfg.chaos.disconnect, cfg.chaos.stall, cfg.chaos.garbage,
+            cfg.chaos.stall_ms, cfg.chaos.seed
+        );
+    }
+    hyena::net::server::install_drain_signals();
+    let net = NetServer::start(server.handle.clone(), cfg)?;
+    // check.sh greps this line for the bound port — keep the spelling.
+    println!(
+        "listening on {} (backend: {}, capacity {}); SIGTERM/ctrl-c drains",
+        net.addr(),
+        kind.name(),
+        server.handle.capacity()
+    );
+    let report = net.run_until_drained()?;
+    let s = &report.stats;
+    println!(
+        "serve-net: {} conns, {} requests ({} 2xx, {} 4xx incl {} 429, {} 5xx), \
+         {} streams, {} tokens",
+        s.conns, s.requests, s.s2xx, s.s4xx, s.s429, s.s5xx, s.streams, s.tokens
+    );
+    if s.chaos_disconnects + s.chaos_stalls > 0 {
+        println!(
+            "  chaos injected: {} disconnects, {} stalls",
+            s.chaos_disconnects, s.chaos_stalls
+        );
+    }
+    println!(
+        "drain: {} finished, {} aborted, {} dropped queued, {} leaked sessions",
+        report.drain.finished,
+        report.drain.aborted,
+        report.drain.dropped_queued,
+        report.leaked_sessions
+    );
+    server.stop();
+    if report.leaked_sessions > 0 {
+        bail!("{} decode sessions leaked across drain", report.leaked_sessions);
+    }
+    Ok(())
+}
+
+/// `loadgen --addr HOST:PORT`: drive a listener with N concurrent
+/// keep-alive clients, optional chaos, and report tail latencies.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr_s = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr HOST:PORT required (see `serve --listen`)"))?;
+    let addr: std::net::SocketAddr =
+        addr_s.parse().map_err(|_| anyhow!("--addr: bad socket address {addr_s:?}"))?;
+    let cfg = LoadGenConfig {
+        clients: args.get_usize("clients", 4),
+        requests_per_client: args.get_usize("requests", 4),
+        prompt_len: args.get_usize("prompt-len", 8),
+        max_new: args.get_usize("max-new", 8),
+        vocab: args.get_usize("vocab", 64),
+        timeout_ms: args.get_u64("timeout-ms", 30_000),
+        chaos: chaos_arg(args)?,
+        burst: args.flag("burst"),
+        max_retries: args.get_usize("max-retries", 8),
+        seed: args.get_u64("seed", 0),
+        io_timeout_ms: args.get_u64("io-timeout-ms", 10_000),
+    };
+    println!(
+        "loadgen: {} clients x {} requests -> {addr} ({})",
+        cfg.clients,
+        cfg.requests_per_client,
+        if cfg.burst { "burst" } else { "steady" }
+    );
+    let r = hyena::net::client::run_loadgen(addr, &cfg);
+    println!(
+        "  {} requests: {} ok, {} x 429 ({} with Retry-After), {} x 503, \
+         {} stream errors, {} io errors",
+        r.requests,
+        r.ok,
+        r.rejected_429,
+        r.retry_after_present,
+        r.rejected_503,
+        r.stream_errors,
+        r.io_errors
+    );
+    if !cfg.chaos.is_off() {
+        println!(
+            "  chaos: {} disconnects, {} stalls, {} garbage injected \
+             ({} rejected with 400)",
+            r.disconnects_injected, r.stalls_injected, r.garbage_injected, r.garbage_rejected
+        );
+    }
+    println!(
+        "  {} tokens  ttfb p50 {:.2} / p99 {:.2} ms  decode p50 {:.3} / p99 {:.3} ms/token",
+        r.tokens,
+        r.ttfb_percentile(50.0),
+        r.ttfb_percentile(99.0),
+        r.ms_per_token_percentile(50.0),
+        r.ms_per_token_percentile(99.0)
+    );
+    if r.rejected_429 > r.retry_after_present {
+        bail!(
+            "{} of {} 429 responses lacked Retry-After — backpressure contract broken",
+            r.rejected_429 - r.retry_after_present,
+            r.rejected_429
+        );
+    }
     Ok(())
 }
 

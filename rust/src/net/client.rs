@@ -1,0 +1,641 @@
+//! Keep-alive HTTP/SSE client + the chaos loadgen (DESIGN.md
+//! §Serving-Net).
+//!
+//! [`HttpClient`] is the minimal counterpart to `net::server`: persistent
+//! connection, fixed-length requests, fixed or chunked/SSE responses. It
+//! exists for three consumers — the loopback e2e tests (byte-level
+//! assertions against the wire), the `loadgen` CLI subcommand, and
+//! `benches/native_serve_net.rs` (ttfb / ms-per-token percentiles).
+//!
+//! [`run_loadgen`] drives N concurrent keep-alive clients with
+//! deterministic fault injection ([`ChaosConfig`]): `garbage` sends bytes
+//! that were never JSON (the 400 path), `disconnect` hangs up mid-stream
+//! (the server-side silent-retire path), `stall` stops reading mid-stream
+//! (the bounded-buffer eviction path). Every client draws its faults from
+//! its own seeded Pcg stream, so a failing run replays exactly.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::net::http::{find_crlfcrlf, read_exact_body};
+use crate::net::ChaosConfig;
+use crate::util::json::Json;
+
+/// A parsed fixed-length response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    /// Lower-cased names, trimmed values.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Server will keep the connection after this response.
+    pub keep_alive: bool,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn json(&self) -> Option<Json> {
+        std::str::from_utf8(&self.body)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+    }
+}
+
+/// Outcome of one `/generate` SSE stream.
+#[derive(Debug, Default)]
+pub struct StreamOutcome {
+    pub status: u16,
+    /// Tokens received as `token` events, in order.
+    pub tokens: Vec<i32>,
+    /// The `done` event payload, when the stream completed normally.
+    pub done: Option<Json>,
+    /// The `error` event payload (deadline / eviction / drain), when the
+    /// server terminated the stream abnormally but *explicitly*.
+    pub error: Option<Json>,
+    /// Time to first token event.
+    pub ttfb: Option<Duration>,
+    pub total: Duration,
+    /// This client aborted the stream on purpose (fault injection).
+    pub aborted: bool,
+    /// For non-200 statuses: the fixed error body.
+    pub reject: Option<Response>,
+}
+
+/// Client-side fault to inject into one streaming request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    None,
+    /// Hang up (drop the socket) after receiving this many token events.
+    DisconnectAfter(usize),
+    /// Stop reading for the given duration after this many token events,
+    /// then resume — if the pause outruns the server's write timeout plus
+    /// token buffer, the server evicts the stream.
+    StallAfter(usize, Duration),
+}
+
+/// Minimal keep-alive HTTP client over one TCP connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    carry: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> io::Result<HttpClient> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(HttpClient { stream, carry: Vec::new() })
+    }
+
+    /// Send one request head + body.
+    fn send(&mut self, method: &str, path: &str, body: &[u8]) -> io::Result<()> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: hyena\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()
+    }
+
+    /// Send raw bytes where a request should be (the garbage fault).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Read a complete fixed-length response (after `send`/`send_raw`).
+    pub fn read_response(&mut self) -> io::Result<Response> {
+        let (status, headers, keep_alive) = self.read_response_head()?;
+        let len = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .and_then(|(_, v)| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        let body = read_exact_body(&mut self.stream, &mut self.carry, len)?;
+        Ok(Response { status, headers, body, keep_alive })
+    }
+
+    pub fn get(&mut self, path: &str) -> io::Result<Response> {
+        self.send("GET", path, b"")?;
+        self.read_response()
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> io::Result<Response> {
+        self.send("POST", path, body.as_bytes())?;
+        self.read_response()
+    }
+
+    /// POST `/generate` and consume the SSE stream (or the fixed rejection
+    /// body on 4xx/5xx), optionally injecting a client-side fault.
+    pub fn generate_stream(&mut self, body: &str, fault: Fault) -> io::Result<StreamOutcome> {
+        let t0 = Instant::now();
+        self.send("POST", "/generate", body.as_bytes())?;
+        let (status, headers, keep_alive) = self.read_response_head()?;
+        let mut out = StreamOutcome { status, ..StreamOutcome::default() };
+        let chunked = headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+        if status != 200 || !chunked {
+            // Fixed body: a rejection (429/503/400...) or a non-stream 200.
+            let len = headers
+                .iter()
+                .find(|(k, _)| k == "content-length")
+                .and_then(|(_, v)| v.parse::<usize>().ok())
+                .unwrap_or(0);
+            let body = read_exact_body(&mut self.stream, &mut self.carry, len)?;
+            out.reject = Some(Response { status, headers, body, keep_alive });
+            out.total = t0.elapsed();
+            return Ok(out);
+        }
+        // SSE over chunked encoding: one event per chunk, zero-chunk end.
+        loop {
+            let payload = match self.read_chunk()? {
+                Some(p) => p,
+                None => break, // terminating chunk: stream over
+            };
+            let Some((event, data)) = parse_sse_record(&payload) else {
+                continue;
+            };
+            match event.as_str() {
+                "token" => {
+                    if out.ttfb.is_none() {
+                        out.ttfb = Some(t0.elapsed());
+                    }
+                    if let Some(t) =
+                        Json::parse(&data).ok().and_then(|v| v.get("t").and_then(|x| x.as_f64()))
+                    {
+                        out.tokens.push(t as i32);
+                    }
+                    match fault {
+                        Fault::DisconnectAfter(k) if out.tokens.len() >= k => {
+                            out.aborted = true;
+                            out.total = t0.elapsed();
+                            // Drop mid-stream: the server's next push sees a
+                            // dead channel and retires the session.
+                            return Ok(out);
+                        }
+                        Fault::StallAfter(k, pause) if out.tokens.len() == k => {
+                            std::thread::sleep(pause);
+                        }
+                        _ => {}
+                    }
+                }
+                "done" => out.done = Json::parse(&data).ok(),
+                "error" => out.error = Json::parse(&data).ok(),
+                _ => {}
+            }
+        }
+        out.total = t0.elapsed();
+        Ok(out)
+    }
+
+    fn read_response_head(&mut self) -> io::Result<(u16, Vec<(String, String)>, bool)> {
+        let mut scanned = 0usize;
+        loop {
+            if let Some(end) = find_crlfcrlf(&self.carry, scanned) {
+                let head: Vec<u8> = self.carry.drain(..end + 4).take(end).collect();
+                return parse_response_head(&head);
+            }
+            scanned = self.carry.len().saturating_sub(3);
+            let mut buf = [0u8; 2048];
+            let n = self.stream.read(&mut buf)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside response head",
+                ));
+            }
+            self.carry.extend_from_slice(&buf[..n]);
+        }
+    }
+
+    /// Read one transfer-encoding chunk. `None` = terminating zero chunk.
+    fn read_chunk(&mut self) -> io::Result<Option<String>> {
+        let size_line = self.read_line()?;
+        let size = usize::from_str_radix(size_line.trim(), 16).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad chunk size {size_line:?}"),
+            )
+        })?;
+        if size == 0 {
+            let _ = self.read_line(); // the blank line after the 0 chunk
+            return Ok(None);
+        }
+        let payload = read_exact_body(&mut self.stream, &mut self.carry, size)?;
+        let _ = read_exact_body(&mut self.stream, &mut self.carry, 2)?; // CRLF
+        String::from_utf8(payload)
+            .map(Some)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+    }
+
+    fn read_line(&mut self) -> io::Result<String> {
+        loop {
+            if let Some(i) = self.carry.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.carry.drain(..=i).collect();
+                while line.last().map_or(false, |&b| b == b'\n' || b == b'\r') {
+                    line.pop();
+                }
+                return String::from_utf8(line)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()));
+            }
+            let mut buf = [0u8; 1024];
+            let n = self.stream.read(&mut buf)?;
+            if n == 0 {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof inside chunk"));
+            }
+            self.carry.extend_from_slice(&buf[..n]);
+        }
+    }
+}
+
+fn parse_response_head(bytes: &[u8]) -> io::Result<(u16, Vec<(String, String)>, bool)> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "head not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad status line {status_line:?}"),
+            )
+        })?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let keep_alive = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map_or(true, |(_, v)| !v.eq_ignore_ascii_case("close"));
+    Ok((status, headers, keep_alive))
+}
+
+/// Parse one `event:`/`data:` SSE record.
+fn parse_sse_record(payload: &str) -> Option<(String, String)> {
+    let mut event = None;
+    let mut data = None;
+    for line in payload.lines() {
+        if let Some(v) = line.strip_prefix("event: ") {
+            event = Some(v.to_string());
+        } else if let Some(v) = line.strip_prefix("data: ") {
+            data = Some(v.to_string());
+        }
+    }
+    Some((event?, data?))
+}
+
+/// Loadgen shape: N keep-alive clients, each issuing a request loop with
+/// deterministic fault injection.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Prompt token ids are drawn below this.
+    pub vocab: usize,
+    /// Per-request deadline sent as `timeout_ms` (0 = none).
+    pub timeout_ms: u64,
+    pub chaos: ChaosConfig,
+    /// Fire every client's first request with no stagger (the overload
+    /// burst that provokes 429s).
+    pub burst: bool,
+    /// How many times a 429 is retried (honouring a capped Retry-After).
+    pub max_retries: usize,
+    pub seed: u64,
+    /// Socket timeout for client I/O.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 4,
+            requests_per_client: 4,
+            prompt_len: 8,
+            max_new: 8,
+            vocab: 64,
+            timeout_ms: 30_000,
+            chaos: ChaosConfig::off(),
+            burst: false,
+            max_retries: 8,
+            seed: 0,
+            io_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// Aggregated loadgen outcome (merged across clients).
+#[derive(Debug, Default, Clone)]
+pub struct LoadReport {
+    /// Requests attempted (retries not counted).
+    pub requests: usize,
+    /// Streams that ended with a `done` event.
+    pub ok: usize,
+    /// 429 responses observed (before retries succeeded or gave up).
+    pub rejected_429: usize,
+    /// 429 responses that carried a Retry-After header (must equal
+    /// `rejected_429` — the backpressure gate).
+    pub retry_after_present: usize,
+    /// 503 responses (draining / overloaded front door).
+    pub rejected_503: usize,
+    /// Streams terminated by a server `error` event.
+    pub stream_errors: usize,
+    /// 400s earned by injected garbage (must equal `garbage_injected`).
+    pub garbage_rejected: usize,
+    /// Transport-level failures (connect/read/write).
+    pub io_errors: usize,
+    pub disconnects_injected: usize,
+    pub stalls_injected: usize,
+    pub garbage_injected: usize,
+    /// Token events received.
+    pub tokens: usize,
+    /// Per-completed-stream time-to-first-token, milliseconds.
+    pub ttfb_ms: Vec<f64>,
+    /// Per-completed-stream decode pace, milliseconds per token.
+    pub ms_per_token: Vec<f64>,
+}
+
+impl LoadReport {
+    fn merge(&mut self, o: LoadReport) {
+        self.requests += o.requests;
+        self.ok += o.ok;
+        self.rejected_429 += o.rejected_429;
+        self.retry_after_present += o.retry_after_present;
+        self.rejected_503 += o.rejected_503;
+        self.stream_errors += o.stream_errors;
+        self.garbage_rejected += o.garbage_rejected;
+        self.io_errors += o.io_errors;
+        self.disconnects_injected += o.disconnects_injected;
+        self.stalls_injected += o.stalls_injected;
+        self.garbage_injected += o.garbage_injected;
+        self.tokens += o.tokens;
+        self.ttfb_ms.extend(o.ttfb_ms);
+        self.ms_per_token.extend(o.ms_per_token);
+    }
+
+    pub fn ttfb_percentile(&self, p: f64) -> f64 {
+        percentile(&self.ttfb_ms, p)
+    }
+
+    pub fn ms_per_token_percentile(&self, p: f64) -> f64 {
+        percentile(&self.ms_per_token, p)
+    }
+}
+
+/// Nearest-rank percentile over an unsorted sample (0.0 for empty).
+pub fn percentile(sample: &[f64], p: f64) -> f64 {
+    if sample.is_empty() {
+        return 0.0;
+    }
+    let mut s = sample.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
+/// Drive the serving front end with `cfg.clients` concurrent keep-alive
+/// clients and merge their reports.
+pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> LoadReport {
+    let mut handles = Vec::new();
+    for c in 0..cfg.clients {
+        let cfg = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("hyena-loadgen-{c}"))
+                .spawn(move || client_loop(addr, &cfg, c as u64))
+                .expect("spawn loadgen client"),
+        );
+    }
+    let mut total = LoadReport::default();
+    for h in handles {
+        if let Ok(r) = h.join() {
+            total.merge(r);
+        }
+    }
+    total
+}
+
+fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadReport {
+    let mut report = LoadReport::default();
+    let io_to = Duration::from_millis(cfg.io_timeout_ms.max(1));
+    // Two independent streams: chaos decisions and prompt content, so
+    // toggling chaos never changes the traffic shape.
+    let mut chaos_rng = cfg.chaos.rng(client_id);
+    let mut data_rng = crate::util::rng::Pcg::with_stream(cfg.seed ^ 0x10ad, client_id);
+    if !cfg.burst {
+        // Stagger start-up so steady-state runs interleave naturally.
+        std::thread::sleep(Duration::from_millis(client_id * 3));
+    }
+    let mut conn: Option<HttpClient> = None;
+    for _ in 0..cfg.requests_per_client {
+        report.requests += 1;
+        let prompt: Vec<i32> =
+            (0..cfg.prompt_len).map(|_| data_rng.usize_below(cfg.vocab.max(2)) as i32).collect();
+        let body = generate_body(&prompt, cfg.max_new, cfg.timeout_ms);
+        // Chaos draws are per-request, in a fixed order.
+        let garbage = chaos_rng.f32() < cfg.chaos.garbage;
+        let disconnect = chaos_rng.f32() < cfg.chaos.disconnect;
+        let stall = chaos_rng.f32() < cfg.chaos.stall;
+        let fault = if disconnect {
+            report.disconnects_injected += 1;
+            Fault::DisconnectAfter(1 + chaos_rng.usize_below(cfg.max_new.max(1)))
+        } else if stall {
+            report.stalls_injected += 1;
+            Fault::StallAfter(1, Duration::from_millis(cfg.chaos.stall_ms))
+        } else {
+            Fault::None
+        };
+        if garbage {
+            report.garbage_injected += 1;
+            // Bytes that were never JSON, with an honest content-length.
+            let junk = b"this was never json {{{";
+            let mut c = match take_conn(&mut conn, addr, io_to, &mut report) {
+                Some(c) => c,
+                None => continue,
+            };
+            let sent = c
+                .send("POST", "/generate", junk)
+                .and_then(|_| c.read_response());
+            match sent {
+                Ok(resp) if resp.status == 400 => report.garbage_rejected += 1,
+                Ok(_) => {}
+                Err(_) => report.io_errors += 1,
+            }
+            // The server closes after a 400 (byte sync lost) — reconnect.
+            conn = None;
+            continue;
+        }
+        let mut attempts = 0usize;
+        loop {
+            let mut c = match take_conn(&mut conn, addr, io_to, &mut report) {
+                Some(c) => c,
+                None => break,
+            };
+            match c.generate_stream(&body, fault) {
+                Ok(out) => {
+                    report.tokens += out.tokens.len();
+                    match out.status {
+                        200 if out.aborted => {
+                            // We hung up on purpose; connection is dead.
+                            conn = None;
+                        }
+                        200 => {
+                            if out.done.is_some() {
+                                report.ok += 1;
+                                if let Some(ttfb) = out.ttfb {
+                                    report.ttfb_ms.push(ttfb.as_secs_f64() * 1e3);
+                                    if out.tokens.len() > 1 {
+                                        let decode =
+                                            out.total.saturating_sub(ttfb).as_secs_f64() * 1e3;
+                                        report
+                                            .ms_per_token
+                                            .push(decode / (out.tokens.len() - 1) as f64);
+                                    }
+                                }
+                            } else if out.error.is_some() {
+                                report.stream_errors += 1;
+                            }
+                            conn = Some(c);
+                        }
+                        429 => {
+                            report.rejected_429 += 1;
+                            let retry_after = out
+                                .reject
+                                .as_ref()
+                                .and_then(|r| r.header("retry-after"))
+                                .map(|v| v.to_string());
+                            if retry_after.is_some() {
+                                report.retry_after_present += 1;
+                            }
+                            conn = Some(c);
+                            attempts += 1;
+                            if attempts <= cfg.max_retries {
+                                // Honour Retry-After, capped so tests stay fast.
+                                let ms = retry_after
+                                    .and_then(|v| v.parse::<u64>().ok())
+                                    .map_or(50, |s| (s * 1000).min(100));
+                                std::thread::sleep(Duration::from_millis(ms));
+                                continue;
+                            }
+                        }
+                        503 => {
+                            report.rejected_503 += 1;
+                            conn = None; // server closes draining conns
+                        }
+                        _ => {
+                            conn = None;
+                        }
+                    }
+                }
+                Err(_) => {
+                    report.io_errors += 1;
+                    conn = None;
+                }
+            }
+            break;
+        }
+    }
+    report
+}
+
+fn take_conn(
+    conn: &mut Option<HttpClient>,
+    addr: SocketAddr,
+    io_to: Duration,
+    report: &mut LoadReport,
+) -> Option<HttpClient> {
+    match conn.take() {
+        Some(c) => Some(c),
+        None => match HttpClient::connect(addr, io_to) {
+            Ok(c) => Some(c),
+            Err(_) => {
+                report.io_errors += 1;
+                None
+            }
+        },
+    }
+}
+
+/// The canonical `/generate` request body.
+pub fn generate_body(prompt: &[i32], max_new: usize, timeout_ms: u64) -> String {
+    Json::obj(vec![
+        (
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_new", Json::num(max_new as f64)),
+        ("timeout_ms", Json::num(timeout_ms as f64)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sse_records_parse() {
+        assert_eq!(
+            parse_sse_record("event: token\ndata: {\"t\":5}\n\n"),
+            Some(("token".into(), "{\"t\":5}".into()))
+        );
+        assert_eq!(parse_sse_record("data: {}\n"), None);
+        assert_eq!(parse_sse_record(""), None);
+    }
+
+    #[test]
+    fn response_heads_parse() {
+        let (status, headers, keep) = parse_response_head(
+            b"HTTP/1.1 429 Too Many Requests\r\nRetry-After: 1\r\nConnection: keep-alive",
+        )
+        .unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(
+            headers.iter().find(|(k, _)| k == "retry-after").map(|(_, v)| v.as_str()),
+            Some("1")
+        );
+        assert!(keep);
+        let (_, _, keep) =
+            parse_response_head(b"HTTP/1.1 200 OK\r\nConnection: close").unwrap();
+        assert!(!keep);
+        assert!(parse_response_head(b"garbage").is_err());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&s, 50.0), 3.0);
+        assert_eq!(percentile(&s, 99.0), 5.0);
+        assert_eq!(percentile(&s, 1.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn generate_body_is_valid_json() {
+        let b = generate_body(&[1, 2, 3], 4, 500);
+        let v = Json::parse(&b).unwrap();
+        assert_eq!(v.get("max_new").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("prompt").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("timeout_ms").unwrap().as_usize(), Some(500));
+    }
+}

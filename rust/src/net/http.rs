@@ -1,0 +1,406 @@
+//! Minimal HTTP/1.1 substrate for the serving front end (std::net only).
+//!
+//! Scope is exactly what the wire needs (DESIGN.md §Serving-Net): request
+//! heads with bounded size and keep-alive pipelining, fixed-length JSON
+//! responses, and chunked-transfer SSE streams (one chunk per event, so a
+//! token can be flushed to the socket the moment `decode_step` produces
+//! it). No TLS, no HTTP/2, no request chunked-encoding — those are ROADMAP
+//! residue, not silent gaps: unsupported requests get explicit 4xx/5xx.
+//!
+//! Everything here is pure byte-shuffling over `Read`/`Write`, so the unit
+//! tests run against in-memory buffers and the same code serves `TcpStream`
+//! in `net::server` and the loadgen client in `net::client`.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on a request head (request line + headers). 8 KiB matches
+/// common proxy defaults; a head that exceeds it is a 431-class error.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// One parsed request head. The body (if any) is read separately so the
+/// JSON route can stream it through `net::jsonrd` incrementally.
+#[derive(Debug, Clone)]
+pub struct RequestHead {
+    pub method: String,
+    pub target: String,
+    /// Lower-cased header names, values trimmed, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// `Connection: keep-alive` semantics after this request (HTTP/1.1
+    /// default true, `Connection: close` false).
+    pub keep_alive: bool,
+    pub content_length: Option<usize>,
+}
+
+impl RequestHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request head could not be read.
+#[derive(Debug)]
+pub enum HeadError {
+    /// Clean EOF before any byte of a new request — keep-alive close.
+    Closed,
+    /// Socket error mid-head (includes read timeouts).
+    Io(io::Error),
+    /// Head exceeded [`MAX_HEAD_BYTES`].
+    TooLarge,
+    /// Malformed request line / header.
+    Bad(String),
+}
+
+impl std::fmt::Display for HeadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HeadError::Closed => write!(f, "connection closed"),
+            HeadError::Io(e) => write!(f, "socket error: {e}"),
+            HeadError::TooLarge => write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes"),
+            HeadError::Bad(m) => write!(f, "malformed request: {m}"),
+        }
+    }
+}
+
+/// Read one request head from `r`, consuming bytes from `carry` first
+/// (keep-alive pipelining: bytes past the previous request's body wait
+/// there). On success, `carry` holds any bytes read past the blank line —
+/// the start of the body and/or the next pipelined request.
+pub fn read_head(r: &mut impl Read, carry: &mut Vec<u8>) -> Result<RequestHead, HeadError> {
+    let mut scanned = 0usize;
+    loop {
+        // Scan only fresh bytes for the head terminator.
+        if let Some(end) = find_crlfcrlf(carry, scanned) {
+            let head_bytes = carry[..end].to_vec();
+            carry.drain(..end + 4);
+            return parse_head(&head_bytes);
+        }
+        scanned = carry.len().saturating_sub(3);
+        if carry.len() > MAX_HEAD_BYTES {
+            return Err(HeadError::TooLarge);
+        }
+        let mut buf = [0u8; 2048];
+        match r.read(&mut buf) {
+            Ok(0) => {
+                return if carry.iter().all(|b| b.is_ascii_whitespace()) {
+                    Err(HeadError::Closed)
+                } else {
+                    Err(HeadError::Bad("eof inside request head".into()))
+                };
+            }
+            Ok(n) => carry.extend_from_slice(&buf[..n]),
+            Err(e) => return Err(HeadError::Io(e)),
+        }
+    }
+}
+
+pub(crate) fn find_crlfcrlf(buf: &[u8], from: usize) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    (from..=buf.len() - 4).find(|&i| &buf[i..i + 4] == b"\r\n\r\n")
+}
+
+fn parse_head(bytes: &[u8]) -> Result<RequestHead, HeadError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| HeadError::Bad("head is not valid UTF-8".into()))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if !m.is_empty() && !t.is_empty() => {
+            (m.to_string(), t.to_string(), v)
+        }
+        _ => return Err(HeadError::Bad(format!("bad request line {request_line:?}"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HeadError::Bad(format!("unsupported version {version:?}")));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(HeadError::Bad(format!("bad header line {line:?}")));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let mut head = RequestHead {
+        method,
+        target,
+        keep_alive: version == "HTTP/1.1",
+        content_length: None,
+        headers,
+    };
+    if let Some(c) = head.header("connection") {
+        let c = c.to_ascii_lowercase();
+        if c.contains("close") {
+            head.keep_alive = false;
+        } else if c.contains("keep-alive") {
+            head.keep_alive = true;
+        }
+    }
+    if head.header("transfer-encoding").is_some() {
+        return Err(HeadError::Bad("chunked request bodies unsupported".into()));
+    }
+    if let Some(cl) = head.header("content-length") {
+        let n: usize = cl
+            .parse()
+            .map_err(|_| HeadError::Bad(format!("bad content-length {cl:?}")))?;
+        head.content_length = Some(n);
+    }
+    Ok(head)
+}
+
+/// Read exactly `n` body bytes: from `carry` first, then the socket.
+pub fn read_exact_body(
+    r: &mut impl Read,
+    carry: &mut Vec<u8>,
+    n: usize,
+) -> io::Result<Vec<u8>> {
+    let from_carry = n.min(carry.len());
+    let mut body: Vec<u8> = carry.drain(..from_carry).collect();
+    while body.len() < n {
+        let mut buf = [0u8; 4096];
+        let want = (n - body.len()).min(buf.len());
+        let got = r.read(&mut buf[..want])?;
+        if got == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "eof inside request body",
+            ));
+        }
+        body.extend_from_slice(&buf[..got]);
+    }
+    Ok(body)
+}
+
+/// Canonical reason phrases for the statuses the wire emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a fixed-length response. `extra` headers come after the standard
+/// set; bodies are JSON unless a `content-type` override is passed.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    extra: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", status, reason(status));
+    if !extra.iter().any(|(k, _)| k.eq_ignore_ascii_case("content-type")) {
+        head.push_str("Content-Type: application/json\r\n");
+    }
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n"
+    } else {
+        "Connection: close\r\n"
+    });
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Server-sent-events stream over chunked transfer-encoding: one chunk per
+/// event, flushed immediately, so each decoded token reaches the client as
+/// it is sampled. `finish` writes the terminating zero chunk, which is what
+/// lets a keep-alive client reuse the connection after the stream.
+pub struct SseWriter<W: Write> {
+    w: W,
+    events: u64,
+    finished: bool,
+}
+
+impl<W: Write> SseWriter<W> {
+    /// Write the response head and return the event writer.
+    pub fn start(mut w: W, keep_alive: bool) -> io::Result<SseWriter<W>> {
+        let head = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+             Cache-Control: no-store\r\nTransfer-Encoding: chunked\r\n\
+             Connection: {}\r\n\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(SseWriter { w, events: 0, finished: false })
+    }
+
+    /// Emit one `event:`/`data:` record as a single chunk and flush.
+    pub fn event(&mut self, name: &str, data: &str) -> io::Result<()> {
+        debug_assert!(!self.finished, "event after finish");
+        let payload = format!("event: {name}\ndata: {data}\n\n");
+        let chunk = format!("{:x}\r\n{payload}\r\n", payload.len());
+        self.w.write_all(chunk.as_bytes())?;
+        self.w.flush()?;
+        self.events += 1;
+        Ok(())
+    }
+
+    /// Events written so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Terminate the chunked stream (zero-length chunk).
+    pub fn finish(mut self) -> io::Result<()> {
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_of(raw: &[u8]) -> Result<(RequestHead, Vec<u8>), HeadError> {
+        let mut carry = Vec::new();
+        let mut r = io::Cursor::new(raw.to_vec());
+        let h = read_head(&mut r, &mut carry)?;
+        // Drain whatever the cursor still holds into carry, as the server
+        // loop would on the next read.
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        carry.extend_from_slice(&rest);
+        Ok((h, carry))
+    }
+
+    #[test]
+    fn parses_post_with_body_and_pipelined_next_request() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n\
+                    {\"a\":1}GET /healthz HTTP/1.1\r\n\r\n";
+        let (h, mut carry) = head_of(raw).unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.target, "/generate");
+        assert!(h.keep_alive);
+        assert_eq!(h.content_length, Some(7));
+        let mut empty = io::Cursor::new(Vec::new());
+        let body = read_exact_body(&mut empty, &mut carry, 7).unwrap();
+        assert_eq!(&body, b"{\"a\":1}");
+        // The pipelined GET stays in carry for the next read_head call.
+        let mut r2 = io::Cursor::new(Vec::new());
+        let h2 = read_head(&mut r2, &mut carry).unwrap();
+        assert_eq!(h2.method, "GET");
+        assert_eq!(h2.target, "/healthz");
+    }
+
+    #[test]
+    fn connection_close_and_http10_disable_keep_alive() {
+        let (h, _) = head_of(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+        let (h, _) = head_of(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+    }
+
+    #[test]
+    fn split_head_across_reads_reassembles() {
+        struct TwoPart(Vec<Vec<u8>>);
+        impl Read for TwoPart {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.0.is_empty() {
+                    return Ok(0);
+                }
+                let part = self.0.remove(0);
+                buf[..part.len()].copy_from_slice(&part);
+                Ok(part.len())
+            }
+        }
+        let raw = b"GET /mem HTTP/1.1\r\nHost: y\r\n\r\n";
+        for cut in 1..raw.len() - 1 {
+            let mut r = TwoPart(vec![raw[..cut].to_vec(), raw[cut..].to_vec()]);
+            let mut carry = Vec::new();
+            let h = read_head(&mut r, &mut carry).unwrap();
+            assert_eq!(h.target, "/mem", "split at {cut}");
+            assert!(carry.is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        assert!(matches!(head_of(b"\r\n\r\n"), Err(HeadError::Bad(_))));
+        assert!(matches!(head_of(b"GET /\r\n\r\n"), Err(HeadError::Bad(_))));
+        assert!(matches!(
+            head_of(b"GET / HTTP/2.0\r\n\r\n"),
+            Err(HeadError::Bad(_))
+        ));
+        assert!(matches!(
+            head_of(b"POST / HTTP/1.1\r\nContent-Length: x\r\n\r\n"),
+            Err(HeadError::Bad(_))
+        ));
+        assert!(matches!(
+            head_of(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HeadError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_bad() {
+        assert!(matches!(head_of(b""), Err(HeadError::Closed)));
+        // EOF mid-head is a protocol error, not a clean close.
+        assert!(matches!(head_of(b"GET / HT"), Err(HeadError::Bad(_))));
+    }
+
+    #[test]
+    fn oversized_head_is_rejected() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("X-Pad: {}\r\n", "y".repeat(MAX_HEAD_BYTES)).as_bytes());
+        raw.extend_from_slice(b"\r\n");
+        assert!(matches!(head_of(&raw), Err(HeadError::TooLarge)));
+    }
+
+    #[test]
+    fn response_writer_emits_content_length_and_connection() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, &[("Retry-After", "1")], b"{\"e\":1}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("{\"e\":1}"));
+    }
+
+    #[test]
+    fn sse_writer_chunks_each_event_and_terminates() {
+        let mut out = Vec::new();
+        {
+            let mut sse = SseWriter::start(&mut out, true).unwrap();
+            sse.event("token", "{\"t\":5}").unwrap();
+            sse.event("done", "{}").unwrap();
+            assert_eq!(sse.events(), 2);
+            sse.finish().unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap_or("");
+        // First chunk: hex length, then the SSE record.
+        let payload = "event: token\ndata: {\"t\":5}\n\n";
+        assert!(
+            body.starts_with(&format!("{:x}\r\n{payload}\r\n", payload.len())),
+            "chunk framing wrong: {body:?}"
+        );
+        assert!(text.ends_with("0\r\n\r\n"), "missing terminating chunk");
+    }
+}

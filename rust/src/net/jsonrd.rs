@@ -1,0 +1,405 @@
+//! Incremental streaming JSON request reader (the serving wire's framer).
+//!
+//! A network peer hands the server bytes, not values: a request body can
+//! arrive split at any byte boundary, truncated, oversized, or as garbage
+//! that was never JSON. [`JsonReader`] turns that byte stream back into
+//! `util::json::Json` values without buffering more than one frame:
+//!
+//! * **Framing** is a byte-level scanner (string/escape/nesting aware) that
+//!   runs as bytes arrive and never re-scans a byte: `feed` is O(new bytes).
+//!   A frame is one complete top-level JSON *object* — requests are always
+//!   objects, so any first significant byte other than `{` is rejected
+//!   immediately instead of waiting for a balance that will never come.
+//! * **Parsing** reuses [`Json::parse`] on the framed slice, so the wire
+//!   path cannot drift from the manifest/report parser's grammar. Balanced
+//!   but invalid bytes (`{"a":tru}`) fail there, with a byte position.
+//! * **Bounds**: a frame that exceeds `max_bytes` without completing is an
+//!   error, so a hostile or broken client cannot grow the buffer without
+//!   limit — the reader is the wire's first backpressure point.
+//! * **Pipelining**: bytes after a completed frame are kept for the next
+//!   call, so keep-alive clients may send back-to-back requests.
+//!
+//! The scanner is property-fuzzed with `util::prop` below: every serialized
+//! value split at every byte offset reassembles to the same value, no
+//! strict prefix ever completes, and garbage/oversize inputs error without
+//! panicking — the truncation/split/garbage gate of the serving ISSUE.
+
+use crate::util::json::Json;
+
+/// Outcome of feeding bytes to the reader.
+#[derive(Debug, PartialEq)]
+pub enum Frame {
+    /// No complete frame yet — feed more bytes.
+    Incomplete,
+    /// One complete value (trailing bytes, if any, are retained).
+    Complete(Json),
+}
+
+/// Why the byte stream cannot be a request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonRdError {
+    /// First significant byte was not `{` — not a request object.
+    NotAnObject { byte: u8, pos: usize },
+    /// The frame grew past the configured size cap before completing.
+    TooLarge { cap: usize },
+    /// Braces balanced but the bytes are not valid JSON.
+    Parse(String),
+}
+
+impl std::fmt::Display for JsonRdError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonRdError::NotAnObject { byte, pos } => write!(
+                f,
+                "request is not a JSON object (byte {byte:#04x} at offset {pos})"
+            ),
+            JsonRdError::TooLarge { cap } => {
+                write!(f, "request body exceeds {cap} bytes")
+            }
+            JsonRdError::Parse(msg) => write!(f, "request body is not valid JSON: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonRdError {}
+
+/// Incremental reader for one connection. Reusable across frames (keep the
+/// instance for the connection's lifetime); a frame error poisons the
+/// stream — callers should close the connection, as byte sync is lost.
+#[derive(Debug)]
+pub struct JsonReader {
+    buf: Vec<u8>,
+    max_bytes: usize,
+    /// Scan frontier: bytes before `pos` have been classified already.
+    pos: usize,
+    /// Current brace/bracket nesting depth (strings excluded).
+    depth: usize,
+    /// Inside a string literal.
+    in_str: bool,
+    /// Previous in-string byte was a backslash.
+    esc: bool,
+    /// Seen the opening `{` of the current frame.
+    started: bool,
+    /// A frame error occurred; the stream is out of sync.
+    poisoned: bool,
+}
+
+impl JsonReader {
+    pub fn new(max_bytes: usize) -> JsonReader {
+        JsonReader {
+            buf: Vec::new(),
+            max_bytes,
+            pos: 0,
+            depth: 0,
+            in_str: false,
+            esc: false,
+            started: false,
+            poisoned: false,
+        }
+    }
+
+    /// Bytes buffered but not yet consumed by a completed frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Hand back the unconsumed residue (bytes past the last completed
+    /// frame) and reset the scanner — the connection loop returns these to
+    /// its carry buffer so pipelined HTTP requests stay in byte sync.
+    pub fn take_rest(&mut self) -> Vec<u8> {
+        self.pos = 0;
+        self.depth = 0;
+        self.in_str = false;
+        self.esc = false;
+        self.started = false;
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Append `bytes` and scan for a frame boundary. On `Complete`, the
+    /// frame's bytes are consumed; the remainder stays buffered for the
+    /// next call (`feed(&[])` continues scanning retained bytes).
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Frame, JsonRdError> {
+        if self.poisoned {
+            return Err(JsonRdError::Parse("stream poisoned by earlier error".into()));
+        }
+        self.buf.extend_from_slice(bytes);
+        while self.pos < self.buf.len() {
+            let c = self.buf[self.pos];
+            if !self.started {
+                // Leading whitespace is legal between frames; anything else
+                // that is not `{` can never frame a request object.
+                if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+                    self.pos += 1;
+                    continue;
+                }
+                if c != b'{' {
+                    self.poisoned = true;
+                    return Err(JsonRdError::NotAnObject { byte: c, pos: self.pos });
+                }
+                // Drop inter-frame whitespace so the cap measures the frame.
+                self.buf.drain(..self.pos);
+                self.pos = 0;
+                self.started = true;
+                self.depth = 1;
+                self.pos += 1;
+                continue;
+            }
+            if self.in_str {
+                if self.esc {
+                    self.esc = false;
+                } else if c == b'\\' {
+                    self.esc = true;
+                } else if c == b'"' {
+                    self.in_str = false;
+                }
+            } else {
+                match c {
+                    b'"' => self.in_str = true,
+                    b'{' | b'[' => self.depth += 1,
+                    b'}' | b']' => {
+                        // A stray closer below depth 1 is caught by the
+                        // parser below once the frame "balances"; depth is
+                        // saturating so the scanner itself cannot underflow.
+                        self.depth = self.depth.saturating_sub(1);
+                    }
+                    _ => {}
+                }
+            }
+            self.pos += 1;
+            if self.started && self.depth == 0 {
+                // Frame closed: hand the exact byte range to the parser.
+                let frame_end = self.pos;
+                let text = std::str::from_utf8(&self.buf[..frame_end])
+                    .map_err(|e| JsonRdError::Parse(e.to_string()));
+                let parsed = text.and_then(|t| {
+                    Json::parse(t).map_err(|e| JsonRdError::Parse(e.to_string()))
+                });
+                // Reset for the next frame whether or not parse succeeded —
+                // the brace scan consumed a balanced region either way.
+                self.buf.drain(..frame_end);
+                self.pos = 0;
+                self.started = false;
+                self.in_str = false;
+                self.esc = false;
+                return match parsed {
+                    Ok(v) => Ok(Frame::Complete(v)),
+                    Err(e) => {
+                        self.poisoned = true;
+                        Err(e)
+                    }
+                };
+            }
+        }
+        if self.buf.len() > self.max_bytes {
+            self.poisoned = true;
+            return Err(JsonRdError::TooLarge { cap: self.max_bytes });
+        }
+        Ok(Frame::Incomplete)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Pcg;
+
+    /// Random JSON value generator for the fuzz properties (depth-bounded).
+    fn gen_json(rng: &mut Pcg, depth: usize) -> Json {
+        let roll = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match roll {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f32() < 0.5),
+            2 => Json::Num((rng.below(100_000) as f64) - 50_000.0),
+            3 => {
+                let n = rng.usize_below(8);
+                let s: String = (0..n)
+                    .map(|_| {
+                        // Cover escapes, unicode, and plain ASCII.
+                        const POOL: &[char] =
+                            &['a', 'Z', '"', '\\', '\n', 'é', '😀', ' ', ':', '{', '}'];
+                        POOL[rng.usize_below(POOL.len())]
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let n = rng.usize_below(4);
+                Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+            }
+            _ => gen_obj(rng, depth - 1),
+        }
+    }
+
+    fn gen_obj(rng: &mut Pcg, depth: usize) -> Json {
+        let n = rng.usize_below(5);
+        Json::Obj(
+            (0..n)
+                .map(|i| (format!("k{i}"), gen_json(rng, depth)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn whole_frame_in_one_feed() {
+        let mut r = JsonReader::new(1 << 16);
+        let got = r.feed(br#"{"prompt":[1,2,3],"max_new":4}"#).unwrap();
+        let Frame::Complete(v) = got else { panic!("expected a complete frame") };
+        assert_eq!(v.get("max_new").unwrap().as_usize(), Some(4));
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn prop_split_at_every_byte_offset_reassembles() {
+        // The wire gives no framing guarantees: a request must reassemble
+        // identically no matter where the kernel splits the bytes.
+        Prop::new("jsonrd split-at-every-byte").cases(60).check(|rng| {
+            let v = gen_obj(rng, 2);
+            let s = v.to_string();
+            let bytes = s.as_bytes();
+            for cut in 0..=bytes.len() {
+                let mut r = JsonReader::new(1 << 16);
+                let first = r.feed(&bytes[..cut]).map_err(|e| format!("{e} at cut {cut}"))?;
+                if cut < bytes.len() {
+                    prop_assert!(
+                        first == Frame::Incomplete,
+                        "strict prefix completed at cut {cut} of {s:?}"
+                    );
+                    let second =
+                        r.feed(&bytes[cut..]).map_err(|e| format!("{e} at cut {cut}"))?;
+                    prop_assert!(
+                        second == Frame::Complete(v.clone()),
+                        "split at {cut} reassembled wrong for {s:?}"
+                    );
+                } else {
+                    prop_assert!(
+                        first == Frame::Complete(v.clone()),
+                        "whole buffer did not complete for {s:?}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_byte_at_a_time_matches_one_shot() {
+        Prop::new("jsonrd byte-at-a-time").cases(60).check(|rng| {
+            let v = gen_obj(rng, 2);
+            let s = v.to_string();
+            let mut r = JsonReader::new(1 << 16);
+            let mut done = None;
+            for (i, b) in s.as_bytes().iter().enumerate() {
+                match r.feed(std::slice::from_ref(b)).map_err(|e| format!("{e}"))? {
+                    Frame::Incomplete => {
+                        prop_assert!(i + 1 < s.len(), "never completed: {s:?}")
+                    }
+                    Frame::Complete(got) => {
+                        prop_assert!(i + 1 == s.len(), "completed early at byte {i}: {s:?}");
+                        done = Some(got);
+                    }
+                }
+            }
+            prop_assert!(done == Some(v), "value mismatch for {s:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncation_never_yields_a_value() {
+        Prop::new("jsonrd truncation").cases(60).check(|rng| {
+            let v = gen_obj(rng, 2);
+            let s = v.to_string();
+            let cut = rng.usize_below(s.len().max(1));
+            let mut r = JsonReader::new(1 << 16);
+            let got = r.feed(&s.as_bytes()[..cut]).map_err(|e| format!("{e}"))?;
+            prop_assert!(got == Frame::Incomplete, "truncated frame completed: {s:?}@{cut}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_garbage_errors_without_panicking() {
+        Prop::new("jsonrd garbage").cases(120).check(|rng| {
+            let n = 1 + rng.usize_below(64);
+            let junk: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let mut r = JsonReader::new(1 << 12);
+            // Any outcome but a panic is acceptable; a Complete must at
+            // least be an object (the only frame the scanner accepts).
+            if let Ok(Frame::Complete(v)) = r.feed(&junk) {
+                prop_assert!(
+                    matches!(v, Json::Obj(_)),
+                    "non-object completed from garbage: {v:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_non_object_first_byte() {
+        for body in ["[1,2,3]", "42", "\"hi\"", "GET / HTTP/1.1", "tru"] {
+            let mut r = JsonReader::new(1 << 12);
+            match r.feed(body.as_bytes()) {
+                Err(JsonRdError::NotAnObject { .. }) => {}
+                other => panic!("{body:?} should be NotAnObject, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_frames() {
+        let mut r = JsonReader::new(16);
+        // An unterminated object that keeps growing must hit the cap.
+        let mut out = None;
+        for _ in 0..8 {
+            match r.feed(br#"{"k":"xxxxxxxx"#) {
+                Ok(Frame::Incomplete) => continue,
+                other => {
+                    out = Some(other);
+                    break;
+                }
+            }
+        }
+        match out {
+            Some(Err(JsonRdError::TooLarge { cap: 16 })) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn balanced_but_invalid_is_a_parse_error() {
+        let mut r = JsonReader::new(1 << 12);
+        match r.feed(b"{\"a\":tru}") {
+            Err(JsonRdError::Parse(_)) => {}
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+        // The stream is poisoned afterwards: byte sync is gone.
+        assert!(r.feed(b"{}").is_err());
+    }
+
+    #[test]
+    fn pipelined_frames_come_out_one_per_feed() {
+        let mut r = JsonReader::new(1 << 12);
+        let two = br#"{"a":1} {"b":2}"#;
+        let Frame::Complete(first) = r.feed(two).unwrap() else {
+            panic!("first frame incomplete")
+        };
+        assert_eq!(first.get("a").unwrap().as_usize(), Some(1));
+        assert!(r.pending() > 0, "second frame's bytes were dropped");
+        let Frame::Complete(second) = r.feed(&[]).unwrap() else {
+            panic!("second frame incomplete")
+        };
+        assert_eq!(second.get("b").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn braces_inside_strings_do_not_frame() {
+        let mut r = JsonReader::new(1 << 12);
+        let s = br#"{"a":"}{","b":"\"}\""}"#;
+        let Frame::Complete(v) = r.feed(s).unwrap() else { panic!("incomplete") };
+        assert_eq!(v.get("a").unwrap().as_str(), Some("}{"));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("\"}\""));
+    }
+}

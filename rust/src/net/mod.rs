@@ -1,0 +1,259 @@
+//! Network serving front end: HTTP/1.1 + SSE token streaming over the
+//! session engine, robust-by-construction (DESIGN.md §Serving-Net).
+//!
+//! Layering:
+//! * [`jsonrd`] — incremental streaming JSON request reader (framing,
+//!   bounds, pipelining; property-fuzzed against splits/truncation/garbage).
+//! * [`http`] — HTTP/1.1 byte substrate: bounded request heads, fixed
+//!   responses, chunked SSE event streams.
+//! * [`server`] — the listener: connection workers on a `util::pool`
+//!   WorkerPool, request routing, per-request deadlines, admission control
+//!   with backpressure (429 + Retry-After), slow-client eviction, graceful
+//!   drain (SIGTERM/ctrl-c), structured access logs.
+//! * [`client`] — minimal keep-alive HTTP/SSE client + the chaos loadgen
+//!   that drives the resilience gates.
+//!
+//! This module owns the pieces both sides share: [`ChaosConfig`] (seeded
+//! fault injection, `HYENA_CHAOS`), [`NetConfig`] (listener tuning) and the
+//! access-log timestamp helper. Everything is std-only.
+
+pub mod client;
+pub mod http;
+pub mod jsonrd;
+pub mod server;
+
+use crate::util::rng::Pcg;
+
+/// Deterministic fault-injection plan, parsed from
+/// `HYENA_CHAOS=disconnect:p,stall:p,garbage:p[,stall_ms:N][,seed:N]`.
+///
+/// The same config drives both sides of the wire (the chaos matrix in
+/// DESIGN.md §Serving-Net):
+/// * **loadgen clients** inject `garbage` (malformed request bytes → the
+///   400 path), `disconnect` (socket closed mid-stream → the worker's
+///   token push observes a dead stream and retires the session), and
+///   `stall` (the client stops reading for `stall_ms` → the bounded write
+///   buffer fills and the server evicts the slow client);
+/// * **the listener** injects `disconnect` (abortive close after accept)
+///   and `stall` (delayed first write), exercising the client/loadgen
+///   recovery paths in turn.
+///
+/// Decisions come from a seeded [`Pcg`] stream per participant
+/// ([`ChaosConfig::rng`]), so a failing chaos run replays exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Probability of dropping the connection mid-request/stream.
+    pub disconnect: f32,
+    /// Probability of stalling (not reading / delaying a write).
+    pub stall: f32,
+    /// Probability of sending a malformed request (loadgen only).
+    pub garbage: f32,
+    /// Stall duration when a stall fires.
+    pub stall_ms: u64,
+    /// Base seed for the per-participant decision streams.
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig { disconnect: 0.0, stall: 0.0, garbage: 0.0, stall_ms: 200, seed: 0 }
+    }
+}
+
+impl ChaosConfig {
+    /// No faults at all.
+    pub fn off() -> ChaosConfig {
+        ChaosConfig::default()
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.disconnect <= 0.0 && self.stall <= 0.0 && self.garbage <= 0.0
+    }
+
+    /// Parse the `HYENA_CHAOS` spelling. Unknown keys and malformed pairs
+    /// are errors — a chaos run with a silently-ignored typo would "pass"
+    /// without injecting anything.
+    pub fn parse(spec: &str) -> Result<ChaosConfig, String> {
+        let mut c = ChaosConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once(':') else {
+                return Err(format!("chaos spec {part:?} is not key:value"));
+            };
+            let (k, v) = (k.trim(), v.trim());
+            let prob = |v: &str| -> Result<f32, String> {
+                let p: f32 =
+                    v.parse().map_err(|_| format!("chaos {k}: bad probability {v:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("chaos {k}: probability {p} outside [0,1]"));
+                }
+                Ok(p)
+            };
+            match k {
+                "disconnect" => c.disconnect = prob(v)?,
+                "stall" => c.stall = prob(v)?,
+                "garbage" => c.garbage = prob(v)?,
+                "stall_ms" => {
+                    c.stall_ms =
+                        v.parse().map_err(|_| format!("chaos stall_ms: bad value {v:?}"))?
+                }
+                "seed" => {
+                    c.seed = v.parse().map_err(|_| format!("chaos seed: bad value {v:?}"))?
+                }
+                _ => return Err(format!("chaos spec has unknown key {k:?}")),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Read `HYENA_CHAOS` (absent/empty → off; malformed → `Err`, loud).
+    pub fn from_env() -> Result<ChaosConfig, String> {
+        match std::env::var("HYENA_CHAOS") {
+            Ok(v) if !v.trim().is_empty() => ChaosConfig::parse(&v),
+            _ => Ok(ChaosConfig::off()),
+        }
+    }
+
+    /// Decision stream for one participant (a loadgen client index, or the
+    /// listener). Distinct participants get independent streams so adding
+    /// a draw in one never shifts another — same discipline as the data
+    /// generators.
+    pub fn rng(&self, participant: u64) -> Pcg {
+        Pcg::with_stream(self.seed ^ 0xc0a5_5e11, participant)
+    }
+}
+
+/// Listener tuning. Everything has a serving-sane default; the CLI maps
+/// `serve --listen` flags onto the fields it exposes.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address (`127.0.0.1:8199`; port 0 picks a free port, printed
+    /// at startup and exposed via `NetServer::addr`).
+    pub addr: String,
+    /// Connection worker threads — the hard cap on concurrently *served*
+    /// connections; accepts beyond it queue briefly, then get 503.
+    pub conn_threads: usize,
+    /// Generation requests allowed to wait in the engine queue beyond live
+    /// session capacity before submissions bounce with 429 + Retry-After.
+    pub queue_cap: usize,
+    /// Per-stream bounded token buffer (tokens the engine may run ahead of
+    /// a slow client before evicting it).
+    pub token_buf: usize,
+    /// Default per-request deadline when the request carries no
+    /// `timeout_ms` (0 = no default deadline).
+    pub deadline_ms: u64,
+    /// Budget for finishing live streams after drain begins; sessions
+    /// still live at the deadline are force-retired with an error event.
+    pub drain_ms: u64,
+    /// Socket read timeout (idle keep-alive connections poll drain at this
+    /// cadence) and write timeout (a write blocked longer means the client
+    /// is gone or hopeless).
+    pub io_timeout_ms: u64,
+    /// Request body cap handed to the JSON reader.
+    pub max_body_bytes: usize,
+    /// Listener-side fault injection (off in production).
+    pub chaos: ChaosConfig,
+    /// Suppress per-request access logs (gates still see the summary).
+    pub quiet: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:8199".into(),
+            conn_threads: 32,
+            queue_cap: 0, // 0 = 2 × session capacity, resolved at start
+            token_buf: 128,
+            deadline_ms: 30_000,
+            drain_ms: 5_000,
+            io_timeout_ms: 10_000,
+            max_body_bytes: 4 << 20,
+            chaos: ChaosConfig::off(),
+            quiet: false,
+        }
+    }
+}
+
+/// Milliseconds since the Unix epoch (the access log's `ts`).
+pub fn epoch_ms() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}
+
+/// UTC ISO-8601 `YYYY-MM-DDTHH:MM:SS.mmmZ` for an epoch-milliseconds
+/// stamp (civil-from-days, Howard Hinnant's algorithm) — hand-rolled
+/// because the vendored set has no chrono and a raw epoch integer makes
+/// access logs needlessly hostile to humans.
+pub fn iso8601(epoch_ms: u128) -> String {
+    let secs = (epoch_ms / 1000) as i64;
+    let ms = (epoch_ms % 1000) as u32;
+    let days = secs.div_euclid(86_400);
+    let sod = secs.rem_euclid(86_400);
+    let (h, m, s) = (sod / 3600, (sod % 3600) / 60, sod % 60);
+    // Civil-from-days: shift epoch to 0000-03-01-based eras.
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let month = if mp < 10 { mp + 3 } else { mp - 9 };
+    let year = if month <= 2 { y + 1 } else { y };
+    format!("{year:04}-{month:02}-{d:02}T{h:02}:{m:02}:{s:02}.{ms:03}Z")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_parses_the_documented_spelling() {
+        let c = ChaosConfig::parse("disconnect:0.25,stall:0.5,garbage:0.1").unwrap();
+        assert_eq!(c.disconnect, 0.25);
+        assert_eq!(c.stall, 0.5);
+        assert_eq!(c.garbage, 0.1);
+        assert_eq!(c.stall_ms, 200);
+        let c = ChaosConfig::parse("garbage:1,seed:42,stall_ms:50").unwrap();
+        assert_eq!((c.garbage, c.seed, c.stall_ms), (1.0, 42, 50));
+        assert!(ChaosConfig::parse("").unwrap().is_off());
+    }
+
+    #[test]
+    fn chaos_rejects_typos_loudly() {
+        assert!(ChaosConfig::parse("disconect:0.5").is_err());
+        assert!(ChaosConfig::parse("disconnect:1.5").is_err());
+        assert!(ChaosConfig::parse("disconnect").is_err());
+        assert!(ChaosConfig::parse("stall:x").is_err());
+    }
+
+    #[test]
+    fn chaos_streams_are_deterministic_and_per_participant() {
+        let c = ChaosConfig::parse("disconnect:0.5,seed:7").unwrap();
+        let a: Vec<u32> = {
+            let mut r = c.rng(0);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let a2: Vec<u32> = {
+            let mut r = c.rng(0);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut r = c.rng(1);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(a, a2, "chaos stream not replayable");
+        assert_ne!(a, b, "participants share a chaos stream");
+    }
+
+    #[test]
+    fn iso8601_known_stamps() {
+        assert_eq!(iso8601(0), "1970-01-01T00:00:00.000Z");
+        // 2000-03-01 00:00:00 UTC = 951868800s (leap-century boundary).
+        assert_eq!(iso8601(951_868_800_000), "2000-03-01T00:00:00.000Z");
+        // 2026-08-11 12:34:56.789 UTC.
+        assert_eq!(iso8601(1_786_451_696_789), "2026-08-11T12:34:56.789Z");
+    }
+}

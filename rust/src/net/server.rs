@@ -1,0 +1,795 @@
+//! The HTTP/1.1 listener: routes, per-request deadlines, backpressure,
+//! slow-client eviction, graceful drain, access logs (DESIGN.md
+//! §Serving-Net).
+//!
+//! Threading: one non-blocking accept thread hands sockets to
+//! `conn_threads` long-lived connection workers running on a *dedicated*
+//! `util::pool::WorkerPool` (dedicated so blocked socket reads can never
+//! starve the engine's compute pool). The hand-off channel is bounded at
+//! `conn_threads`: when every worker is busy and the lane is full the
+//! accept thread answers `503` inline instead of queueing connections
+//! without bound — backpressure starts at the front door.
+//!
+//! Routes:
+//! * `POST /generate` — body is framed by `net::jsonrd` (bounded,
+//!   incremental); `{"prompt":[...],"max_new":N}` plus optional
+//!   `temperature`/`top_k`, `timeout_ms` (deadline), `stream:false` for a
+//!   single JSON reply. The default reply is an SSE stream: one `token`
+//!   event per decoded token, then exactly one `done` or `error` event.
+//! * `GET /healthz` — liveness + drain state.
+//! * `GET /mem` — the engine's `MemReport` (session/leak accounting).
+//!
+//! Resilience state machine per request: `admitted → streaming →
+//! (done | deadline | evicted | disconnected | drained)`; every terminal
+//! state frees the decode session (the loopback chaos tests assert
+//! `decode_sessions_live == 0` afterwards) and, when the socket still
+//! works, says what happened (`error` event / 4xx / 5xx) rather than
+//! vanishing.
+//!
+//! Drain: SIGINT/SIGTERM (via [`install_drain_signals`]) or
+//! [`NetServer::trigger_drain`] stops the accept loop, rejects new
+//! submissions (`503`), lets live streams finish within `drain_ms`,
+//! force-retires the rest with `error` events, then reports leak counts
+//! from `mem_report` — the worker outlives the drain precisely so that
+//! report stays answerable.
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::backend::MemReport;
+use crate::coordinator::server::{
+    AdmitError, DrainReport, GenerateRequest, ServerHandle, StreamEvent,
+};
+use crate::coordinator::generation::Sampling;
+use crate::net::http::{
+    self, read_exact_body, read_head, HeadError, RequestHead, SseWriter,
+};
+use crate::net::jsonrd::{Frame, JsonReader};
+use crate::net::{epoch_ms, iso8601, NetConfig};
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+
+/// Process-wide drain request set by the SIGINT/SIGTERM handlers. Kept
+/// separate from the per-server flag so concurrent test servers cannot
+/// drain each other; production runs one listener per process.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGINT (ctrl-c) and SIGTERM handlers that request a graceful
+/// drain. Hand-rolled `signal(2)` binding — the only libc symbol needed,
+/// and the handler body (one atomic store) is async-signal-safe.
+pub fn install_drain_signals() {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_sig(_signum: i32) {
+            SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(2, on_sig as usize); // SIGINT
+            signal(15, on_sig as usize); // SIGTERM
+        }
+    }
+}
+
+/// Has a drain been requested by signal?
+pub fn drain_signalled() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Wire counters, all monotone (snapshot via [`StatsSnapshot`]).
+#[derive(Default)]
+struct Stats {
+    conns: AtomicU64,
+    requests: AtomicU64,
+    s2xx: AtomicU64,
+    s4xx: AtomicU64,
+    s429: AtomicU64,
+    s5xx: AtomicU64,
+    streams: AtomicU64,
+    tokens: AtomicU64,
+    chaos_disconnects: AtomicU64,
+    chaos_stalls: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub conns: u64,
+    pub requests: u64,
+    pub s2xx: u64,
+    pub s4xx: u64,
+    pub s429: u64,
+    pub s5xx: u64,
+    pub streams: u64,
+    pub tokens: u64,
+    pub chaos_disconnects: u64,
+    pub chaos_stalls: u64,
+}
+
+impl Stats {
+    fn count_status(&self, status: u16) {
+        self.requests.fetch_add(1, Ordering::SeqCst);
+        match status {
+            429 => self.s429.fetch_add(1, Ordering::SeqCst),
+            200..=299 => self.s2xx.fetch_add(1, Ordering::SeqCst),
+            400..=499 => self.s4xx.fetch_add(1, Ordering::SeqCst),
+            _ => self.s5xx.fetch_add(1, Ordering::SeqCst),
+        };
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            conns: self.conns.load(Ordering::SeqCst),
+            requests: self.requests.load(Ordering::SeqCst),
+            s2xx: self.s2xx.load(Ordering::SeqCst),
+            s4xx: self.s4xx.load(Ordering::SeqCst),
+            s429: self.s429.load(Ordering::SeqCst),
+            s5xx: self.s5xx.load(Ordering::SeqCst),
+            streams: self.streams.load(Ordering::SeqCst),
+            tokens: self.tokens.load(Ordering::SeqCst),
+            chaos_disconnects: self.chaos_disconnects.load(Ordering::SeqCst),
+            chaos_stalls: self.chaos_stalls.load(Ordering::SeqCst),
+        }
+    }
+}
+
+struct Shared {
+    handle: ServerHandle,
+    cfg: NetConfig,
+    drain: AtomicBool,
+    stats: Stats,
+    conn_seq: AtomicU64,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || drain_signalled()
+    }
+}
+
+/// What the listener did over its lifetime, produced by
+/// [`NetServer::finish`] after the drain completes.
+#[derive(Debug)]
+pub struct NetReport {
+    pub drain: DrainReport,
+    /// `decode_sessions_live` after the drain — the leak gate; must be 0.
+    pub leaked_sessions: usize,
+    pub mem: Option<MemReport>,
+    pub stats: StatsSnapshot,
+}
+
+/// A running listener bound to a socket address.
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    conn_sup: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving `handle`. Port 0 binds a free
+    /// port — read the result from [`NetServer::addr`].
+    pub fn start(handle: ServerHandle, mut cfg: NetConfig) -> Result<NetServer> {
+        if cfg.queue_cap == 0 {
+            cfg.queue_cap = handle.capacity();
+        }
+        handle.set_queue_cap(cfg.queue_cap);
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let conn_threads = cfg.conn_threads.max(1);
+        let (disp_tx, disp_rx) = sync_channel::<TcpStream>(conn_threads);
+        let disp_rx = Arc::new(Mutex::new(disp_rx));
+        let shared = Arc::new(Shared {
+            handle,
+            cfg,
+            drain: AtomicBool::new(false),
+            stats: Stats::default(),
+            conn_seq: AtomicU64::new(0),
+        });
+        let accept = std::thread::Builder::new()
+            .name("hyena-net-accept".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || accept_loop(listener, disp_tx, &shared)
+            })
+            .context("spawn accept thread")?;
+        let conn_sup = std::thread::Builder::new()
+            .name("hyena-net-conns".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || {
+                    // Dedicated pool: connection workers block on sockets,
+                    // which must never occupy the engine's compute threads.
+                    let pool = WorkerPool::new(conn_threads);
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+                    for _ in 0..conn_threads {
+                        let shared = Arc::clone(&shared);
+                        let rx = Arc::clone(&disp_rx);
+                        tasks.push(Box::new(move || conn_loop(&shared, &rx)));
+                    }
+                    pool.scope_run(tasks);
+                }
+            })
+            .context("spawn connection supervisor")?;
+        Ok(NetServer { addr, shared, accept: Some(accept), conn_sup: Some(conn_sup) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain (what SIGTERM does, but scoped to this
+    /// server — tests use this).
+    pub fn trigger_drain(&self) {
+        self.shared.drain.store(true, Ordering::SeqCst);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.draining()
+    }
+
+    /// Block until a drain is requested (signal or trigger), then drain
+    /// and report.
+    pub fn run_until_drained(self) -> Result<NetReport> {
+        while !self.shared.draining() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.finish()
+    }
+
+    /// Execute the drain protocol: stop accepting, stop admitting, finish
+    /// live streams within `drain_ms`, force-retire the rest, join every
+    /// wire thread, then prove session accounting via `mem_report`.
+    pub fn finish(mut self) -> Result<NetReport> {
+        self.shared.drain.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            a.join().map_err(|_| anyhow!("accept thread panicked"))?;
+        }
+        self.shared.handle.begin_drain();
+        let drain = self
+            .shared
+            .handle
+            .drain(Duration::from_millis(self.shared.cfg.drain_ms))
+            .unwrap_or_default();
+        if let Some(c) = self.conn_sup.take() {
+            c.join().map_err(|_| anyhow!("connection workers panicked"))?;
+        }
+        let mem = self.shared.handle.mem_report();
+        let leaked = mem.as_ref().map_or(0, |m| m.decode_sessions_live) as usize;
+        Ok(NetReport { drain, leaked_sessions: leaked, mem, stats: self.shared.stats.snapshot() })
+    }
+}
+
+fn accept_loop(listener: TcpListener, disp: SyncSender<TcpStream>, shared: &Shared) {
+    loop {
+        if shared.draining() {
+            return; // drops the listener and the dispatch sender
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats.conns.fetch_add(1, Ordering::SeqCst);
+                match disp.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) => {
+                        // Every worker busy and the hand-off lane full:
+                        // refuse inline, never queue without bound.
+                        let mut s = stream;
+                        let _ = s.set_write_timeout(Some(Duration::from_millis(500)));
+                        let body = err_body("server overloaded: all connection workers busy");
+                        let _ = http::write_response(
+                            &mut s,
+                            503,
+                            &[("Retry-After", "1")],
+                            body.as_bytes(),
+                            false,
+                        );
+                        shared.stats.count_status(503);
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn conn_loop(shared: &Shared, rx: &Mutex<Receiver<TcpStream>>) {
+    loop {
+        // Lock scope ends before serving, so other workers can pick up.
+        let stream = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match stream {
+            Ok(s) => serve_conn(shared, s),
+            Err(_) => return, // accept loop gone: shutdown
+        }
+    }
+}
+
+fn serve_conn(shared: &Shared, mut stream: TcpStream) {
+    let conn_id = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+    let chaos = shared.cfg.chaos;
+    if !chaos.is_off() {
+        // Listener-side fault injection; participant ids offset so loadgen
+        // clients (participant = client index) draw independent streams.
+        let mut crng = chaos.rng((1u64 << 32) | conn_id);
+        if crng.f32() < chaos.disconnect {
+            shared.stats.chaos_disconnects.fetch_add(1, Ordering::SeqCst);
+            return; // abortive close before any byte
+        }
+        if crng.f32() < chaos.stall {
+            shared.stats.chaos_stalls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(chaos.stall_ms));
+        }
+    }
+    let _ = stream.set_nodelay(true);
+    let io_to = Duration::from_millis(shared.cfg.io_timeout_ms.max(1));
+    let _ = stream.set_read_timeout(Some(io_to));
+    let _ = stream.set_write_timeout(Some(io_to));
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        match read_head(&mut stream, &mut carry) {
+            Ok(head) => {
+                let keep = handle_request(shared, &mut stream, &mut carry, &head);
+                if !keep || shared.draining() {
+                    return;
+                }
+            }
+            Err(HeadError::Closed) => return,
+            Err(HeadError::Io(e))
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                // Idle keep-alive tick (carry is preserved, so a head split
+                // across the timeout still reassembles). Close on drain.
+                if shared.draining() {
+                    return;
+                }
+            }
+            Err(HeadError::Io(_)) => return,
+            Err(HeadError::TooLarge) => {
+                respond(shared, &mut stream, 413, &[], &err_body("request head too large"), false, "-");
+                return;
+            }
+            Err(HeadError::Bad(m)) => {
+                respond(shared, &mut stream, 400, &[], &err_body(&m), false, "-");
+                return;
+            }
+        }
+    }
+}
+
+/// Write a fixed response, bump counters, log. Returns nothing; callers
+/// decide keep-alive separately (a failed write just closes the socket).
+fn respond(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    status: u16,
+    extra: &[(&str, &str)],
+    body: &str,
+    keep_alive: bool,
+    route: &str,
+) {
+    let _ = http::write_response(stream, status, extra, body.as_bytes(), keep_alive);
+    shared.stats.count_status(status);
+    access_log(shared, route, status, 0, 0, 0, None, Duration::ZERO);
+}
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// One structured line per request: ts, route, prompt/gen lens, bucket,
+/// status, ttfb, total — the fields the ISSUE's access-log gate names.
+#[allow(clippy::too_many_arguments)]
+fn access_log(
+    shared: &Shared,
+    route: &str,
+    status: u16,
+    prompt: usize,
+    gen: usize,
+    bucket: usize,
+    ttfb: Option<Duration>,
+    total: Duration,
+) {
+    if shared.cfg.quiet {
+        return;
+    }
+    let ttfb_ms = ttfb.map_or_else(|| "-".to_string(), |d| format!("{:.1}", d.as_secs_f64() * 1e3));
+    println!(
+        "[serve-net] {} route={} status={} prompt={} gen={} bucket={} ttfb_ms={} total_ms={:.1}",
+        iso8601(epoch_ms()),
+        route,
+        status,
+        prompt,
+        gen,
+        bucket,
+        ttfb_ms,
+        total.as_secs_f64() * 1e3,
+    );
+}
+
+/// Serve one parsed request head. Returns whether to keep the connection.
+fn handle_request(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    head: &RequestHead,
+) -> bool {
+    match (head.method.as_str(), head.target.as_str()) {
+        ("POST", "/generate") => generate_route(shared, stream, carry, head),
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(shared.draining())),
+                ("capacity", Json::num(shared.handle.capacity() as f64)),
+                ("inflight", Json::num(shared.handle.inflight() as f64)),
+            ])
+            .to_string();
+            respond(shared, stream, 200, &[], &body, head.keep_alive, "/healthz");
+            head.keep_alive
+        }
+        ("GET", "/mem") => {
+            let body = match shared.handle.mem_report() {
+                Some(m) => mem_json(&m),
+                None => Json::obj(vec![("available", Json::Bool(false))]).to_string(),
+            };
+            respond(shared, stream, 200, &[], &body, head.keep_alive, "/mem");
+            head.keep_alive
+        }
+        (_, "/generate") | (_, "/healthz") | (_, "/mem") => {
+            drop_body(stream, carry, head);
+            respond(
+                shared,
+                stream,
+                405,
+                &[],
+                &err_body(&format!("method {} not allowed", head.method)),
+                head.keep_alive,
+                head.target.as_str(),
+            );
+            head.keep_alive
+        }
+        _ => {
+            drop_body(stream, carry, head);
+            respond(
+                shared,
+                stream,
+                404,
+                &[],
+                &err_body(&format!("no route {}", head.target)),
+                head.keep_alive,
+                head.target.as_str(),
+            );
+            head.keep_alive
+        }
+    }
+}
+
+/// Consume a declared body we are not going to use, keeping pipeline sync.
+fn drop_body(stream: &mut TcpStream, carry: &mut Vec<u8>, head: &RequestHead) {
+    if let Some(n) = head.content_length {
+        let _ = read_exact_body(stream, carry, n);
+    }
+}
+
+fn mem_json(m: &MemReport) -> String {
+    Json::obj(vec![
+        ("decode_sessions_live", Json::num(m.decode_sessions_live as f64)),
+        ("decode_sessions_total", Json::num(m.decode_sessions_total as f64)),
+        ("decode_steps", Json::num(m.decode_steps as f64)),
+        ("decode_step_batches", Json::num(m.decode_step_batches as f64)),
+        ("decode_state_bytes", Json::num(m.decode_state_bytes as f64)),
+        ("serve_forwards", Json::num(m.serve_forwards as f64)),
+        ("max_context", Json::num(m.max_context as f64)),
+        ("kernel", Json::str(&m.kernel)),
+        (
+            "bucket_lens",
+            Json::Arr(m.bucket_lens.iter().map(|&b| Json::num(b as f64)).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+/// Read and frame the request body (bounded, incremental), parse the
+/// generation fields, admit, and stream or block-reply.
+fn generate_route(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    head: &RequestHead,
+) -> bool {
+    let t_start = Instant::now();
+    let body = match read_request_json(stream, carry, head, shared.cfg.max_body_bytes) {
+        Ok(v) => v,
+        Err((status, msg)) => {
+            // Byte sync with the peer is lost (or the body was hostile):
+            // answer and close.
+            respond(shared, stream, status, &[], &err_body(&msg), false, "/generate");
+            return false;
+        }
+    };
+    let (req, want_stream) = match parse_generate(&body, shared.cfg.deadline_ms) {
+        Ok(x) => x,
+        Err(msg) => {
+            respond(shared, stream, 400, &[], &err_body(&msg), head.keep_alive, "/generate");
+            return head.keep_alive;
+        }
+    };
+    let prompt_len = req.prompt.len();
+    if want_stream {
+        stream_generate(shared, stream, head, req, prompt_len, t_start)
+    } else {
+        block_generate(shared, stream, head, req, prompt_len, t_start)
+    }
+}
+
+/// Map an admission refusal to its wire shape. Returns keep-alive.
+fn refuse(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    head: &RequestHead,
+    e: AdmitError,
+) -> bool {
+    match e {
+        AdmitError::Busy { retry_after } => {
+            let secs = retry_after.as_secs().max(1).to_string();
+            respond(
+                shared,
+                stream,
+                429,
+                &[("Retry-After", secs.as_str())],
+                &err_body("server busy: inflight cap reached"),
+                head.keep_alive,
+                "/generate",
+            );
+            head.keep_alive
+        }
+        AdmitError::Draining => {
+            respond(
+                shared,
+                stream,
+                503,
+                &[("Retry-After", "1")],
+                &err_body("server draining"),
+                false,
+                "/generate",
+            );
+            false
+        }
+    }
+}
+
+fn stream_generate(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    head: &RequestHead,
+    req: GenerateRequest,
+    prompt_len: usize,
+    t_start: Instant,
+) -> bool {
+    let rx = match shared.handle.try_submit_stream(req, shared.cfg.token_buf) {
+        Ok(rx) => rx,
+        Err(e) => return refuse(shared, stream, head, e),
+    };
+    shared.stats.streams.fetch_add(1, Ordering::SeqCst);
+    let mut ttfb: Option<Duration> = None;
+    let mut gen = 0usize;
+    let mut bucket = 0usize;
+    let mut clean = false;
+    let io_res: io::Result<()> = (|| {
+        let mut sse = SseWriter::start(&mut *stream, head.keep_alive)?;
+        loop {
+            match rx.recv() {
+                Ok(StreamEvent::Token(t)) => {
+                    if ttfb.is_none() {
+                        ttfb = Some(t_start.elapsed());
+                    }
+                    gen += 1;
+                    shared.stats.tokens.fetch_add(1, Ordering::SeqCst);
+                    sse.event("token", &format!("{{\"t\":{t}}}"))?;
+                }
+                Ok(StreamEvent::Done(resp)) => {
+                    bucket = resp.bucket_len;
+                    let data = Json::obj(vec![
+                        (
+                            "tokens",
+                            Json::Arr(
+                                resp.tokens.iter().map(|&t| Json::num(t as f64)).collect(),
+                            ),
+                        ),
+                        ("bucket_len", Json::num(resp.bucket_len as f64)),
+                        ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
+                        ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
+                        ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
+                    ])
+                    .to_string();
+                    sse.event("done", &data)?;
+                    clean = true;
+                    return sse.finish();
+                }
+                Ok(StreamEvent::Error { message, partial }) => {
+                    let data = Json::obj(vec![
+                        ("message", Json::str(&message)),
+                        ("partial", Json::num(partial as f64)),
+                    ])
+                    .to_string();
+                    sse.event("error", &data)?;
+                    clean = true;
+                    return sse.finish();
+                }
+                // Engine worker terminated: end the stream explicitly.
+                Err(_) => {
+                    let _ = sse.event(
+                        "error",
+                        "{\"message\":\"server worker terminated\",\"partial\":0}",
+                    );
+                    return sse.finish();
+                }
+            }
+        }
+    })();
+    // A write failure means the client stalled past its timeout or hung
+    // up; dropping `rx` is the recovery — the worker's next push observes
+    // a dead channel and retires the session.
+    drop(rx);
+    shared.stats.count_status(200);
+    access_log(shared, "/generate", 200, prompt_len, gen, bucket, ttfb, t_start.elapsed());
+    io_res.is_ok() && clean && head.keep_alive
+}
+
+fn block_generate(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    head: &RequestHead,
+    req: GenerateRequest,
+    prompt_len: usize,
+    t_start: Instant,
+) -> bool {
+    let rx = match shared.handle.try_submit(req) {
+        Ok(rx) => rx,
+        Err(e) => return refuse(shared, stream, head, e),
+    };
+    let (status, body, gen, bucket) = match rx.recv() {
+        Ok(Ok(resp)) => {
+            let body = Json::obj(vec![
+                (
+                    "tokens",
+                    Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                ),
+                ("bucket_len", Json::num(resp.bucket_len as f64)),
+                ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
+                ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
+                ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
+            ])
+            .to_string();
+            (200u16, body, resp.tokens.len(), resp.bucket_len)
+        }
+        Ok(Err(e)) => {
+            let msg = format!("{e:#}");
+            let status = if msg.contains("deadline exceeded") {
+                504
+            } else if msg.contains("out of range") {
+                400
+            } else {
+                500
+            };
+            (status, err_body(&msg), 0, 0)
+        }
+        Err(_) => (500u16, err_body("server worker terminated"), 0, 0),
+    };
+    let _ = http::write_response(stream, status, &[], body.as_bytes(), head.keep_alive);
+    shared.stats.count_status(status);
+    access_log(
+        shared,
+        "/generate",
+        status,
+        prompt_len,
+        gen,
+        bucket,
+        None,
+        t_start.elapsed(),
+    );
+    head.keep_alive
+}
+
+/// Frame the request body into one JSON object. With a Content-Length the
+/// exact bytes are read then framed (bounds still enforced); without one
+/// the reader frames straight off the socket and returns surplus bytes to
+/// `carry` (keep-alive pipelining).
+fn read_request_json(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    head: &RequestHead,
+    max: usize,
+) -> std::result::Result<Json, (u16, String)> {
+    let mut rd = JsonReader::new(max);
+    if let Some(n) = head.content_length {
+        if n > max {
+            return Err((413, format!("request body {n} bytes exceeds cap {max}")));
+        }
+        let body = read_exact_body(stream, carry, n)
+            .map_err(|e| (400, format!("body read failed: {e}")))?;
+        return match rd.feed(&body) {
+            Ok(Frame::Complete(v)) => {
+                if rd.pending() > 0 {
+                    return Err((400, "trailing bytes after request object".into()));
+                }
+                Ok(v)
+            }
+            Ok(Frame::Incomplete) => {
+                Err((400, "request body truncated (content-length too short?)".into()))
+            }
+            Err(e) => Err((400, e.to_string())),
+        };
+    }
+    // No Content-Length: incremental framing is the only boundary.
+    let seed: Vec<u8> = std::mem::take(carry);
+    let mut outcome = rd.feed(&seed);
+    loop {
+        match outcome {
+            Ok(Frame::Complete(v)) => {
+                *carry = rd.take_rest();
+                return Ok(v);
+            }
+            Ok(Frame::Incomplete) => {}
+            Err(e) => return Err((400, e.to_string())),
+        }
+        let mut buf = [0u8; 2048];
+        match stream.read(&mut buf) {
+            Ok(0) => return Err((400, "eof inside request body".into())),
+            Ok(n) => outcome = rd.feed(&buf[..n]),
+            Err(e) => return Err((408, format!("body read stalled: {e}"))),
+        }
+    }
+}
+
+/// `{"prompt":[...], "max_new":N, "temperature":t, "top_k":k,
+/// "timeout_ms":N, "stream":bool}` → request + stream flag.
+fn parse_generate(
+    v: &Json,
+    default_deadline_ms: u64,
+) -> std::result::Result<(GenerateRequest, bool), String> {
+    let arr = v
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| "missing \"prompt\" array".to_string())?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for x in arr {
+        let f = x.as_f64().ok_or_else(|| "prompt tokens must be numbers".to_string())?;
+        if f < 0.0 || f != f.trunc() || f > i32::MAX as f64 {
+            return Err(format!("prompt token {f} is not a token id"));
+        }
+        prompt.push(f as i32);
+    }
+    let max_new = v.get("max_new").and_then(|x| x.as_usize()).unwrap_or(16);
+    let sampling = match v.get("temperature").and_then(|x| x.as_f64()) {
+        None => Sampling::Greedy,
+        Some(t) if t <= 0.0 => Sampling::Greedy,
+        Some(t) => Sampling::Temperature {
+            t: t as f32,
+            top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
+        },
+    };
+    let timeout_ms = v
+        .get("timeout_ms")
+        .and_then(|x| x.as_f64())
+        .map(|f| f.max(0.0) as u64)
+        .unwrap_or(default_deadline_ms);
+    let deadline = if timeout_ms == 0 { None } else { Some(Duration::from_millis(timeout_ms)) };
+    let want_stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(true);
+    Ok((GenerateRequest { prompt, max_new, sampling, deadline }, want_stream))
+}

@@ -205,6 +205,7 @@ fn server_round_trip() {
                 prompt: vec![1 + i, 2, 3],
                 max_new: 3,
                 sampling: Sampling::Greedy,
+                deadline: None,
             })
         })
         .collect();

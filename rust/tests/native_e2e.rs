@@ -212,6 +212,7 @@ fn server_round_trip_native() {
                 prompt: vec![1 + i, 2, 3],
                 max_new: 3,
                 sampling: Sampling::Greedy,
+                deadline: None,
             })
         })
         .collect();
@@ -258,6 +259,7 @@ fn server_batched_rounds_match_single_session_greedy_streams() {
                 prompt: p.clone(),
                 max_new,
                 sampling: Sampling::Greedy,
+                deadline: None,
             })
         })
         .collect();
@@ -299,11 +301,13 @@ fn server_routes_mixed_lengths_to_their_buckets() {
         prompt: vec![1, 2, 3],
         max_new: 2,
         sampling: Sampling::Greedy,
+        deadline: None,
     });
     let long = server.handle.submit(GenerateRequest {
         prompt: vec![1; 10],
         max_new: 4,
         sampling: Sampling::Greedy,
+        deadline: None,
     });
     let short = short.recv().unwrap().unwrap();
     let long = long.recv().unwrap().unwrap();
@@ -531,11 +535,13 @@ fn longctx_server_admits_past_the_compiled_window() {
         prompt: (0..24).map(|i| 1 + i % 13).collect(),
         max_new: 4,
         sampling: Sampling::Greedy,
+        deadline: None,
     });
     let short = server.handle.submit(GenerateRequest {
         prompt: vec![1, 2, 3],
         max_new: 3,
         sampling: Sampling::Greedy,
+        deadline: None,
     });
     let long = long.recv().unwrap().unwrap();
     let short = short.recv().unwrap().unwrap();
@@ -591,4 +597,69 @@ fn pjrt_backend_fails_cleanly_under_the_stub() {
     .unwrap_err();
     let msg = format!("{err:#}");
     assert!(!msg.is_empty());
+}
+
+#[test]
+fn server_deadlines_expire_cleanly() {
+    // Deadline hardening: an expired request must reply with an error (never
+    // hang, never panic) and leave zero session state behind, whether it
+    // dies in the queue, at admission, or mid-decode.
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+        None,
+    )
+    .unwrap();
+    // (a) Already expired on arrival (deadline = now): deterministically
+    // swept before the engine ever sees it — zero tokens, a deadline error.
+    let h = server.handle.submit(GenerateRequest {
+        prompt: vec![1, 2, 3],
+        max_new: 4,
+        sampling: Sampling::Greedy,
+        deadline: Some(Duration::ZERO),
+    });
+    let err = h.recv().unwrap().expect_err("expired deadline must not generate");
+    assert!(
+        format!("{err:#}").contains("deadline exceeded"),
+        "unexpected error: {err:#}"
+    );
+    let begun_before = server.handle.mem_report().unwrap().decode_sessions_total;
+    // (b) Tight deadlines racing a healthy request: every reply arrives
+    // (completion or a deadline error — wall clock decides which), the
+    // healthy request is token-complete, and nothing leaks either way.
+    let healthy = server.handle.submit(GenerateRequest {
+        prompt: vec![4, 5, 6],
+        max_new: 3,
+        sampling: Sampling::Greedy,
+        deadline: None,
+    });
+    let tight: Vec<_> = (0..4)
+        .map(|i| {
+            server.handle.submit(GenerateRequest {
+                prompt: vec![1 + i, 2, 3],
+                max_new: 8,
+                sampling: Sampling::Greedy,
+                deadline: Some(Duration::from_millis(1 + i as u64 % 2)),
+            })
+        })
+        .collect();
+    assert_eq!(healthy.recv().unwrap().unwrap().tokens.len(), 3);
+    for h in tight {
+        match h.recv().expect("worker died under deadline load") {
+            Ok(resp) => assert!(resp.tokens.len() <= 8),
+            Err(e) => assert!(
+                format!("{e:#}").contains("deadline exceeded"),
+                "unexpected error: {e:#}"
+            ),
+        }
+    }
+    let mem = server.handle.mem_report().unwrap();
+    // (a) never began a session; (b) began up to 5 and retired them all.
+    assert!(mem.decode_sessions_total >= begun_before);
+    assert_eq!(mem.decode_sessions_live, 0, "deadline retirement leaked sessions");
+    server.stop();
 }

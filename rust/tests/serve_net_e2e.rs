@@ -1,0 +1,274 @@
+//! Loopback end-to-end tests for the network serving front end: real
+//! sockets against a real engine (`golden_tiny`, native backend), covering
+//! the resilience gates — greedy byte-identity with the in-process path,
+//! deterministic 429 + Retry-After under overload, chaos disconnects
+//! leaking nothing, queue-deadline expiry over HTTP, malformed-request
+//! rejection, and graceful drain with zero leaked sessions.
+//!
+//! Every test binds port 0 and uses the per-server drain flag
+//! (`trigger_drain`/`finish`), never process-global signals — parallel
+//! tests must not drain each other.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hyena::backend::BackendKind;
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{GenerateRequest, Server};
+use hyena::net::client::{generate_body, run_loadgen, Fault, HttpClient, LoadGenConfig};
+use hyena::net::server::NetServer;
+use hyena::net::{ChaosConfig, NetConfig};
+
+/// Engine + listener on a free loopback port, logs off.
+fn start_stack(tweak: impl FnOnce(&mut NetConfig)) -> (Server, NetServer) {
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+        None,
+    )
+    .unwrap();
+    let mut cfg = NetConfig {
+        addr: "127.0.0.1:0".into(),
+        conn_threads: 8,
+        quiet: true,
+        ..NetConfig::default()
+    };
+    tweak(&mut cfg);
+    let net = NetServer::start(server.handle.clone(), cfg).unwrap();
+    (server, net)
+}
+
+/// Keep the engine busy long enough that ticketed HTTP submissions queue
+/// behind it (FIFO) instead of completing instantly — the lever that makes
+/// overload and queue-deadline behaviour deterministic on a tiny model.
+fn flood(server: &Server, n: usize) -> Vec<std::sync::mpsc::Receiver<anyhow::Result<hyena::coordinator::server::GenerateResponse>>> {
+    (0..n)
+        .map(|i| {
+            server.handle.submit(GenerateRequest {
+                prompt: vec![1 + (i % 11) as i32, 2, 3],
+                max_new: 8,
+                sampling: Sampling::Greedy,
+                deadline: None,
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn loopback_streams_match_in_process_greedy() {
+    let (server, net) = start_stack(|_| {});
+    let addr = net.addr();
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10, 11, 1]];
+    // Concurrent keep-alive clients, two sequential requests each — the
+    // second request re-uses the socket, so keep-alive is exercised too.
+    let mut joins = Vec::new();
+    for (i, p) in prompts.iter().cloned().enumerate() {
+        joins.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+            let mut outs = Vec::new();
+            for _ in 0..2 {
+                let out = c.generate_stream(&generate_body(&p, 5, 0), Fault::None).unwrap();
+                assert_eq!(out.status, 200, "stream rejected: {:?}", out.reject);
+                assert!(out.done.is_some(), "stream ended without done: {:?}", out.error);
+                outs.push(out.tokens.clone());
+            }
+            (i, outs)
+        }));
+    }
+    let mut got: Vec<(usize, Vec<Vec<i32>>)> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    got.sort_by_key(|g| g.0);
+    // Greedy is rng-free and batching is token-invariant, so the network
+    // streams must be byte-identical to the in-process blocking path on
+    // the very same engine.
+    for (i, outs) in got {
+        let want = server
+            .handle
+            .generate(GenerateRequest {
+                prompt: prompts[i].clone(),
+                max_new: 5,
+                sampling: Sampling::Greedy,
+                deadline: None,
+            })
+            .unwrap();
+        for o in outs {
+            assert_eq!(o, want.tokens, "network stream diverged for prompt {:?}", prompts[i]);
+        }
+    }
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    assert!(report.stats.streams >= 8, "stats: {:?}", report.stats);
+    assert_eq!(report.stats.s429, 0);
+    server.stop();
+}
+
+#[test]
+fn overload_burst_gets_429_with_retry_after() {
+    // conn_threads must exceed admit_cap + extras, or the surplus would
+    // queue at the connection dispatcher (503 path) instead of reaching
+    // admission control (429 path).
+    let (server, net) = start_stack(|c| {
+        c.queue_cap = 1;
+        c.conn_threads = 16;
+    });
+    let addr = net.addr();
+    let admit_cap = server.handle.capacity() + 1;
+    // While the flood holds the engine, ticketed HTTP submissions sit in
+    // the queue holding their admission slots: exactly `admit_cap` slots
+    // exist, so of `admit_cap + extras` concurrent posts, exactly `extras`
+    // must bounce with 429 — deterministically, regardless of ordering.
+    let flood_rx = flood(&server, 4000);
+    let extras = 4usize;
+    let joins: Vec<_> = (0..admit_cap + extras)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(addr, Duration::from_secs(30)).unwrap();
+                c.generate_stream(&generate_body(&[1, 2, 3], 4, 0), Fault::None).unwrap()
+            })
+        })
+        .collect();
+    let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = outs.iter().filter(|o| o.status == 200 && o.done.is_some()).count();
+    let rejected: Vec<_> = outs.iter().filter(|o| o.status == 429).collect();
+    assert_eq!(ok, admit_cap, "admitted requests must all complete");
+    assert_eq!(rejected.len(), extras, "overload must bounce the surplus");
+    for r in &rejected {
+        let resp = r.reject.as_ref().expect("429 carries a fixed body");
+        assert!(
+            resp.header("retry-after").is_some(),
+            "429 without Retry-After: {:?}",
+            resp.headers
+        );
+        assert!(resp.keep_alive, "429 must not cost the connection");
+    }
+    for rx in flood_rx {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    assert_eq!(report.stats.s429, extras as u64);
+    server.stop();
+}
+
+#[test]
+fn queue_deadline_expires_over_http() {
+    let (server, net) = start_stack(|_| {});
+    let addr = net.addr();
+    // The flood keeps capacity full, so a 1 ms request budget expires in
+    // the queue: the stream must open, carry no tokens, and terminate with
+    // an explicit deadline error event — never hang, never a silent close.
+    let flood_rx = flood(&server, 2000);
+    let mut c = HttpClient::connect(addr, Duration::from_secs(30)).unwrap();
+    let out = c.generate_stream(&generate_body(&[1, 2, 3], 8, 1), Fault::None).unwrap();
+    assert_eq!(out.status, 200);
+    assert!(out.tokens.is_empty(), "expired request generated {:?}", out.tokens);
+    let err = out.error.expect("expired stream must end with an error event");
+    let msg = err.get("message").and_then(|m| m.as_str()).unwrap_or_default().to_string();
+    assert!(msg.contains("deadline exceeded"), "unexpected error payload: {err:?}");
+    for rx in flood_rx {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_get_400_not_a_wedge() {
+    let (server, net) = start_stack(|_| {});
+    let addr = net.addr();
+    // Framing garbage: not JSON at all. The server answers 400 and closes
+    // (byte sync with the connection is lost).
+    let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+    c.send_raw(b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\nnot json!")
+        .unwrap();
+    let r = c.read_response().unwrap();
+    assert_eq!(r.status, 400);
+    assert!(!r.keep_alive, "a framing error must cost the connection");
+    // Well-framed JSON, wrong schema: still 400, with an error body.
+    let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+    let r = c.post("/generate", r#"{"prompt":"nope"}"#).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.json().is_some_and(|j| j.get("error").is_some()));
+    // Routing: health and mem answer, unknown paths 404, wrong methods 405.
+    let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
+    assert_eq!(c.get("/mem").unwrap().status, 200);
+    assert_eq!(c.get("/nope").unwrap().status, 404);
+    assert_eq!(c.get("/generate").unwrap().status, 405);
+    // The engine never saw any of it — and still serves.
+    let out = c.generate_stream(&generate_body(&[1, 2, 3], 3, 0), Fault::None).unwrap();
+    assert_eq!(out.status, 200);
+    assert_eq!(out.tokens.len(), 3);
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    server.stop();
+}
+
+#[test]
+fn chaos_disconnects_leak_no_sessions() {
+    let (server, net) = start_stack(|c| c.token_buf = 4);
+    let addr = net.addr();
+    let chaos = ChaosConfig::parse("disconnect:0.6,garbage:0.2,seed:11").unwrap();
+    let cfg = LoadGenConfig {
+        clients: 4,
+        requests_per_client: 4,
+        prompt_len: 5,
+        max_new: 8,
+        vocab: 32,
+        timeout_ms: 5_000,
+        chaos,
+        seed: 3,
+        ..LoadGenConfig::default()
+    };
+    let report = run_loadgen(addr, &cfg);
+    assert_eq!(report.requests, 16);
+    assert!(
+        report.disconnects_injected + report.garbage_injected > 0,
+        "chaos config injected nothing: {report:?}"
+    );
+    // Every injected garbage request that got an answer got 400.
+    assert!(report.garbage_rejected <= report.garbage_injected);
+    // The gate: mid-stream hangups and malformed bytes must leave zero
+    // session state behind once the wire goes quiet.
+    let net_report = net.finish().unwrap();
+    assert_eq!(
+        net_report.leaked_sessions, 0,
+        "chaos run leaked sessions: {:?}",
+        net_report.mem.map(|m| m.decode_sessions_live)
+    );
+    server.stop();
+}
+
+#[test]
+fn drain_finishes_live_streams_and_leaks_nothing() {
+    let (server, net) = start_stack(|c| c.drain_ms = 2_000);
+    let addr = net.addr();
+    // A stream in flight when the drain order lands must still get a
+    // terminal event (done, or an explicit drain error) — not a hang.
+    let j = std::thread::spawn(move || {
+        let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+        c.generate_stream(&generate_body(&[1, 2, 3, 4], 8, 0), Fault::None).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    net.trigger_drain();
+    let report = net.finish().unwrap();
+    let out = j.join().unwrap();
+    assert_eq!(out.status, 200);
+    assert!(
+        out.done.is_some() || out.error.is_some(),
+        "draining stream ended without a terminal event"
+    );
+    assert_eq!(report.leaked_sessions, 0);
+    // Post-drain the listener is gone: new connections must be refused,
+    // not black-holed (connect or first I/O errors out promptly).
+    let dead = HttpClient::connect(addr, Duration::from_millis(500))
+        .and_then(|mut c| c.get("/healthz"));
+    assert!(dead.is_err(), "listener still serving after drain");
+    server.stop();
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke]
+# Usage: scripts/check.sh [--fix|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke|serve-net-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
@@ -27,6 +27,16 @@
 #                if batched decode_step_batch does not beat serial stepping
 #                at occupancy 4, or if the greedy token streams differ
 #                between the scalar and SIMD kernel paths.
+#   serve-net-smoke network-serving gate (DESIGN.md §Serving-Net): (1) the
+#                loopback e2e tests — greedy byte-identity over HTTP/SSE,
+#                deterministic 429 + Retry-After under overload, chaos
+#                disconnects and drains leaking zero sessions; (2) the
+#                native_serve_net bench in --smoke mode (ledger key
+#                `serve_net`); (3) a live `serve --listen` process driven
+#                by the chaos loadgen: an overload burst must provoke 429s
+#                (each carrying Retry-After — loadgen fails otherwise), a
+#                chaos pass must not wedge the listener, and SIGTERM must
+#                drain to exit 0 with `0 leaked sessions` in the report.
 #   longctx-smoke long-context gate (DESIGN.md §Long-context): (1) every
 #                longctx_* unit test — chunked prefill bitwise at the full
 #                bucket, ≤ tolerance vs the extended monolithic oracle,
@@ -71,6 +81,62 @@ if [ "${1:-}" = "decode-smoke" ]; then
         --requests 12 --mixed --stream-decode --require-buckets --greedy \
         --threads 2 --seed 0
     echo "check.sh: decode-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "serve-net-smoke" ]; then
+    echo "==> serve-net-smoke: loopback e2e tests (HTTP/SSE, chaos, drain)"
+    cargo test --release -q --test serve_net_e2e
+    echo "==> serve-net-smoke: native_serve_net bench gate (--smoke, 2 threads)"
+    cargo bench --bench native_serve_net -- --smoke --threads 2
+    echo "==> serve-net-smoke: live listener + loadgen (overload burst, chaos, SIGTERM drain)"
+    cargo build --release --bin hyena
+    log=$(mktemp)
+    ./target/release/hyena serve --model lm_hyena_s --backend native \
+        --listen 127.0.0.1:0 --queue-cap 1 --threads 2 --quiet >"$log" 2>&1 &
+    srv=$!
+    addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/^listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -1)
+        [ -n "$addr" ] && break
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "serve-net-smoke: listener never came up" >&2
+        cat "$log" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    # Overload burst: 24 simultaneous streams against capacity 8 + queue 1
+    # must bounce the surplus with 429; loadgen itself fails the run if any
+    # 429 arrives without Retry-After, and retries until every stream lands.
+    burst_out=$(./target/release/hyena loadgen --addr "$addr" --clients 24 --requests 1 \
+        --burst --prompt-len 32 --max-new 64 --vocab 96 --seed 0)
+    echo "$burst_out"
+    if ! echo "$burst_out" | grep -qE '[1-9][0-9]* x 429'; then
+        echo "serve-net-smoke: overload burst provoked no 429 backpressure" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    # Chaos pass on the live wire: injected disconnects and garbage must not
+    # wedge the listener (the SIGTERM drain below proves nothing leaked).
+    HYENA_CHAOS="disconnect:0.3,garbage:0.2,seed:7" ./target/release/hyena loadgen \
+        --addr "$addr" --clients 6 --requests 4 --prompt-len 16 --max-new 32 \
+        --vocab 96 --seed 1
+    kill -TERM "$srv"
+    rc=0
+    wait "$srv" || rc=$?
+    cat "$log"
+    if [ "$rc" -ne 0 ]; then
+        echo "serve-net-smoke: server exited rc=$rc after drain (leak gate)" >&2
+        exit 1
+    fi
+    if ! grep -q ', 0 leaked sessions' "$log"; then
+        echo "serve-net-smoke: drain report missing the zero-leak line" >&2
+        exit 1
+    fi
+    rm -f "$log"
+    echo "check.sh: serve-net-smoke green"
     exit 0
 fi
 

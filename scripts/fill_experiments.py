@@ -27,6 +27,7 @@ TAGS = {
     # A tag may hold several CSVs (filled in order; missing ones skipped).
     "PERF_NATIVE": ["native_fftconv.csv", "native_step.csv", "native_serve.csv"],
     "PERF_LONGCTX": "native_fftconv_longctx.csv",
+    "PERF_SERVE_NET": "native_serve_net.csv",
     "PERF_L2": "perf_donation.csv",
 }
 

@@ -241,6 +241,23 @@ def init_aft(key, cfg) -> dict:
     }
 
 
+def _causal_depthwise_conv(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Direct per-channel causal conv: y[:, :, t] = Σ_τ w[:, τ] · x[:, :, t−τ].
+
+    `x` is (B, D, L), `w` is (D, M) with M ≤ L.  Exactly causal by
+    construction — unlike the FFT path, no f32 round-off from future
+    positions can reach the past, which matters here because the e^k
+    weights span e^{±8} and amplify any leakage past test tolerance.
+    """
+    _, _, L = x.shape
+    M = w.shape[1]
+    y = w[:, 0][None, :, None] * x
+    for tau in range(1, M):
+        shifted = jnp.pad(x[:, :, : L - tau], ((0, 0), (0, 0), (tau, 0)))
+        y = y + w[:, tau][None, :, None] * shifted
+    return y
+
+
 def aft_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
     """y_t = σ(q_t) ⊙ Σ_{s≤t} e^{w_{t−s} + k_s} v_s / Σ_{s≤t} e^{w_{t−s} + k_s}."""
     B, L, D = u.shape
@@ -249,11 +266,9 @@ def aft_op(p: dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
     v = u @ p["wv"]
     ek = jnp.exp(k).transpose(0, 2, 1)  # (B, D, L)
     ev = (jnp.exp(k) * v).transpose(0, 2, 1)
-    M = p["pos"].shape[-1]
-    w = jnp.exp(p["pos"])
-    hw = jnp.pad(w, ((0, 0), (0, L - M))) if M < L else w[:, :L]
-    num = ref.causal_fftconv(hw, ev)
-    den = ref.causal_fftconv(hw, ek)
+    w = jnp.exp(p["pos"])[:, :L]  # (D, min(M, L)) position-bias taps
+    num = _causal_depthwise_conv(w, ev)
+    den = _causal_depthwise_conv(w, ek)
     y = (num / jnp.maximum(den, 1e-6)).transpose(0, 2, 1)
     return (jax.nn.sigmoid(q) * y) @ p["wo"]
 

@@ -1,0 +1,387 @@
+"""Tests for scripts/rustcheck — the compiler-independent Rust gate.
+
+Each pass gets a known-bad fixture mini-crate (written under tmp_path) that
+must produce exactly the expected finding, plus clean fixtures that must not.
+The suite ends with the two gate assertions: the real tree is rustcheck-clean,
+and a seeded defect injected into a copy of the tree flips `--strict` to a
+nonzero exit.
+"""
+
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(ROOT / "scripts"))
+
+from rustcheck.driver import run_repo  # noqa: E402
+
+
+def mk(root: Path, rel: str, text: str) -> None:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+
+
+def findings(root: Path):
+    return run_repo(root)["findings"]
+
+
+def rules(fds):
+    return {f["rule"] for f in fds}
+
+
+CLEAN_LIB = """\
+pub mod a;
+
+pub fn top(x: u32) -> u32 {
+    a::helper(x)
+}
+"""
+
+CLEAN_A = """\
+pub fn helper(v: u32) -> u32 {
+    v + 1
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# lexer + balance
+# ---------------------------------------------------------------------------
+
+
+def test_clean_mini_crate_is_green(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", CLEAN_LIB)
+    mk(tmp_path, "rust/src/a.rs", CLEAN_A)
+    assert findings(tmp_path) == []
+
+
+def test_unbalanced_delimiters(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub fn f() { if true { 1; }\n")
+    fds = findings(tmp_path)
+    assert "balance" in rules(fds)
+    assert any("unclosed" in f["message"] for f in fds)
+
+
+def test_mismatched_delimiter_reports_both_lines(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub fn f(x: [u32; 4)) {}\n")
+    fds = findings(tmp_path)
+    assert "balance" in rules(fds)
+
+
+def test_unclosed_string_literal(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", 'pub fn f() { let _s = "oops; }\n')
+    assert "lexer" in rules(findings(tmp_path))
+
+
+def test_lexer_handles_tricky_literals(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", r'''
+//! Doc with a } brace and an " unmatched quote.
+pub fn f<'a>(x: &'a str) -> char {
+    let _raw = r#"embedded "quotes" and { braces"#;
+    let _byte = b"bytes { [";
+    let _b = b'{';
+    let _sp = ' ';
+    let _esc = '\n';
+    let _q = '\'';
+    /* nested /* block */ comment with ) */
+    'x'
+}
+''')
+    assert findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# module graph
+# ---------------------------------------------------------------------------
+
+
+def test_dangling_mod_decl(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "mod ghost;\n")
+    fds = findings(tmp_path)
+    assert "mod-unresolved" in rules(fds)
+    assert any("ghost" in f["message"] for f in fds)
+
+
+def test_orphan_file(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", CLEAN_LIB)
+    mk(tmp_path, "rust/src/a.rs", CLEAN_A)
+    mk(tmp_path, "rust/src/lonely.rs", "pub fn nobody_calls_me() {}\n")
+    fds = findings(tmp_path)
+    assert [f["rule"] for f in fds] == ["orphan-file"]
+    assert fds[0]["file"] == "rust/src/lonely.rs"
+
+
+def test_mod_rs_layout_resolves(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub mod deep;\npub fn f() { deep::inner::g(); }\n")
+    mk(tmp_path, "rust/src/deep/mod.rs", "pub mod inner;\n")
+    mk(tmp_path, "rust/src/deep/inner.rs", "pub fn g() {}\n")
+    assert findings(tmp_path) == []
+
+
+def test_use_unresolved(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub mod a;\nuse crate::a::no_such_item;\n")
+    mk(tmp_path, "rust/src/a.rs", CLEAN_A)
+    fds = findings(tmp_path)
+    assert "use-unresolved" in rules(fds)
+    assert any("no_such_item" in f["message"] for f in fds)
+
+
+def test_use_of_real_items_resolves(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs",
+       "pub mod a;\npub use a::{helper, Thing};\nuse crate::a::Thing as T2;\n")
+    mk(tmp_path, "rust/src/a.rs", CLEAN_A + "pub struct Thing(pub u32);\n")
+    assert findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# item index: duplicates, arity, trait completeness
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_fn(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs",
+       "pub fn f(x: u32) -> u32 { x }\npub fn f(x: u32) -> u32 { x + 1 }\n")
+    assert "duplicate" in rules(findings(tmp_path))
+
+
+def test_cfg_gated_twins_are_not_duplicates(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", '''
+#[cfg(target_arch = "x86_64")]
+pub fn pick() -> u32 { 1 }
+#[cfg(target_arch = "aarch64")]
+pub fn pick() -> u32 { 2 }
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pick() -> u32 { 0 }
+''')
+    assert findings(tmp_path) == []
+
+
+def test_call_arity_mismatch(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub mod a;
+pub fn f(x: u32, y: u32) -> u32 { x + y }
+pub fn g() -> u32 { f(1) }
+""")
+    mk(tmp_path, "rust/src/a.rs", "pub fn h() -> u32 { crate::f(1, 2, 3) }\n")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "arity"]
+    assert len(fds) == 2
+    msgs = " ".join(f["message"] for f in fds)
+    assert "passes 1" in msgs and "passes 3" in msgs
+
+
+def test_closure_args_do_not_false_positive(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub fn apply(f: impl Fn(u32, u32) -> u32) -> u32 { f(1, 2) }
+pub fn g() -> u32 { apply(|a, b| a + b) }
+""")
+    assert findings(tmp_path) == []
+
+
+def test_trait_impl_missing_required_method(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub trait Backend {
+    fn step(&mut self, n: u32) -> u32;
+    fn name(&self) -> u32 { 0 }
+}
+pub struct Native;
+impl Backend for Native {
+    fn name(&self) -> u32 { 1 }
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "trait-impl"]
+    assert len(fds) == 1
+    assert "step" in fds[0]["message"]
+
+
+def test_trait_impl_with_all_required_is_green(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub trait Backend {
+    fn step(&mut self, n: u32) -> u32;
+    fn name(&self) -> u32 { 0 }
+}
+pub struct Native;
+impl Backend for Native {
+    fn step(&mut self, n: u32) -> u32 { n }
+}
+""")
+    assert findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# targeted lints
+# ---------------------------------------------------------------------------
+
+
+def test_partial_cmp_unwrap(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub fn worst(xs: &[f32]) -> f32 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[0]
+}
+""")
+    assert "partial-cmp-unwrap" in rules(findings(tmp_path))
+
+
+def test_total_cmp_is_clean(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub fn worst(xs: &[f32]) -> f32 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[0]
+}
+""")
+    assert findings(tmp_path) == []
+
+
+def test_unsafe_without_safety_comment(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub fn read(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "unsafe-no-safety"]
+    assert len(fds) == 1
+
+
+def test_unsafe_with_safety_comment_passes(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub fn read(p: *const u32, q: *const u32) -> u32 {
+    // SAFETY: caller guarantees p is valid and aligned.
+    let a = unsafe { *p };
+    let b = unsafe { *q }; // SAFETY: ditto for q.
+    a + b
+}
+
+/// Docs.
+///
+/// # Safety
+///
+/// `p` must be valid.
+pub unsafe fn read_raw(p: *const u32) -> u32 {
+    // SAFETY: contract forwarded from this fn's own `# Safety` section.
+    unsafe { *p }
+}
+""")
+    assert findings(tmp_path) == []
+
+
+def test_nondeterminism_outside_seam(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub mod net;\npub mod clock;\n")
+    mk(tmp_path, "rust/src/clock.rs", """
+use std::time::SystemTime;
+pub fn stamp() -> u64 {
+    SystemTime::now().elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+""")
+    mk(tmp_path, "rust/src/net/mod.rs", """
+use std::time::SystemTime;
+pub fn retry_after() -> u64 {
+    SystemTime::now().elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "nondeterminism"]
+    assert len(fds) == 1
+    assert fds[0]["file"] == "rust/src/clock.rs"
+
+
+KERNELS_MOD = """\
+pub struct Kernels {
+    pub axpy: fn(&mut [f32], &[f32], f32),
+    pub dot: fn(&[f32], &[f32]) -> f32,
+}
+mod scalar;
+pub static SCALAR: Kernels = Kernels { axpy: noop_axpy, dot: noop_dot };
+fn noop_axpy(_y: &mut [f32], _w: &[f32], _a: f32) {}
+fn noop_dot(_a: &[f32], _b: &[f32]) -> f32 { 0.0 }
+"""
+
+
+def test_kernel_table_field_drift(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub mod backend;\n")
+    mk(tmp_path, "rust/src/backend/mod.rs", "pub mod native;\n")
+    mk(tmp_path, "rust/src/backend/native/mod.rs", "pub mod kernels;\n")
+    mk(tmp_path, "rust/src/backend/native/kernels/mod.rs", KERNELS_MOD)
+    mk(tmp_path, "rust/src/backend/native/kernels/scalar.rs", "")
+    mk(tmp_path, "rust/src/backend/native/kernels/simd.rs", """
+use super::Kernels;
+fn my_axpy(_y: &mut [f32], _w: &[f32], _a: f32) {}
+pub static AVX2: Kernels = Kernels { axpy: my_axpy };
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "kernel-parity"]
+    assert len(fds) == 1
+    assert "dot" in fds[0]["message"]
+
+
+# ---------------------------------------------------------------------------
+# allowlist
+# ---------------------------------------------------------------------------
+
+
+def test_allowlist_suppresses_justified_entries_only(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "mod ghost;\nmod wraith;\n")
+    allow = tmp_path / "allow.txt"
+    allow.write_text(
+        "mod-unresolved | rust/src/lib.rs | ghost | fixture: intentional\n"
+        "mod-unresolved | rust/src/lib.rs | wraith |\n"  # no justification
+    )
+    res = run_repo(tmp_path, allowlist_path=allow)
+    kept = [f["message"] for f in res["findings"]]
+    assert any("wraith" in m for m in kept)
+    assert not any("ghost" in m for m in kept)
+    assert any("ghost" in f["message"] for f in res["allowlisted"])
+
+
+# ---------------------------------------------------------------------------
+# the gate: real tree clean, injected defect trips --strict
+# ---------------------------------------------------------------------------
+
+
+def test_real_tree_is_rustcheck_clean():
+    res = run_repo(ROOT)
+    assert res["findings"] == [], (
+        "rustcheck found unallowlisted issues in the tree:\n"
+        + "\n".join(f"{f['file']}:{f['line']}: [{f['rule']}] {f['message']}"
+                    for f in res["findings"])
+    )
+
+
+def _strict(root: Path):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "rustcheck"),
+         "--root", str(root), "--strict", "--json"],
+        capture_output=True, text=True,
+    )
+
+
+def test_cli_strict_green_on_real_tree():
+    proc = _strict(ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["summary"]["findings"] == 0
+
+
+@pytest.mark.parametrize("defect", [
+    ("rust/src/metrics/mod.rs", "\npub fn rc_seeded() { let _ = vec![1; }\n"),
+    ("rust/src/lib.rs", "\nmod rustcheck_seeded_ghost;\n"),
+    ("rust/src/util/stats.rs",
+     "\npub fn rc_seeded(a: f32, b: f32) -> bool "
+     "{ a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less }\n"),
+    ("rust/src/util/stats.rs",
+     "\npub fn rc_seeded(p: *const f32) -> f32 { unsafe { *p } }\n"),
+])
+def test_cli_strict_trips_on_injected_defect(tmp_path, defect):
+    rel, payload = defect
+    shutil.copytree(ROOT / "rust", tmp_path / "rust")
+    with open(tmp_path / rel, "a") as fh:
+        fh.write(payload)
+    proc = _strict(tmp_path)
+    assert proc.returncode == 1, (
+        f"seeded defect in {rel} was not detected:\n{proc.stdout}{proc.stderr}"
+    )

@@ -161,6 +161,11 @@ fn assert_spec_lens(
 // AVX2 bodies
 // ---------------------------------------------------------------------------
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available on the running CPU (the safe
+/// wrapper dispatches here only after the one-time `is_x86_feature_detected!`
+/// probe) and that `w.len() >= y.len()`.
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(y: &mut [f32], w: &[f32], a: f32) {
     let n = y.len();
@@ -180,6 +185,9 @@ unsafe fn axpy_avx2(y: &mut [f32], w: &[f32], a: f32) {
     }
 }
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available and `b.len() >= a.len()`.
 #[target_feature(enable = "avx2")]
 unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
@@ -220,6 +228,10 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     s as f32
 }
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available, `c.len() >= out.len()` and, for
+/// `stride > 1`, that `gate` covers every index `i·stride` touched below.
 #[target_feature(enable = "avx2")]
 unsafe fn gate_mul_avx2(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
     let n = out.len();
@@ -253,6 +265,10 @@ unsafe fn gate_mul_avx2(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize)
     }
 }
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available and all six slices share one
+/// length (asserted by the safe wrapper).
 #[target_feature(enable = "avx2")]
 unsafe fn spec_mul_avx2(
     a_re: &[f32],
@@ -297,6 +313,11 @@ unsafe fn spec_mul_avx2(
     }
 }
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available and that `re`/`im` are at least
+/// `2·half` long with twiddles covering `half` entries — the FFT plan's
+/// invariant, asserted by the safe wrapper.
 #[target_feature(enable = "avx2")]
 unsafe fn butterfly_pass_avx2(
     re: &mut [f32],
@@ -384,6 +405,10 @@ const EXP_P3: f32 = 4.1665795894e-2;
 const EXP_P4: f32 = 1.6666665459e-1;
 const EXP_P5: f32 = 5.0000001201e-1;
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available; pure lane-wise arithmetic
+/// otherwise (no memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn exp256(x: __m256) -> __m256 {
     let one = _mm256_set1_ps(1.0);
@@ -415,6 +440,10 @@ unsafe fn exp256(x: __m256) -> __m256 {
 
 /// `tanh(x) = sign(x) · (1 − 2/(e^{2|x|} + 1))` — monotone, saturates
 /// cleanly (the exp clamp at 88.37 sends the correction term to ~1e-38).
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available; pure lane-wise arithmetic
+/// otherwise (no memory access).
 #[target_feature(enable = "avx2")]
 unsafe fn tanh256(x: __m256) -> __m256 {
     let sign_mask = _mm256_set1_ps(-0.0);
@@ -427,6 +456,10 @@ unsafe fn tanh256(x: __m256) -> __m256 {
     _mm256_or_ps(t, sign)
 }
 
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available and `y.len() == x.len()`,
+/// `th.len() == x.len()` (asserted by the safe wrapper).
 #[target_feature(enable = "avx2")]
 unsafe fn gelu_fwd_avx2(x: &[f32], y: &mut [f32], th: &mut [f32]) {
     let n = x.len();

@@ -968,6 +968,8 @@ fn short_conv_bwd_into(
             // SAFETY: batch rows partition `du` and `partial`.
             let dub = unsafe { duv.slice(bi * l * c, l * c) };
             dub.fill(0.0);
+            // SAFETY: same batch-row partition — task bi exclusively owns
+            // `partial[bi·c·f .. (bi+1)·c·f]`.
             let pw = unsafe { pv.slice(bi * c * f, c * f) };
             pw.fill(0.0);
             for t in 0..l {
@@ -1631,6 +1633,8 @@ impl NativeModel {
                             let dc = &mut ctx.a;
                             for t in 0..l {
                                 let gix = (bb * l + t) * c + (order + 1) * d + ch;
+                                // SAFETY: gate slot gix is in channel ch's
+                                // exclusive dzs partition (see above).
                                 unsafe {
                                     *dzs_v.at(gix) += dvrow[t] * crow[t];
                                 }
@@ -1668,12 +1672,16 @@ impl NativeModel {
                                 &mut ctx.ws,
                                 &mut ctx.b,
                             );
+                            // SAFETY: row (bb, ch) of dvprev is owned by
+                            // channel ch alone (see partition note above).
                             let dvp = unsafe { dvp_v.slice(row, l) };
                             for t in 0..l {
                                 dvp[t] = ctx.b[t] + bv * dc[t];
                             }
                             ctx.ws.put_spectrum(s_dc);
                         }
+                        // SAFETY: bias slot ch belongs to this channel's
+                        // exclusive partition.
                         unsafe {
                             *gb_v.at(ch) += bias_acc;
                         }

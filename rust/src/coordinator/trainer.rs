@@ -140,7 +140,7 @@ pub fn eval_accuracy<S: BatchSource>(
             let argmax = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i as i32)
                 .unwrap();
             total += 1;

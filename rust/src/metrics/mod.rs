@@ -16,7 +16,7 @@ pub fn class_accuracy(logits: &[f32], classes: usize, labels: &[i32]) -> f64 {
         let argmax = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap();
         if argmax == lab {

@@ -73,6 +73,10 @@ pub fn install_drain_signals() {
         extern "C" {
             fn signal(signum: i32, handler: usize) -> usize;
         }
+        // SAFETY: libc `signal` is called with valid signal numbers and a
+        // handler that is a plain `extern "C" fn` doing one atomic store —
+        // async-signal-safe per the module doc above. No Rust state is
+        // touched from the handler.
         unsafe {
             signal(2, on_sig as usize); // SIGINT
             signal(15, on_sig as usize); // SIGTERM

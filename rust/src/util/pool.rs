@@ -250,7 +250,15 @@ pub struct SharedMut<'a> {
     _marker: PhantomData<&'a mut [f32]>,
 }
 
+// SAFETY: SharedMut is a raw view over a caller-owned `&mut [f32]`; every
+// dereference happens through the `unsafe` accessors below, whose contract
+// (disjoint index partitions per task) is what actually guarantees absence
+// of data races. Send/Sync only let the view cross thread boundaries; they
+// add no access capability beyond those accessors.
 unsafe impl Send for SharedMut<'_> {}
+// SAFETY: as above — shared references to SharedMut expose only the same
+// contract-guarded accessors, so `&SharedMut` is safe to share across the
+// pool's worker threads.
 unsafe impl Sync for SharedMut<'_> {}
 
 impl<'a> SharedMut<'a> {

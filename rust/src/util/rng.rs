@@ -122,7 +122,7 @@ impl Zipf {
         let r = rng.f32();
         match self
             .cdf
-            .binary_search_by(|c| c.partial_cmp(&r).unwrap())
+            .binary_search_by(|c| c.total_cmp(&r))
         {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),

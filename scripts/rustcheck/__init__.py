@@ -1,0 +1,38 @@
+"""rustcheck — a compiler-independent static-analysis gate for the Rust tree.
+
+Seven PRs of Rust shipped rustc-unverified (no toolchain in any container
+so far); every session repeated a manual brace-balance + API-signature
+audit.  This package automates that audit as a real analyzer that runs on
+bare CPython (no cargo, no pip deps) and is wired in as
+``scripts/check.sh lint-smoke``.
+
+Passes (DESIGN.md §Static-Analysis):
+
+* ``lexer``  — a real Rust lexer (line/block comments, string / raw-string /
+  byte-string / char literals, lifetimes) feeding exact delimiter balance
+  and unclosed-literal checks with file:line diagnostics.
+* ``parser`` — per-file item indexer: fn signatures + arity, structs /
+  enums / traits / impl blocks / consts / uses / macros, with cfg-attr and
+  module-scope tracking.
+* ``crate``  — crate assembly: ``mod x;`` wiring, orphan-file reachability,
+  ``use crate::…`` path resolution against the indexed item tree,
+  duplicate-item detection, call-site arity for crate-local functions, and
+  trait-impl completeness.
+* ``lints``  — targeted lints encoding bugs this repo has actually hit:
+  ``partial_cmp(..).unwrap()`` (the PR-3 NaN panic class), ``unsafe``
+  without a ``// SAFETY:`` line, SIMD kernel tables whose fields drift from
+  the scalar reference table, and nondeterminism sources outside the
+  sanctioned ``net/mod.rs`` seam.
+
+Entry point: ``python3 scripts/rustcheck [--strict] [--json]`` (see
+``driver.py``), or ``run_repo(root)`` from Python.
+
+What rustcheck can and cannot prove is documented in DESIGN.md
+§Static-Analysis — it is a gate against the defect classes above, not a
+replacement for rustc: no type checking, no borrow checking, no trait
+resolution beyond name/arity matching.
+"""
+
+__version__ = "1.0.0"
+
+from .driver import run_repo, main  # noqa: F401  (public API)

@@ -1,0 +1,13 @@
+"""Allow `python3 scripts/rustcheck [...]` to run the analyzer directly."""
+
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):
+    # invoked as `python3 scripts/rustcheck` — make the package importable
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from rustcheck.driver import main
+else:
+    from .driver import main
+
+sys.exit(main())

@@ -1,0 +1,467 @@
+"""Crate assembly and the cross-file passes.
+
+Starting from a crate root (``lib.rs``, ``main.rs``, or a standalone
+test/bench/example file), follows every ``mod x;`` declaration to its file
+(``x.rs`` or ``x/mod.rs``), builds per-module namespaces (items + child
+modules + resolved ``pub use`` re-exports, to a fixpoint), and then runs:
+
+* **mod-unresolved**   — a ``mod x;`` with no backing file,
+* **use-unresolved**   — a ``use`` path that does not resolve against the
+  indexed item tree (``crate::``/``self::``/``super::`` and the local crates
+  ``hyena``/``anyhow``/``xla``; ``std``-and-friends are trusted),
+* **duplicate**        — two ungated (no ``#[cfg]``) definitions of the same
+  name in the same module namespace,
+* **arity**            — a call site of a crate-local function whose argument
+  count disagrees with the definition (closure-bearing and generic-heavy
+  argument lists are skipped as uncountable),
+* **trait-impl**       — an ``impl Trait for Type`` of a crate-local trait
+  that neither defines nor inherits a required method.
+
+Resolution is deliberately lenient where the analyzer cannot be sure
+(glob imports open a namespace, unknown extern crates are trusted, methods
+not found on a type are assumed derived/blanket) — findings fire only on
+facts the index can actually prove wrong.
+"""
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .lexer import lex, check_balance
+from .parser import Fn, TypeItem, index_file
+
+EXTERNAL_CRATES = {"std", "core", "alloc", "proc_macro", "test"}
+
+
+def _f(rule: str, path: str, line: int, message: str) -> dict:
+    return {"rule": rule, "file": str(path), "line": line, "message": message}
+
+
+@dataclass
+class Mod:
+    path: Tuple[str, ...]
+    # name -> list of (item, kind) — first entry wins for lookup, the rest
+    # feed the duplicate check.  kind: fn | type | value | mod
+    values: Dict[str, List] = field(default_factory=list)
+    types: Dict[str, List] = field(default_factory=dict)
+    uses: List = field(default_factory=list)
+    imports: Dict[str, tuple] = field(default_factory=dict)
+    has_glob: bool = False  # any glob import: local lookups become open
+    pub_glob: bool = False  # pub glob re-export: defs become open
+
+    def __post_init__(self):
+        if not isinstance(self.values, dict):
+            self.values = {}
+
+
+class Crate:
+    def __init__(self, name: str, root_file: Path, repo_root: Path,
+                 externs: Optional[Dict[str, "Crate"]] = None):
+        self.name = name
+        self.repo = repo_root
+        self.root_file = root_file
+        self.externs = dict(externs or {})
+        self.files: Dict[str, object] = {}  # rel path -> FileIndex
+        self.file_mod: Dict[str, Tuple[str, ...]] = {}
+        self.mods: Dict[Tuple[str, ...], Mod] = {}
+        self.traits: Dict[str, dict] = {}  # name -> {required, provided}
+        self.impls_by_type: Dict[str, List] = {}
+        self.findings: List[dict] = []
+        self._load(root_file, ())
+        self._build_namespaces()
+        self._resolve_reexports()
+        self._resolve_imports()
+
+    # -- loading --------------------------------------------------------------
+
+    def _rel(self, p: Path) -> str:
+        try:
+            return p.resolve().relative_to(self.repo.resolve()).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+    def _load(self, file_path: Path, mod_path: Tuple[str, ...]) -> None:
+        rel = self._rel(file_path)
+        if rel in self.files:
+            return
+        try:
+            text = file_path.read_text(encoding="utf-8")
+        except OSError as e:
+            self.findings.append(_f("io", rel, 1, f"cannot read file: {e}"))
+            return
+        lx = lex(text, rel)
+        self.findings.extend(check_balance(lx, rel))
+        idx = index_file(lx, rel)
+        self.files[rel] = idx
+        self.file_mod[rel] = mod_path
+        self._ensure(mod_path)
+        for m in idx.mods:
+            child = mod_path + m.module + (m.name,)
+            self._ensure(child)
+            if m.inline:
+                continue
+            resolved = self._mod_file(file_path, mod_path, m)
+            if resolved is None:
+                self.findings.append(_f(
+                    "mod-unresolved", rel, m.line,
+                    f"`mod {m.name};` has no backing file "
+                    f"({m.name}.rs or {m.name}/mod.rs next to {file_path.name})",
+                ))
+            else:
+                self._load(resolved, child)
+
+    def _mod_file(self, file_path: Path, mod_path, m) -> Optional[Path]:
+        base = file_path.parent
+        if file_path.name not in ("lib.rs", "main.rs", "mod.rs") and mod_path:
+            base = base / file_path.stem
+        for seg in m.module:  # mod declared inside an inline module
+            base = base / seg
+        for cand in (base / f"{m.name}.rs", base / m.name / "mod.rs"):
+            if cand.is_file():
+                return cand
+        return None
+
+    def _ensure(self, path: Tuple[str, ...]) -> Mod:
+        for k in range(len(path) + 1):
+            p = path[:k]
+            if p not in self.mods:
+                self.mods[p] = Mod(p)
+        return self.mods[path]
+
+    # -- namespaces -----------------------------------------------------------
+
+    def _add(self, mod: Tuple[str, ...], ns: str, name: str, item, kind: str):
+        m = self._ensure(mod)
+        table = m.values if ns == "value" else m.types
+        table.setdefault(name, []).append((item, kind))
+
+    def _build_namespaces(self) -> None:
+        for rel, idx in self.files.items():
+            base = self.file_mod[rel]
+            for fn in idx.fns:
+                if fn.container is None:
+                    self._add(base + fn.module, "value", fn.name, fn, "fn")
+            for t in idx.types:
+                mod = base + t.module
+                self._ensure(mod)
+                self._add(mod, "type", t.name, t, "type")
+                if t.tuple_arity is not None:
+                    self._add(mod, "value", t.name, t, "type")  # tuple ctor
+                if t.kind == "trait":
+                    src = idx.traits.get(t.name, {"required": {}, "provided": {}})
+                    tgt = self.traits.setdefault(
+                        t.name, {"required": {}, "provided": {}, "line": t.line}
+                    )
+                    tgt["required"].update(src["required"])
+                    tgt["provided"].update(src["provided"])
+            for v in idx.values:
+                if v.container is not None:
+                    continue  # assoc const of an impl/trait, not a module item
+                self._add(base + v.module, "value", v.name, v, "value")
+                if v.kind == "macro" and v.exported and (base + v.module):
+                    # #[macro_export] hoists the macro to the crate root
+                    self._add((), "value", v.name, v, "value")
+            for m in idx.mods:
+                self._add(base + m.module, "type", m.name,
+                          base + m.module + (m.name,), "mod")
+            for imp in idx.impls:
+                self.impls_by_type.setdefault(imp.type_name, []).append(imp)
+            for u in idx.uses:
+                mod = self._ensure(base + u.module)
+                mod.uses.append((u, rel))
+                if u.segments[-1] == "*":
+                    mod.has_glob = True
+                    if u.is_pub:
+                        mod.pub_glob = True
+
+    def _resolve_reexports(self) -> None:
+        # pub use chains: resolve to a fixpoint so `pub use a::b; pub use
+        # crate::x::b as c;` style laddering lands in defs.
+        for _ in range(5):
+            changed = False
+            for mod in list(self.mods.values()):
+                for u, _rel in mod.uses:
+                    if not u.is_pub or u.segments[-1] == "*":
+                        continue
+                    name = u.alias or u.segments[-1]
+                    if name in mod.values or name in mod.types:
+                        continue
+                    res = self.resolve(mod.path, u.segments, quiet=True)
+                    if res[0] in ("fn", "value"):
+                        self._add(mod.path, "value", name, res[1], res[0])
+                        changed = True
+                    elif res[0] == "type":
+                        self._add(mod.path, "type", name, res[1], "type")
+                        if getattr(res[1], "tuple_arity", None) is not None:
+                            self._add(mod.path, "value", name, res[1], "type")
+                        changed = True
+                    elif res[0] == "mod":
+                        self._add(mod.path, "type", name, res[2], "mod")
+                        changed = True
+            if not changed:
+                break
+
+    def _resolve_imports(self) -> None:
+        for mod in self.mods.values():
+            for u, rel in mod.uses:
+                leaf = u.segments[-1]
+                res = self.resolve(mod.path, u.segments, quiet=True)
+                if res[0] == "missing":
+                    self.findings.append(_f(
+                        "use-unresolved", rel, u.line,
+                        f"`use {'::'.join(u.segments)}` does not resolve: {res[1]}",
+                    ))
+                    continue
+                if leaf == "*":
+                    continue
+                name = u.alias or leaf
+                if name == "self" and len(u.segments) >= 2:
+                    name = u.segments[-2]
+                mod.imports.setdefault(name, res)
+
+    # -- path resolution ------------------------------------------------------
+
+    def lookup(self, mod_path: Tuple[str, ...], name: str, ns: str):
+        """Name lookup inside one module: defs first, then imports."""
+        m = self.mods.get(mod_path)
+        if m is None:
+            return ("unknown",)
+        table = m.values if ns == "value" else m.types
+        if name in table:
+            item, kind = table[name][0]
+            if kind == "mod":
+                return ("mod", self, item)
+            return (kind, item)
+        if name in m.imports:
+            return m.imports[name]
+        if m.has_glob or m.pub_glob:
+            return ("unknown",)
+        return ("absent",)
+
+    def resolve(self, cur_mod: Tuple[str, ...], segments: Tuple[str, ...],
+                quiet: bool = False):
+        """Resolve a `use`/call path. Returns one of:
+        ("fn", Fn) | ("type", TypeItem) | ("value", item) |
+        ("mod", crate, path) | ("variant", enum, name) | ("method", Fn) |
+        ("unknown",) | ("external",) | ("missing", reason)."""
+        segs = list(segments)
+        crate: Crate = self
+        base = cur_mod
+        first = segs[0]
+        if first == "crate":
+            base = ()
+            segs = segs[1:]
+        elif first == "self" and len(segs) > 1:
+            segs = segs[1:]
+        elif first == "super":
+            while segs and segs[0] == "super":
+                if not base:
+                    return ("missing", "`super` above the crate root")
+                base = base[:-1]
+                segs = segs[1:]
+        elif first == self.name:
+            base = ()
+            segs = segs[1:]
+        elif first in self.externs:
+            crate = self.externs[first]
+            base = ()
+            segs = segs[1:]
+        elif first in EXTERNAL_CRATES:
+            return ("external",)
+        else:
+            # relative: first segment must be visible in the current module
+            probe = crate.lookup(base, first, "type")
+            if probe[0] == "absent":
+                probe = crate.lookup(base, first, "value")
+            if probe[0] == "mod":
+                crate, base = probe[1], probe[2]
+                segs = segs[1:]
+            elif probe[0] in ("fn", "value") and len(segs) == 1:
+                return probe
+            elif probe[0] == "type":
+                return crate._assoc(probe[1], segs[1:])
+            elif probe[0] == "absent":
+                # unknown extern crate (edition-2018 path) — trust it
+                return ("external",)
+            else:
+                return ("unknown",)
+            if not segs:
+                return ("mod", crate, base)
+        # walk the remaining segments through child modules
+        while segs:
+            seg = segs[0]
+            if seg == "self" and len(segs) == 1:
+                return ("mod", crate, base)
+            if seg == "*" and len(segs) == 1:
+                return ("mod", crate, base)
+            hit = crate.lookup(base, seg, "type")
+            if hit[0] == "mod":
+                crate, base = hit[1], hit[2]
+                segs = segs[1:]
+                continue
+            if hit[0] == "type":
+                return crate._assoc(hit[1], segs[1:])
+            if hit[0] in ("unknown",):
+                return ("unknown",)
+            # not a module/type: maybe a value leaf
+            if len(segs) == 1:
+                vhit = crate.lookup(base, seg, "value")
+                if vhit[0] in ("fn", "value", "type"):
+                    return vhit
+                if vhit[0] == "unknown":
+                    return ("unknown",)
+                mod_name = "::".join(("crate",) + base) if crate is self else crate.name
+                return ("missing", f"`{seg}` not found in `{mod_name or 'crate'}`")
+            mod_name = "::".join(("crate",) + base) if crate is self else crate.name
+            return ("missing", f"`{seg}` is not a module in `{mod_name or 'crate'}`")
+        return ("mod", crate, base)
+
+    def _assoc(self, t: TypeItem, rest: List[str]):
+        """Resolve `Type::rest…` — enum variants and impl/trait methods."""
+        if not rest:
+            return ("type", t)
+        if len(rest) > 1:
+            return ("unknown",)
+        name = rest[0]
+        if t.kind == "enum":
+            if name == "*":
+                return ("type", t)
+            if name in t.variants:
+                return ("variant", t, name)
+        m = self.find_method(t.name, name)
+        if m is not None:
+            return ("method", m)
+        # derives, blanket impls, assoc consts: not indexed — trust it
+        return ("unknown",)
+
+    def find_method(self, type_name: str, meth: str) -> Optional[Fn]:
+        for imp in self.impls_by_type.get(type_name, []):
+            if meth in imp.methods:
+                return imp.methods[meth]
+        # provided methods inherited from crate-local trait impls
+        for imp in self.impls_by_type.get(type_name, []):
+            if imp.trait_name and imp.trait_name in self.traits:
+                tr = self.traits[imp.trait_name]
+                if meth in tr["provided"]:
+                    return tr["provided"][meth]
+                if meth in tr["required"]:
+                    return tr["required"][meth]
+        return None
+
+    # -- cross-file checks ----------------------------------------------------
+
+    def check_duplicates(self) -> List[dict]:
+        out = []
+        for mod in self.mods.values():
+            for ns_name, table in (("value", mod.values), ("type", mod.types)):
+                for name, entries in table.items():
+                    defined = [
+                        it for it, kind in entries
+                        if kind in ("fn", "type", "value")
+                        and getattr(it, "cfg", "x") is None
+                    ]
+                    if len(defined) > 1:
+                        first, second = defined[0], defined[1]
+                        out.append(_f(
+                            "duplicate",
+                            self._item_file(second), second.line,
+                            f"duplicate {ns_name}-namespace definition of "
+                            f"`{name}` (first at "
+                            f"{self._item_file(first)}:{first.line})",
+                        ))
+        # duplicate methods within impls of the same (type, trait) pair
+        seen: Dict[tuple, Fn] = {}
+        for tname, imps in self.impls_by_type.items():
+            for imp in imps:
+                if imp.cfg is not None:
+                    continue
+                for mname, fn in imp.methods.items():
+                    if fn.cfg is not None:
+                        continue
+                    key = (tname, imp.trait_name, mname)
+                    if key in seen:
+                        out.append(_f(
+                            "duplicate", self._item_file(fn), fn.line,
+                            f"duplicate method `{tname}::{mname}` (first at "
+                            f"{self._item_file(seen[key])}:{seen[key].line})",
+                        ))
+                    else:
+                        seen[key] = fn
+        return out
+
+    def _item_file(self, item) -> str:
+        mod = getattr(item, "module", ())
+        for rel, idx in self.files.items():
+            if item in idx.fns or item in idx.types or item in idx.values:
+                return rel
+        del mod
+        return self._rel(self.root_file)
+
+    def check_calls(self) -> List[dict]:
+        out = []
+        for rel, idx in self.files.items():
+            base = self.file_mod[rel]
+            for call in idx.calls:
+                if call.arity is None:
+                    continue
+                res = self.resolve(base + call.module, call.segments, quiet=True)
+                expected = None
+                label = "::".join(call.segments)
+                if res[0] == "fn":
+                    fn = res[1]
+                    expected = fn.arity + (1 if fn.has_self else 0)
+                elif res[0] == "method":
+                    fn = res[1]
+                    expected = fn.arity + (1 if fn.has_self else 0)
+                elif res[0] == "variant":
+                    enum, vname = res[1], res[2]
+                    va = enum.variants.get(vname)
+                    if va is None:
+                        continue
+                    expected = va
+                elif res[0] == "type":
+                    t = res[1]
+                    if t.tuple_arity is None:
+                        continue
+                    expected = t.tuple_arity
+                else:
+                    continue
+                if expected != call.arity:
+                    out.append(_f(
+                        "arity", rel, call.line,
+                        f"call of `{label}` passes {call.arity} argument(s), "
+                        f"definition takes {expected}",
+                    ))
+        return out
+
+    def check_trait_impls(self) -> List[dict]:
+        out = []
+        for tname, imps in self.impls_by_type.items():
+            for imp in imps:
+                if not imp.trait_name:
+                    continue
+                tr = self.traits.get(imp.trait_name)
+                if tr is None:
+                    continue  # std / vendored trait: not ours to judge
+                missing = sorted(set(tr["required"]) - set(imp.methods))
+                if missing:
+                    rel = self._impl_file(imp)
+                    out.append(_f(
+                        "trait-impl", rel, imp.line,
+                        f"`impl {imp.trait_name} for {tname}` is missing "
+                        f"required method(s): {', '.join(missing)}",
+                    ))
+        return out
+
+    def _impl_file(self, imp) -> str:
+        for rel, idx in self.files.items():
+            if imp in idx.impls:
+                return rel
+        return self._rel(self.root_file)
+
+    def run_checks(self) -> List[dict]:
+        out = list(self.findings)
+        out.extend(self.check_duplicates())
+        out.extend(self.check_calls())
+        out.extend(self.check_trait_impls())
+        return out

@@ -1,0 +1,237 @@
+"""Repo driver: crate discovery, lint scope, allowlist, CLI.
+
+Crates analyzed:
+
+* ``rust/src/lib.rs``   — the ``hyena`` library crate (module graph crawled),
+* ``rust/src/main.rs``  — the binary crate (``use hyena::…`` resolves against
+  the library's indexed item tree),
+* every file in ``rust/tests``, ``benches``, ``examples`` — standalone crate
+  roots with the same extern resolution,
+* ``rust/vendor/*/src/lib.rs`` — vendored crates, crawled so library paths
+  into them resolve; structural findings inside vendor are reported too.
+
+Lint scope (partial_cmp / unsafe-SAFETY / kernel parity / nondeterminism) is
+the first-party tree only: ``rust/src``, ``rust/tests``, ``benches``,
+``examples`` — vendor code is indexed for resolution, not lint-audited.
+
+Allowlist: ``scripts/rustcheck/allowlist.txt``; each entry is
+``rule | path-glob | message-substring | justification`` and suppresses
+matching findings (they are still reported under "allowlisted" in JSON).
+"""
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .crate import Crate, _f
+from .lexer import check_balance, lex
+from .lints import (
+    lint_kernel_parity,
+    lint_nondeterminism,
+    lint_partial_cmp,
+    lint_unsafe_safety,
+)
+
+_KERNELS_DIR = "rust/src/backend/native/kernels"
+
+
+def _default_root() -> Path:
+    return Path(__file__).resolve().parents[2]
+
+
+def _rel(root: Path, p: Path) -> str:
+    return p.resolve().relative_to(root.resolve()).as_posix()
+
+
+def _scope_dirs(root: Path) -> List[Path]:
+    dirs = []
+    for cand in ("rust/src", "rust/tests", "rust/benches", "benches",
+                 "rust/examples", "examples"):
+        d = root / cand
+        if d.is_dir():
+            dirs.append(d)
+    return dirs
+
+
+def _standalone_roots(root: Path) -> List[Path]:
+    out = []
+    for cand in ("rust/tests", "rust/benches", "benches", "rust/examples",
+                 "examples"):
+        d = root / cand
+        if d.is_dir():
+            out.extend(sorted(d.glob("*.rs")))
+    return out
+
+
+def run_repo(root: Optional[Path] = None,
+             allowlist_path: Optional[Path] = None) -> dict:
+    """Run every pass; returns {"findings": […], "allowlisted": […]}."""
+    root = Path(root) if root else _default_root()
+    findings: List[dict] = []
+
+    # -- crates -------------------------------------------------------------
+    externs: Dict[str, Crate] = {}
+    vendor_crates: List[Crate] = []
+    for vend in sorted((root / "rust" / "vendor").glob("*/src/lib.rs")):
+        name = vend.parent.parent.name.replace("-", "_")
+        c = Crate(name, vend, root)
+        externs[name] = c
+        vendor_crates.append(c)
+
+    lib = None
+    lib_root = root / "rust" / "src" / "lib.rs"
+    if lib_root.is_file():
+        lib = Crate("hyena", lib_root, root, externs=externs)
+        findings.extend(lib.run_checks())
+    bin_c = None
+    bin_root = root / "rust" / "src" / "main.rs"
+    if bin_root.is_file():
+        bin_externs = dict(externs)
+        if lib is not None:
+            bin_externs["hyena"] = lib
+        bin_c = Crate("hyena-bin", bin_root, root, externs=bin_externs)
+        findings.extend(bin_c.run_checks())
+    for c in vendor_crates:
+        findings.extend(c.run_checks())
+    for sroot in _standalone_roots(root):
+        ext = dict(externs)
+        if lib is not None:
+            ext["hyena"] = lib
+        c = Crate(sroot.stem, sroot, root, externs=ext)
+        findings.extend(c.run_checks())
+
+    # -- orphan files -------------------------------------------------------
+    visited = set()
+    for c in [lib, bin_c] + vendor_crates:
+        if c is not None:
+            visited.update(c.files)
+    src = root / "rust" / "src"
+    orphans = []
+    if src.is_dir():
+        for f in sorted(src.rglob("*.rs")):
+            rel = _rel(root, f)
+            if rel not in visited:
+                orphans.append(rel)
+                findings.append(_f(
+                    "orphan-file", rel, 1,
+                    "file is not reachable from lib.rs or main.rs "
+                    "via any `mod` chain",
+                ))
+
+    # -- lints over the first-party tree ------------------------------------
+    kernel_masked: Dict[str, str] = {}
+    for d in _scope_dirs(root):
+        for f in sorted(d.rglob("*.rs")):
+            rel = _rel(root, f)
+            try:
+                text = f.read_text(encoding="utf-8")
+            except OSError as e:
+                findings.append(_f("io", rel, 1, f"cannot read file: {e}"))
+                continue
+            lx = lex(text, rel)
+            if rel in orphans:
+                # orphans were never loaded by a crate: balance-check here
+                findings.extend(check_balance(lx, rel))
+            findings.extend(lint_partial_cmp(lx.masked, rel))
+            findings.extend(lint_unsafe_safety(lx, text, rel))
+            findings.extend(lint_nondeterminism(lx.masked, rel))
+            if rel.startswith(_KERNELS_DIR):
+                kernel_masked[rel] = lx.masked
+    findings.extend(lint_kernel_parity(kernel_masked))
+
+    # -- allowlist ----------------------------------------------------------
+    allow = _load_allowlist(
+        allowlist_path or (Path(__file__).resolve().parent / "allowlist.txt")
+    )
+    kept, allowed = [], []
+    for fd in findings:
+        if _allowlisted(fd, allow):
+            allowed.append(fd)
+        else:
+            kept.append(fd)
+    kept.sort(key=lambda fd: (fd["file"], fd["line"], fd["rule"]))
+    allowed.sort(key=lambda fd: (fd["file"], fd["line"], fd["rule"]))
+    return {"findings": kept, "allowlisted": allowed}
+
+
+def _load_allowlist(path: Path) -> List[Tuple[str, str, str]]:
+    entries = []
+    if not path.is_file():
+        return entries
+    for raw in path.read_text(encoding="utf-8").splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split("|")]
+        if len(parts) < 4 or not parts[3]:
+            # malformed or unjustified entries do not suppress anything
+            continue
+        entries.append((parts[0], parts[1], parts[2]))
+    return entries
+
+
+def _allowlisted(fd: dict, allow: List[Tuple[str, str, str]]) -> bool:
+    for rule, glob, sub in allow:
+        if rule != "*" and rule != fd["rule"]:
+            continue
+        if glob and not fnmatch.fnmatch(fd["file"], glob):
+            continue
+        if sub and sub not in fd["message"]:
+            continue
+        return True
+    return False
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="rustcheck",
+        description="compiler-independent static-analysis gate for the Rust tree",
+    )
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: two levels above this package)")
+    ap.add_argument("--allowlist", type=Path, default=None,
+                    help="allowlist file (default: scripts/rustcheck/allowlist.txt)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any unallowlisted finding remains")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable JSON on stdout")
+    args = ap.parse_args(argv)
+
+    res = run_repo(args.root, args.allowlist)
+    findings, allowed = res["findings"], res["allowlisted"]
+
+    if args.json:
+        print(json.dumps({
+            "findings": findings,
+            "allowlisted": allowed,
+            "summary": {
+                "findings": len(findings),
+                "allowlisted": len(allowed),
+                "by_rule": _by_rule(findings),
+            },
+        }, indent=2))
+    else:
+        for fd in findings:
+            print(f"{fd['file']}:{fd['line']}: [{fd['rule']}] {fd['message']}")
+        tail = f"rustcheck: {len(findings)} finding(s)"
+        if allowed:
+            tail += f", {len(allowed)} allowlisted"
+        print(tail)
+
+    if args.strict and findings:
+        return 1
+    return 0
+
+
+def _by_rule(findings: List[dict]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for fd in findings:
+        out[fd["rule"]] = out.get(fd["rule"], 0) + 1
+    return out
+
+
+if __name__ == "__main__":
+    sys.exit(main())

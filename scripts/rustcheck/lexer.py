@@ -1,0 +1,335 @@
+"""A small but real Rust lexer.
+
+Tokenizes enough of the language to make the downstream passes exact where
+grep-based auditing is not: comments (line + nested block), string literals
+(plain, raw ``r#"…"#``, byte ``b"…"``), char literals vs lifetimes, numeric
+literals, identifiers (including raw ``r#ident``) and punctuation.  The
+compound puncts ``::``, ``->``, ``=>``, ``..`` are fused so signature
+scanning never miscounts ``>`` inside ``-> T``; shift operators are NOT
+fused so ``Vec<Vec<T>>`` closes two generic depths.
+
+Outputs, per file:
+
+* ``tokens``   — ``Token(kind, text, line)`` stream with comments dropped,
+* ``comments`` — ``(line, text)`` pairs (doc comments included) for the
+  SAFETY lint,
+* ``masked``   — the source text with comment bodies and literal contents
+  replaced by spaces (newlines kept), so regex lints can never match inside
+  a string or comment,
+* ``errors``   — unclosed block comment / string / char diagnostics.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass
+class Token:
+    kind: str  # id | num | str | char | life | punct
+    text: str
+    line: int
+
+
+@dataclass
+class LexResult:
+    tokens: List[Token] = field(default_factory=list)
+    comments: List[Tuple[int, str]] = field(default_factory=list)
+    masked: str = ""
+    errors: List[Tuple[int, str]] = field(default_factory=list)
+
+
+_ID_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_ID_CONT = _ID_START | set("0123456789")
+_COMPOUND = ("::", "->", "=>", "..")
+
+
+def lex(text: str, path: str = "<mem>") -> LexResult:
+    res = LexResult()
+    out = list(text)  # masked copy, mutated in place
+
+    def blank(a: int, b: int) -> None:
+        for j in range(a, b):
+            if out[j] != "\n":
+                out[j] = " "
+
+    n = len(text)
+    i = 0
+    line = 1
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+
+        # ---- comments ----------------------------------------------------
+        if c == "/" and i + 1 < n:
+            if text[i + 1] == "/":
+                j = text.find("\n", i)
+                j = n if j == -1 else j
+                res.comments.append((line, text[i:j]))
+                blank(i, j)
+                i = j
+                continue
+            if text[i + 1] == "*":
+                start_line = line
+                depth = 1
+                j = i + 2
+                while j < n and depth > 0:
+                    if text.startswith("/*", j):
+                        depth += 1
+                        j += 2
+                    elif text.startswith("*/", j):
+                        depth -= 1
+                        j += 2
+                    else:
+                        if text[j] == "\n":
+                            line += 1
+                        j += 1
+                if depth > 0:
+                    res.errors.append((start_line, "unclosed block comment"))
+                res.comments.append((start_line, text[i:j]))
+                blank(i, j)
+                i = j
+                continue
+
+        # ---- string-ish literals ----------------------------------------
+        if c == '"':
+            i, line = _scan_string(text, i, line, res, blank, raw_hashes=None)
+            continue
+        if c in "rb" and _raw_or_byte_prefix(text, i) is not None:
+            kind, body_at, hashes = _raw_or_byte_prefix(text, i)
+            if kind == "rawid":
+                # r#ident — a raw identifier, not a string.
+                j = body_at  # points at the ident start
+                k = j
+                while k < n and text[k] in _ID_CONT:
+                    k += 1
+                res.tokens.append(Token("id", text[j:k], line))
+                i = k
+                continue
+            if kind == "raw":
+                i, line = _scan_raw_string(text, i, body_at, hashes, line, res, blank)
+                continue
+            # kind == "byte": b"…" — normal escape rules
+            i, line = _scan_string(text, body_at - 1, line, res, blank, raw_hashes=None)
+            continue
+
+        # ---- char literal vs lifetime -----------------------------------
+        if c == "'":
+            nxt = text[i + 1] if i + 1 < n else ""
+            if nxt == "\\":
+                j = i + 2
+                if j < n:
+                    if text[j] == "u":  # '\u{…}'
+                        j = text.find("}", j)
+                        j = n if j == -1 else j + 1
+                    else:
+                        j += 1
+                if j < n and text[j] == "'":
+                    blank(i + 1, j)
+                    res.tokens.append(Token("char", "'\\.'", line))
+                    i = j + 1
+                else:
+                    res.errors.append((line, "unclosed char literal"))
+                    i = j
+                continue
+            if nxt in _ID_CONT:
+                j = i + 1
+                while j < n and text[j] in _ID_CONT:
+                    j += 1
+                if j < n and text[j] == "'" and j == i + 2:
+                    # 'x' char literal (single ident char then closing quote)
+                    blank(i + 1, j)
+                    res.tokens.append(Token("char", "'.'", line))
+                    i = j + 1
+                else:
+                    res.tokens.append(Token("life", text[i:j], line))
+                    i = j
+                continue
+            if nxt == "'":
+                res.errors.append((line, "empty char literal"))
+                i += 2
+                continue
+            if nxt and nxt != "\n" and i + 2 < n and text[i + 2] == "'":
+                # single non-ident char literal: ' ', '{', '"', '='
+                blank(i + 1, i + 2)
+                res.tokens.append(Token("char", "'.'", line))
+                i += 3
+                continue
+            # Bare quote followed by punctuation: malformed
+            res.errors.append((line, "stray ' (not a char literal or lifetime)"))
+            i += 1
+            continue
+
+        # ---- identifiers / numbers --------------------------------------
+        if c in _ID_START:
+            j = i + 1
+            while j < n and text[j] in _ID_CONT:
+                j += 1
+            res.tokens.append(Token("id", text[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            while j < n and (text[j] in _ID_CONT):
+                j += 1
+            # fractional part: '.' followed by a digit (never '..' ranges)
+            if j < n - 1 and text[j] == "." and text[j + 1].isdigit():
+                j += 1
+                while j < n and text[j] in _ID_CONT:
+                    j += 1
+            # exponent sign: 1e-6 / 1E+9 (the e was eaten by _ID_CONT)
+            if j < n and text[j] in "+-" and text[j - 1] in "eE" and j >= 2 and text[i].isdigit():
+                j += 1
+                while j < n and text[j].isdigit() or (j < n and text[j] == "_"):
+                    j += 1
+            res.tokens.append(Token("num", text[i:j], line))
+            i = j
+            continue
+
+        # ---- punctuation -------------------------------------------------
+        for comp in _COMPOUND:
+            if text.startswith(comp, i):
+                # '..=' extends '..'
+                if comp == ".." and text.startswith("..=", i):
+                    comp = "..="
+                res.tokens.append(Token("punct", comp, line))
+                i += len(comp)
+                break
+        else:
+            res.tokens.append(Token("punct", c, line))
+            i += 1
+
+    res.masked = "".join(out)
+    return res
+
+
+def _raw_or_byte_prefix(text: str, i: int):
+    """Classify a possible r"/r#"/br#"/b" prefix at i.
+
+    Returns (kind, body_start, hashes) where kind is 'raw' (raw string),
+    'byte' (b"…"), or 'rawid' (r#ident), else None.  body_start points just
+    past the opening quote (or at the ident for rawid).
+    """
+    n = len(text)
+    j = i
+    if text[j] == "b":
+        j += 1
+        if j < n and text[j] == "r":
+            j += 1
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and text[j] == '"':
+                return ("raw", j + 1, hashes)
+            return None
+        if j < n and text[j] == '"':
+            return ("byte", j + 1, 0)
+        return None
+    if text[j] == "r":
+        j += 1
+        hashes = 0
+        while j < n and text[j] == "#":
+            hashes += 1
+            j += 1
+        if j < n and text[j] == '"':
+            return ("raw", j + 1, hashes)
+        if hashes == 1 and j < n and text[j] in _ID_START:
+            return ("rawid", j, 0)
+        return None
+    return None
+
+
+def _scan_string(text, i, line, res, blank, raw_hashes):
+    """Scan a plain/byte string starting at the quote char index i (or the
+    char before body for byte strings). Returns (next_i, line)."""
+    n = len(text)
+    start_line = line
+    # i points at the opening '"' for plain strings; for byte strings the
+    # caller passes body_at-1 which is also the '"'.
+    j = i + 1
+    while j < n:
+        ch = text[j]
+        if ch == "\\":
+            j += 2
+            continue
+        if ch == "\n":
+            line += 1
+            j += 1
+            continue
+        if ch == '"':
+            blank(i + 1, j)
+            res.tokens.append(Token("str", '"…"', start_line))
+            return j + 1, line
+        j += 1
+    res.errors.append((start_line, "unclosed string literal"))
+    blank(i + 1, n)
+    res.tokens.append(Token("str", '"…"', start_line))
+    return n, line
+
+
+def _scan_raw_string(text, i, body_at, hashes, line, res, blank):
+    """Scan r#"…"# starting with body at body_at. Returns (next_i, line)."""
+    n = len(text)
+    start_line = line
+    close = '"' + "#" * hashes
+    j = text.find(close, body_at)
+    if j == -1:
+        res.errors.append((start_line, "unclosed raw string literal"))
+        blank(body_at, n)
+        res.tokens.append(Token("str", '"…"', start_line))
+        return n, line
+    line += text.count("\n", body_at, j)
+    blank(body_at, j)
+    res.tokens.append(Token("str", '"…"', start_line))
+    return j + len(close), line
+
+
+# ---------------------------------------------------------------------------
+# delimiter balance
+# ---------------------------------------------------------------------------
+
+_OPEN = {"(": ")", "[": "]", "{": "}"}
+_CLOSE = {v: k for k, v in _OPEN.items()}
+
+
+def check_balance(lx: LexResult, path: str) -> List[dict]:
+    """Exact (), [], {} balance over the token stream (comments and literal
+    contents already stripped, so a brace in a string can never unbalance)."""
+    findings = []
+    stack: List[Tuple[str, int]] = []
+    for t in lx.tokens:
+        if t.kind != "punct":
+            continue
+        if t.text in _OPEN:
+            stack.append((t.text, t.line))
+        elif t.text in _CLOSE:
+            if not stack:
+                findings.append(
+                    _f("balance", path, t.line, f"unmatched closing '{t.text}'")
+                )
+            else:
+                o, oline = stack.pop()
+                if _OPEN[o] != t.text:
+                    findings.append(
+                        _f(
+                            "balance",
+                            path,
+                            t.line,
+                            f"mismatched '{t.text}' closing '{o}' opened at line {oline}",
+                        )
+                    )
+    for o, oline in stack:
+        findings.append(_f("balance", path, oline, f"unclosed '{o}'"))
+    for ln, msg in lx.errors:
+        findings.append(_f("lexer", path, ln, msg))
+    return findings
+
+
+def _f(rule: str, path: str, line: int, message: str) -> dict:
+    return {"rule": rule, "file": path, "line": line, "message": message}

@@ -1,0 +1,245 @@
+"""Targeted lints encoding defect classes this repo has actually hit.
+
+All text matching runs on the lexer's *masked* source (comment bodies and
+literal contents blanked), so a pattern can never fire inside a string or a
+comment.  The SAFETY lint additionally consumes the lexer's comment list and
+the raw source lines.
+
+Lints:
+
+* **partial-cmp-unwrap** — ``.partial_cmp(..).unwrap()`` / ``.expect(..)``:
+  the PR-3 NaN panic class.  ``f32::total_cmp`` is the sanctioned spelling.
+* **unsafe-no-safety**   — an ``unsafe`` block / fn / impl with no
+  ``// SAFETY:`` comment on the same line or immediately above (attributes,
+  blank lines and further ``unsafe`` lines are transparent; ``/// # Safety``
+  doc sections also satisfy the rule for ``unsafe fn``).
+* **kernel-parity**      — a ``Kernels { … }`` dispatch table in an
+  arch-gated kernel file whose field set drifts from the scalar reference
+  table in ``kernels/mod.rs``.
+* **nondeterminism**     — wall-clock / OS-entropy sources
+  (``SystemTime::now``, ``thread_rng``, ``from_entropy``, ``rand::random``,
+  ``getrandom``) anywhere in ``rust/src`` outside the sanctioned
+  ``net/mod.rs`` seam.  Reproducibility is a core paper claim; randomness
+  must flow from seeded ``util::rng``.
+"""
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .lexer import LexResult
+
+
+def _f(rule: str, path: str, line: int, message: str) -> dict:
+    return {"rule": rule, "file": str(path), "line": line, "message": message}
+
+
+# ---------------------------------------------------------------------------
+# partial_cmp().unwrap()
+# ---------------------------------------------------------------------------
+
+_PARTIAL_CMP = re.compile(
+    r"\.\s*partial_cmp\s*\([^()]*\)\s*\.\s*(unwrap|expect)\s*\(",
+    re.S,
+)
+
+
+def lint_partial_cmp(masked: str, path: str) -> List[dict]:
+    out = []
+    for m in _PARTIAL_CMP.finditer(masked):
+        line = masked.count("\n", 0, m.start()) + 1
+        out.append(_f(
+            "partial-cmp-unwrap", path, line,
+            f"`.partial_cmp(..).{m.group(1)}()` panics on NaN — "
+            "use `f32::total_cmp` (or handle the None)",
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# unsafe without SAFETY
+# ---------------------------------------------------------------------------
+
+_ATTR_LINE = re.compile(r"^\s*#\s*!?\s*\[")
+_WALK_LIMIT = 12
+
+
+def lint_unsafe_safety(lx: LexResult, raw: str, path: str) -> List[dict]:
+    lines = raw.split("\n")
+    # line -> all comment text starting or spanning that line
+    comment_on: Dict[int, str] = {}
+    for ln, text in lx.comments:
+        span = text.count("\n") + 1
+        for k in range(span):
+            comment_on[ln + k] = comment_on.get(ln + k, "") + " " + text
+
+    def line_is_transparent(ln: int) -> bool:
+        if ln in comment_on:
+            return True
+        src = lines[ln - 1] if 0 < ln <= len(lines) else ""
+        s = src.strip()
+        return (
+            not s
+            or _ATTR_LINE.match(src) is not None
+            or "unsafe" in src
+        )
+
+    def has_safety_near(ln: int) -> bool:
+        if "SAFETY" in comment_on.get(ln, "") or "# Safety" in comment_on.get(ln, ""):
+            return True
+        k = ln - 1
+        steps = 0
+        while k > 0 and steps < _WALK_LIMIT and line_is_transparent(k):
+            c = comment_on.get(k, "")
+            if "SAFETY" in c or "# Safety" in c:
+                return True
+            k -= 1
+            steps += 1
+        return False
+
+    out = []
+    seen_lines = set()
+    toks = lx.tokens
+    for i, t in enumerate(toks):
+        if t.kind != "id" or t.text != "unsafe" or t.line in seen_lines:
+            continue
+        seen_lines.add(t.line)
+        nxt = toks[i + 1] if i + 1 < len(toks) else None
+        what = "block"
+        if nxt is not None and nxt.kind == "id":
+            if nxt.text in ("fn", "impl", "trait", "extern"):
+                what = nxt.text
+        if not has_safety_near(t.line):
+            out.append(_f(
+                "unsafe-no-safety", path, t.line,
+                f"`unsafe` {what} without a `// SAFETY:` comment "
+                "(same line or immediately above)",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch-table parity
+# ---------------------------------------------------------------------------
+
+def _kernels_literals(masked: str) -> List[Tuple[int, List[str]]]:
+    """Find every `Kernels { … }` region and return (line, field names).
+
+    Matches both struct literals (`Kernels { axpy: scalar::axpy, … }`) and
+    the struct definition itself (`pub struct Kernels { pub axpy: fn(…), …}`)
+    — both carry the authoritative field set.
+    """
+    out = []
+    for m in re.finditer(r"\bKernels\s*\{", masked):
+        # Only the struct definition (`struct Kernels {`) and value tables
+        # (`= Kernels {`) carry a field set; `impl`/`for`/return-position
+        # `… -> &Kernels {` matches open ordinary blocks.
+        prefix = masked[:m.start()].rstrip()
+        if not (prefix.endswith("=") or re.search(r"\bstruct\s*$", prefix)):
+            continue
+        start = m.end() - 1
+        depth = 0
+        j = start
+        while j < len(masked):
+            if masked[j] == "{":
+                depth += 1
+            elif masked[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        # `->` in fn-pointer field types would skew angle-depth tracking
+        body = masked[start + 1:j].replace("->", "  ")
+        line = masked.count("\n", 0, m.start()) + 1
+        fields = []
+        # split at top-level commas (fn-pointer types carry parens/commas)
+        depth = 0
+        piece = []
+        pieces = []
+        for ch in body:
+            if ch in "([{<":
+                depth += 1
+            elif ch in ")]}>":
+                depth -= 1
+            if ch == "," and depth == 0:
+                pieces.append("".join(piece))
+                piece = []
+            else:
+                piece.append(ch)
+        pieces.append("".join(piece))
+        for p in pieces:
+            p = p.strip()
+            if not p or p.startswith(".."):  # struct-update syntax
+                continue
+            fm = re.match(r"(?:pub(?:\s*\([^)]*\))?\s+)?([A-Za-z_][A-Za-z0-9_]*)\s*(?::|$)", p)
+            if fm:
+                fields.append(fm.group(1))
+        out.append((line, fields))
+    return out
+
+
+def lint_kernel_parity(kernel_files: Dict[str, str]) -> List[dict]:
+    """kernel_files: rel path -> masked text for every file in the kernels
+    dir.  The reference field set is the first `Kernels {` region in mod.rs
+    (the struct definition / SCALAR table); every other table must carry
+    exactly the same fields."""
+    out = []
+    ref_fields: Optional[List[str]] = None
+    ref_where = None
+    mod_path = next((p for p in kernel_files if p.endswith("mod.rs")), None)
+    if mod_path is not None:
+        lits = _kernels_literals(kernel_files[mod_path])
+        if lits:
+            ref_where = f"{mod_path}:{lits[0][0]}"
+            ref_fields = lits[0][1]
+    if ref_fields is None:
+        return out
+    ref_set = set(ref_fields)
+    for path, masked in sorted(kernel_files.items()):
+        for line, fields in _kernels_literals(masked):
+            if path == mod_path and f"{path}:{line}" == ref_where:
+                continue
+            got = set(fields)
+            missing = sorted(ref_set - got)
+            extra = sorted(got - ref_set)
+            if missing:
+                out.append(_f(
+                    "kernel-parity", path, line,
+                    f"`Kernels` table is missing field(s) {missing} present "
+                    f"in the scalar reference table ({ref_where}) — every "
+                    "arch-gated kernel needs a scalar counterpart",
+                ))
+            if extra:
+                out.append(_f(
+                    "kernel-parity", path, line,
+                    f"`Kernels` table has field(s) {extra} absent from the "
+                    f"scalar reference table ({ref_where})",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# nondeterminism outside the sanctioned seam
+# ---------------------------------------------------------------------------
+
+_NONDET = re.compile(
+    r"\b(SystemTime\s*::\s*now|thread_rng|from_entropy|rand\s*::\s*random|getrandom)\b"
+)
+_NONDET_SEAM = "rust/src/net/mod.rs"
+
+
+def lint_nondeterminism(masked: str, path: str) -> List[dict]:
+    p = str(path).replace("\\", "/")
+    if not p.startswith("rust/src/"):
+        return []  # tests/benches/examples may use wall-clock freely
+    if p == _NONDET_SEAM:
+        return []  # the sanctioned seam (Retry-After wall-clock, net entropy)
+    out = []
+    for m in _NONDET.finditer(masked):
+        line = masked.count("\n", 0, m.start()) + 1
+        out.append(_f(
+            "nondeterminism", path, line,
+            f"`{m.group(1)}` outside the sanctioned net/mod.rs seam — "
+            "route randomness through seeded util::rng and clocks through "
+            "the net time seam",
+        ))
+    return out

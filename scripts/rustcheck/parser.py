@@ -1,0 +1,886 @@
+"""Per-file item indexer over the token stream.
+
+Walks a file's tokens with an explicit scope stack (module / impl / trait /
+body) and records every item the cross-file passes need:
+
+* functions with arity, ``self`` receivers, cfg attributes,
+* structs (tuple arity), enums (+ variants), traits (required vs provided
+  methods), type aliases, consts/statics, ``macro_rules!`` names,
+* impl blocks (inherent and ``impl Trait for Type``) with their methods,
+* ``mod x;`` declarations and inline ``mod x { … }`` scopes,
+* ``use`` trees (groups, globs, renames, ``pub use`` re-exports),
+* call sites ``path::to::f(…)`` with exact top-level argument counts.
+
+Bodies are opaque except for brace tracking and call-site collection, so
+locals never pollute the item index.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from .lexer import LexResult, Token
+
+_ITEM_SCOPES = ("mod", "impl", "trait", "extern")
+
+
+@dataclass
+class Fn:
+    name: str
+    arity: int  # parameter count, excluding any self receiver
+    has_self: bool
+    line: int
+    is_pub: bool
+    cfg: Optional[str]  # raw #[cfg(…)] text, None if ungated
+    module: Tuple[str, ...]  # inline-module path within the file
+    container: Optional[str] = None  # impl/trait type name, None for free fns
+    trait_of: Optional[str] = None  # trait name when inside `impl Trait for T`
+    is_required_trait_method: bool = False  # trait method declared with `;`
+
+
+@dataclass
+class TypeItem:
+    kind: str  # struct | enum | trait | type | union
+    name: str
+    line: int
+    cfg: Optional[str]
+    module: Tuple[str, ...]
+    tuple_arity: Optional[int] = None  # struct X(a, b) constructor arity
+    variants: dict = field(default_factory=dict)  # enum: name -> tuple arity|None
+
+
+@dataclass
+class ValueItem:
+    kind: str  # const | static | macro
+    name: str
+    line: int
+    cfg: Optional[str]
+    module: Tuple[str, ...]
+    container: Optional[str] = None  # impl/trait name for assoc consts
+    exported: bool = False  # macro_rules! under #[macro_export]
+
+
+@dataclass
+class ModDecl:
+    name: str
+    line: int
+    cfg: Optional[str]
+    inline: bool
+    module: Tuple[str, ...]  # parent inline-module path
+
+
+@dataclass
+class Use:
+    segments: Tuple[str, ...]  # full path, leaf included ('*' for glob)
+    alias: Optional[str]
+    is_pub: bool
+    line: int
+    module: Tuple[str, ...]
+
+
+@dataclass
+class Impl:
+    type_name: str
+    trait_name: Optional[str]
+    line: int
+    cfg: Optional[str]
+    module: Tuple[str, ...]
+    methods: dict = field(default_factory=dict)  # name -> Fn
+
+
+@dataclass
+class Call:
+    segments: Tuple[str, ...]
+    arity: Optional[int]  # None when the args were too gnarly to count
+    line: int
+    module: Tuple[str, ...]
+    in_body: bool
+
+
+@dataclass
+class FileIndex:
+    path: str
+    fns: List[Fn] = field(default_factory=list)
+    types: List[TypeItem] = field(default_factory=list)
+    values: List[ValueItem] = field(default_factory=list)
+    mods: List[ModDecl] = field(default_factory=list)
+    uses: List[Use] = field(default_factory=list)
+    impls: List[Impl] = field(default_factory=list)
+    calls: List[Call] = field(default_factory=list)
+    traits: dict = field(default_factory=dict)  # name -> {"required": set, "provided": set}
+
+
+@dataclass
+class _Scope:
+    kind: str  # mod | impl | trait | body | extern
+    name: Optional[str] = None
+    impl: Optional[Impl] = None
+    trait_name: Optional[str] = None
+
+
+class _Walker:
+    def __init__(self, lx: LexResult, path: str):
+        self.toks: List[Token] = lx.tokens
+        self.n = len(self.toks)
+        self.i = 0
+        self.path = path
+        self.idx = FileIndex(path=path)
+        self.scopes: List[_Scope] = [_Scope("mod", None)]
+        self.pending_cfg: Optional[str] = None
+        self.pending_pub = False
+        self.pending_export = False
+
+    # -- token helpers ------------------------------------------------------
+
+    def at(self, k: int = 0) -> Optional[Token]:
+        j = self.i + k
+        return self.toks[j] if 0 <= j < self.n else None
+
+    def is_p(self, text: str, k: int = 0) -> bool:
+        t = self.at(k)
+        return t is not None and t.kind == "punct" and t.text == text
+
+    def is_id(self, text: str, k: int = 0) -> bool:
+        t = self.at(k)
+        return t is not None and t.kind == "id" and t.text == text
+
+    def module_path(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.scopes if s.kind == "mod" and s.name)
+
+    def in_item_scope(self) -> bool:
+        return self.scopes[-1].kind in _ITEM_SCOPES
+
+    def take_meta(self):
+        cfg, pub = self.pending_cfg, self.pending_pub
+        self.pending_cfg, self.pending_pub = None, False
+        return cfg, pub
+
+    def container_name(self) -> Optional[str]:
+        s = self.scopes[-1]
+        if s.kind == "impl" and s.impl is not None:
+            return s.impl.type_name
+        if s.kind == "trait":
+            return s.trait_name
+        return None
+
+    # -- balanced skips ------------------------------------------------------
+
+    def skip_delims(self, open_t: str, close_t: str) -> None:
+        """i sits on open_t; advance past its matching close."""
+        depth = 0
+        while self.i < self.n:
+            if self.is_p(open_t):
+                depth += 1
+            elif self.is_p(close_t):
+                depth -= 1
+                if depth == 0:
+                    self.i += 1
+                    return
+            self.i += 1
+
+    def skip_generics(self) -> None:
+        """i sits on '<'; skip the balanced angle region (treats every '<'
+        as an opener — valid in declaration/type position)."""
+        depth = 0
+        while self.i < self.n:
+            if self.is_p("<"):
+                depth += 1
+            elif self.is_p(">"):
+                depth -= 1
+                if depth == 0:
+                    self.i += 1
+                    return
+            elif self.is_p("(") or self.is_p("[") or self.is_p("{"):
+                self.skip_delims(self.at().text, {"(": ")", "[": "]", "{": "}"}[self.at().text])
+                continue
+            self.i += 1
+
+    # -- main walk -----------------------------------------------------------
+
+    def walk(self) -> FileIndex:
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct":
+                if t.text == "#":
+                    self.attr()
+                    continue
+                if t.text == "{":
+                    self.scopes.append(_Scope("body"))
+                    self.i += 1
+                    continue
+                if t.text == "}":
+                    if len(self.scopes) > 1:
+                        self.scopes.pop()
+                    self.i += 1
+                    continue
+                self.i += 1
+                continue
+            if t.kind != "id":
+                self.i += 1
+                continue
+
+            if self.in_item_scope():
+                kw = t.text
+                if kw == "pub":
+                    self.pending_pub = True
+                    self.i += 1
+                    if self.is_p("("):  # pub(crate) / pub(super)
+                        self.skip_delims("(", ")")
+                    continue
+                if kw in ("unsafe", "async", "default"):
+                    self.i += 1
+                    continue
+                if kw == "extern":
+                    self.i += 1
+                    if self.at() and self.at().kind == "str":
+                        self.i += 1
+                    if self.is_p("{"):  # foreign block
+                        self.scopes.append(_Scope("extern"))
+                        self.i += 1
+                    continue  # `extern "C" fn` falls through to fn next loop
+                if kw == "mod":
+                    self.item_mod()
+                    continue
+                if kw == "fn":
+                    self.item_fn()
+                    continue
+                if kw == "struct" or kw == "union":
+                    self.item_struct(kw)
+                    continue
+                if kw == "enum":
+                    self.item_enum()
+                    continue
+                if kw == "trait":
+                    self.item_trait()
+                    continue
+                if kw == "impl":
+                    self.item_impl()
+                    continue
+                if kw == "use":
+                    self.item_use()
+                    continue
+                if kw in ("const", "static"):
+                    self.item_const(kw)
+                    continue
+                if kw == "type":
+                    self.item_type()
+                    continue
+                if kw == "macro_rules" and self.is_p("!", 1):
+                    self.item_macro()
+                    continue
+                # anything else at item scope (let in const blocks, idents
+                # in extern blocks, …): consume, maybe a call
+                self.maybe_call()
+                continue
+
+            # body scope: collect call sites only
+            self.maybe_call()
+        return self.idx
+
+    # -- attributes ----------------------------------------------------------
+
+    def attr(self) -> None:
+        # '#' ['!'] '[' … ']'
+        self.i += 1
+        if self.is_p("!"):
+            self.i += 1
+            if self.is_p("["):
+                self.skip_delims("[", "]")
+            return  # inner attribute: applies to the enclosing item, ignore
+        if not self.is_p("["):
+            return
+        start = self.i
+        depth = 0
+        parts = []
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct" and t.text == "[":
+                depth += 1
+            elif t.kind == "punct" and t.text == "]":
+                depth -= 1
+                if depth == 0:
+                    self.i += 1
+                    break
+            if self.i > start or True:
+                parts.append(t.text)
+            self.i += 1
+        text = " ".join(parts)
+        if "cfg" in text.split("[ ")[0] or text.startswith("[ cfg"):
+            self.pending_cfg = text
+        if "macro_export" in text:
+            self.pending_export = True
+        # every other attribute (derive, allow, target_feature, test…): drop
+
+    # -- items ----------------------------------------------------------------
+
+    def item_mod(self) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1  # 'mod'
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        name = name_t.text
+        self.i += 1
+        if self.is_p(";"):
+            self.idx.mods.append(
+                ModDecl(name, name_t.line, cfg, inline=False, module=self.module_path())
+            )
+            self.i += 1
+        elif self.is_p("{"):
+            self.idx.mods.append(
+                ModDecl(name, name_t.line, cfg, inline=True, module=self.module_path())
+            )
+            self.scopes.append(_Scope("mod", name))
+            self.i += 1
+
+    def item_fn(self) -> None:
+        cfg, pub = self.take_meta()
+        self.i += 1  # 'fn'
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        name = name_t.text
+        self.i += 1
+        if self.is_p("<"):
+            self.skip_generics()
+        if not self.is_p("("):
+            return
+        arity, has_self = self.count_params()
+        # Scan past return type / where clause to the body or ';'
+        required = False
+        while self.i < self.n:
+            if self.is_p("{"):
+                self.scopes.append(_Scope("body"))
+                self.i += 1
+                break
+            if self.is_p(";"):
+                required = True
+                self.i += 1
+                break
+            if self.is_p("("):
+                self.skip_delims("(", ")")
+                continue
+            if self.is_p("["):
+                self.skip_delims("[", "]")
+                continue
+            if self.is_p("<"):
+                self.skip_generics()
+                continue
+            self.i += 1
+
+        scope = self.scopes[-2] if self.scopes[-1].kind == "body" else self.scopes[-1]
+        container = None
+        trait_of = None
+        if scope.kind == "impl" and scope.impl is not None:
+            container = scope.impl.type_name
+            trait_of = scope.impl.trait_name
+        elif scope.kind == "trait":
+            container = scope.trait_name
+        fn = Fn(
+            name=name,
+            arity=arity,
+            has_self=has_self,
+            line=name_t.line,
+            is_pub=pub,
+            cfg=cfg,
+            module=self.module_path(),
+            container=container,
+            trait_of=trait_of,
+            is_required_trait_method=required and scope.kind == "trait",
+        )
+        self.idx.fns.append(fn)
+        if scope.kind == "impl" and scope.impl is not None:
+            scope.impl.methods[name] = fn
+        if scope.kind == "trait" and scope.trait_name in self.idx.traits:
+            bucket = "required" if required else "provided"
+            self.idx.traits[scope.trait_name][bucket][name] = fn
+
+    def count_params(self) -> Tuple[int, bool]:
+        """i sits on '('. Count top-level params; detect a self receiver."""
+        first_toks: List[Token] = []
+        depth = 0
+        angle = 0
+        count = 0
+        saw_any = False
+        at_param_start = True
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct":
+                if t.text in "([{":
+                    depth += 1
+                    self.i += 1
+                    at_param_start = False
+                    continue
+                if t.text in ")]}":
+                    depth -= 1
+                    self.i += 1
+                    if depth == 0 and t.text == ")":
+                        break
+                    continue
+                if t.text == "<":
+                    angle += 1
+                elif t.text == ">":
+                    angle = max(0, angle - 1)
+                elif t.text == "," and depth == 1 and angle == 0:
+                    count += 1
+                    at_param_start = True
+                    self.i += 1
+                    continue
+            if depth == 1 and t.kind in ("id", "life", "punct"):
+                saw_any = True
+                if at_param_start and len(first_toks) < 4:
+                    first_toks.append(t)
+            if depth >= 1 and at_param_start and len(first_toks) < 4 and count == 0:
+                pass
+            self.i += 1
+        # trailing comma: `(a, b,)` — count counted it, but no param follows
+        arity = count + 1 if saw_any else 0
+        if saw_any and count > 0 and self._trailing_comma():
+            arity -= 1
+        has_self = any(t.kind == "id" and t.text == "self" for t in first_toks)
+        return (arity - 1 if has_self else arity), has_self
+
+    def _trailing_comma(self) -> bool:
+        # look back: ... ',' ')'  (i is just past ')')
+        j = self.i - 2
+        t = self.toks[j] if 0 <= j < self.n else None
+        return t is not None and t.kind == "punct" and t.text == ","
+
+    def item_struct(self, kw: str) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        name = name_t.text
+        self.i += 1
+        if self.is_p("<"):
+            self.skip_generics()
+        tuple_arity = None
+        if self.is_p("("):
+            tuple_arity = self.count_tuple_fields()
+            # `struct X(…);`
+            if self.is_p(";"):
+                self.i += 1
+        elif self.is_p("{"):
+            self.skip_delims("{", "}")
+        elif self.is_p(";"):
+            self.i += 1
+        # `struct X where …;` / generics bound forms: best-effort
+        self.idx.types.append(
+            TypeItem(kw if kw == "union" else "struct", name, name_t.line, cfg,
+                     self.module_path(), tuple_arity=tuple_arity)
+        )
+
+    def count_tuple_fields(self) -> int:
+        depth = 0
+        angle = 0
+        count = 0
+        saw = False
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct":
+                if t.text in "([{":
+                    depth += 1
+                elif t.text in ")]}":
+                    depth -= 1
+                    if depth == 0:
+                        self.i += 1
+                        break
+                elif t.text == "<":
+                    angle += 1
+                elif t.text == ">":
+                    angle = max(0, angle - 1)
+                elif t.text == "," and depth == 1 and angle == 0:
+                    count += 1
+                    self.i += 1
+                    continue
+            if depth == 1 and t.kind in ("id", "punct", "life"):
+                saw = True
+            self.i += 1
+        n = count + 1 if saw else 0
+        if saw and count > 0 and self._trailing_comma():
+            n -= 1
+        return n
+
+    def item_enum(self) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        name = name_t.text
+        self.i += 1
+        if self.is_p("<"):
+            self.skip_generics()
+        variants = {}
+        if self.is_p("{"):
+            depth = 0
+            expecting = True
+            while self.i < self.n:
+                t = self.at()
+                if t.kind == "punct":
+                    if t.text == "{":
+                        depth += 1
+                        self.i += 1
+                        continue
+                    if t.text == "}":
+                        depth -= 1
+                        self.i += 1
+                        if depth == 0:
+                            break
+                        continue
+                    if t.text == "," and depth == 1:
+                        expecting = True
+                        self.i += 1
+                        continue
+                    if t.text == "#" and depth == 1:
+                        self.attr()
+                        self.pending_cfg = None
+                        continue
+                    if t.text == "(" and depth == 1:
+                        # tuple variant payload
+                        last = list(variants)[-1] if variants else None
+                        ar = self.count_tuple_fields()
+                        if last is not None:
+                            variants[last] = ar
+                        continue
+                    if t.text == "=" and depth == 1:
+                        # discriminant expr: skip to ',' or '}'
+                        self.i += 1
+                        while self.i < self.n and not (
+                            self.is_p(",") or self.is_p("}")
+                        ):
+                            self.i += 1
+                        continue
+                if t.kind == "id" and depth == 1 and expecting:
+                    variants[t.text] = None
+                    expecting = False
+                self.i += 1
+        self.idx.types.append(
+            TypeItem("enum", name, name_t.line, cfg, self.module_path(),
+                     variants=variants)
+        )
+
+    def item_trait(self) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        name = name_t.text
+        self.i += 1
+        # skip generics and supertrait bounds to the '{'
+        while self.i < self.n and not self.is_p("{"):
+            if self.is_p("<"):
+                self.skip_generics()
+                continue
+            if self.is_p("("):
+                self.skip_delims("(", ")")
+                continue
+            if self.is_p(";"):  # `trait Alias = …;`
+                self.i += 1
+                return
+            self.i += 1
+        self.idx.types.append(
+            TypeItem("trait", name, name_t.line, cfg, self.module_path())
+        )
+        self.idx.traits[name] = {"required": {}, "provided": {}}
+        self.scopes.append(_Scope("trait", name, trait_name=name))
+        self.i += 1  # '{'
+
+    def item_impl(self) -> None:
+        cfg, _pub = self.take_meta()
+        line = self.at().line
+        self.i += 1
+        if self.is_p("<"):
+            self.skip_generics()
+        # Collect path A (maybe `Trait for Type`); stop at '{' or 'for'
+        first: List[str] = []
+        second: List[str] = []
+        cur = first
+        while self.i < self.n and not self.is_p("{"):
+            t = self.at()
+            if t.kind == "id" and t.text == "for":
+                cur = second
+                self.i += 1
+                continue
+            if t.kind == "id" and t.text == "where":
+                # where clause: skip to '{'
+                while self.i < self.n and not self.is_p("{"):
+                    if self.is_p("<"):
+                        self.skip_generics()
+                        continue
+                    if self.is_p("("):
+                        self.skip_delims("(", ")")
+                        continue
+                    self.i += 1
+                break
+            if t.kind == "id" and t.text not in ("dyn", "mut", "const"):
+                cur.append(t.text)
+            if self.is_p("<"):
+                self.skip_generics()
+                continue
+            if self.is_p("("):
+                self.skip_delims("(", ")")
+                continue
+            self.i += 1
+        if not self.is_p("{"):
+            return
+        if second:
+            trait_name = first[-1] if first else None
+            type_name = second[-1]
+        else:
+            trait_name = None
+            type_name = first[-1] if first else "?"
+        imp = Impl(type_name, trait_name, line, cfg, self.module_path())
+        self.idx.impls.append(imp)
+        self.scopes.append(_Scope("impl", type_name, impl=imp))
+        self.i += 1  # '{'
+
+    def item_use(self) -> None:
+        cfg, pub = self.take_meta()
+        del cfg
+        line = self.at().line
+        self.i += 1
+        prefix: List[str] = []
+        self._use_tree(prefix, pub, line)
+        if self.is_p(";"):
+            self.i += 1
+
+    def _use_tree(self, prefix: List[str], pub: bool, line: int) -> None:
+        segs: List[str] = list(prefix)
+        while self.i < self.n:
+            t = self.at()
+            if t is None:
+                return
+            if t.kind == "id":
+                nxt = self.at(1)
+                if nxt is not None and nxt.kind == "punct" and nxt.text == "::":
+                    segs.append(t.text)
+                    self.i += 2
+                    continue
+                # leaf, maybe with alias
+                leaf = t.text
+                self.i += 1
+                alias = None
+                if self.is_id("as"):
+                    self.i += 1
+                    a = self.at()
+                    if a is not None and a.kind == "id":
+                        alias = a.text
+                        self.i += 1
+                self.idx.uses.append(
+                    Use(tuple(segs + [leaf]), alias, pub, line, self.module_path())
+                )
+                return
+            if t.kind == "punct" and t.text == "*":
+                self.i += 1
+                self.idx.uses.append(
+                    Use(tuple(segs + ["*"]), None, pub, line, self.module_path())
+                )
+                return
+            if t.kind == "punct" and t.text == "{":
+                self.i += 1
+                while self.i < self.n and not self.is_p("}"):
+                    self._use_tree(segs, pub, line)
+                    if self.is_p(","):
+                        self.i += 1
+                if self.is_p("}"):
+                    self.i += 1
+                return
+            return
+
+    def item_const(self, kw: str) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1
+        if self.is_id("fn"):  # `const fn`
+            self.item_fn()
+            return
+        if self.is_id("mut"):  # `static mut`
+            self.i += 1
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        if name_t.text == "_":  # `const _: () = …;`
+            pass
+        self.idx.values.append(
+            ValueItem(kw, name_t.text, name_t.line, cfg, self.module_path(),
+                      container=self.container_name())
+        )
+        self.i += 1
+        # skip `: Type = expr;` with balanced nesting (initializer may hold
+        # braces — e.g. `static K: Kernels = Kernels { … };`), collecting
+        # call sites inside the initializer expression.
+        depth = 0
+        while self.i < self.n:
+            if self.is_p("(") or self.is_p("[") or self.is_p("{"):
+                depth += 1
+                self.i += 1
+                continue
+            if self.is_p(")") or self.is_p("]") or self.is_p("}"):
+                depth -= 1
+                self.i += 1
+                continue
+            if depth == 0 and self.is_p(";"):
+                self.i += 1
+                return
+            if self.at().kind == "id":
+                self.maybe_call()
+                continue
+            self.i += 1
+
+    def item_type(self) -> None:
+        cfg, _pub = self.take_meta()
+        self.i += 1
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        self.idx.types.append(
+            TypeItem("type", name_t.text, name_t.line, cfg, self.module_path())
+        )
+        self.i += 1
+        depth = 0
+        while self.i < self.n:
+            if self.is_p("<"):
+                self.skip_generics()
+                continue
+            if self.is_p("(") or self.is_p("["):
+                depth += 1
+            elif self.is_p(")") or self.is_p("]"):
+                depth -= 1
+            elif depth == 0 and self.is_p(";"):
+                self.i += 1
+                return
+            self.i += 1
+
+    def item_macro(self) -> None:
+        cfg, _pub = self.take_meta()
+        # 'macro_rules' '!' name '{' … '}'
+        self.i += 2
+        name_t = self.at()
+        if name_t is None or name_t.kind != "id":
+            return
+        exported = self.pending_export
+        self.pending_export = False
+        self.idx.values.append(
+            ValueItem("macro", name_t.text, name_t.line, cfg, self.module_path(),
+                      exported=exported)
+        )
+        self.i += 1
+        if self.is_p("{"):
+            self.skip_delims("{", "}")
+        elif self.is_p("("):
+            self.skip_delims("(", ")")
+
+    # -- call sites -----------------------------------------------------------
+
+    def maybe_call(self) -> None:
+        """At an ident (any scope): if it heads `path::to::name(…)`, record a
+        call site with its argument count; otherwise just step over it."""
+        t = self.at()
+        if t is None or t.kind != "id":
+            self.i += 1
+            return
+        prev = self.toks[self.i - 1] if self.i > 0 else None
+        # method call / definition / macro name / field access: not a free call
+        if prev is not None and prev.kind == "punct" and prev.text in (".", "'"):
+            self._skip_path()
+            return
+        if prev is not None and prev.kind == "id" and prev.text in ("fn", "mod", "struct", "enum", "trait", "impl", "use", "let", "as"):
+            self.i += 1
+            return
+        segs = [t.text]
+        j = self.i + 1
+        while (
+            j + 1 < self.n
+            and self.toks[j].kind == "punct"
+            and self.toks[j].text == "::"
+            and self.toks[j + 1].kind == "id"
+        ):
+            segs.append(self.toks[j + 1].text)
+            j += 2
+        # turbofish: name::<T>(…)
+        if (
+            j + 1 < self.n
+            and self.toks[j].kind == "punct"
+            and self.toks[j].text == "::"
+            and self.toks[j + 1].kind == "punct"
+            and self.toks[j + 1].text == "<"
+        ):
+            self.i = j + 1
+            self.skip_generics()
+            j = self.i
+        if j < self.n and self.toks[j].kind == "punct" and self.toks[j].text == "!":
+            # macro invocation: skip its delimited body entirely
+            self.i = j + 1
+            if self.i < self.n and self.at().kind == "punct" and self.at().text in "([{":
+                o = self.at().text
+                self.skip_delims(o, {"(": ")", "[": "]", "{": "}"}[o])
+            return
+        if j < self.n and self.toks[j].kind == "punct" and self.toks[j].text == "(":
+            line = t.line
+            module = self.module_path()
+            in_body = self.scopes[-1].kind == "body"
+            self.i = j
+            arity = self.count_args()
+            self.idx.calls.append(Call(tuple(segs), arity, line, module, in_body))
+            return
+        self.i = j
+
+    def _skip_path(self) -> None:
+        self.i += 1
+        while (
+            self.i + 1 < self.n
+            and self.is_p("::")
+            and self.toks[self.i + 1].kind == "id"
+        ):
+            self.i += 2
+
+    def count_args(self) -> Optional[int]:
+        """i sits on the call's '('. Count top-level commas; None if a
+        top-level '|' (closure) or '<' makes counting unreliable."""
+        depth = 0
+        count = 0
+        saw = False
+        unreliable = False
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct":
+                if t.text in "([{":
+                    depth += 1
+                    self.i += 1
+                    continue
+                if t.text in ")]}":
+                    depth -= 1
+                    self.i += 1
+                    if depth == 0 and t.text == ")":
+                        break
+                    continue
+                if depth == 1 and t.text in ("|", "<", ">"):
+                    unreliable = True
+                if depth == 1 and t.text == ",":
+                    count += 1
+                    self.i += 1
+                    continue
+            if depth >= 1:
+                saw = saw or t.kind in ("id", "num", "str", "char", "life") or (
+                    t.kind == "punct" and t.text not in ","
+                )
+            if depth == 1 and t.kind == "id":
+                # nested calls inside arguments still matter
+                save = self.i
+                self.maybe_call()
+                if self.i == save:
+                    self.i += 1
+                continue
+            self.i += 1
+        if unreliable:
+            return None
+        n = count + 1 if saw else 0
+        if saw and count > 0 and self._trailing_comma():
+            n -= 1
+        return n
+
+
+def index_file(lx: LexResult, path: str) -> FileIndex:
+    return _Walker(lx, path).walk()

@@ -1,0 +1,323 @@
+//! Replica-parallel serving bench: N worker *processes* (the `replica`
+//! subcommand, one engine each) behind the least-loaded router, driven
+//! end-to-end over the HTTP/SSE wire. Measures aggregate decode
+//! throughput at N=1 vs N=2 under identical offered load — the speedup a
+//! second worker process buys once the engine, not the wire, is the
+//! bottleneck — and proves greedy token-identity between the routed fleet
+//! and a same-artifact in-process engine.
+//!
+//! Results print as a table and persist into `BENCH_native.json` (key
+//! `router`) next to the other native ledgers (EXPERIMENTS.md §Perf
+//! Native).
+//!
+//! Run: `cargo bench --bench native_router -- [--model golden_tiny]
+//!        [--requests 4] [--max-new 12] [--worker-threads 1]
+//!        [--out BENCH_native.json] [--smoke]`
+//!
+//! `--smoke` (part of `scripts/check.sh router-smoke`) fails hard unless
+//! every stream completes, the routed streams are token-identical to the
+//! in-process engine, no sessions leak, and N=2 delivers >= 1.7x the
+//! aggregate tok/s of N=1.
+
+use std::io::BufRead;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use hyena::backend::native::NativeConfig;
+use hyena::backend::BackendKind;
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{Engine, GenerateRequest, Server, StreamEvent};
+use hyena::net::client::{run_loadgen, LoadGenConfig, LoadReport};
+use hyena::net::router::{FleetConfig, FleetHandle};
+use hyena::net::server::NetServer;
+use hyena::net::{ChaosConfig, NetConfig};
+use hyena::report::{merge_bench_json, Table};
+use hyena::util::cli::Args;
+use hyena::util::json::Json;
+
+/// One spawned worker process. Dropping it closes stdin (the worker's
+/// parent-death signal → self-drain) and reaps the child.
+struct Worker {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        drop(self.child.stdin.take());
+        let mut waited = 0u64;
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return,
+                Ok(None) if waited < 5_000 => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    waited += 50;
+                }
+                _ => {
+                    let _ = self.child.kill();
+                    let _ = self.child.wait();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn spawn_worker(name: &str, threads: usize) -> Result<Worker> {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_hyena"))
+        .args([
+            "replica",
+            "--model",
+            name,
+            "--listen",
+            "127.0.0.1:0",
+            "--threads",
+            &threads.to_string(),
+            "--quiet",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawn replica worker")?;
+    let stdout = child.stdout.take().ok_or_else(|| anyhow!("worker has no stdout"))?;
+    let mut rd = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if rd.read_line(&mut line)? == 0 {
+            bail!("replica worker exited before reporting its address");
+        }
+        if let Some(rest) = line.trim().strip_prefix("replica listening on ") {
+            let tok = rest.split_whitespace().next().unwrap_or("");
+            break tok.parse().map_err(|_| anyhow!("worker address {tok:?}"))?;
+        }
+    };
+    // Keep draining worker stdout so it can never block on a full pipe.
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        while matches!(rd.read_line(&mut line), Ok(n) if n > 0) {
+            line.clear();
+        }
+    });
+    Ok(Worker { child, addr })
+}
+
+/// Routed fleet of `n` worker processes behind the HTTP front end; runs
+/// the loadgen against it and returns (aggregate tok/s, loadgen report,
+/// leaked sessions).
+fn run_phase(
+    name: &str,
+    n: usize,
+    threads: usize,
+    lcfg: &LoadGenConfig,
+) -> Result<(f64, LoadReport, u64)> {
+    let workers: Vec<Worker> =
+        (0..n).map(|_| spawn_worker(name, threads)).collect::<Result<_>>()?;
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+    let fleet =
+        FleetHandle::connect(&addrs, FleetConfig { quiet: true, ..FleetConfig::default() })?;
+    let net = NetServer::start_engine(
+        Box::new(fleet.clone()),
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: lcfg.clients + 4,
+            quiet: true,
+            ..NetConfig::default()
+        },
+    )?;
+    let addr = net.addr();
+    let t0 = Instant::now();
+    let r = run_loadgen(addr, lcfg);
+    let wall = t0.elapsed().as_secs_f64();
+    let report = net.finish()?;
+    fleet.shutdown();
+    drop(workers);
+    Ok((r.tokens as f64 / wall.max(1e-9), r, report.leaked_sessions))
+}
+
+/// Greedy token-identity: routed streams across a 2-worker fleet must be
+/// byte-identical to a same-artifact in-process engine. Returns the
+/// number of diverging streams (0 = pass).
+fn identity_check(name: &str, threads: usize) -> Result<usize> {
+    let workers: Vec<Worker> =
+        (0..2).map(|_| spawn_worker(name, threads)).collect::<Result<_>>()?;
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr).collect();
+    let fleet =
+        FleetHandle::connect(&addrs, FleetConfig { quiet: true, ..FleetConfig::default() })?;
+    let reference = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from(format!("artifacts/{name}")),
+        0,
+        Duration::from_millis(2),
+        None,
+        None,
+        None,
+    )?;
+    let prompts: Vec<Vec<i32>> =
+        (0..6).map(|i| vec![1 + i, 2 + i, 3, (i * 7) % 11 + 1]).collect();
+    // Concurrent submissions so both replicas serve some of the streams.
+    let subs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let req = GenerateRequest {
+                prompt: p.clone(),
+                max_new: 8,
+                sampling: Sampling::Greedy,
+                deadline: None,
+            };
+            fleet.try_submit_stream(req, 32, None)
+        })
+        .collect();
+    let mut diverged = 0usize;
+    for (p, sub) in prompts.iter().zip(subs) {
+        let sub = sub.map_err(|e| anyhow!("fleet refused identity stream: {e:?}"))?;
+        let mut got = Vec::new();
+        let ok = loop {
+            match sub.rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(StreamEvent::Token(t)) => got.push(t),
+                Ok(StreamEvent::Done(_)) => break true,
+                Ok(StreamEvent::Error { .. }) | Err(_) => break false,
+            }
+        };
+        let want = reference.handle.generate(GenerateRequest {
+            prompt: p.clone(),
+            max_new: 8,
+            sampling: Sampling::Greedy,
+            deadline: None,
+        })?;
+        if !ok || got != want.tokens {
+            eprintln!("identity: prompt {p:?} routed {got:?} != in-process {:?}", want.tokens);
+            diverged += 1;
+        }
+    }
+    fleet.shutdown();
+    reference.stop();
+    drop(workers);
+    Ok(diverged)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["smoke"]);
+    let smoke = args.flag("smoke");
+    let name = args.get_or("model", "golden_tiny").to_string();
+    let worker_threads = args.get_usize("worker-threads", 1).max(1);
+    let requests = args.get_usize("requests", 4);
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+
+    let cfg = NativeConfig::builtin(&name)
+        .ok_or_else(|| anyhow!("no built-in native config named {name:?}"))?;
+    let (l, vocab) = (cfg.seqlen, cfg.vocab);
+    let max_new = args.get_usize("max-new", (l / 4).clamp(4, 12));
+    let prompt_len =
+        args.get_usize("prompt-len", l / 8).clamp(1, l.saturating_sub(max_new + 1).max(1));
+
+    // Size the offered load off the real per-worker capacity (one probe
+    // worker), so the N=2 fleet is saturated too: less than 2x capacity in
+    // concurrent clients and the second replica would idle, measuring the
+    // loadgen rather than the fleet.
+    let per_worker_capacity = {
+        let probe = spawn_worker(&name, worker_threads)?;
+        let fleet = FleetHandle::connect(
+            &[probe.addr],
+            FleetConfig { quiet: true, ..FleetConfig::default() },
+        )?;
+        let c = fleet.capacity();
+        fleet.shutdown();
+        c
+    };
+    let clients = args.get_usize("clients", (2 * per_worker_capacity + 2).clamp(6, 32));
+    let total = clients * requests;
+    println!(
+        "{name}: L={l}, per-worker capacity {per_worker_capacity} \
+         ({worker_threads} threads), {clients} clients x {requests} requests, \
+         prompt {prompt_len} -> {max_new} tokens"
+    );
+
+    let lcfg = LoadGenConfig {
+        clients,
+        requests_per_client: requests,
+        prompt_len,
+        max_new,
+        vocab,
+        timeout_ms: 0, // perf run: no deadlines
+        chaos: ChaosConfig::off(),
+        burst: false,
+        max_retries: 32,
+        seed: 0,
+        io_timeout_ms: 60_000,
+    };
+
+    let diverged = identity_check(&name, worker_threads)?;
+    let (tok_s_1, r1, leaked_1) = run_phase(&name, 1, worker_threads, &lcfg)?;
+    let (tok_s_2, r2, leaked_2) = run_phase(&name, 2, worker_threads, &lcfg)?;
+    let speedup = tok_s_2 / tok_s_1.max(1e-9);
+
+    let mut table = Table::new(
+        "§Perf Native — replica-parallel serving: aggregate tok/s behind the router",
+        &["replicas", "ok/total", "tok/s", "speedup", "identity"],
+    );
+    table.row(vec![
+        "1".into(),
+        format!("{}/{total}", r1.ok),
+        format!("{tok_s_1:.0}"),
+        "1.00".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "2".into(),
+        format!("{}/{total}", r2.ok),
+        format!("{tok_s_2:.0}"),
+        format!("{speedup:.2}"),
+        if diverged == 0 { "ok".into() } else { format!("{diverged} diverged") },
+    ]);
+    table.emit("native_router");
+
+    merge_bench_json(
+        Path::new(&out_path),
+        "router",
+        Json::obj(vec![
+            ("model", Json::str(&name)),
+            ("seqlen", Json::num(l as f64)),
+            ("worker_threads", Json::num(worker_threads as f64)),
+            ("per_worker_capacity", Json::num(per_worker_capacity as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("requests", Json::num(total as f64)),
+            ("prompt_len", Json::num(prompt_len as f64)),
+            ("max_new", Json::num(max_new as f64)),
+            ("ok_n1", Json::num(r1.ok as f64)),
+            ("ok_n2", Json::num(r2.ok as f64)),
+            ("tokens_per_s_n1", Json::num(tok_s_1)),
+            ("tokens_per_s_n2", Json::num(tok_s_2)),
+            ("speedup_n2", Json::num(speedup)),
+            ("identity_diverged", Json::num(diverged as f64)),
+            ("leaked_sessions", Json::num((leaked_1 + leaked_2) as f64)),
+        ]),
+    )?;
+    println!("bench ledger -> {out_path} (key: router)");
+
+    if smoke {
+        if diverged > 0 {
+            bail!("router-smoke gate: {diverged} routed streams diverged from in-process");
+        }
+        if r1.ok != total || r2.ok != total {
+            bail!(
+                "router-smoke gate: incomplete streams (N=1: {}/{total}, N=2: {}/{total})",
+                r1.ok,
+                r2.ok
+            );
+        }
+        if leaked_1 + leaked_2 > 0 {
+            bail!("router-smoke gate: {} decode sessions leaked", leaked_1 + leaked_2);
+        }
+        if speedup < 1.7 {
+            bail!(
+                "router-smoke gate: N=2 speedup {speedup:.2}x < 1.7x \
+                 ({tok_s_1:.0} -> {tok_s_2:.0} tok/s)"
+            );
+        }
+    }
+    Ok(())
+}

@@ -214,6 +214,92 @@ impl Backend for Native {
 
 
 # ---------------------------------------------------------------------------
+# struct-literal field names
+# ---------------------------------------------------------------------------
+
+
+def test_struct_lit_unknown_field(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub struct Point { pub x: f32, pub y: f32 }
+pub fn mk() -> Point {
+    Point { x: 1.0, z: 2.0 }
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "struct-lit-field"]
+    assert len(fds) == 1
+    assert "`z`" in fds[0]["message"] and "x, y" in fds[0]["message"]
+
+
+def test_struct_pattern_unknown_field(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", """
+pub struct Point { pub x: f32, pub y: f32 }
+pub fn get(p: Point) -> f32 {
+    let Point { x, w } = p;
+    let _ = w;
+    x
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "struct-lit-field"]
+    assert len(fds) == 1
+    assert "`w`" in fds[0]["message"]
+
+
+def test_struct_lit_cross_module_resolution(tmp_path):
+    mk(tmp_path, "rust/src/lib.rs", "pub mod geo;\npub mod user;\n")
+    mk(tmp_path, "rust/src/geo.rs",
+       "pub struct Point { pub x: f32, pub y: f32 }\n")
+    mk(tmp_path, "rust/src/user.rs", """
+use crate::geo::Point;
+pub fn mk() -> Point {
+    Point { x: 1.0, why: 2.0 }
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "struct-lit-field"]
+    assert len(fds) == 1
+    assert fds[0]["file"] == "rust/src/user.rs"
+    assert "rust/src/geo.rs" in fds[0]["message"]
+
+
+def test_struct_lit_clean_forms(tmp_path):
+    # Shorthand, nesting, FRU `..base`, rest patterns, Self, generics,
+    # match arms, enum paths in `if` conditions, and plain blocks after
+    # uppercase constants must all stay silent.
+    mk(tmp_path, "rust/src/lib.rs", """
+pub struct Point { pub x: f32, pub y: f32 }
+pub struct Wrap { pub p: Point, pub tag: u32 }
+pub struct Generic<T> { pub item: T, pub len: usize }
+pub enum State { Idle, Busy }
+pub const LIMIT: usize = 4;
+
+impl Point {
+    pub fn origin() -> Self {
+        Self { x: 0.0, y: 0.0 }
+    }
+}
+
+pub fn build(x: f32, y: f32) -> Wrap {
+    let p = Point { x, y };
+    Wrap { p: Point { x: 1.0, ..p }, tag: 0 }
+}
+
+pub fn read(w: &Wrap) -> f32 {
+    let Wrap { p: Point { x, .. }, .. } = w;
+    let g = Generic { item: *x, len: 1 };
+    match w.tag {
+        0 => g.item,
+        _ => 0.0,
+    }
+}
+
+pub fn classify(s: State, n: usize) -> usize {
+    if let State::Busy = s { return n; }
+    if n == LIMIT { n } else { LIMIT }
+}
+""")
+    assert findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
 # targeted lints
 # ---------------------------------------------------------------------------
 
@@ -375,6 +461,9 @@ def test_cli_strict_green_on_real_tree():
      "{ a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less }\n"),
     ("rust/src/util/stats.rs",
      "\npub fn rc_seeded(p: *const f32) -> f32 { unsafe { *p } }\n"),
+    ("rust/src/util/stats.rs",
+     "\npub struct RcSeeded { pub a: u32 }\n"
+     "pub fn rc_seeded() -> RcSeeded { RcSeeded { a: 1, b: 2 } }\n"),
 ])
 def test_cli_strict_trips_on_injected_defect(tmp_path, defect):
     rel, payload = defect

@@ -97,6 +97,54 @@ pub struct MemReport {
     /// O(prompt): at a fixed model this gauge must match between a 4K and a
     /// 64K prompt — the ISSUE's long-context memory gate.
     pub prefill_chunk_bytes: usize,
+    /// Parameter epoch the engine is serving (bumped by every
+    /// `set_params`; invalidates cached serve state and live decode
+    /// sessions). A replica fleet reports `max` across replicas — after a
+    /// weight broadcast every replica must agree.
+    pub params_epoch: u64,
+}
+
+impl MemReport {
+    /// Fold another engine's report into this one — the replica fleet's
+    /// aggregated `GET /mem`. Counters and byte gauges sum; bucket ladders
+    /// and the kernel name must agree across a homogeneous fleet, so the
+    /// first non-empty value wins; `params_epoch` takes the max (replicas
+    /// lag only mid-broadcast, and admission is gated while they do).
+    pub fn merge(&mut self, other: &MemReport) {
+        self.train_arena_hiwater_bytes += other.train_arena_hiwater_bytes;
+        self.train_arena_allocs += other.train_arena_allocs;
+        self.serve_arena_hiwater_bytes += other.serve_arena_hiwater_bytes;
+        self.serve_arena_allocs += other.serve_arena_allocs;
+        self.serve_spec_bytes += other.serve_spec_bytes;
+        self.serve_forwards += other.serve_forwards;
+        if self.bucket_lens.is_empty() {
+            self.bucket_lens = other.bucket_lens.clone();
+            self.bucket_hits = other.bucket_hits.clone();
+        } else if self.bucket_lens == other.bucket_lens
+            && self.bucket_hits.len() == other.bucket_hits.len()
+        {
+            for (h, o) in self.bucket_hits.iter_mut().zip(&other.bucket_hits) {
+                *h += *o;
+            }
+        }
+        self.decode_sessions_live += other.decode_sessions_live;
+        self.decode_sessions_total += other.decode_sessions_total;
+        self.decode_steps += other.decode_steps;
+        self.decode_step_batches += other.decode_step_batches;
+        self.decode_step_batch_rows += other.decode_step_batch_rows;
+        self.decode_state_bytes += other.decode_state_bytes;
+        if self.kernel.is_empty() {
+            self.kernel = other.kernel.clone();
+        }
+        self.max_context = self.max_context.max(other.max_context);
+        if self.ext_bucket_lens.is_empty() {
+            self.ext_bucket_lens = other.ext_bucket_lens.clone();
+        }
+        self.prefill_chunked += other.prefill_chunked;
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_chunk_bytes = self.prefill_chunk_bytes.max(other.prefill_chunk_bytes);
+        self.params_epoch = self.params_epoch.max(other.params_epoch);
+    }
 }
 
 /// One autoregressive decode request in flight (DESIGN.md §Decode).

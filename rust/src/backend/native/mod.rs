@@ -432,6 +432,7 @@ impl Backend for NativeBackend {
             prefill_chunked: serve.prefill_chunked,
             prefill_chunks: serve.prefill_chunks,
             prefill_chunk_bytes: serve.prefill_chunk_bytes,
+            params_epoch: serve.params_epoch,
             kernel: kernels::active_name().to_string(),
         })
     }

@@ -600,6 +600,9 @@ pub struct ServeStats {
     /// fixed model this number is the same for a 4K and a 64K prompt —
     /// pinned by the longctx e2e tests.
     pub prefill_chunk_bytes: usize,
+    /// Parameter epoch being served (bumped on every out-of-band param
+    /// change; live sessions from older epochs are refused as stale).
+    pub params_epoch: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -3862,6 +3865,7 @@ impl NativeModel {
             prefill_chunked: st.prefill_chunked,
             prefill_chunks: st.prefill_chunks,
             prefill_chunk_bytes: st.prefill_chunk_elems * std::mem::size_of::<f32>(),
+            params_epoch: self.epoch,
         }
     }
 

@@ -66,6 +66,7 @@ use crate::coordinator::generation::{sample_token, Sampling};
 use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
+#[derive(Clone)]
 pub struct GenerateRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
@@ -213,11 +214,15 @@ struct Envelope {
     ticket: Ticket,
 }
 
-/// Worker-bound messages: generation work, a serving-stats probe, or a
-/// drain order.
+/// Worker-bound messages: generation work, a serving-stats probe, a
+/// parameter swap, or a drain order.
 enum Msg {
     Gen(Envelope),
     Mem(Sender<Option<MemReport>>),
+    /// Install new parameters (manifest order). The engine bumps its param
+    /// epoch, which invalidates every live `ServeState`/decode session —
+    /// the replica-fleet weight broadcast rides on this.
+    SetParams(Vec<Tensor>, Sender<Result<()>>),
     Drain(Duration, Sender<DrainReport>),
 }
 
@@ -316,6 +321,18 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server worker terminated"))?
     }
 
+    /// Swap the worker's parameters (host tensors, manifest order) between
+    /// requests. The engine's param-epoch bump invalidates every cached
+    /// `ServeState` and live decode session, so no request ever sees
+    /// mixed-epoch tokens. Blocks until the worker has installed them.
+    pub fn set_params(&self, params: Vec<Tensor>) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::SetParams(params, tx))
+            .map_err(|_| anyhow!("server worker terminated"))?;
+        rx.recv().map_err(|_| anyhow!("server worker terminated"))?
+    }
+
     /// Snapshot of the worker backend's arena/workspace accounting (the
     /// serve report; `None` when the engine does not track it). Still
     /// answered after a drain — that is how the front end proves zero
@@ -366,6 +383,97 @@ impl ServerHandle {
             return None;
         }
         rx.recv().ok()
+    }
+}
+
+/// A stream admitted through [`Engine::try_submit_stream`]: the bounded
+/// event channel plus, when the engine is a replica fleet, which replica
+/// the request landed on (surfaced in access logs and `done` events).
+pub struct StreamSubmission {
+    pub rx: Receiver<StreamEvent>,
+    pub replica: Option<usize>,
+}
+
+/// What the network front end needs from whatever serves tokens — the
+/// single in-process worker ([`ServerHandle`]) or a replica fleet behind
+/// the router (`net::router::FleetHandle`). Everything the HTTP layer
+/// does (admission, streaming, health, mem, drain) goes through this
+/// seam, so `serve --listen` and `serve --listen --replicas N` share one
+/// front end.
+pub trait Engine: Send + Sync {
+    /// Bounded streaming admission. `session` is an optional client
+    /// affinity key: a fleet pins every request carrying the same key to
+    /// one replica (decode state is replica-resident); the in-process
+    /// engine ignores it (there is only one place state can live).
+    fn try_submit_stream(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+        session: Option<&str>,
+    ) -> std::result::Result<StreamSubmission, AdmitError>;
+
+    /// Aggregated serving-stats snapshot (summed across a fleet).
+    fn mem_report(&self) -> Option<MemReport>;
+
+    /// Total live-session capacity (summed across a fleet).
+    fn capacity(&self) -> usize;
+
+    /// Requests currently holding inflight slots (summed across a fleet).
+    fn inflight(&self) -> usize;
+
+    /// Admission queue depth on top of capacity. Fleets ignore this: each
+    /// replica's cap is fixed at replica startup.
+    fn set_queue_cap(&self, _queue_cap: usize) {}
+
+    fn begin_drain(&self);
+    fn is_draining(&self) -> bool;
+
+    /// Graceful drain (fleet-wide when there are replicas).
+    fn drain(&self, budget: Duration) -> Option<DrainReport>;
+
+    /// Worker processes behind this engine (1 for the in-process worker).
+    fn replicas(&self) -> usize {
+        1
+    }
+}
+
+impl Engine for ServerHandle {
+    fn try_submit_stream(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+        _session: Option<&str>,
+    ) -> std::result::Result<StreamSubmission, AdmitError> {
+        ServerHandle::try_submit_stream(self, req, token_buf)
+            .map(|rx| StreamSubmission { rx, replica: None })
+    }
+
+    fn mem_report(&self) -> Option<MemReport> {
+        ServerHandle::mem_report(self)
+    }
+
+    fn capacity(&self) -> usize {
+        ServerHandle::capacity(self)
+    }
+
+    fn inflight(&self) -> usize {
+        ServerHandle::inflight(self)
+    }
+
+    fn set_queue_cap(&self, queue_cap: usize) {
+        ServerHandle::set_queue_cap(self, queue_cap)
+    }
+
+    fn begin_drain(&self) {
+        ServerHandle::begin_drain(self)
+    }
+
+    fn is_draining(&self) -> bool {
+        ServerHandle::is_draining(self)
+    }
+
+    fn drain(&self, budget: Duration) -> Option<DrainReport> {
+        ServerHandle::drain(self, budget)
     }
 }
 
@@ -500,7 +608,7 @@ struct LiveSession {
 }
 
 fn worker_loop(
-    model: Box<dyn Backend>,
+    mut model: Box<dyn Backend>,
     rx: Receiver<Msg>,
     shutdown: Receiver<()>,
     capacity: usize,
@@ -526,7 +634,7 @@ fn worker_loop(
         let mut disconnected = false;
         loop {
             match rx.try_recv() {
-                Ok(msg) => handle_msg(msg, model.as_ref(), &mut batcher, drained, &mut drain_req),
+                Ok(msg) => handle_msg(msg, model.as_mut(), &mut batcher, drained, &mut drain_req),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -603,14 +711,14 @@ fn worker_loop(
             .min(Duration::from_millis(2))
             .max(Duration::from_micros(200));
         if let Ok(msg) = rx.recv_timeout(wait) {
-            handle_msg(msg, model.as_ref(), &mut batcher, drained, &mut drain_req);
+            handle_msg(msg, model.as_mut(), &mut batcher, drained, &mut drain_req);
         }
     }
 }
 
 fn handle_msg(
     msg: Msg,
-    model: &dyn Backend,
+    model: &mut dyn Backend,
     batcher: &mut Batcher<Envelope>,
     drained: bool,
     drain_req: &mut Option<(Duration, Sender<DrainReport>)>,
@@ -626,6 +734,13 @@ fn handle_msg(
         }
         Msg::Mem(reply) => {
             let _ = reply.send(model.mem_report());
+        }
+        Msg::SetParams(params, tx) => {
+            // Installed between token rounds: sessions admitted before the
+            // swap keep stepping against the *old* epoch's state and are
+            // refused by the engine (`decode_state_stale`), surfacing a
+            // clean per-session error instead of mixed-epoch tokens.
+            let _ = tx.send(model.set_params(&params));
         }
         Msg::Drain(budget, tx) => {
             if drained {

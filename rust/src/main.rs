@@ -7,7 +7,13 @@
 //!   serve --model NAME [--requests N] run the batching server demo
 //!   serve --model NAME --listen ADDR  HTTP/1.1 + SSE network front end
 //!                                     (deadlines, 429 backpressure, drain)
+//!   serve ... --listen ADDR --replicas N  same front end over N worker
+//!                                     processes behind the least-loaded,
+//!                                     session-affine router (net::router)
+//!   replica --model NAME [--listen A] one worker's framed-RPC endpoint
+//!                                     (spawned by `serve --replicas`)
 //!   loadgen --addr HOST:PORT          chaos loadgen against a listener
+//!                                     (repeat --addr to round-robin targets)
 //!   dump-filters --model NAME [--out F] write filter CSV (Fig. D.5)
 //!   info  --model NAME                print manifest summary
 //!
@@ -22,19 +28,23 @@
 //! share the same pool, so concurrent components never oversubscribe the
 //! machine.
 
+use std::net::SocketAddr;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use hyena::backend::{self, Backend, BackendKind};
 use hyena::backend::native::NativeConfig;
 use hyena::coordinator::generation::Sampling;
-use hyena::coordinator::server::{GenerateRequest, Server};
+use hyena::coordinator::server::{Engine, GenerateRequest, Server};
 use hyena::coordinator::trainer::{eval_loss, Trainer};
 use hyena::data::corpus::{generate, CorpusConfig};
 use hyena::data::dataset::LmBatches;
-use hyena::net::client::LoadGenConfig;
+use hyena::net::client::{LoadGenConfig, LoadReport};
+use hyena::net::router::{FleetConfig, FleetHandle, ReplicaServer};
 use hyena::net::server::NetServer;
 use hyena::net::{ChaosConfig, NetConfig};
 use hyena::runtime::checkpoint::Checkpoint;
@@ -68,15 +78,16 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("replica") => cmd_replica(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("dump-filters") => cmd_dump_filters(&args),
         _ => {
             eprintln!(
-                "usage: hyena <list|info|train|eval|serve|loadgen|dump-filters> \
+                "usage: hyena <list|info|train|eval|serve|replica|loadgen|dump-filters> \
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
                  [--steps N] [--seed S] [--buckets N] [--max-context N] [--mixed] \
                  [--require-buckets] [--stream-decode] [--listen ADDR] \
-                 [--addr HOST:PORT] [--chaos SPEC] [--burst]"
+                 [--replicas N] [--addr HOST:PORT]... [--chaos SPEC] [--burst]"
             );
             Ok(())
         }
@@ -257,6 +268,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = model_arg(args)?;
+    // `--listen --replicas N`: no local engine — spawn N worker processes
+    // and put the router in front of them.
+    if let (Some(listen), Some(_)) = (args.get("listen"), args.get("replicas")) {
+        let listen = listen.to_string();
+        return serve_fleet(args, &name, &listen);
+    }
     let n_req = args.get_usize("requests", 16);
     let seed = args.get_u64("seed", 0);
     let buckets = args.get("buckets").and_then(|v| v.parse::<usize>().ok());
@@ -480,11 +497,9 @@ fn chaos_arg(args: &Args) -> Result<ChaosConfig> {
     }
 }
 
-/// `serve --listen ADDR`: the HTTP/1.1 + SSE network front end. Runs until
-/// SIGTERM/ctrl-c, then drains (finish live streams, bounded by
-/// `--drain-ms`) and exits nonzero if any decode session leaked.
-fn serve_net(args: &Args, server: Server, listen: &str, kind: BackendKind) -> Result<()> {
-    let cfg = NetConfig {
+/// `--listen`-family NetConfig from the shared CLI surface.
+fn net_config(args: &Args, listen: &str) -> Result<NetConfig> {
+    Ok(NetConfig {
         addr: listen.to_string(),
         conn_threads: args.get_usize("conn-threads", 32),
         queue_cap: args.get_usize("queue-cap", 0),
@@ -495,7 +510,14 @@ fn serve_net(args: &Args, server: Server, listen: &str, kind: BackendKind) -> Re
         max_body_bytes: args.get_usize("max-body-bytes", 4 << 20),
         chaos: chaos_arg(args)?,
         quiet: args.flag("quiet"),
-    };
+    })
+}
+
+/// `serve --listen ADDR`: the HTTP/1.1 + SSE network front end. Runs until
+/// SIGTERM/ctrl-c, then drains (finish live streams, bounded by
+/// `--drain-ms`) and exits nonzero if any decode session leaked.
+fn serve_net(args: &Args, server: Server, listen: &str, kind: BackendKind) -> Result<()> {
+    let cfg = net_config(args, listen)?;
     if !cfg.chaos.is_off() {
         println!(
             "chaos enabled: disconnect {:.2} stall {:.2} garbage {:.2} \
@@ -540,14 +562,269 @@ fn serve_net(args: &Args, server: Server, listen: &str, kind: BackendKind) -> Re
     Ok(())
 }
 
+/// `replica`: one worker process — the in-process session engine behind
+/// the framed-RPC endpoint the router dials (`net::router`). Runs until
+/// SIGTERM or stdin EOF (the parent-death watcher: `serve --replicas`
+/// holds our stdin pipe, so a dead router means EOF and we self-drain
+/// instead of serving unreachable sessions forever).
+fn cmd_replica(args: &Args) -> Result<()> {
+    let name = model_arg(args)?;
+    let seed = args.get_u64("seed", 0);
+    let buckets = args.get("buckets").and_then(|v| v.parse::<usize>().ok());
+    let max_context = args.get("max-context").and_then(|v| v.parse::<usize>().ok());
+    let dir = hyena::artifact(&name);
+    let kind = backend_kind(args, &dir)?;
+    let server = Server::start_kind(
+        kind,
+        dir,
+        seed as i32,
+        Duration::from_millis(20),
+        None,
+        buckets,
+        max_context,
+    )?;
+    let handle = server.handle.clone();
+    let qc = args.get_usize("queue-cap", 0);
+    handle.set_queue_cap(if qc == 0 { handle.capacity() } else { qc });
+    let mut rs = ReplicaServer::start(handle.clone(), args.get_or("listen", "127.0.0.1:0"))?;
+    // The router's spawn path parses this line for the bound port — keep
+    // the spelling.
+    println!(
+        "replica listening on {} (backend: {}, capacity {})",
+        rs.addr(),
+        kind.name(),
+        handle.capacity()
+    );
+    hyena::net::server::install_drain_signals();
+    let stdin_eof = Arc::new(AtomicBool::new(false));
+    {
+        let stdin_eof = Arc::clone(&stdin_eof);
+        std::thread::spawn(move || {
+            use std::io::Read;
+            let mut buf = [0u8; 256];
+            let mut stdin = std::io::stdin();
+            loop {
+                match stdin.read(&mut buf) {
+                    Ok(0) | Err(_) => {
+                        stdin_eof.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                    Ok(_) => {}
+                }
+            }
+        });
+    }
+    while !hyena::net::server::drain_signalled() && !stdin_eof.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let rep = handle
+        .drain(Duration::from_millis(args.get_u64("drain-ms", 5_000)))
+        .unwrap_or_default();
+    rs.stop();
+    let leaked = handle.mem_report().map_or(0, |m| m.decode_sessions_live) as usize;
+    println!(
+        "drain: {} finished, {} aborted, {} dropped queued, {} leaked sessions",
+        rep.finished, rep.aborted, rep.dropped_queued, leaked
+    );
+    server.stop();
+    if leaked > 0 {
+        bail!("{leaked} decode sessions leaked across drain");
+    }
+    Ok(())
+}
+
+/// Child argv for one replica worker: the `replica` subcommand plus every
+/// engine-shaping option passed through verbatim, so all workers serve
+/// identical models (token-identity across the fleet depends on it).
+fn replica_argv(args: &Args, name: &str) -> Vec<String> {
+    let mut v = vec![
+        "replica".to_string(),
+        "--model".to_string(),
+        name.to_string(),
+        "--listen".to_string(),
+        "127.0.0.1:0".to_string(),
+    ];
+    for key in ["backend", "seed", "buckets", "max-context", "threads", "queue-cap", "drain-ms"] {
+        if let Some(val) = args.get(key) {
+            v.push(format!("--{key}"));
+            v.push(val.to_string());
+        }
+    }
+    if args.flag("quiet") {
+        v.push("--quiet".to_string());
+    }
+    v
+}
+
+/// Spawn one replica worker and wait for its address line. Stdin is a
+/// pipe we hold (the child's parent-death watcher); stdout is drained on
+/// a forwarding thread so the child can never block on a full pipe.
+fn spawn_replica(
+    exe: &Path,
+    argv: &[String],
+    k: usize,
+    quiet: bool,
+) -> Result<(std::process::Child, SocketAddr)> {
+    use std::io::BufRead;
+    let mut child = std::process::Command::new(exe)
+        .args(argv)
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .with_context(|| format!("spawn replica {k}"))?;
+    let stdout = child.stdout.take().ok_or_else(|| anyhow!("replica {k}: no stdout"))?;
+    let mut rd = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if rd.read_line(&mut line)? == 0 {
+            bail!("replica {k} exited before reporting its address");
+        }
+        if !quiet {
+            print!("[replica {k}] {line}");
+        }
+        if let Some(rest) = line.trim().strip_prefix("replica listening on ") {
+            let tok = rest.split_whitespace().next().unwrap_or("");
+            break tok
+                .parse::<SocketAddr>()
+                .map_err(|_| anyhow!("replica {k}: bad address {tok:?}"))?;
+        }
+    };
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match rd.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {
+                    if !quiet {
+                        print!("[replica {k}] {line}");
+                    }
+                }
+            }
+        }
+    });
+    Ok((child, addr))
+}
+
+/// `serve --listen ADDR --replicas N`: spawn N single-engine worker
+/// processes, put the least-loaded/session-affine router in front, and
+/// serve the same HTTP front end. A supervisor respawns dead workers (the
+/// fleet marks them down meanwhile); SIGTERM drains fleet-wide.
+fn serve_fleet(args: &Args, name: &str, listen: &str) -> Result<()> {
+    let n = args.get_usize("replicas", 2).max(1);
+    let quiet = args.flag("quiet");
+    let exe = std::env::current_exe().context("current_exe")?;
+    let argv = replica_argv(args, name);
+    let mut kids = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for k in 0..n {
+        let (child, addr) = spawn_replica(&exe, &argv, k, quiet)?;
+        kids.push(child);
+        addrs.push(addr);
+    }
+    let fleet = FleetHandle::connect(&addrs, FleetConfig { quiet, ..FleetConfig::default() })?;
+    hyena::net::server::install_drain_signals();
+    let net = NetServer::start_engine(Box::new(fleet.clone()), net_config(args, listen)?)?;
+    // check.sh greps this line for the bound port — keep the spelling.
+    println!(
+        "listening on {} (backend: router x{n}, capacity {}); SIGTERM/ctrl-c drains",
+        net.addr(),
+        fleet.capacity()
+    );
+    let children = Arc::new(Mutex::new(kids));
+    let stop = Arc::new(AtomicBool::new(false));
+    let sup = {
+        let children = Arc::clone(&children);
+        let stop = Arc::clone(&stop);
+        let fleet = fleet.clone();
+        let exe = exe.clone();
+        let argv = argv.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_millis(200));
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let mut kids = match children.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            for (k, child) in kids.iter_mut().enumerate() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    eprintln!("[router] replica {k} exited ({status}); respawning");
+                    match spawn_replica(&exe, &argv, k, quiet) {
+                        Ok((c, addr)) => {
+                            *child = c;
+                            fleet.set_replica_addr(k, addr);
+                        }
+                        Err(e) => eprintln!("[router] replica {k} respawn failed: {e}"),
+                    }
+                }
+            }
+        })
+    };
+    let report = net.run_until_drained()?;
+    stop.store(true, Ordering::SeqCst);
+    let _ = sup.join();
+    fleet.shutdown();
+    let s = &report.stats;
+    println!(
+        "serve-net: {} conns, {} requests ({} 2xx, {} 4xx incl {} 429, {} 5xx), \
+         {} streams, {} tokens",
+        s.conns, s.requests, s.s2xx, s.s4xx, s.s429, s.s5xx, s.streams, s.tokens
+    );
+    println!(
+        "drain: {} finished, {} aborted, {} dropped queued, {} leaked sessions",
+        report.drain.finished,
+        report.drain.aborted,
+        report.drain.dropped_queued,
+        report.leaked_sessions
+    );
+    // Closing stdin is each worker's parent-death signal; they self-drain
+    // (already drained over RPC — idempotent) and exit.
+    let mut kids = match children.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for child in kids.iter_mut() {
+        drop(child.stdin.take());
+    }
+    for (k, child) in kids.iter_mut().enumerate() {
+        let mut waited = 0u64;
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if waited < 3_000 => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    waited += 50;
+                }
+                _ => {
+                    eprintln!("[router] replica {k} ignored shutdown; killing");
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+    drop(kids);
+    if report.leaked_sessions > 0 {
+        bail!("{} decode sessions leaked across drain", report.leaked_sessions);
+    }
+    Ok(())
+}
+
 /// `loadgen --addr HOST:PORT`: drive a listener with N concurrent
 /// keep-alive clients, optional chaos, and report tail latencies.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    let addr_s = args
-        .get("addr")
-        .ok_or_else(|| anyhow!("--addr HOST:PORT required (see `serve --listen`)"))?;
-    let addr: std::net::SocketAddr =
-        addr_s.parse().map_err(|_| anyhow!("--addr: bad socket address {addr_s:?}"))?;
+    let addr_strs = args.get_all("addr");
+    if addr_strs.is_empty() {
+        bail!("--addr HOST:PORT required (repeatable; see `serve --listen`)");
+    }
+    let mut addrs: Vec<SocketAddr> = Vec::with_capacity(addr_strs.len());
+    for s in &addr_strs {
+        addrs.push(s.parse().map_err(|_| anyhow!("--addr: bad socket address {s:?}"))?);
+    }
     let cfg = LoadGenConfig {
         clients: args.get_usize("clients", 4),
         requests_per_client: args.get_usize("requests", 4),
@@ -561,13 +838,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0),
         io_timeout_ms: args.get_u64("io-timeout-ms", 10_000),
     };
+    let addr_list =
+        addrs.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ");
     println!(
-        "loadgen: {} clients x {} requests -> {addr} ({})",
+        "loadgen: {} clients x {} requests -> {addr_list} ({})",
         cfg.clients,
         cfg.requests_per_client,
         if cfg.burst { "burst" } else { "steady" }
     );
-    let r = hyena::net::client::run_loadgen(addr, &cfg);
+    let reports = hyena::net::client::run_loadgen_multi(&addrs, &cfg);
+    if addrs.len() > 1 {
+        for (a, rep) in addrs.iter().zip(&reports) {
+            println!(
+                "  [{a}] {} requests: {} ok, {} x 429, {} x 503, {} tokens",
+                rep.requests, rep.ok, rep.rejected_429, rep.rejected_503, rep.tokens
+            );
+        }
+    }
+    let mut r = LoadReport::default();
+    for rep in reports.iter().cloned() {
+        r.merge(rep);
+    }
     println!(
         "  {} requests: {} ok, {} x 429 ({} with Retry-After), {} x 503, \
          {} stream errors, {} io errors",
@@ -594,12 +885,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         r.ms_per_token_percentile(50.0),
         r.ms_per_token_percentile(99.0)
     );
-    if r.rejected_429 > r.retry_after_present {
-        bail!(
-            "{} of {} 429 responses lacked Retry-After — backpressure contract broken",
-            r.rejected_429 - r.retry_after_present,
-            r.rejected_429
-        );
+    // Per-target, not aggregate: one compliant front end must not mask a
+    // broken one when several `--addr` targets are driven round-robin.
+    for (a, rep) in addrs.iter().zip(&reports) {
+        if rep.rejected_429 > rep.retry_after_present {
+            bail!(
+                "target {a}: {} of {} 429 responses lacked Retry-After — \
+                 backpressure contract broken",
+                rep.rejected_429 - rep.retry_after_present,
+                rep.rejected_429
+            );
+        }
     }
     Ok(())
 }

@@ -376,7 +376,8 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    fn merge(&mut self, o: LoadReport) {
+    /// Fold another report in (cross-client, or cross-target totals).
+    pub fn merge(&mut self, o: LoadReport) {
         self.requests += o.requests;
         self.ok += o.ok;
         self.rejected_429 += o.rejected_429;
@@ -416,27 +417,44 @@ pub fn percentile(sample: &[f64], p: f64) -> f64 {
 /// Drive the serving front end with `cfg.clients` concurrent keep-alive
 /// clients and merge their reports.
 pub fn run_loadgen(addr: SocketAddr, cfg: &LoadGenConfig) -> LoadReport {
+    let mut reports = run_loadgen_multi(&[addr], cfg);
+    reports.pop().unwrap_or_default()
+}
+
+/// Multi-target loadgen: every client round-robins its requests across
+/// `addrs` (offset by client id so targets load evenly), with one
+/// keep-alive connection per target. Reports come back per target, in
+/// `addrs` order, so the caller can assert per-target invariants — e.g.
+/// that every 429 carried Retry-After on *each* front end independently.
+pub fn run_loadgen_multi(addrs: &[SocketAddr], cfg: &LoadGenConfig) -> Vec<LoadReport> {
+    if addrs.is_empty() {
+        return Vec::new();
+    }
     let mut handles = Vec::new();
     for c in 0..cfg.clients {
         let cfg = cfg.clone();
+        let addrs = addrs.to_vec();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("hyena-loadgen-{c}"))
-                .spawn(move || client_loop(addr, &cfg, c as u64))
+                .spawn(move || client_loop(&addrs, &cfg, c as u64))
                 .expect("spawn loadgen client"),
         );
     }
-    let mut total = LoadReport::default();
+    let mut totals: Vec<LoadReport> = addrs.iter().map(|_| LoadReport::default()).collect();
     for h in handles {
-        if let Ok(r) = h.join() {
-            total.merge(r);
+        if let Ok(rs) = h.join() {
+            for (t, r) in totals.iter_mut().zip(rs) {
+                t.merge(r);
+            }
         }
     }
-    total
+    totals
 }
 
-fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadReport {
-    let mut report = LoadReport::default();
+fn client_loop(addrs: &[SocketAddr], cfg: &LoadGenConfig, client_id: u64) -> Vec<LoadReport> {
+    let mut reports: Vec<LoadReport> = addrs.iter().map(|_| LoadReport::default()).collect();
+    let mut conns: Vec<Option<HttpClient>> = addrs.iter().map(|_| None).collect();
     let io_to = Duration::from_millis(cfg.io_timeout_ms.max(1));
     // Two independent streams: chaos decisions and prompt content, so
     // toggling chaos never changes the traffic shape.
@@ -446,8 +464,12 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
         // Stagger start-up so steady-state runs interleave naturally.
         std::thread::sleep(Duration::from_millis(client_id * 3));
     }
-    let mut conn: Option<HttpClient> = None;
-    for _ in 0..cfg.requests_per_client {
+    for i in 0..cfg.requests_per_client {
+        // Round-robin target, offset by client id for even coverage.
+        let ti = (client_id as usize + i) % addrs.len();
+        let addr = addrs[ti];
+        let report = &mut reports[ti];
+        let conn = &mut conns[ti];
         report.requests += 1;
         let prompt: Vec<i32> =
             (0..cfg.prompt_len).map(|_| data_rng.usize_below(cfg.vocab.max(2)) as i32).collect();
@@ -469,7 +491,7 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
             report.garbage_injected += 1;
             // Bytes that were never JSON, with an honest content-length.
             let junk = b"this was never json {{{";
-            let mut c = match take_conn(&mut conn, addr, io_to, &mut report) {
+            let mut c = match take_conn(conn, addr, io_to, report) {
                 Some(c) => c,
                 None => continue,
             };
@@ -482,12 +504,12 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
                 Err(_) => report.io_errors += 1,
             }
             // The server closes after a 400 (byte sync lost) — reconnect.
-            conn = None;
+            *conn = None;
             continue;
         }
         let mut attempts = 0usize;
         loop {
-            let mut c = match take_conn(&mut conn, addr, io_to, &mut report) {
+            let mut c = match take_conn(conn, addr, io_to, report) {
                 Some(c) => c,
                 None => break,
             };
@@ -497,7 +519,7 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
                     match out.status {
                         200 if out.aborted => {
                             // We hung up on purpose; connection is dead.
-                            conn = None;
+                            *conn = None;
                         }
                         200 => {
                             if out.done.is_some() {
@@ -515,7 +537,7 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
                             } else if out.error.is_some() {
                                 report.stream_errors += 1;
                             }
-                            conn = Some(c);
+                            *conn = Some(c);
                         }
                         429 => {
                             report.rejected_429 += 1;
@@ -527,7 +549,7 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
                             if retry_after.is_some() {
                                 report.retry_after_present += 1;
                             }
-                            conn = Some(c);
+                            *conn = Some(c);
                             attempts += 1;
                             if attempts <= cfg.max_retries {
                                 // Honour Retry-After, capped so tests stay fast.
@@ -540,22 +562,22 @@ fn client_loop(addr: SocketAddr, cfg: &LoadGenConfig, client_id: u64) -> LoadRep
                         }
                         503 => {
                             report.rejected_503 += 1;
-                            conn = None; // server closes draining conns
+                            *conn = None; // server closes draining conns
                         }
                         _ => {
-                            conn = None;
+                            *conn = None;
                         }
                     }
                 }
                 Err(_) => {
                     report.io_errors += 1;
-                    conn = None;
+                    *conn = None;
                 }
             }
             break;
         }
     }
-    report
+    reports
 }
 
 fn take_conn(

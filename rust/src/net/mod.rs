@@ -12,6 +12,10 @@
 //!   drain (SIGTERM/ctrl-c), structured access logs.
 //! * [`client`] — minimal keep-alive HTTP/SSE client + the chaos loadgen
 //!   that drives the resilience gates.
+//! * [`router`] — replica-parallel serving: framed-RPC worker endpoints
+//!   ([`router::ReplicaServer`]) and the least-loaded, session-affine
+//!   fleet front ([`router::FleetHandle`]) with health probing, failover
+//!   and epoch-synchronized weight broadcast.
 //!
 //! This module owns the pieces both sides share: [`ChaosConfig`] (seeded
 //! fault injection, `HYENA_CHAOS`), [`NetConfig`] (listener tuning) and the
@@ -20,6 +24,7 @@
 pub mod client;
 pub mod http;
 pub mod jsonrd;
+pub mod router;
 pub mod server;
 
 use crate::util::rng::Pcg;

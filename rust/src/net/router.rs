@@ -1,0 +1,1209 @@
+//! Replica-parallel serving: a multi-process worker fleet behind a
+//! least-loaded, session-affine router.
+//!
+//! Two halves, one wire protocol:
+//!
+//! * [`ReplicaServer`] — the worker side. Wraps one in-process session
+//!   engine ([`ServerHandle`]) in a lean framed-RPC loop over local TCP:
+//!   newline-delimited JSON frames, parsed with the same incremental
+//!   [`JsonReader`] the HTTP front end uses. One connection carries one
+//!   request at a time (the router opens a connection per admitted
+//!   stream), so a dropped connection maps 1:1 to a retired session.
+//!
+//! * [`FleetHandle`] — the router side. Implements [`Engine`], so the
+//!   HTTP front end (`net::server`) serves a fleet exactly as it serves
+//!   one in-process worker. Fresh prompts go to the live replica with
+//!   the fewest inflight requests (ties break by id); requests carrying
+//!   a `session` key pin to the replica already holding that session's
+//!   decode state — affinity beats balancing, because decode state is
+//!   replica-resident and cannot be moved.
+//!
+//! Weight updates are epoch-synchronized: [`FleetHandle::broadcast_params`]
+//! gates admission to each replica, pushes the new tensors, and ungates
+//! only on an epoch ack. A replica that misses the broadcast reports a
+//! stale `params_epoch` on its next health probe and is kept out of the
+//! candidate set until re-broadcast — a stale replica never serves
+//! mixed-epoch tokens. Within a replica, the existing serve-state epoch
+//! invalidation refuses stale decode sessions, so both layers agree.
+//!
+//! Failure handling: health probes mark replicas down after consecutive
+//! probe failures and back up when they recover; a replica that dies
+//! before its stream produced any token is retried on a peer (prompt
+//! re-prefill — cheap, nothing was delivered); one that dies mid-stream
+//! surfaces a clean [`StreamEvent::Error`] (tokens already sent cannot
+//! be unsent, and decode state died with the replica).
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::MemReport;
+use crate::coordinator::server::{
+    AdmitError, DrainReport, Engine, GenerateRequest, GenerateResponse, ServerHandle, StreamEvent,
+    StreamSubmission,
+};
+use crate::coordinator::generation::Sampling;
+use crate::net::jsonrd::{Frame, JsonReader};
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+/// Frame-size cap on replica connections. Parameter broadcasts ship full
+/// model tensors as JSON, so this is far above the HTTP body cap.
+const FRAME_CAP: usize = 64 << 20;
+
+/// Consecutive probe failures before a live replica is marked down.
+const MARK_DOWN_FAILS: usize = 2;
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// Write one newline-delimited JSON frame.
+fn write_frame(stream: &mut TcpStream, v: &Json) -> io::Result<()> {
+    let mut s = v.to_string();
+    s.push('\n');
+    stream.write_all(s.as_bytes())
+}
+
+/// Read one JSON frame, first draining any bytes the reader retained
+/// past the previous frame, then pulling from the socket.
+fn read_frame(stream: &mut TcpStream, rd: &mut JsonReader) -> io::Result<Json> {
+    match rd.feed(&[]) {
+        Ok(Frame::Complete(v)) => return Ok(v),
+        Ok(Frame::Incomplete) => {}
+        Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+    }
+    let mut buf = [0u8; 8192];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "peer closed mid-frame",
+            ));
+        }
+        match rd.feed(&buf[..n]) {
+            Ok(Frame::Complete(v)) => return Ok(v),
+            Ok(Frame::Incomplete) => {}
+            Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+        }
+    }
+}
+
+/// Terminal error frame on a `gen` stream.
+fn ev_err(message: &str, partial: usize) -> Json {
+    Json::obj(vec![
+        ("ev", Json::str("err")),
+        ("message", Json::str(message)),
+        ("partial", Json::num(partial as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// MemReport <-> JSON (every field — the fleet aggregates real reports)
+// ---------------------------------------------------------------------------
+
+fn usizes_to_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn u64s_to_json(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn mem_to_json(m: &MemReport) -> Json {
+    Json::obj(vec![
+        ("train_arena_hiwater_bytes", Json::num(m.train_arena_hiwater_bytes as f64)),
+        ("train_arena_allocs", Json::num(m.train_arena_allocs as f64)),
+        ("serve_arena_hiwater_bytes", Json::num(m.serve_arena_hiwater_bytes as f64)),
+        ("serve_arena_allocs", Json::num(m.serve_arena_allocs as f64)),
+        ("serve_spec_bytes", Json::num(m.serve_spec_bytes as f64)),
+        ("serve_forwards", Json::num(m.serve_forwards as f64)),
+        ("bucket_lens", usizes_to_json(&m.bucket_lens)),
+        ("bucket_hits", u64s_to_json(&m.bucket_hits)),
+        ("decode_sessions_live", Json::num(m.decode_sessions_live as f64)),
+        ("decode_sessions_total", Json::num(m.decode_sessions_total as f64)),
+        ("decode_steps", Json::num(m.decode_steps as f64)),
+        ("decode_step_batches", Json::num(m.decode_step_batches as f64)),
+        ("decode_step_batch_rows", Json::num(m.decode_step_batch_rows as f64)),
+        ("decode_state_bytes", Json::num(m.decode_state_bytes as f64)),
+        ("kernel", Json::str(&m.kernel)),
+        ("max_context", Json::num(m.max_context as f64)),
+        ("ext_bucket_lens", usizes_to_json(&m.ext_bucket_lens)),
+        ("prefill_chunked", Json::num(m.prefill_chunked as f64)),
+        ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
+        ("prefill_chunk_bytes", Json::num(m.prefill_chunk_bytes as f64)),
+        ("params_epoch", Json::num(m.params_epoch as f64)),
+    ])
+}
+
+fn mem_from_json(v: &Json) -> MemReport {
+    let n = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let us = |k: &str| -> Vec<usize> {
+        v.get(k)
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|e| e.as_f64()).map(|f| f as usize).collect())
+            .unwrap_or_default()
+    };
+    let u64s = |k: &str| -> Vec<u64> {
+        v.get(k)
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|e| e.as_f64()).map(|f| f as u64).collect())
+            .unwrap_or_default()
+    };
+    MemReport {
+        train_arena_hiwater_bytes: n("train_arena_hiwater_bytes") as usize,
+        train_arena_allocs: n("train_arena_allocs") as u64,
+        serve_arena_hiwater_bytes: n("serve_arena_hiwater_bytes") as usize,
+        serve_arena_allocs: n("serve_arena_allocs") as u64,
+        serve_spec_bytes: n("serve_spec_bytes") as usize,
+        serve_forwards: n("serve_forwards") as u64,
+        bucket_lens: us("bucket_lens"),
+        bucket_hits: u64s("bucket_hits"),
+        decode_sessions_live: n("decode_sessions_live") as u64,
+        decode_sessions_total: n("decode_sessions_total") as u64,
+        decode_steps: n("decode_steps") as u64,
+        decode_step_batches: n("decode_step_batches") as u64,
+        decode_step_batch_rows: n("decode_step_batch_rows") as u64,
+        decode_state_bytes: n("decode_state_bytes") as usize,
+        kernel: v.get("kernel").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+        max_context: n("max_context") as usize,
+        ext_bucket_lens: us("ext_bucket_lens"),
+        prefill_chunked: n("prefill_chunked") as u64,
+        prefill_chunks: n("prefill_chunks") as u64,
+        prefill_chunk_bytes: n("prefill_chunk_bytes") as usize,
+        params_epoch: n("params_epoch") as u64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter tensors <-> JSON (f32 -> f64 -> f32 is bitwise-exact, so a
+// broadcast replica serves the same weights the router holds)
+// ---------------------------------------------------------------------------
+
+fn params_to_json(params: &[Tensor]) -> Result<Json> {
+    let mut arr = Vec::with_capacity(params.len());
+    for t in params {
+        let data = t.as_f32().context("parameter tensor is not f32")?;
+        arr.push(Json::obj(vec![
+            ("shape", usizes_to_json(t.shape())),
+            ("data", Json::Arr(data.iter().map(|&x| Json::num(x as f64)).collect())),
+        ]));
+    }
+    Ok(Json::Arr(arr))
+}
+
+fn parse_params(req: &Json) -> Result<Vec<Tensor>> {
+    let arr = req
+        .get("params")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow!("set_params frame missing `params` array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("param {i}: missing `shape`"))?
+            .iter()
+            .map(|e| e.as_f64().map(|f| f as usize).ok_or_else(|| anyhow!("param {i}: bad shape")))
+            .collect::<Result<_>>()?;
+        let data: Vec<f32> = t
+            .get("data")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| anyhow!("param {i}: missing `data`"))?
+            .iter()
+            .map(|e| e.as_f64().map(|f| f as f32).ok_or_else(|| anyhow!("param {i}: bad data")))
+            .collect::<Result<_>>()?;
+        out.push(Tensor::from_f32(&shape, data)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Replica side: framed RPC over one engine
+// ---------------------------------------------------------------------------
+
+/// One worker's RPC endpoint: accepts router connections and serves the
+/// frame ops (`gen`, `health`, `mem`, `set_params`, `drain`) against a
+/// single in-process engine.
+pub struct ReplicaServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ReplicaServer {
+    /// Bind `bind` (port 0 picks a free port) and start accepting.
+    pub fn start(handle: ServerHandle, bind: &str) -> Result<ReplicaServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        // Cache the param epoch at the RPC layer: `gen`/`done` frames stamp
+        // it so the router can assert no mixed-epoch tokens ever crossed.
+        let epoch = Arc::new(AtomicU64::new(
+            handle.mem_report().map(|m| m.params_epoch).unwrap_or(0),
+        ));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || replica_accept(listener, handle, epoch, stop, conns))
+        };
+        Ok(ReplicaServer { addr, stop, conns, accept: Some(accept) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful stop: no new connections; live ones run to completion.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Abortive stop: severs every live connection mid-frame. Stands in
+    /// for a worker-process death in the e2e tests — the router must see
+    /// exactly what a crashed replica would produce (truncated streams,
+    /// refused connects).
+    pub fn kill(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Ok(cs) = self.conns.lock() {
+            for (_, c) in cs.iter() {
+                let _ = c.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+fn replica_accept(
+    listener: TcpListener,
+    handle: ServerHandle,
+    epoch: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+) {
+    let mut seq: u64 = 0;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                seq += 1;
+                let id = seq;
+                if let Ok(dup) = stream.try_clone() {
+                    if let Ok(mut cs) = conns.lock() {
+                        cs.push((id, dup));
+                    }
+                }
+                let handle = handle.clone();
+                let epoch = Arc::clone(&epoch);
+                let conns = Arc::clone(&conns);
+                std::thread::spawn(move || {
+                    replica_conn(handle, epoch, stream);
+                    if let Ok(mut cs) = conns.lock() {
+                        cs.retain(|(i, _)| *i != id);
+                    }
+                });
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+fn replica_conn(handle: ServerHandle, epoch: Arc<AtomicU64>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let mut rd = JsonReader::new(FRAME_CAP);
+    loop {
+        let v = match read_frame(&mut stream, &mut rd) {
+            Ok(v) => v,
+            Err(_) => return, // router hung up (or sent garbage): drop conn
+        };
+        let op = v.get("op").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        let keep = match op.as_str() {
+            "gen" => replica_gen(&handle, &epoch, &mut stream, &v),
+            "health" => replica_health(&handle, &epoch, &mut stream),
+            "mem" => replica_mem(&handle, &mut stream),
+            "set_params" => replica_set_params(&handle, &epoch, &mut stream, &v),
+            "drain" => replica_drain(&handle, &mut stream, &v),
+            other => write_frame(&mut stream, &ev_err(&format!("unknown op `{other}`"), 0)).is_ok(),
+        };
+        if !keep {
+            return;
+        }
+    }
+}
+
+/// Serve one `gen` frame: admit, ack with the current epoch, then pump
+/// engine stream events to the router until the terminal frame. A write
+/// failure drops the engine receiver, which retires the session — a dead
+/// router connection never leaks a decode session.
+fn replica_gen(
+    handle: &ServerHandle,
+    epoch: &AtomicU64,
+    stream: &mut TcpStream,
+    v: &Json,
+) -> bool {
+    let (req, _stream_flag, _session) = match crate::net::server::parse_generate(v, 0) {
+        Ok(p) => p,
+        Err(msg) => return write_frame(stream, &ev_err(&msg, 0)).is_ok(),
+    };
+    let token_buf = v.get("token_buf").and_then(|x| x.as_usize()).unwrap_or(128).max(1);
+    let rx = match handle.try_submit_stream(req, token_buf) {
+        Ok(rx) => rx,
+        Err(AdmitError::Busy { retry_after }) => {
+            let f = Json::obj(vec![
+                ("ev", Json::str("busy")),
+                ("retry_ms", Json::num(retry_after.as_millis() as f64)),
+            ]);
+            return write_frame(stream, &f).is_ok();
+        }
+        Err(AdmitError::Draining) => {
+            return write_frame(stream, &Json::obj(vec![("ev", Json::str("draining"))])).is_ok();
+        }
+    };
+    let ok = Json::obj(vec![
+        ("ev", Json::str("ok")),
+        ("epoch", Json::num(epoch.load(Ordering::SeqCst) as f64)),
+    ]);
+    if write_frame(stream, &ok).is_err() {
+        return false;
+    }
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token(t)) => {
+                let f = Json::obj(vec![("ev", Json::str("tok")), ("t", Json::num(t as f64))]);
+                if write_frame(stream, &f).is_err() {
+                    return false;
+                }
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                let f = Json::obj(vec![
+                    ("ev", Json::str("done")),
+                    (
+                        "tokens",
+                        Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("bucket_len", Json::num(resp.bucket_len as f64)),
+                    ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
+                    ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
+                    ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
+                    ("epoch", Json::num(epoch.load(Ordering::SeqCst) as f64)),
+                ]);
+                return write_frame(stream, &f).is_ok();
+            }
+            Ok(StreamEvent::Error { message, partial }) => {
+                return write_frame(stream, &ev_err(&message, partial)).is_ok();
+            }
+            Err(_) => {
+                return write_frame(stream, &ev_err("engine stream closed unexpectedly", 0))
+                    .is_ok();
+            }
+        }
+    }
+}
+
+fn replica_health(handle: &ServerHandle, epoch: &AtomicU64, stream: &mut TcpStream) -> bool {
+    // Re-read the authoritative engine epoch on every probe: parameters
+    // can change out-of-band (a local reload, not our set_params RPC) and
+    // a stale cache would hold this replica out of the fleet forever.
+    if let Some(m) = handle.mem_report() {
+        epoch.store(m.params_epoch, Ordering::SeqCst);
+    }
+    let f = Json::obj(vec![
+        ("ev", Json::str("health")),
+        ("ok", Json::Bool(true)),
+        ("capacity", Json::num(handle.capacity() as f64)),
+        ("inflight", Json::num(handle.inflight() as f64)),
+        ("epoch", Json::num(epoch.load(Ordering::SeqCst) as f64)),
+        ("draining", Json::Bool(handle.is_draining())),
+    ]);
+    write_frame(stream, &f).is_ok()
+}
+
+fn replica_mem(handle: &ServerHandle, stream: &mut TcpStream) -> bool {
+    let f = match handle.mem_report() {
+        Some(m) => Json::obj(vec![("ev", Json::str("mem")), ("mem", mem_to_json(&m))]),
+        None => ev_err("engine has no mem report", 0),
+    };
+    write_frame(stream, &f).is_ok()
+}
+
+fn replica_set_params(
+    handle: &ServerHandle,
+    epoch: &AtomicU64,
+    stream: &mut TcpStream,
+    v: &Json,
+) -> bool {
+    let params = match parse_params(v) {
+        Ok(p) => p,
+        Err(e) => return write_frame(stream, &ev_err(&e.to_string(), 0)).is_ok(),
+    };
+    if let Err(e) = handle.set_params(params) {
+        return write_frame(stream, &ev_err(&e.to_string(), 0)).is_ok();
+    }
+    // Re-read the authoritative epoch from the engine so the ack carries
+    // the post-install value the router will gate on.
+    let new_epoch = handle.mem_report().map(|m| m.params_epoch).unwrap_or(0);
+    epoch.store(new_epoch, Ordering::SeqCst);
+    let f = Json::obj(vec![
+        ("ev", Json::str("params_ack")),
+        ("epoch", Json::num(new_epoch as f64)),
+    ]);
+    write_frame(stream, &f).is_ok()
+}
+
+fn replica_drain(handle: &ServerHandle, stream: &mut TcpStream, v: &Json) -> bool {
+    let budget_ms = v.get("budget_ms").and_then(|x| x.as_f64()).unwrap_or(5_000.0).max(0.0);
+    let rep = handle.drain(Duration::from_millis(budget_ms as u64)).unwrap_or_default();
+    let leaked = handle.mem_report().map(|m| m.decode_sessions_live).unwrap_or(0);
+    let f = Json::obj(vec![
+        ("ev", Json::str("drained")),
+        ("finished", Json::num(rep.finished as f64)),
+        ("aborted", Json::num(rep.aborted as f64)),
+        ("dropped", Json::num(rep.dropped_queued as f64)),
+        ("leaked", Json::num(leaked as f64)),
+    ]);
+    write_frame(stream, &f).is_ok()
+}
+
+// ---------------------------------------------------------------------------
+// Router side: the fleet
+// ---------------------------------------------------------------------------
+
+/// Router-side tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Per-connection read/write timeout on replica sockets, ms.
+    pub io_timeout_ms: u64,
+    /// Health-probe period, ms.
+    pub probe_ms: u64,
+    /// Health-probe connect+RPC timeout, ms.
+    pub probe_timeout_ms: u64,
+    /// Peer retries for a prompt whose replica died before the first
+    /// token (re-prefill is safe: nothing was delivered).
+    pub gen_retries: usize,
+    /// Suppress router log lines.
+    pub quiet: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            io_timeout_ms: 10_000,
+            probe_ms: 150,
+            probe_timeout_ms: 500,
+            gen_retries: 2,
+            quiet: false,
+        }
+    }
+}
+
+/// Router-side record of one worker.
+struct Replica {
+    id: usize,
+    /// Mutable: the supervisor rewrites this when it respawns a dead
+    /// worker process on a fresh port.
+    addr: Mutex<SocketAddr>,
+    /// In the candidate set? Probes flip this down after consecutive
+    /// failures (or a stale epoch) and back up on recovery.
+    up: AtomicBool,
+    /// Admission-gated during a parameter broadcast (down for dispatch,
+    /// but not "failed" — probes do not touch it).
+    gated: AtomicBool,
+    /// Streams the router currently has open against this replica — the
+    /// least-loaded dispatch key.
+    inflight: AtomicUsize,
+    capacity: AtomicUsize,
+    /// Last epoch observed (probe, admission ack, or params ack).
+    epoch: AtomicU64,
+    /// Consecutive probe failures.
+    fails: AtomicUsize,
+}
+
+fn addr_of(r: &Replica) -> SocketAddr {
+    match r.addr.lock() {
+        Ok(a) => *a,
+        Err(p) => *p.into_inner(),
+    }
+}
+
+struct FleetInner {
+    replicas: Vec<Arc<Replica>>,
+    /// session key -> replica id holding that session's decode state.
+    sessions: Mutex<HashMap<String, usize>>,
+    draining: AtomicBool,
+    stop: AtomicBool,
+    /// Epoch every replica must serve at. Replicas observed below this
+    /// are kept out of the candidate set (mixed-epoch guard).
+    target_epoch: AtomicU64,
+    cfg: FleetConfig,
+}
+
+/// Handle to a replica fleet; implements [`Engine`] so the HTTP front
+/// end drives it exactly like the in-process worker.
+#[derive(Clone)]
+pub struct FleetHandle {
+    inner: Arc<FleetInner>,
+}
+
+impl FleetHandle {
+    /// Connect to already-listening replicas and start the health-probe
+    /// thread. Fails hard if any replica refuses its startup probe: a
+    /// fleet that boots degraded is a misconfiguration, not a failover.
+    pub fn connect(addrs: &[SocketAddr], cfg: FleetConfig) -> Result<FleetHandle> {
+        if addrs.is_empty() {
+            bail!("replica fleet needs at least one worker address");
+        }
+        let probe_to = Duration::from_millis(cfg.probe_timeout_ms.max(1));
+        let mut replicas = Vec::with_capacity(addrs.len());
+        let mut max_epoch = 0u64;
+        for (id, &addr) in addrs.iter().enumerate() {
+            let h = health_rpc(addr, probe_to)
+                .with_context(|| format!("replica {id} at {addr}: startup health probe"))?;
+            max_epoch = max_epoch.max(h.epoch);
+            replicas.push(Arc::new(Replica {
+                id,
+                addr: Mutex::new(addr),
+                up: AtomicBool::new(true),
+                gated: AtomicBool::new(false),
+                inflight: AtomicUsize::new(0),
+                capacity: AtomicUsize::new(h.capacity),
+                epoch: AtomicU64::new(h.epoch),
+                fails: AtomicUsize::new(0),
+            }));
+        }
+        let inner = Arc::new(FleetInner {
+            replicas,
+            sessions: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            target_epoch: AtomicU64::new(max_epoch),
+            cfg,
+        });
+        {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || probe_loop(inner));
+        }
+        Ok(FleetHandle { inner })
+    }
+
+    /// Stop the probe thread (the fleet itself holds no sockets open).
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Point replica `id` at a new address (supervisor respawned the
+    /// worker). Resets the failure counter so probes can mark it up.
+    pub fn set_replica_addr(&self, id: usize, addr: SocketAddr) {
+        if let Some(r) = self.inner.replicas.get(id) {
+            match r.addr.lock() {
+                Ok(mut a) => *a = addr,
+                Err(p) => *p.into_inner() = addr,
+            }
+            r.fails.store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// Is replica `id` currently in the candidate set? (test hook)
+    pub fn replica_up(&self, id: usize) -> bool {
+        self.inner.replicas.get(id).map(|r| r.up.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    /// Live session-affinity pins (test hook: zero after a full drain).
+    pub fn pinned_sessions(&self) -> usize {
+        match self.inner.sessions.lock() {
+            Ok(s) => s.len(),
+            Err(p) => p.into_inner().len(),
+        }
+    }
+}
+
+/// One health-probe reply.
+struct Health {
+    capacity: usize,
+    inflight: usize,
+    epoch: u64,
+    draining: bool,
+}
+
+fn health_rpc(addr: SocketAddr, timeout: Duration) -> io::Result<Health> {
+    let mut s = TcpStream::connect_timeout(&addr, timeout)?;
+    let _ = s.set_nodelay(true);
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    write_frame(&mut s, &Json::obj(vec![("op", Json::str("health"))]))?;
+    let mut rd = JsonReader::new(1 << 16);
+    let v = read_frame(&mut s, &mut rd)?;
+    if v.get("ev").and_then(|x| x.as_str()) != Some("health") {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "expected health frame"));
+    }
+    let n = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    Ok(Health {
+        capacity: n("capacity") as usize,
+        inflight: n("inflight") as usize,
+        epoch: n("epoch") as u64,
+        draining: v.get("draining").and_then(|x| x.as_bool()).unwrap_or(false),
+    })
+}
+
+fn probe_loop(inner: Arc<FleetInner>) {
+    let period = Duration::from_millis(inner.cfg.probe_ms.max(10));
+    let probe_to = Duration::from_millis(inner.cfg.probe_timeout_ms.max(1));
+    loop {
+        std::thread::sleep(period);
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let target = inner.target_epoch.load(Ordering::SeqCst);
+        for r in &inner.replicas {
+            let addr = addr_of(r);
+            match health_rpc(addr, probe_to) {
+                Ok(h) => {
+                    r.fails.store(0, Ordering::SeqCst);
+                    r.capacity.store(h.capacity, Ordering::SeqCst);
+                    r.epoch.store(h.epoch, Ordering::SeqCst);
+                    let _ = h.inflight; // router-side count is authoritative
+                    if h.epoch < target {
+                        // Alive but serving stale weights (missed a
+                        // broadcast): keep it out of the candidate set
+                        // until re-broadcast — never mix epochs.
+                        if r.up.swap(false, Ordering::SeqCst) && !inner.cfg.quiet {
+                            eprintln!(
+                                "[router] replica {} marked down: stale epoch {} < {}",
+                                r.id, h.epoch, target
+                            );
+                        }
+                    } else if h.draining {
+                        r.up.store(false, Ordering::SeqCst);
+                    } else if !r.up.swap(true, Ordering::SeqCst) && !inner.cfg.quiet {
+                        eprintln!("[router] replica {} marked up ({addr})", r.id);
+                    }
+                }
+                Err(e) => {
+                    let fails = r.fails.fetch_add(1, Ordering::SeqCst) + 1;
+                    if fails >= MARK_DOWN_FAILS
+                        && r.up.swap(false, Ordering::SeqCst)
+                        && !inner.cfg.quiet
+                    {
+                        eprintln!(
+                            "[router] replica {} marked down after {fails} failed probes: {e}",
+                            r.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Record an admission/stream transport failure against a replica —
+/// faster than waiting out the probe period.
+fn note_fail(inner: &FleetInner, r: &Replica) {
+    let fails = r.fails.fetch_add(1, Ordering::SeqCst) + 1;
+    if fails >= MARK_DOWN_FAILS && r.up.swap(false, Ordering::SeqCst) && !inner.cfg.quiet {
+        eprintln!("[router] replica {} marked down after transport failure", r.id);
+    }
+}
+
+/// Dispatch candidates, best first. A live pin wins outright (decode
+/// state is replica-resident — balancing cannot move it); a pin whose
+/// replica is down falls through to the peers, and the caller re-pins
+/// wherever the re-prefill lands. Otherwise: up, ungated, not excluded,
+/// least-loaded first (ties by id for determinism).
+fn candidates(
+    inner: &FleetInner,
+    pinned: Option<usize>,
+    exclude: Option<usize>,
+) -> Vec<Arc<Replica>> {
+    if let Some(p) = pinned {
+        if let Some(r) = inner.replicas.get(p) {
+            if r.up.load(Ordering::SeqCst)
+                && !r.gated.load(Ordering::SeqCst)
+                && Some(p) != exclude
+            {
+                return vec![Arc::clone(r)];
+            }
+        }
+    }
+    let mut out: Vec<Arc<Replica>> = inner
+        .replicas
+        .iter()
+        .filter(|r| {
+            r.up.load(Ordering::SeqCst)
+                && !r.gated.load(Ordering::SeqCst)
+                && Some(r.id) != exclude
+        })
+        .map(Arc::clone)
+        .collect();
+    out.sort_by_key(|r| (r.inflight.load(Ordering::SeqCst), r.id));
+    out
+}
+
+/// Outcome of an admission handshake against one replica.
+enum Admit {
+    Ok(TcpStream, JsonReader),
+    Busy(Duration),
+    Draining,
+    Transport(io::Error),
+}
+
+fn gen_frame(req: &GenerateRequest, token_buf: usize) -> Json {
+    let mut kv = vec![
+        ("op", Json::str("gen")),
+        (
+            "prompt",
+            Json::Arr(req.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_new", Json::num(req.max_new as f64)),
+        ("token_buf", Json::num(token_buf as f64)),
+        ("stream", Json::Bool(true)),
+    ];
+    if let Sampling::Temperature { t, top_k } = req.sampling {
+        kv.push(("temperature", Json::num(t as f64)));
+        kv.push(("top_k", Json::num(top_k as f64)));
+    }
+    if let Some(d) = req.deadline {
+        kv.push(("timeout_ms", Json::num(d.as_millis() as f64)));
+    }
+    Json::obj(kv)
+}
+
+/// Connect, send the `gen` frame, and read the admission reply.
+fn gen_handshake(r: &Replica, req: &GenerateRequest, token_buf: usize, io_to: Duration) -> Admit {
+    let addr = addr_of(r);
+    let mut s = match TcpStream::connect_timeout(&addr, io_to) {
+        Ok(s) => s,
+        Err(e) => return Admit::Transport(e),
+    };
+    let _ = s.set_nodelay(true);
+    if let Err(e) = s.set_read_timeout(Some(io_to)).and(s.set_write_timeout(Some(io_to))) {
+        return Admit::Transport(e);
+    }
+    if let Err(e) = write_frame(&mut s, &gen_frame(req, token_buf)) {
+        return Admit::Transport(e);
+    }
+    let mut rd = JsonReader::new(FRAME_CAP);
+    let v = match read_frame(&mut s, &mut rd) {
+        Ok(v) => v,
+        Err(e) => return Admit::Transport(e),
+    };
+    match v.get("ev").and_then(|x| x.as_str()) {
+        Some("ok") => {
+            if let Some(e) = v.get("epoch").and_then(|x| x.as_f64()) {
+                r.epoch.store(e as u64, Ordering::SeqCst);
+            }
+            Admit::Ok(s, rd)
+        }
+        Some("busy") => {
+            let ms = v.get("retry_ms").and_then(|x| x.as_f64()).unwrap_or(1_000.0).max(0.0);
+            Admit::Busy(Duration::from_millis(ms as u64))
+        }
+        Some("draining") => Admit::Draining,
+        other => Admit::Transport(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unexpected admission reply: {other:?}"),
+        )),
+    }
+}
+
+fn done_to_response(v: &Json) -> GenerateResponse {
+    let n = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let tokens = v
+        .get("tokens")
+        .and_then(|x| x.as_arr())
+        .map(|a| a.iter().filter_map(|e| e.as_f64()).map(|f| f as i32).collect())
+        .unwrap_or_default();
+    GenerateResponse {
+        tokens,
+        queue_time: Duration::from_secs_f64(n("queue_ms") / 1e3),
+        total_time: Duration::from_secs_f64(n("total_ms") / 1e3),
+        batch_occupancy: n("batch_occupancy") as usize,
+        bucket_len: n("bucket_len") as usize,
+    }
+}
+
+fn dec_inflight(inner: &FleetInner, rid: usize) {
+    if let Some(r) = inner.replicas.get(rid) {
+        r.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn pin_session(inner: &FleetInner, session: &Option<String>, rid: usize) {
+    if let Some(key) = session {
+        let mut map = match inner.sessions.lock() {
+            Ok(m) => m,
+            Err(p) => p.into_inner(),
+        };
+        map.insert(key.clone(), rid);
+    }
+}
+
+/// Forward one admitted replica stream to the front end's event channel.
+///
+/// Failover rule: a transport error *before the first forwarded token*
+/// re-runs the whole prompt on a peer (nothing was delivered, so the
+/// re-prefill is invisible to the client, modulo latency); after any
+/// token was forwarded the stream terminates with a clean error — tokens
+/// cannot be unsent and the dead replica took the decode state with it.
+#[allow(clippy::too_many_arguments)]
+fn pump(
+    inner: Arc<FleetInner>,
+    mut rid: usize,
+    mut stream: TcpStream,
+    mut rd: JsonReader,
+    tx: SyncSender<StreamEvent>,
+    req: GenerateRequest,
+    token_buf: usize,
+    session: Option<String>,
+) {
+    let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+    let mut retries = inner.cfg.gen_retries;
+    let mut forwarded: usize = 0;
+    loop {
+        let v = match read_frame(&mut stream, &mut rd) {
+            Ok(v) => v,
+            Err(e) => {
+                if let Some(r) = inner.replicas.get(rid) {
+                    note_fail(&inner, r);
+                }
+                if forwarded == 0 && retries > 0 {
+                    retries -= 1;
+                    dec_inflight(&inner, rid);
+                    let mut next: Option<(usize, TcpStream, JsonReader)> = None;
+                    for cand in candidates(&inner, None, Some(rid)) {
+                        match gen_handshake(&cand, &req, token_buf, io_to) {
+                            Admit::Ok(s2, rd2) => {
+                                cand.inflight.fetch_add(1, Ordering::SeqCst);
+                                next = Some((cand.id, s2, rd2));
+                                break;
+                            }
+                            Admit::Busy(_) | Admit::Draining => continue,
+                            Admit::Transport(_) => note_fail(&inner, &cand),
+                        }
+                    }
+                    match next {
+                        Some((nid, s2, rd2)) => {
+                            if !inner.cfg.quiet {
+                                eprintln!(
+                                    "[router] replica {rid} died before first token; \
+                                     re-prefilled on replica {nid}"
+                                );
+                            }
+                            pin_session(&inner, &session, nid);
+                            rid = nid;
+                            stream = s2;
+                            rd = rd2;
+                            continue;
+                        }
+                        None => {
+                            let _ = tx.send(StreamEvent::Error {
+                                message: format!(
+                                    "replica {rid} failed before first token and no peer \
+                                     could take the request: {e}"
+                                ),
+                                partial: 0,
+                            });
+                            return; // inflight already released above
+                        }
+                    }
+                }
+                let _ = tx.send(StreamEvent::Error {
+                    message: format!("replica {rid} connection lost mid-stream: {e}"),
+                    partial: forwarded,
+                });
+                break;
+            }
+        };
+        match v.get("ev").and_then(|x| x.as_str()) {
+            Some("tok") => {
+                let t = v.get("t").and_then(|x| x.as_f64()).unwrap_or(0.0) as i32;
+                forwarded += 1;
+                match tx.try_send(StreamEvent::Token(t)) {
+                    Ok(()) => {}
+                    // Client stopped draining (slow or gone): sever the
+                    // replica connection so the worker retires the
+                    // session instead of blocking on a full pipe.
+                    Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => break,
+                }
+            }
+            Some("done") => {
+                let _ = tx.send(StreamEvent::Done(done_to_response(&v)));
+                break;
+            }
+            Some("err") => {
+                let message = v
+                    .get("message")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("replica error")
+                    .to_string();
+                let partial =
+                    v.get("partial").and_then(|x| x.as_f64()).unwrap_or(forwarded as f64) as usize;
+                let _ = tx.send(StreamEvent::Error { message, partial });
+                break;
+            }
+            other => {
+                let _ = tx.send(StreamEvent::Error {
+                    message: format!("unexpected replica frame: {other:?}"),
+                    partial: forwarded,
+                });
+                break;
+            }
+        }
+    }
+    dec_inflight(&inner, rid);
+}
+
+fn fetch_mem(addr: SocketAddr, timeout: Duration) -> io::Result<MemReport> {
+    let mut s = TcpStream::connect_timeout(&addr, timeout)?;
+    let _ = s.set_nodelay(true);
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    write_frame(&mut s, &Json::obj(vec![("op", Json::str("mem"))]))?;
+    let mut rd = JsonReader::new(1 << 20);
+    let v = read_frame(&mut s, &mut rd)?;
+    match (v.get("ev").and_then(|x| x.as_str()), v.get("mem")) {
+        (Some("mem"), Some(m)) => Ok(mem_from_json(m)),
+        _ => Err(io::Error::new(io::ErrorKind::InvalidData, "expected mem frame")),
+    }
+}
+
+fn set_params_rpc(addr: SocketAddr, frame: &Json, timeout: Duration) -> io::Result<u64> {
+    let mut s = TcpStream::connect_timeout(&addr, timeout)?;
+    let _ = s.set_nodelay(true);
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    write_frame(&mut s, frame)?;
+    let mut rd = JsonReader::new(1 << 16);
+    let v = read_frame(&mut s, &mut rd)?;
+    match v.get("ev").and_then(|x| x.as_str()) {
+        Some("params_ack") => {
+            Ok(v.get("epoch").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64)
+        }
+        Some("err") => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            v.get("message").and_then(|x| x.as_str()).unwrap_or("set_params failed").to_string(),
+        )),
+        _ => Err(io::Error::new(io::ErrorKind::InvalidData, "expected params_ack frame")),
+    }
+}
+
+fn drain_replica(
+    addr: SocketAddr,
+    budget: Duration,
+    io_to: Duration,
+) -> io::Result<(DrainReport, u64)> {
+    let mut s = TcpStream::connect_timeout(&addr, io_to)?;
+    let _ = s.set_nodelay(true);
+    // The reply lands only after the worker's drain completes, so the
+    // read timeout must cover the full budget plus normal IO slack.
+    s.set_read_timeout(Some(budget + io_to))?;
+    s.set_write_timeout(Some(io_to))?;
+    let f = Json::obj(vec![
+        ("op", Json::str("drain")),
+        ("budget_ms", Json::num(budget.as_millis() as f64)),
+    ]);
+    write_frame(&mut s, &f)?;
+    let mut rd = JsonReader::new(1 << 16);
+    let v = read_frame(&mut s, &mut rd)?;
+    if v.get("ev").and_then(|x| x.as_str()) != Some("drained") {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "expected drained frame"));
+    }
+    let n = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    Ok((
+        DrainReport {
+            finished: n("finished") as usize,
+            aborted: n("aborted") as usize,
+            dropped_queued: n("dropped") as usize,
+        },
+        n("leaked") as u64,
+    ))
+}
+
+impl FleetHandle {
+    /// Epoch-synchronized weight broadcast. Per live replica: gate
+    /// admission, push the tensors, ungate only on an epoch ack. A
+    /// replica that fails the push is marked down (its next health probes
+    /// show a stale epoch, keeping it out until re-broadcast). Returns
+    /// the fleet's new target epoch; errors only if *no* replica acked.
+    pub fn broadcast_params(&self, params: &[Tensor]) -> Result<u64> {
+        let inner = &self.inner;
+        let frame = Json::obj(vec![
+            ("op", Json::str("set_params")),
+            ("params", params_to_json(params)?),
+        ]);
+        let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+        let mut acked = 0usize;
+        let mut max_epoch = inner.target_epoch.load(Ordering::SeqCst);
+        for r in &inner.replicas {
+            if !r.up.load(Ordering::SeqCst) {
+                continue;
+            }
+            r.gated.store(true, Ordering::SeqCst);
+            match set_params_rpc(addr_of(r), &frame, io_to) {
+                Ok(e) => {
+                    r.epoch.store(e, Ordering::SeqCst);
+                    r.gated.store(false, Ordering::SeqCst);
+                    acked += 1;
+                    max_epoch = max_epoch.max(e);
+                }
+                Err(e) => {
+                    r.up.store(false, Ordering::SeqCst);
+                    r.gated.store(false, Ordering::SeqCst);
+                    if !inner.cfg.quiet {
+                        eprintln!(
+                            "[router] replica {} marked down: parameter broadcast failed: {e}",
+                            r.id
+                        );
+                    }
+                }
+            }
+        }
+        inner.target_epoch.store(max_epoch, Ordering::SeqCst);
+        if acked == 0 {
+            bail!("parameter broadcast reached no replica");
+        }
+        Ok(max_epoch)
+    }
+}
+
+impl Engine for FleetHandle {
+    fn try_submit_stream(
+        &self,
+        req: GenerateRequest,
+        token_buf: usize,
+        session: Option<&str>,
+    ) -> std::result::Result<StreamSubmission, AdmitError> {
+        let inner = &self.inner;
+        if inner.draining.load(Ordering::SeqCst) {
+            return Err(AdmitError::Draining);
+        }
+        let pinned = session.and_then(|k| {
+            let map = match inner.sessions.lock() {
+                Ok(m) => m,
+                Err(p) => p.into_inner(),
+            };
+            map.get(k).copied()
+        });
+        let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+        let mut retry_hint = Duration::from_millis(1_000);
+        let mut admitted: Option<(Arc<Replica>, TcpStream, JsonReader)> = None;
+        for r in candidates(inner, pinned, None) {
+            match gen_handshake(&r, &req, token_buf, io_to) {
+                Admit::Ok(s, rd) => {
+                    admitted = Some((r, s, rd));
+                    break;
+                }
+                Admit::Busy(d) => retry_hint = retry_hint.min(d.max(Duration::from_millis(1))),
+                Admit::Draining => {}
+                Admit::Transport(_) => note_fail(inner, &r),
+            }
+        }
+        let (r, stream, rd) = match admitted {
+            Some(t) => t,
+            None => return Err(AdmitError::Busy { retry_after: retry_hint }),
+        };
+        r.inflight.fetch_add(1, Ordering::SeqCst);
+        let rid = r.id;
+        let skey = session.map(|s| s.to_string());
+        pin_session(inner, &skey, rid);
+        let (tx, rx) = sync_channel(token_buf.max(2));
+        let inner2 = Arc::clone(&self.inner);
+        std::thread::spawn(move || pump(inner2, rid, stream, rd, tx, req, token_buf, skey));
+        Ok(StreamSubmission { rx, replica: Some(rid) })
+    }
+
+    /// Aggregated fleet report. Queries every replica (down ones too —
+    /// observability must still see a draining/stale worker's sessions)
+    /// and folds with [`MemReport::merge`].
+    fn mem_report(&self) -> Option<MemReport> {
+        let inner = &self.inner;
+        let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+        let mut agg: Option<MemReport> = None;
+        for r in &inner.replicas {
+            if let Ok(m) = fetch_mem(addr_of(r), io_to) {
+                match agg.as_mut() {
+                    Some(a) => a.merge(&m),
+                    None => agg = Some(m),
+                }
+            }
+        }
+        agg
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner
+            .replicas
+            .iter()
+            .filter(|r| r.up.load(Ordering::SeqCst))
+            .map(|r| r.capacity.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    fn inflight(&self) -> usize {
+        self.inner.replicas.iter().map(|r| r.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    fn begin_drain(&self) {
+        self.inner.draining.store(true, Ordering::SeqCst);
+    }
+
+    fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::SeqCst)
+    }
+
+    /// Fleet-wide drain: every replica drains in parallel under the same
+    /// budget; reports sum. Session pins are cleared afterwards — every
+    /// pinned session either finished or was aborted by its worker.
+    fn drain(&self, budget: Duration) -> Option<DrainReport> {
+        self.begin_drain();
+        let inner = &self.inner;
+        let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+        let (tx, rx) = channel();
+        let mut live = 0usize;
+        for r in &inner.replicas {
+            let addr = addr_of(r);
+            let tx = tx.clone();
+            live += 1;
+            std::thread::spawn(move || {
+                let _ = tx.send(drain_replica(addr, budget, io_to).ok());
+            });
+        }
+        drop(tx);
+        let mut rep = DrainReport::default();
+        for _ in 0..live {
+            if let Ok(Some((d, _leaked))) = rx.recv() {
+                rep.finished += d.finished;
+                rep.aborted += d.aborted;
+                rep.dropped_queued += d.dropped_queued;
+            }
+        }
+        match inner.sessions.lock() {
+            Ok(mut m) => m.clear(),
+            Err(p) => p.into_inner().clear(),
+        }
+        Some(rep)
+    }
+
+    fn replicas(&self) -> usize {
+        self.inner.replicas.len()
+    }
+}

@@ -45,7 +45,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::backend::MemReport;
 use crate::coordinator::server::{
-    AdmitError, DrainReport, GenerateRequest, ServerHandle, StreamEvent,
+    AdmitError, DrainReport, Engine, GenerateRequest, ServerHandle, StreamEvent,
 };
 use crate::coordinator::generation::Sampling;
 use crate::net::http::{
@@ -146,7 +146,7 @@ impl Stats {
 }
 
 struct Shared {
-    handle: ServerHandle,
+    handle: Box<dyn Engine>,
     cfg: NetConfig,
     drain: AtomicBool,
     stats: Stats,
@@ -179,9 +179,16 @@ pub struct NetServer {
 }
 
 impl NetServer {
-    /// Bind `cfg.addr` and start serving `handle`. Port 0 binds a free
-    /// port — read the result from [`NetServer::addr`].
-    pub fn start(handle: ServerHandle, mut cfg: NetConfig) -> Result<NetServer> {
+    /// Bind `cfg.addr` and start serving the in-process worker. Port 0
+    /// binds a free port — read the result from [`NetServer::addr`].
+    pub fn start(handle: ServerHandle, cfg: NetConfig) -> Result<NetServer> {
+        NetServer::start_engine(Box::new(handle), cfg)
+    }
+
+    /// Same listener over any [`Engine`] — the in-process worker or a
+    /// replica fleet (`net::router::FleetHandle`). `serve --listen` and
+    /// `serve --listen --replicas N` share this front end verbatim.
+    pub fn start_engine(handle: Box<dyn Engine>, mut cfg: NetConfig) -> Result<NetServer> {
         if cfg.queue_cap == 0 {
             cfg.queue_cap = handle.capacity();
         }
@@ -389,7 +396,7 @@ fn respond(
 ) {
     let _ = http::write_response(stream, status, extra, body.as_bytes(), keep_alive);
     shared.stats.count_status(status);
-    access_log(shared, route, status, 0, 0, 0, None, Duration::ZERO);
+    access_log(shared, route, status, 0, 0, 0, None, None, Duration::ZERO);
 }
 
 fn err_body(msg: &str) -> String {
@@ -397,6 +404,7 @@ fn err_body(msg: &str) -> String {
 }
 
 /// One structured line per request: ts, route, prompt/gen lens, bucket,
+/// replica (which worker served it; `-` for the in-process engine),
 /// status, ttfb, total — the fields the ISSUE's access-log gate names.
 #[allow(clippy::too_many_arguments)]
 fn access_log(
@@ -406,6 +414,7 @@ fn access_log(
     prompt: usize,
     gen: usize,
     bucket: usize,
+    replica: Option<usize>,
     ttfb: Option<Duration>,
     total: Duration,
 ) {
@@ -413,14 +422,16 @@ fn access_log(
         return;
     }
     let ttfb_ms = ttfb.map_or_else(|| "-".to_string(), |d| format!("{:.1}", d.as_secs_f64() * 1e3));
+    let replica = replica.map_or_else(|| "-".to_string(), |r| r.to_string());
     println!(
-        "[serve-net] {} route={} status={} prompt={} gen={} bucket={} ttfb_ms={} total_ms={:.1}",
+        "[serve-net] {} route={} status={} prompt={} gen={} bucket={} replica={} ttfb_ms={} total_ms={:.1}",
         iso8601(epoch_ms()),
         route,
         status,
         prompt,
         gen,
         bucket,
+        replica,
         ttfb_ms,
         total.as_secs_f64() * 1e3,
     );
@@ -441,6 +452,7 @@ fn handle_request(
                 ("draining", Json::Bool(shared.draining())),
                 ("capacity", Json::num(shared.handle.capacity() as f64)),
                 ("inflight", Json::num(shared.handle.inflight() as f64)),
+                ("replicas", Json::num(shared.handle.replicas() as f64)),
             ])
             .to_string();
             respond(shared, stream, 200, &[], &body, head.keep_alive, "/healthz");
@@ -448,7 +460,7 @@ fn handle_request(
         }
         ("GET", "/mem") => {
             let body = match shared.handle.mem_report() {
-                Some(m) => mem_json(&m),
+                Some(m) => mem_json(&m, shared.handle.replicas()),
                 None => Json::obj(vec![("available", Json::Bool(false))]).to_string(),
             };
             respond(shared, stream, 200, &[], &body, head.keep_alive, "/mem");
@@ -490,8 +502,10 @@ fn drop_body(stream: &mut TcpStream, carry: &mut Vec<u8>, head: &RequestHead) {
     }
 }
 
-fn mem_json(m: &MemReport) -> String {
+fn mem_json(m: &MemReport, replicas: usize) -> String {
     Json::obj(vec![
+        ("replicas", Json::num(replicas as f64)),
+        ("params_epoch", Json::num(m.params_epoch as f64)),
         ("decode_sessions_live", Json::num(m.decode_sessions_live as f64)),
         ("decode_sessions_total", Json::num(m.decode_sessions_total as f64)),
         ("decode_steps", Json::num(m.decode_steps as f64)),
@@ -526,7 +540,7 @@ fn generate_route(
             return false;
         }
     };
-    let (req, want_stream) = match parse_generate(&body, shared.cfg.deadline_ms) {
+    let (req, want_stream, session) = match parse_generate(&body, shared.cfg.deadline_ms) {
         Ok(x) => x,
         Err(msg) => {
             respond(shared, stream, 400, &[], &err_body(&msg), head.keep_alive, "/generate");
@@ -535,9 +549,9 @@ fn generate_route(
     };
     let prompt_len = req.prompt.len();
     if want_stream {
-        stream_generate(shared, stream, head, req, prompt_len, t_start)
+        stream_generate(shared, stream, head, req, session, prompt_len, t_start)
     } else {
-        block_generate(shared, stream, head, req, prompt_len, t_start)
+        block_generate(shared, stream, head, req, session, prompt_len, t_start)
     }
 }
 
@@ -582,13 +596,17 @@ fn stream_generate(
     stream: &mut TcpStream,
     head: &RequestHead,
     req: GenerateRequest,
+    session: Option<String>,
     prompt_len: usize,
     t_start: Instant,
 ) -> bool {
-    let rx = match shared.handle.try_submit_stream(req, shared.cfg.token_buf) {
-        Ok(rx) => rx,
+    let sub = match shared.handle.try_submit_stream(req, shared.cfg.token_buf, session.as_deref())
+    {
+        Ok(sub) => sub,
         Err(e) => return refuse(shared, stream, head, e),
     };
+    let replica = sub.replica;
+    let rx = sub.rx;
     shared.stats.streams.fetch_add(1, Ordering::SeqCst);
     let mut ttfb: Option<Duration> = None;
     let mut gen = 0usize;
@@ -608,7 +626,7 @@ fn stream_generate(
                 }
                 Ok(StreamEvent::Done(resp)) => {
                     bucket = resp.bucket_len;
-                    let data = Json::obj(vec![
+                    let mut kv = vec![
                         (
                             "tokens",
                             Json::Arr(
@@ -619,8 +637,11 @@ fn stream_generate(
                         ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
                         ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
                         ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
-                    ])
-                    .to_string();
+                    ];
+                    if let Some(r) = replica {
+                        kv.push(("replica", Json::num(r as f64)));
+                    }
+                    let data = Json::obj(kv).to_string();
                     sse.event("done", &data)?;
                     clean = true;
                     return sse.finish();
@@ -651,7 +672,7 @@ fn stream_generate(
     // a dead channel and retires the session.
     drop(rx);
     shared.stats.count_status(200);
-    access_log(shared, "/generate", 200, prompt_len, gen, bucket, ttfb, t_start.elapsed());
+    access_log(shared, "/generate", 200, prompt_len, gen, bucket, replica, ttfb, t_start.elapsed());
     io_res.is_ok() && clean && head.keep_alive
 }
 
@@ -660,16 +681,30 @@ fn block_generate(
     stream: &mut TcpStream,
     head: &RequestHead,
     req: GenerateRequest,
+    session: Option<String>,
     prompt_len: usize,
     t_start: Instant,
 ) -> bool {
-    let rx = match shared.handle.try_submit(req) {
-        Ok(rx) => rx,
+    let sub = match shared.handle.try_submit_stream(req, shared.cfg.token_buf, session.as_deref())
+    {
+        Ok(sub) => sub,
         Err(e) => return refuse(shared, stream, head, e),
     };
-    let (status, body, gen, bucket) = match rx.recv() {
-        Ok(Ok(resp)) => {
-            let body = Json::obj(vec![
+    let replica = sub.replica;
+    // Blocking replies ride the streaming admission seam (the only one
+    // the Engine trait exposes): drain token events, answer from the
+    // terminal `Done` — it repeats the full sequence by construction.
+    let outcome = loop {
+        match sub.rx.recv() {
+            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Done(resp)) => break Some(Ok(resp)),
+            Ok(StreamEvent::Error { message, .. }) => break Some(Err(message)),
+            Err(_) => break None,
+        }
+    };
+    let (status, body, gen, bucket) = match outcome {
+        Some(Ok(resp)) => {
+            let mut kv = vec![
                 (
                     "tokens",
                     Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
@@ -678,12 +713,13 @@ fn block_generate(
                 ("batch_occupancy", Json::num(resp.batch_occupancy as f64)),
                 ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
                 ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
-            ])
-            .to_string();
-            (200u16, body, resp.tokens.len(), resp.bucket_len)
+            ];
+            if let Some(r) = replica {
+                kv.push(("replica", Json::num(r as f64)));
+            }
+            (200u16, Json::obj(kv).to_string(), resp.tokens.len(), resp.bucket_len)
         }
-        Ok(Err(e)) => {
-            let msg = format!("{e:#}");
+        Some(Err(msg)) => {
             let status = if msg.contains("deadline exceeded") {
                 504
             } else if msg.contains("out of range") {
@@ -693,7 +729,7 @@ fn block_generate(
             };
             (status, err_body(&msg), 0, 0)
         }
-        Err(_) => (500u16, err_body("server worker terminated"), 0, 0),
+        None => (500u16, err_body("server worker terminated"), 0, 0),
     };
     let _ = http::write_response(stream, status, &[], body.as_bytes(), head.keep_alive);
     shared.stats.count_status(status);
@@ -704,6 +740,7 @@ fn block_generate(
         prompt_len,
         gen,
         bucket,
+        replica,
         None,
         t_start.elapsed(),
     );
@@ -762,11 +799,13 @@ fn read_request_json(
 }
 
 /// `{"prompt":[...], "max_new":N, "temperature":t, "top_k":k,
-/// "timeout_ms":N, "stream":bool}` → request + stream flag.
-fn parse_generate(
+/// "timeout_ms":N, "stream":bool, "session":"key"}` → request + stream
+/// flag + session-affinity key. Shared with the replica RPC endpoint
+/// (`net::router`), whose `gen` frames reuse this grammar.
+pub(crate) fn parse_generate(
     v: &Json,
     default_deadline_ms: u64,
-) -> std::result::Result<(GenerateRequest, bool), String> {
+) -> std::result::Result<(GenerateRequest, bool, Option<String>), String> {
     let arr = v
         .get("prompt")
         .and_then(|p| p.as_arr())
@@ -795,5 +834,8 @@ fn parse_generate(
         .unwrap_or(default_deadline_ms);
     let deadline = if timeout_ms == 0 { None } else { Some(Duration::from_millis(timeout_ms)) };
     let want_stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(true);
-    Ok((GenerateRequest { prompt, max_new, sampling, deadline }, want_stream))
+    // Optional session-affinity key: a replica fleet pins every request
+    // carrying the same key to one worker.
+    let session = v.get("session").and_then(|x| x.as_str()).map(|s| s.to_string());
+    Ok((GenerateRequest { prompt, max_new, sampling, deadline }, want_stream, session))
 }

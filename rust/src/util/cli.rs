@@ -9,6 +9,10 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// Every `--key value` / `--key=value` pair in argv order. `options`
+    /// keeps last-wins semantics; this preserves repeats for options that
+    /// accept multiple values (e.g. loadgen `--addr` per target).
+    pub multi: Vec<(String, String)>,
 }
 
 impl Args {
@@ -21,13 +25,16 @@ impl Args {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
                     a.options.insert(k.to_string(), v.to_string());
+                    a.multi.push((k.to_string(), v.to_string()));
                 } else if flag_names.contains(&body) {
                     a.flags.push(body.to_string());
                 } else if let Some(v) = iter.peek() {
                     if v.starts_with("--") {
                         a.flags.push(body.to_string());
                     } else {
-                        a.options.insert(body.to_string(), iter.next().unwrap());
+                        let val = iter.next().unwrap();
+                        a.options.insert(body.to_string(), val.clone());
+                        a.multi.push((body.to_string(), val));
                     }
                 } else {
                     a.flags.push(body.to_string());
@@ -60,6 +67,10 @@ impl Args {
     }
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    /// All values given for a repeated option, in argv order.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.multi.iter().filter(|(k, _)| k == name).map(|(_, v)| v.as_str()).collect()
     }
 }
 
@@ -94,6 +105,17 @@ mod tests {
         let a = Args::parse_from(v(&["--a", "--b", "5"]), &[]);
         assert!(a.flag("a"));
         assert_eq!(a.get_usize("b", 0), 5);
+    }
+
+    #[test]
+    fn repeated_options_kept_in_order() {
+        let a = Args::parse_from(
+            v(&["--addr", "h1:1", "--addr=h2:2", "--addr", "h3:3"]),
+            &[],
+        );
+        assert_eq!(a.get_all("addr"), vec!["h1:1", "h2:2", "h3:3"]);
+        assert_eq!(a.get("addr"), Some("h3:3")); // last wins for scalars
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

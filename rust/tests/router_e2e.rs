@@ -1,0 +1,291 @@
+//! End-to-end tests for the replica-parallel router (`net::router`): real
+//! framed-RPC sockets between an in-process [`FleetHandle`] and N
+//! in-process worker engines (`golden_tiny`, native backend), covering the
+//! fleet gates — greedy byte-identity with the in-process path, session
+//! affinity under interleaved decode, replica-kill failover leaking
+//! nothing, epoch-synchronized parameter broadcast (stale replicas held
+//! out of the candidate set), and fleet-wide drain finishing live streams.
+//!
+//! Replicas here are threads, not child processes (`ReplicaServer` around
+//! a local engine) — `ReplicaServer::kill` severs every connection
+//! abortively, which is indistinguishable on the wire from a worker
+//! process dying. The spawned-process path is exercised by
+//! `benches/native_router.rs` and `scripts/check.sh router-smoke`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hyena::backend::BackendKind;
+use hyena::coordinator::generation::Sampling;
+use hyena::coordinator::server::{
+    AdmitError, Engine, GenerateRequest, Server, StreamEvent,
+};
+use hyena::net::router::{FleetConfig, FleetHandle, ReplicaServer};
+
+/// One worker: engine + framed-RPC endpoint on a free loopback port.
+fn start_replica() -> (Server, ReplicaServer) {
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+        None,
+    )
+    .unwrap();
+    let rs = ReplicaServer::start(server.handle.clone(), "127.0.0.1:0").unwrap();
+    (server, rs)
+}
+
+/// N identical workers plus the fleet front. Fast probes so mark-down /
+/// mark-up transitions land within test timeouts.
+fn start_fleet(n: usize) -> (Vec<(Server, ReplicaServer)>, FleetHandle) {
+    let workers: Vec<_> = (0..n).map(|_| start_replica()).collect();
+    let addrs: Vec<_> = workers.iter().map(|(_, rs)| rs.addr()).collect();
+    let fleet = FleetHandle::connect(
+        &addrs,
+        FleetConfig { probe_ms: 40, quiet: true, ..FleetConfig::default() },
+    )
+    .unwrap();
+    (workers, fleet)
+}
+
+fn greedy(prompt: &[i32], max_new: usize) -> GenerateRequest {
+    GenerateRequest {
+        prompt: prompt.to_vec(),
+        max_new,
+        sampling: Sampling::Greedy,
+        deadline: None,
+    }
+}
+
+/// Drain one routed stream to its terminal event.
+fn collect(
+    rx: &std::sync::mpsc::Receiver<StreamEvent>,
+) -> Result<Vec<i32>, String> {
+    let mut toks = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(20)) {
+            Ok(StreamEvent::Token(t)) => toks.push(t),
+            Ok(StreamEvent::Done(resp)) => {
+                assert_eq!(resp.tokens, toks, "streamed tokens disagree with done frame");
+                return Ok(toks);
+            }
+            Ok(StreamEvent::Error { message, .. }) => return Err(message),
+            Err(e) => panic!("routed stream hung: {e}"),
+        }
+    }
+}
+
+/// Wait (bounded) for a predicate driven by the probe loop.
+fn eventually(what: &str, mut pred: impl FnMut() -> bool) {
+    for _ in 0..100 {
+        if pred() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn stop_all(workers: Vec<(Server, ReplicaServer)>) {
+    for (server, mut rs) in workers {
+        rs.stop();
+        server.stop();
+    }
+}
+
+#[test]
+fn routed_greedy_streams_match_in_process() {
+    let (workers, fleet) = start_fleet(2);
+    // Independent reference engine — same artifact, same seed. Greedy is
+    // rng-free, so every replica must emit byte-identical streams.
+    let (reference, mut ref_rs) = start_replica();
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10, 11, 1], vec![2, 9]];
+    let subs: Vec<_> = prompts
+        .iter()
+        .map(|p| fleet.try_submit_stream(greedy(p, 6), 32, None).unwrap())
+        .collect();
+    let mut used = std::collections::BTreeSet::new();
+    for (p, sub) in prompts.iter().zip(subs) {
+        used.insert(sub.replica.expect("router must stamp the serving replica"));
+        let got = collect(&sub.rx).unwrap();
+        let want = reference.handle.generate(greedy(p, 6)).unwrap();
+        assert_eq!(got, want.tokens, "routed stream diverged for prompt {p:?}");
+    }
+    assert!(used.len() > 1, "5 concurrent streams never left replica 0: {used:?}");
+    let rep = fleet.drain(Duration::from_secs(2)).unwrap();
+    assert_eq!(rep.finished + rep.aborted + rep.dropped_queued, 0);
+    let mem = fleet.mem_report().unwrap();
+    assert_eq!(mem.decode_sessions_live, 0, "fleet leaked sessions");
+    fleet.shutdown();
+    ref_rs.stop();
+    reference.stop();
+    stop_all(workers);
+}
+
+#[test]
+fn session_affinity_survives_interleaved_load() {
+    let (workers, fleet) = start_fleet(2);
+    // Establish pins while both streams are live: least-loaded dispatch
+    // must split two concurrent sessions across the two idle replicas.
+    let sa = fleet.try_submit_stream(greedy(&[1, 2, 3], 8), 32, Some("sess-a")).unwrap();
+    let sb = fleet.try_submit_stream(greedy(&[4, 5, 6], 8), 32, Some("sess-b")).unwrap();
+    let (pin_a, pin_b) = (sa.replica.unwrap(), sb.replica.unwrap());
+    assert_ne!(pin_a, pin_b, "two live sessions on idle fleet must spread");
+    collect(&sa.rx).unwrap();
+    collect(&sb.rx).unwrap();
+    // Interleaved rounds: unpinned background load plus both sessions,
+    // submitted in orders that would flip them under pure least-loaded
+    // dispatch. The pin must win every time.
+    for round in 0..4 {
+        let bg: Vec<_> = (0..2)
+            .map(|i| {
+                fleet
+                    .try_submit_stream(greedy(&[7 + i, 2, round + 1], 4), 32, None)
+                    .unwrap()
+            })
+            .collect();
+        let sb = fleet.try_submit_stream(greedy(&[4, 5, 6], 4), 32, Some("sess-b")).unwrap();
+        let sa = fleet.try_submit_stream(greedy(&[1, 2, 3], 4), 32, Some("sess-a")).unwrap();
+        assert_eq!(sa.replica.unwrap(), pin_a, "round {round}: sess-a migrated");
+        assert_eq!(sb.replica.unwrap(), pin_b, "round {round}: sess-b migrated");
+        for sub in bg.iter().chain([&sa, &sb]) {
+            collect(&sub.rx).unwrap();
+        }
+    }
+    assert_eq!(fleet.pinned_sessions(), 2);
+    fleet.drain(Duration::from_secs(2)).unwrap();
+    assert_eq!(fleet.pinned_sessions(), 0, "drain must clear affinity pins");
+    fleet.shutdown();
+    stop_all(workers);
+}
+
+#[test]
+fn replica_kill_fails_over_and_leaks_nothing() {
+    let (mut workers, fleet) = start_fleet(2);
+    let (reference, mut ref_rs) = start_replica();
+    // A stream in flight on each replica, so the kill provably hits one.
+    let s0 = fleet.try_submit_stream(greedy(&[1, 2, 3], 16), 32, None).unwrap();
+    let s1 = fleet.try_submit_stream(greedy(&[4, 5, 6], 16), 32, None).unwrap();
+    let victim = s0.replica.unwrap();
+    assert_ne!(victim, s1.replica.unwrap());
+    workers[victim].1.kill();
+    // The victim's stream must end with a terminal event — a clean error
+    // (connection severed mid-stream) or, if the race favoured it, done.
+    let _ = collect(&s0.rx);
+    collect(&s1.rx).unwrap();
+    // Probes mark the dead replica down; new requests fail over to the
+    // survivor (transport errors at dispatch retry the next candidate
+    // immediately — no window where the fleet bounces work it could do).
+    eventually("victim mark-down", || !fleet.replica_up(victim));
+    for p in [vec![2, 3, 4], vec![9, 8]] {
+        let sub = fleet.try_submit_stream(greedy(&p, 5), 32, None).unwrap();
+        assert_ne!(sub.replica.unwrap(), victim, "dispatched to a dead replica");
+        let got = collect(&sub.rx).unwrap();
+        let want = reference.handle.generate(greedy(&p, 5)).unwrap();
+        assert_eq!(got, want.tokens, "failover stream diverged for prompt {p:?}");
+    }
+    // The severed connection retired its session on the victim's engine:
+    // nothing may leak even though the worker was cut off mid-stream.
+    let victim_handle = workers[victim].0.handle.clone();
+    eventually("victim session retirement", || {
+        victim_handle.mem_report().is_some_and(|m| m.decode_sessions_live == 0)
+    });
+    fleet.drain(Duration::from_secs(2));
+    fleet.shutdown();
+    ref_rs.stop();
+    reference.stop();
+    stop_all(workers);
+}
+
+#[test]
+fn param_broadcast_is_epoch_synchronized() {
+    let (mut workers, fleet) = start_fleet(2);
+    // Fresh host tensors from a probe load of the same artifact — same
+    // weights, so post-broadcast outputs stay byte-identical.
+    let probe = hyena::backend::load(
+        BackendKind::Native,
+        &PathBuf::from("artifacts/golden_tiny"),
+        0,
+    )
+    .unwrap();
+    let params = probe.params_host().unwrap();
+    let epoch = fleet.broadcast_params(&params).unwrap();
+    assert!(epoch >= 1);
+    for (k, (server, _)) in workers.iter().enumerate() {
+        let got = server.handle.mem_report().unwrap().params_epoch;
+        assert_eq!(got, epoch, "replica {k} missed the broadcast");
+    }
+    assert_eq!(fleet.mem_report().unwrap().params_epoch, epoch);
+    let (reference, mut ref_rs) = start_replica();
+    let sub = fleet.try_submit_stream(greedy(&[3, 1, 4], 6), 32, None).unwrap();
+    let want = reference.handle.generate(greedy(&[3, 1, 4], 6)).unwrap();
+    assert_eq!(collect(&sub.rx).unwrap(), want.tokens);
+    // Mixed-epoch guard: a replica that misses a broadcast (down while it
+    // happened) must stay out of the candidate set when it reappears at
+    // the old epoch, and rejoin once its engine catches up.
+    workers[0].1.kill();
+    eventually("replica 0 mark-down", || !fleet.replica_up(0));
+    let epoch2 = fleet.broadcast_params(&params).unwrap();
+    assert!(epoch2 > epoch);
+    let handle0 = workers[0].0.handle.clone();
+    let revived = ReplicaServer::start(handle0.clone(), "127.0.0.1:0").unwrap();
+    fleet.set_replica_addr(0, revived.addr());
+    workers[0].1 = revived;
+    // Probes reach it again, but its epoch is stale — it must be held out.
+    std::thread::sleep(Duration::from_millis(400));
+    assert!(!fleet.replica_up(0), "stale-epoch replica rejoined the candidate set");
+    for _ in 0..8 {
+        let sub = fleet.try_submit_stream(greedy(&[5, 5], 3), 32, None).unwrap();
+        assert_eq!(sub.replica.unwrap(), 1, "dispatch reached a stale-epoch replica");
+        collect(&sub.rx).unwrap();
+    }
+    // Engine catches up (out-of-band reload) → probes mark it up again.
+    handle0.set_params(params).unwrap();
+    eventually("replica 0 rejoin at current epoch", || fleet.replica_up(0));
+    fleet.drain(Duration::from_secs(2));
+    fleet.shutdown();
+    ref_rs.stop();
+    reference.stop();
+    stop_all(workers);
+}
+
+#[test]
+fn fleet_drain_finishes_live_streams() {
+    let (workers, fleet) = start_fleet(2);
+    let subs: Vec<_> = (0..4)
+        .map(|i| fleet.try_submit_stream(greedy(&[1 + i, 2, 3], 12), 32, None).unwrap())
+        .collect();
+    // Give the engines a beat so the streams are genuinely live, then
+    // drain the whole fleet. Admission must close instantly; the live
+    // streams must still reach their terminal events.
+    std::thread::sleep(Duration::from_millis(20));
+    let drainer = {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || fleet.drain(Duration::from_secs(5)).unwrap())
+    };
+    eventually("draining flag", || fleet.is_draining());
+    match fleet.try_submit_stream(greedy(&[1, 2], 2), 32, None) {
+        Err(AdmitError::Draining) => {}
+        other => panic!("draining fleet admitted a request: {:?}", other.is_ok()),
+    }
+    let mut finished = 0usize;
+    for sub in &subs {
+        if collect(&sub.rx).is_ok() {
+            finished += 1;
+        }
+    }
+    assert_eq!(finished, 4, "drain aborted streams inside a generous budget");
+    // The report counts sessions still live at drain start; none may have
+    // been force-aborted inside this generous budget.
+    let rep = drainer.join().unwrap();
+    assert_eq!(rep.aborted, 0, "drain report aborted streams: {rep:?}");
+    assert_eq!(fleet.pinned_sessions(), 0);
+    let mem = fleet.mem_report().unwrap();
+    assert_eq!(mem.decode_sessions_live, 0, "drain leaked sessions");
+    fleet.shutdown();
+    stop_all(workers);
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|lint-smoke|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke|serve-net-smoke]
+# Usage: scripts/check.sh [--fix|lint-smoke|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke|serve-net-smoke|router-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   lint-smoke   static-analysis gate (DESIGN.md §Static-Analysis): runs the
 #                dependency-free rustcheck analyzer over rust/src, rust/tests,
@@ -9,8 +9,8 @@
 #                no cargo — so it is the one gate that runs in every
 #                container. Nonzero exit on any unallowlisted finding
 #                (balance/mod-wiring/arity/trait-impl/duplicates, plus the
-#                partial_cmp-unwrap, unsafe-without-SAFETY, kernel-parity and
-#                nondeterminism lints).
+#                partial_cmp-unwrap, unsafe-without-SAFETY, kernel-parity,
+#                struct-lit-field and nondeterminism lints).
 #   bench-smoke  perf regression gate: run the FFTConv bench at L ∈ {1K, 8K}
 #                with 2 threads; fails on panic or if the real-FFT conv is
 #                not faster than the direct O(L²) conv at 8K.
@@ -45,6 +45,18 @@
 #                (each carrying Retry-After — loadgen fails otherwise), a
 #                chaos pass must not wedge the listener, and SIGTERM must
 #                drain to exit 0 with `0 leaked sessions` in the report.
+#   router-smoke replica-parallel serving gate (DESIGN.md §Router): (1) the
+#                router e2e tests — greedy byte-identity through the fleet,
+#                session affinity, replica-kill failover, epoch-synchronized
+#                parameter broadcast, fleet drain; (2) the native_router
+#                bench in --smoke mode (ledger key `router`): N=2 worker
+#                processes must deliver >= 1.7x the aggregate tok/s of N=1
+#                with token-identical greedy streams; (3) a live
+#                `serve --listen --replicas 2` fleet: an overload burst must
+#                provoke 429s (each with Retry-After), a killed worker
+#                process must be respawned and traffic keep flowing, and
+#                SIGTERM must drain fleet-wide to exit 0 with `0 leaked
+#                sessions` in the report.
 #   longctx-smoke long-context gate (DESIGN.md §Long-context): (1) every
 #                longctx_* unit test — chunked prefill bitwise at the full
 #                bucket, ≤ tolerance vs the extended monolithic oracle,
@@ -160,6 +172,79 @@ if [ "${1:-}" = "serve-net-smoke" ]; then
     fi
     rm -f "$log"
     echo "check.sh: serve-net-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "router-smoke" ]; then
+    echo "==> router-smoke: fleet e2e tests (identity, affinity, failover, epoch, drain)"
+    cargo test --release -q --test router_e2e
+    echo "==> router-smoke: native_router bench gate (--smoke: >= 1.7x at N=2, identity)"
+    cargo bench --bench native_router -- --smoke
+    echo "==> router-smoke: live 2-replica fleet (burst, worker kill + respawn, SIGTERM drain)"
+    cargo build --release --bin hyena
+    log=$(mktemp)
+    ./target/release/hyena serve --model lm_hyena_s --backend native \
+        --listen 127.0.0.1:0 --replicas 2 --queue-cap 1 --threads 2 --quiet >"$log" 2>&1 &
+    srv=$!
+    addr=""
+    for _ in $(seq 1 200); do
+        addr=$(sed -n 's/^listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -1)
+        [ -n "$addr" ] && break
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "router-smoke: fleet listener never came up" >&2
+        cat "$log" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    # Overload burst across the fleet: the surplus must bounce with 429 and
+    # every 429 must carry Retry-After (loadgen fails the run otherwise).
+    burst_out=$(./target/release/hyena loadgen --addr "$addr" --clients 24 --requests 1 \
+        --burst --prompt-len 32 --max-new 64 --vocab 96 --seed 0)
+    echo "$burst_out"
+    if ! echo "$burst_out" | grep -qE '[1-9][0-9]* x 429'; then
+        echo "router-smoke: overload burst provoked no 429 backpressure" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    # Kill one worker process outright: the router must mark it down, the
+    # supervisor must respawn it, and traffic must keep flowing meanwhile.
+    kid=$(pgrep -P "$srv" -f 'replica --model' | head -1)
+    if [ -z "$kid" ]; then
+        echo "router-smoke: no replica worker process found to kill" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    kill -KILL "$kid"
+    sleep 2
+    recover_out=$(./target/release/hyena loadgen --addr "$addr" --clients 4 --requests 2 \
+        --prompt-len 16 --max-new 32 --vocab 96 --seed 1)
+    echo "$recover_out"
+    if ! echo "$recover_out" | grep -q '8 requests: 8 ok'; then
+        echo "router-smoke: traffic did not fully recover after worker kill" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    if ! grep -q 'respawning' "$log"; then
+        echo "router-smoke: supervisor never respawned the killed worker" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    kill -TERM "$srv"
+    rc=0
+    wait "$srv" || rc=$?
+    cat "$log"
+    if [ "$rc" -ne 0 ]; then
+        echo "router-smoke: fleet exited rc=$rc after drain (leak gate)" >&2
+        exit 1
+    fi
+    if ! grep -q ', 0 leaked sessions' "$log"; then
+        echo "router-smoke: drain report missing the zero-leak line" >&2
+        exit 1
+    fi
+    rm -f "$log"
+    echo "check.sh: router-smoke green"
     exit 0
 fi
 

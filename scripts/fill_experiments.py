@@ -28,6 +28,7 @@ TAGS = {
     "PERF_NATIVE": ["native_fftconv.csv", "native_step.csv", "native_serve.csv"],
     "PERF_LONGCTX": "native_fftconv_longctx.csv",
     "PERF_SERVE_NET": "native_serve_net.csv",
+    "PERF_ROUTER": "native_router.csv",
     "PERF_L2": "perf_donation.csv",
 }
 

@@ -15,7 +15,11 @@ modules + resolved ``pub use`` re-exports, to a fixpoint), and then runs:
   count disagrees with the definition (closure-bearing and generic-heavy
   argument lists are skipped as uncountable),
 * **trait-impl**       — an ``impl Trait for Type`` of a crate-local trait
-  that neither defines nor inherits a required method.
+  that neither defines nor inherits a required method,
+* **struct-lit-field** — a struct literal or struct pattern
+  ``Type { field: … }`` spelling a field that does not exist on the
+  resolved crate-local struct definition (cfg-gated defs and anything
+  that does not resolve to a named-field struct are skipped).
 
 Resolution is deliberately lenient where the analyzer cannot be sure
 (glob imports open a namespace, unknown extern crates are trusted, methods
@@ -459,9 +463,37 @@ class Crate:
                 return rel
         return self._rel(self.root_file)
 
+    def check_struct_lits(self) -> List[dict]:
+        out = []
+        for rel, idx in self.files.items():
+            base = self.file_mod[rel]
+            for lit in idx.lits:
+                if lit.segments[-1] == "Self":
+                    continue  # receiver type unknown without impl context
+                res = self.resolve(base + lit.module, lit.segments, quiet=True)
+                if res[0] != "type":
+                    continue
+                t = res[1]
+                if t.kind not in ("struct", "union") or t.fields is None:
+                    continue
+                if t.cfg is not None:
+                    continue  # a cfg-twin definition may own the field
+                known = set(t.fields)
+                for fname in lit.fields:
+                    if fname not in known:
+                        out.append(_f(
+                            "struct-lit-field", rel, lit.line,
+                            f"struct literal `{'::'.join(lit.segments)}` uses "
+                            f"unknown field `{fname}` (fields of `{t.name}` at "
+                            f"{self._item_file(t)}:{t.line}: "
+                            f"{', '.join(t.fields) or '<none>'})",
+                        ))
+        return out
+
     def run_checks(self) -> List[dict]:
         out = list(self.findings)
         out.extend(self.check_duplicates())
         out.extend(self.check_calls())
         out.extend(self.check_trait_impls())
+        out.extend(self.check_struct_lits())
         return out

@@ -4,15 +4,19 @@ Walks a file's tokens with an explicit scope stack (module / impl / trait /
 body) and records every item the cross-file passes need:
 
 * functions with arity, ``self`` receivers, cfg attributes,
-* structs (tuple arity), enums (+ variants), traits (required vs provided
-  methods), type aliases, consts/statics, ``macro_rules!`` names,
+* structs (tuple arity, named-field lists), enums (+ variants), traits
+  (required vs provided methods), type aliases, consts/statics,
+  ``macro_rules!`` names,
 * impl blocks (inherent and ``impl Trait for Type``) with their methods,
 * ``mod x;`` declarations and inline ``mod x { … }`` scopes,
 * ``use`` trees (groups, globs, renames, ``pub use`` re-exports),
-* call sites ``path::to::f(…)`` with exact top-level argument counts.
+* call sites ``path::to::f(…)`` with exact top-level argument counts,
+* struct literals/patterns ``Path::To::Type { field: …, field, .. }`` with
+  the field names they spell (brace regions that do not parse as a field
+  list — e.g. the block of ``if x == E::V { … }`` — are never recorded).
 
-Bodies are opaque except for brace tracking and call-site collection, so
-locals never pollute the item index.
+Bodies are opaque except for brace tracking, call-site collection and
+struct-literal collection, so locals never pollute the item index.
 """
 
 from dataclasses import dataclass, field
@@ -46,6 +50,7 @@ class TypeItem:
     module: Tuple[str, ...]
     tuple_arity: Optional[int] = None  # struct X(a, b) constructor arity
     variants: dict = field(default_factory=dict)  # enum: name -> tuple arity|None
+    fields: Optional[List[str]] = None  # struct/union named fields, else None
 
 
 @dataclass
@@ -97,6 +102,17 @@ class Call:
 
 
 @dataclass
+class StructLit:
+    """A struct literal or struct pattern `Path::Type { fields… }`. Both
+    forms demand that every spelled field exist on the struct definition,
+    so one record feeds the existence check for either."""
+    segments: Tuple[str, ...]
+    fields: List[str]
+    line: int
+    module: Tuple[str, ...]
+
+
+@dataclass
 class FileIndex:
     path: str
     fns: List[Fn] = field(default_factory=list)
@@ -106,6 +122,7 @@ class FileIndex:
     uses: List[Use] = field(default_factory=list)
     impls: List[Impl] = field(default_factory=list)
     calls: List[Call] = field(default_factory=list)
+    lits: List[StructLit] = field(default_factory=list)
     traits: dict = field(default_factory=dict)  # name -> {"required": set, "provided": set}
 
 
@@ -455,21 +472,79 @@ class _Walker:
         self.i += 1
         if self.is_p("<"):
             self.skip_generics()
+        if self.is_id("where"):
+            # `struct X<T> where T: Y { … }` — scan to the body or ';'
+            while self.i < self.n and not (self.is_p("{") or self.is_p(";")):
+                if self.is_p("<"):
+                    self.skip_generics()
+                    continue
+                if self.is_p("("):
+                    self.skip_delims("(", ")")
+                    continue
+                self.i += 1
         tuple_arity = None
+        fields = None
         if self.is_p("("):
             tuple_arity = self.count_tuple_fields()
             # `struct X(…);`
             if self.is_p(";"):
                 self.i += 1
         elif self.is_p("{"):
-            self.skip_delims("{", "}")
+            fields = self.named_fields()
         elif self.is_p(";"):
             self.i += 1
         # `struct X where …;` / generics bound forms: best-effort
         self.idx.types.append(
             TypeItem(kw if kw == "union" else "struct", name, name_t.line, cfg,
-                     self.module_path(), tuple_arity=tuple_arity)
+                     self.module_path(), tuple_arity=tuple_arity, fields=fields)
         )
+
+    def named_fields(self) -> List[str]:
+        """i sits on the '{' of a named-field struct/union body: consume the
+        balanced region and return the declared field names. cfg-gated
+        fields are recorded unconditionally (more known names can only make
+        the literal check more lenient)."""
+        fields: List[str] = []
+        depth = 0
+        expecting = True
+        while self.i < self.n:
+            t = self.at()
+            if t.kind == "punct":
+                if t.text == "#" and depth == 1:
+                    self.attr()
+                    self.pending_cfg = None
+                    continue
+                if t.text == "<" and depth >= 1:
+                    # field types only (structs carry no initializers), so
+                    # every '<' here opens generics — commas inside stay
+                    # invisible to the depth-1 separator logic
+                    self.skip_generics()
+                    continue
+                if t.text in "([{":
+                    depth += 1
+                    self.i += 1
+                    continue
+                if t.text in ")]}":
+                    depth -= 1
+                    self.i += 1
+                    if depth == 0:
+                        break
+                    continue
+                if t.text == "," and depth == 1:
+                    expecting = True
+                    self.i += 1
+                    continue
+            if t.kind == "id" and depth == 1 and expecting:
+                if t.text == "pub":
+                    self.i += 1
+                    if self.is_p("("):  # pub(crate) field
+                        self.skip_delims("(", ")")
+                    continue
+                if self.is_p(":", 1):
+                    fields.append(t.text)
+                expecting = False
+            self.i += 1
+        return fields
 
     def count_tuple_fields(self) -> int:
         depth = 0
@@ -786,9 +861,14 @@ class _Walker:
         if prev is not None and prev.kind == "punct" and prev.text in (".", "'"):
             self._skip_path()
             return
-        if prev is not None and prev.kind == "id" and prev.text in ("fn", "mod", "struct", "enum", "trait", "impl", "use", "let", "as"):
+        if prev is not None and prev.kind == "id" and prev.text in ("fn", "mod", "struct", "enum", "trait", "impl", "use", "as"):
             self.i += 1
             return
+        # `let Path::To::X …` heads a pattern: tuple patterns (`let Foo(..)`)
+        # mimic call syntax with arbitrary sub-patterns, so never record a
+        # Call — but the struct-pattern brace form below still spells field
+        # names with the same existence obligation as a literal.
+        in_pattern = prev is not None and prev.kind == "id" and prev.text == "let"
         segs = [t.text]
         j = self.i + 1
         while (
@@ -818,6 +898,9 @@ class _Walker:
                 self.skip_delims(o, {"(": ")", "[": "]", "{": "}"}[o])
             return
         if j < self.n and self.toks[j].kind == "punct" and self.toks[j].text == "(":
+            if in_pattern:
+                self.i = j
+                return
             line = t.line
             module = self.module_path()
             in_body = self.scopes[-1].kind == "body"
@@ -825,7 +908,123 @@ class _Walker:
             arity = self.count_args()
             self.idx.calls.append(Call(tuple(segs), arity, line, module, in_body))
             return
+        # struct literal / struct pattern: `Path::Type { field, field: v, .. }`.
+        # Only Type-cased heads are candidates; _peek_struct_lit rejects brace
+        # regions whose content parses as a block rather than a field list
+        # (e.g. the body of `if x == E::V { … }`). The braces are deliberately
+        # NOT consumed: walk() re-enters them as a body scope so nested
+        # literals and calls in the field values still get collected.
+        if (
+            j < self.n
+            and self.toks[j].kind == "punct"
+            and self.toks[j].text == "{"
+            and segs[-1][:1].isupper()
+        ):
+            fields = self._peek_struct_lit(j)
+            if fields is not None:
+                self.idx.lits.append(
+                    StructLit(tuple(segs), fields, t.line, self.module_path())
+                )
+            self.i = j
+            return
         self.i = j
+
+    def _peek_struct_lit(self, j: int) -> Optional[List[str]]:
+        """Non-consuming look at the brace region starting at toks[j] ('{'):
+        return the field names it spells if it reads as a struct-literal /
+        struct-pattern field list, else None. Leniency rules from the module
+        docstring apply: anything ambiguous returns None (the region is then
+        treated as a plain block and never checked)."""
+        fields: List[str] = []
+        depth = 0
+        expecting = True
+        k = j
+        while k < self.n:
+            t = self.toks[k]
+            if t.kind == "punct":
+                if t.text in "([{":
+                    if depth == 0:
+                        depth = 1
+                        k += 1
+                        continue
+                    if expecting:
+                        # a delimited region where a field name belongs:
+                        # `{ (a, b) = f(); … }` is a block, not a literal
+                        return None
+                    depth += 1
+                    k += 1
+                    continue
+                if t.text in ")]}":
+                    depth -= 1
+                    if depth == 0:
+                        return fields if t.text == "}" else None
+                    k += 1
+                    continue
+                if depth == 1:
+                    if t.text == ",":
+                        expecting = True
+                        k += 1
+                        continue
+                    if t.text == ";":
+                        # statement separator: definitely a block
+                        return None
+                    if t.text in ("..", "..=") and expecting:
+                        # rest pattern / functional-record-update tail: valid
+                        # literal/pattern; remaining tokens are a base expr
+                        d2 = 1
+                        k += 1
+                        while k < self.n:
+                            t2 = self.toks[k]
+                            if t2.kind == "punct" and t2.text in "([{":
+                                d2 += 1
+                            elif t2.kind == "punct" and t2.text in ")]}":
+                                d2 -= 1
+                                if d2 == 0:
+                                    return fields if t2.text == "}" else None
+                            k += 1
+                        return None
+                    if expecting and t.text != "..":
+                        # `#[attr]`, `=>`, operators… where a field belongs
+                        return None
+                elif depth > 1 and expecting:
+                    expecting = False
+                k += 1
+                continue
+            if depth == 1 and expecting:
+                if t.kind == "id":
+                    if t.text in ("ref", "mut", "box"):
+                        k += 1
+                        continue
+                    nxt = self.toks[k + 1] if k + 1 < self.n else None
+                    if nxt is not None and nxt.kind == "punct" and nxt.text == ":":
+                        fields.append(t.text)
+                        k += 2
+                        expecting = False
+                        continue
+                    if nxt is not None and nxt.kind == "punct" and nxt.text in (",", "}"):
+                        # shorthand: `Foo { x, y }` / pattern binding
+                        fields.append(t.text)
+                        k += 1
+                        expecting = False
+                        continue
+                    # `ident (`, `ident =>`, `let ident`…: block content
+                    return None
+                if t.kind == "num":
+                    nxt = self.toks[k + 1] if k + 1 < self.n else None
+                    if nxt is not None and nxt.kind == "punct" and nxt.text == ":":
+                        # brace-init of a tuple struct by index — legal but
+                        # positional; nothing nameable to check
+                        k += 2
+                        expecting = False
+                        continue
+                    return None
+                # string/char/lifetime where a field name belongs
+                return None
+            if depth == 1 and not expecting and t.kind == "id":
+                k += 1
+                continue
+            k += 1
+        return None
 
     def _skip_path(self) -> None:
         self.i += 1

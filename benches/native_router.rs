@@ -167,6 +167,7 @@ fn identity_check(name: &str, threads: usize) -> Result<usize> {
                 max_new: 8,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             };
             fleet.try_submit_stream(req, 32, None)
         })
@@ -187,6 +188,7 @@ fn identity_check(name: &str, threads: usize) -> Result<usize> {
             max_new: 8,
             sampling: Sampling::Greedy,
             deadline: None,
+            trace_id: 0,
         })?;
         if !ok || got != want.tokens {
             eprintln!("identity: prompt {p:?} routed {got:?} != in-process {:?}", want.tokens);

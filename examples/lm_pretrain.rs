@@ -117,6 +117,7 @@ fn main() -> Result<()> {
                 max_new: 32,
                 sampling: Sampling::Temperature { t: 0.8, top_k: 20 },
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect();

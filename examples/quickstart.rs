@@ -63,6 +63,7 @@ fn main() -> Result<()> {
             max_new: 4,
             sampling: Sampling::Greedy,
             deadline: None,
+            trace_id: 0,
         })?;
         println!(
             "generated {:?} in {:?} (batch x{})",

@@ -57,6 +57,7 @@ fn main() -> Result<()> {
                 max_new,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             }));
         }
         let mut lat = Summary::new();

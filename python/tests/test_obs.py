@@ -1,0 +1,251 @@
+"""Numpy mirror of the telemetry registry (rust/src/obs/mod.rs).
+
+Pins the two numeric contracts of the metrics subsystem so they stay
+executable in cargo-less containers:
+
+* **log2 bucketing** — `bucket_index` maps an observation to the smallest
+  i with v <= 2^i (v = 0 and 1 share bucket 0; everything past 2^30 lands
+  in +Inf). The mirror is checked exhaustively at every boundary and
+  against a brute-force definition on random draws.
+* **quantiles** — a log2 histogram only knows bucket edges, so the best
+  upper bound for quantile q is the upper edge of the bucket where the
+  cumulative count crosses q. That bound must bracket the true numpy
+  percentile from above within a factor of 2 (the bucket width contract).
+
+Plus the **golden exposition** test: a fixed snapshot rendered through the
+python mirror of `render_prometheus` must equal the golden text
+byte-for-byte (HELP/TYPE once per family, series in (name, labels) order,
+cumulative buckets, the `+Inf`/`_sum`/`_count` contract, label escaping).
+
+Pure numpy; no repo imports, no jax, no hypothesis.
+"""
+import numpy as np
+
+HIST_BUCKETS = 32  # le = 2^0 .. 2^30 (31 finite bounds) + +Inf
+
+
+def bucket_index(v):
+    """Mirror of obs::bucket_index."""
+    if v <= 1:
+        return 0
+    return min(int(v - 1).bit_length(), HIST_BUCKETS - 1)
+
+
+def bucket_le(i):
+    """Mirror of obs::bucket_le: upper bound, None for +Inf."""
+    return (1 << i) if i + 1 < HIST_BUCKETS else None
+
+
+def brute_index(v):
+    """The definitional spelling: smallest i with v <= 2^i, clamped."""
+    for i in range(HIST_BUCKETS - 1):
+        if v <= (1 << i):
+            return i
+    return HIST_BUCKETS - 1
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_boundaries():
+    assert bucket_index(0) == 0
+    assert bucket_index(1) == 0
+    assert bucket_index(2) == 1
+    assert bucket_index(3) == 2
+    assert bucket_index(4) == 2
+    assert bucket_index(5) == 3
+    assert bucket_index(1 << 30) == 30
+    assert bucket_index((1 << 30) + 1) == HIST_BUCKETS - 1
+    assert bucket_index(2**64 - 1) == HIST_BUCKETS - 1
+    # Every finite bound is the largest value of its own bucket.
+    for i in range(HIST_BUCKETS - 1):
+        assert bucket_index(1 << i) == i
+        assert bucket_index((1 << i) + 1) == min(i + 1, HIST_BUCKETS - 1)
+
+
+def test_bucket_index_matches_brute_force():
+    rng = np.random.default_rng(0)
+    draws = rng.integers(0, 2**40, size=2000)
+    for v in draws.tolist():
+        assert bucket_index(v) == brute_index(v)
+
+
+def test_bucket_le_contract():
+    assert bucket_le(0) == 1
+    assert bucket_le(1) == 2
+    assert bucket_le(HIST_BUCKETS - 2) == 1 << (HIST_BUCKETS - 2)
+    assert bucket_le(HIST_BUCKETS - 1) is None
+    # A value in bucket i obeys le(i-1) < v <= le(i).
+    for v in [1, 2, 3, 100, 4097, 10**6]:
+        i = bucket_index(v)
+        assert v <= bucket_le(i)
+        if i > 0:
+            assert v > bucket_le(i - 1)
+
+
+# ---------------------------------------------------------------------------
+# quantiles from cumulative buckets vs numpy
+# ---------------------------------------------------------------------------
+
+
+def histogram_counts(samples):
+    counts = np.zeros(HIST_BUCKETS, dtype=np.int64)
+    for v in samples:
+        counts[bucket_index(int(v))] += 1
+    return counts
+
+
+def quantile_upper_bound(counts, q):
+    """Quantile estimate a scraper computes from the cumulative buckets:
+    the upper edge of the first bucket whose cumulative count reaches
+    q * total. Inf if the crossing is in the +Inf bucket."""
+    total = counts.sum()
+    assert total > 0
+    need = q * total
+    cum = 0
+    for i in range(HIST_BUCKETS):
+        cum += counts[i]
+        if cum >= need:
+            le = bucket_le(i)
+            return float(le) if le is not None else float("inf")
+    return float("inf")
+
+
+def test_quantile_bound_brackets_numpy():
+    rng = np.random.default_rng(7)
+    # Log-uniform latencies: 1us .. ~1s in microseconds, the histogram's
+    # intended operating range.
+    samples = np.exp(rng.uniform(0, np.log(1e6), size=5000)).astype(np.int64)
+    samples = np.maximum(samples, 1)
+    counts = histogram_counts(samples)
+    assert counts.sum() == len(samples)
+    for q in (0.5, 0.9, 0.99):
+        est = quantile_upper_bound(counts, q)
+        # Nearest-rank true quantile.
+        true = float(np.sort(samples)[int(np.ceil(q * len(samples))) - 1])
+        # The bucket containing the true quantile has edges (le/2, le]:
+        # the estimate is an upper bound, and tight within a factor of 2.
+        assert est >= true
+        assert est < 2.0 * true + 1e-9
+
+
+def test_quantile_bound_exact_at_bucket_edges():
+    # All mass at exact powers of two: the bound is exact.
+    samples = [1] * 50 + [4] * 30 + [64] * 20
+    counts = histogram_counts(samples)
+    assert quantile_upper_bound(counts, 0.5) == 1.0
+    assert quantile_upper_bound(counts, 0.8) == 4.0
+    assert quantile_upper_bound(counts, 1.0) == 64.0
+
+
+def test_merge_is_bucketwise_addition():
+    rng = np.random.default_rng(3)
+    a = rng.integers(1, 10**6, size=800)
+    b = rng.integers(1, 10**6, size=700)
+    merged = histogram_counts(a) + histogram_counts(b)
+    both = histogram_counts(np.concatenate([a, b]))
+    assert np.array_equal(merged, both)
+
+
+# ---------------------------------------------------------------------------
+# golden Prometheus exposition
+# ---------------------------------------------------------------------------
+
+
+def escape_label(v):
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def escape_help(v):
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def label_block(labels, extra=None):
+    parts = ['%s="%s"' % (k, escape_label(v)) for k, v in labels]
+    if extra is not None:
+        parts.append('%s="%s"' % (extra[0], escape_label(extra[1])))
+    return "{%s}" % ",".join(parts) if parts else ""
+
+
+def render_prometheus(series):
+    """Mirror of obs::render_prometheus over (name, help, labels, kind,
+    value) tuples, pre-sorted by (name, labels) like obs::sort_series."""
+    out = []
+    last_family = None
+    for name, help_, labels, kind, value in series:
+        if last_family != name:
+            out.append("# HELP %s %s\n" % (name, escape_help(help_)))
+            out.append("# TYPE %s %s\n" % (name, kind))
+            last_family = name
+        if kind in ("counter", "gauge"):
+            out.append("%s%s %d\n" % (name, label_block(labels), value))
+        else:  # histogram: (buckets, sum, count)
+            buckets, total, count = value
+            cum = 0
+            for i, b in enumerate(buckets):
+                cum += b
+                le = bucket_le(i)
+                le_s = str(le) if le is not None else "+Inf"
+                out.append(
+                    "%s_bucket%s %d\n"
+                    % (name, label_block(labels, ("le", le_s)), cum)
+                )
+            out.append("%s_sum%s %d\n" % (name, label_block(labels), total))
+            out.append("%s_count%s %d\n" % (name, label_block(labels), count))
+    return "".join(out)
+
+
+def test_golden_exposition():
+    buckets = [0] * HIST_BUCKETS
+    buckets[bucket_index(1)] += 1      # le=1
+    buckets[bucket_index(3)] += 1      # le=4
+    buckets[bucket_index(2**40)] += 1  # +Inf
+    series = [
+        ("hyena_http_responses_total", "HTTP responses by status class",
+         [("class", "2xx")], "counter", 7),
+        ("hyena_http_responses_total", "HTTP responses by status class",
+         [("class", "4xx")], "counter", 2),
+        ("hyena_inflight_requests", "Generate requests currently admitted",
+         [], "gauge", 3),
+        ("hyena_ttfb_us", "Time to first token event, microseconds",
+         [], "histogram", (buckets, 4 + 2**40, 3)),
+    ]
+    text = render_prometheus(series)
+    # Family headers appear once, even for multi-series families.
+    assert text.count("# HELP hyena_http_responses_total") == 1
+    assert text.count("# TYPE hyena_http_responses_total counter") == 1
+    # Golden lines (the exact text the Rust renderer emits — see the
+    # histogram_exposition_contract test in rust/src/obs/mod.rs).
+    assert 'hyena_http_responses_total{class="2xx"} 7\n' in text
+    assert 'hyena_http_responses_total{class="4xx"} 2\n' in text
+    assert "hyena_inflight_requests 3\n" in text
+    assert 'hyena_ttfb_us_bucket{le="1"} 1\n' in text
+    assert 'hyena_ttfb_us_bucket{le="4"} 2\n' in text   # cumulative
+    assert 'hyena_ttfb_us_bucket{le="+Inf"} 3\n' in text
+    assert "hyena_ttfb_us_sum %d\n" % (4 + 2**40) in text
+    assert "hyena_ttfb_us_count 3\n" in text
+    # Full golden: deterministic end-to-end text.
+    golden = (
+        "# HELP hyena_http_responses_total HTTP responses by status class\n"
+        "# TYPE hyena_http_responses_total counter\n"
+        'hyena_http_responses_total{class="2xx"} 7\n'
+        'hyena_http_responses_total{class="4xx"} 2\n'
+        "# HELP hyena_inflight_requests Generate requests currently admitted\n"
+        "# TYPE hyena_inflight_requests gauge\n"
+        "hyena_inflight_requests 3\n"
+        "# HELP hyena_ttfb_us Time to first token event, microseconds\n"
+        "# TYPE hyena_ttfb_us histogram\n"
+    )
+    assert text.startswith(golden)
+
+
+def test_exposition_escapes_labels():
+    series = [
+        ("hyena_esc_total", "back\\slash help", [("path", 'a"b\\c\nd')],
+         "counter", 1),
+    ]
+    text = render_prometheus(series)
+    assert "# HELP hyena_esc_total back\\\\slash help\n" in text
+    assert 'hyena_esc_total{path="a\\"b\\\\c\\nd"} 1\n' in text

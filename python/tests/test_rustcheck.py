@@ -377,6 +377,31 @@ pub fn retry_after() -> u64 {
     assert fds[0]["file"] == "rust/src/clock.rs"
 
 
+def test_nondeterminism_obs_clock_is_a_seam(tmp_path):
+    """obs/clock.rs is the second sanctioned wall-clock seam; the same call
+    in any sibling obs file must still fail --strict."""
+    mk(tmp_path, "rust/src/lib.rs", "pub mod obs;\n")
+    mk(tmp_path, "rust/src/obs/mod.rs", "pub mod clock;\npub mod trace;\n")
+    mk(tmp_path, "rust/src/obs/clock.rs", """
+use std::time::SystemTime;
+pub fn epoch_ms() -> u128 {
+    SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}
+""")
+    mk(tmp_path, "rust/src/obs/trace.rs", """
+use std::time::SystemTime;
+pub fn stamp() -> u64 {
+    SystemTime::now().elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+""")
+    fds = [f for f in findings(tmp_path) if f["rule"] == "nondeterminism"]
+    assert len(fds) == 1
+    assert fds[0]["file"] == "rust/src/obs/trace.rs"
+
+
 KERNELS_MOD = """\
 pub struct Kernels {
     pub axpy: fn(&mut [f32], &[f32], f32),

@@ -74,10 +74,20 @@ impl Fft {
     }
 
     fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        // HYENA_PROF hook: one timer per plan run (forward or inverse
+        // pass), not per stage — the disabled check is one relaxed load.
+        let prof_t0 = if crate::obs::prof::enabled() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let n = self.n;
         assert_eq!(re.len(), n, "re buffer length != plan size");
         assert_eq!(im.len(), n, "im buffer length != plan size");
         if n == 1 {
+            if let Some(t0) = prof_t0 {
+                crate::obs::prof::FFT.record(t0.elapsed().as_nanos() as u64);
+            }
             return;
         }
 
@@ -115,6 +125,9 @@ impl Fft {
             for x in im.iter_mut() {
                 *x *= scale;
             }
+        }
+        if let Some(t0) = prof_t0 {
+            crate::obs::prof::FFT.record(t0.elapsed().as_nanos() as u64);
         }
     }
 }

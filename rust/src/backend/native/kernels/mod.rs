@@ -182,13 +182,122 @@ pub fn select() -> &'static Kernels {
     select_from(std::env::var("HYENA_KERNEL").ok().as_deref())
 }
 
+// -- HYENA_PROF timing wrapper ------------------------------------------
+//
+// When profiling is on, dispatch goes through a wrapper table whose
+// entries time the base table's kernels into the `obs::prof` slots. The
+// wrapper is chosen once at first `active()` alongside the base table, so
+// the profiling-off path pays nothing — not even a branch per call.
+
+/// Base table behind the profiled wrappers (entries are plain `fn`
+/// pointers, so they reach the base through this global, not a capture).
+static PROF_BASE: OnceLock<&'static Kernels> = OnceLock::new();
+
+fn prof_base() -> &'static Kernels {
+    PROF_BASE.get().copied().unwrap_or(&SCALAR)
+}
+
+fn prof_axpy(y: &mut [f32], w: &[f32], a: f32) {
+    let t0 = std::time::Instant::now();
+    (prof_base().axpy)(y, w, a);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_AXPY].record(t0.elapsed().as_nanos() as u64);
+}
+
+fn prof_dot(a: &[f32], b: &[f32]) -> f32 {
+    let t0 = std::time::Instant::now();
+    let r = (prof_base().dot)(a, b);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_DOT].record(t0.elapsed().as_nanos() as u64);
+    r
+}
+
+fn prof_gate_mul(out: &mut [f32], c: &[f32], gate: &[f32], stride: usize) {
+    let t0 = std::time::Instant::now();
+    (prof_base().gate_mul)(out, c, gate, stride);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_GATE_MUL].record(t0.elapsed().as_nanos() as u64);
+}
+
+fn prof_gelu_fwd(x: &[f32], y: &mut [f32], th: &mut [f32]) {
+    let t0 = std::time::Instant::now();
+    (prof_base().gelu_fwd)(x, y, th);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_GELU_FWD].record(t0.elapsed().as_nanos() as u64);
+}
+
+fn prof_butterfly_pass(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    len: usize,
+    inverse: bool,
+) {
+    let t0 = std::time::Instant::now();
+    (prof_base().butterfly_pass)(re, im, tw_re, tw_im, len, inverse);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_BUTTERFLY].record(t0.elapsed().as_nanos() as u64);
+}
+
+fn prof_spec_mul(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    let t0 = std::time::Instant::now();
+    (prof_base().spec_mul)(a_re, a_im, b_re, b_im, p_re, p_im);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_SPEC_MUL].record(t0.elapsed().as_nanos() as u64);
+}
+
+fn prof_spec_mul_conj(
+    a_re: &[f32],
+    a_im: &[f32],
+    b_re: &[f32],
+    b_im: &[f32],
+    p_re: &mut [f32],
+    p_im: &mut [f32],
+) {
+    let t0 = std::time::Instant::now();
+    (prof_base().spec_mul_conj)(a_re, a_im, b_re, b_im, p_re, p_im);
+    crate::obs::prof::KERNELS[crate::obs::prof::K_SPEC_MUL_CONJ]
+        .record(t0.elapsed().as_nanos() as u64);
+}
+
+/// The profiled wrapper over `base`: same field set as [`SCALAR`], every
+/// kernel timed into [`crate::obs::prof`]. Keeps the base table's
+/// `name`/`isa` — profiling is orthogonal to ISA selection, and gates
+/// match on the reported kernel name.
+fn profiled_table(base: &'static Kernels) -> &'static Kernels {
+    let _ = PROF_BASE.set(base);
+    static T: OnceLock<Kernels> = OnceLock::new();
+    T.get_or_init(|| Kernels {
+        name: prof_base().name,
+        isa: prof_base().isa,
+        axpy: prof_axpy,
+        dot: prof_dot,
+        gate_mul: prof_gate_mul,
+        gelu_fwd: prof_gelu_fwd,
+        butterfly_pass: prof_butterfly_pass,
+        spec_mul: prof_spec_mul,
+        spec_mul_conj: prof_spec_mul_conj,
+    })
+}
+
 static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
 
 /// The process-wide dispatch table, selected once on first use. Hot loops
 /// fetch this once per kernel entry point (an atomic load), then call
-/// through plain `fn` pointers.
+/// through plain `fn` pointers. With `HYENA_PROF=1` the selected table is
+/// wrapped in the timing layer (chosen here, once — a mid-process
+/// `prof::set_enabled` toggle does not rewire kernel dispatch).
 pub fn active() -> &'static Kernels {
-    ACTIVE.get_or_init(select)
+    ACTIVE.get_or_init(|| {
+        let base = select();
+        if crate::obs::prof::enabled() {
+            profiled_table(base)
+        } else {
+            base
+        }
+    })
 }
 
 /// Name of the active table (`"scalar"` / `"simd"`), for reports and gates.
@@ -534,6 +643,24 @@ mod tests {
             select().name,
             select_from(std::env::var("HYENA_KERNEL").ok().as_deref()).name
         );
+    }
+
+    #[test]
+    fn profiled_table_times_kernels_and_matches_base() {
+        use std::sync::atomic::Ordering;
+        let t = profiled_table(&SCALAR);
+        // Reports the base identity — gates match on the kernel name.
+        assert_eq!(t.name, prof_base().name);
+        let slot = &crate::obs::prof::KERNELS[crate::obs::prof::K_AXPY];
+        let before = slot.calls.load(Ordering::Relaxed);
+        let w = vec![2.0f32; 33];
+        let mut y = vec![1.0f32; 33];
+        let mut want = vec![1.0f32; 33];
+        (t.axpy)(&mut y, &w, 0.5);
+        (prof_base().axpy)(&mut want, &w, 0.5);
+        assert_eq!(y, want, "wrapper must not change the arithmetic");
+        // Deltas, not absolutes: other tests share the process slots.
+        assert!(slot.calls.load(Ordering::Relaxed) > before, "axpy call not recorded");
     }
 
     #[test]

@@ -257,6 +257,14 @@ impl Backend for NativeBackend {
             tokens.len(),
             "decode_step_batch wants one token per session"
         );
+        // HYENA_PROF hook: one timer per batched round. Lives here (not in
+        // the coordinator) so direct backend drivers — the obs bench — see
+        // the same accounting the serving loop does.
+        let prof_t0 = if crate::obs::prof::enabled() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let full = self.model.max_context();
         let v = self.model.cfg.vocab;
         let rows = sessions.len();
@@ -289,6 +297,9 @@ impl Backend for NativeBackend {
                         sessions[i].tokens.push(tokens[i]);
                         sessions[i].steps += 1;
                         sessions[i].set_ext(state);
+                    }
+                    if let Some(t0) = prof_t0 {
+                        crate::obs::prof::DECODE_BATCH.record(t0.elapsed().as_nanos() as u64);
                     }
                     return (0..rows).map(|_| Ok(())).collect();
                 }
@@ -379,6 +390,9 @@ impl Backend for NativeBackend {
                 logits[i * v..(i + 1) * v].copy_from_slice(&row);
             }
             results[i] = Some(res);
+        }
+        if let Some(t0) = prof_t0 {
+            crate::obs::prof::DECODE_BATCH.record(t0.elapsed().as_nanos() as u64);
         }
         results
             .into_iter()

@@ -2731,6 +2731,7 @@ impl NativeModel {
 
         let (mut g0, mut ck) = (0usize, 0usize);
         while g0 < lq {
+            let chunk_t0 = crate::obs::clock::now_us();
             let cl = chunk.min(lq - g0);
             let rows = cl;
 
@@ -2990,6 +2991,14 @@ impl NativeModel {
                 out.extend_from_slice(&logits[(cl - 1) * vsz..cl * vsz]);
             }
 
+            // Per-chunk span on the ambient trace (set by the coordinator
+            // around decode_begin); no-op outside a traced prefill.
+            crate::obs::trace::span_current(
+                "prefill_chunk",
+                chunk_t0,
+                crate::obs::clock::now_us().saturating_sub(chunk_t0),
+                ck as u64,
+            );
             g0 += cl;
             ck += 1;
         }

@@ -76,6 +76,11 @@ pub struct GenerateRequest {
     /// streaming request terminates with a [`StreamEvent::Error`] after
     /// whatever tokens it already produced.
     pub deadline: Option<Duration>,
+    /// Telemetry correlation id (`obs::trace`), minted by the front end and
+    /// carried across the replica RPC so every layer's spans land on one
+    /// trace. 0 = untraced (benches, direct engine drivers) — every trace
+    /// call is then a no-op.
+    pub trace_id: u64,
 }
 
 #[derive(Debug)]
@@ -166,6 +171,7 @@ impl Drop for Ticket {
     fn drop(&mut self) {
         if let Some(s) = self.shared.take() {
             s.inflight.fetch_sub(1, Ordering::SeqCst);
+            crate::obs::serving().inflight.add(-1);
         }
     }
 }
@@ -251,6 +257,7 @@ impl ServerHandle {
             self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
             return Err(AdmitError::Busy { retry_after: Duration::from_secs(1) });
         }
+        crate::obs::serving().inflight.add(1);
         Ok(Ticket { shared: Some(Arc::clone(&self.shared)) })
     }
 
@@ -435,6 +442,14 @@ pub trait Engine: Send + Sync {
     fn replicas(&self) -> usize {
         1
     }
+
+    /// Telemetry snapshot for `GET /metrics`. The in-process engine shares
+    /// the front end's registry, so the default — this process's snapshot —
+    /// is exact; a fleet overrides it to merge replica snapshots
+    /// (aggregate sums plus per-replica labeled series).
+    fn metrics(&self) -> crate::obs::Snapshot {
+        crate::obs::snapshot()
+    }
 }
 
 impl Engine for ServerHandle {
@@ -601,6 +616,8 @@ struct LiveSession {
     max_new: usize,
     prompt_len: usize,
     bucket_len: usize,
+    /// Telemetry id riding with the request (`obs::trace`; 0 = untraced).
+    trace_id: u64,
     /// Highest co-residency observed while live.
     occupancy: usize,
     /// Generated tokens; the last one is pending its decode step.
@@ -765,6 +782,18 @@ fn admit(
 ) {
     let entered = Instant::now();
     let Envelope { req, submitted, deadline, reply, ticket } = env;
+    // Queue-wait telemetry: observed for every request that reached
+    // admission, even one about to be rejected below.
+    let queued = entered.duration_since(submitted);
+    crate::obs::serving().queue_wait_us.observe_us(queued);
+    let q_us = queued.as_micros() as u64;
+    crate::obs::trace::span(
+        req.trace_id,
+        "queue_wait",
+        crate::obs::clock::now_us().saturating_sub(q_us),
+        q_us,
+        0,
+    );
     // A request that expired in the queue gap never touches the engine.
     if deadline.is_some_and(|d| entered >= d) {
         let waited = entered.duration_since(submitted);
@@ -791,7 +820,16 @@ fn admit(
         });
         return;
     }
-    match model.decode_begin(&req.prompt, logits) {
+    // Prefill, timed; the ambient trace id lets the engine attach
+    // per-chunk spans from inside the overlap-save loop.
+    let t0 = crate::obs::clock::now_us();
+    crate::obs::trace::set_current(req.trace_id);
+    let begun = model.decode_begin(&req.prompt, logits);
+    crate::obs::trace::set_current(0);
+    let prefill_us = crate::obs::clock::now_us().saturating_sub(t0);
+    crate::obs::serving().prefill_us.observe(prefill_us);
+    crate::obs::trace::span(req.trace_id, "prefill", t0, prefill_us, req.prompt.len() as u64);
+    match begun {
         Ok(sess) => {
             let first = sample_token(logits, req.sampling, rng);
             if let Reply::Stream(tx) = &reply {
@@ -813,6 +851,7 @@ fn admit(
                 max_new: req.max_new,
                 prompt_len: req.prompt.len(),
                 bucket_len,
+                trace_id: req.trace_id,
                 occupancy: 1,
                 out: vec![first],
             });
@@ -902,6 +941,7 @@ fn step_round(
     // round composition is deterministic.
     let rows = live.len();
     let perm: Vec<usize>;
+    let round_t0 = crate::obs::clock::now_us();
     let results = {
         let mut by_len: Vec<(usize, &mut LiveSession)> =
             live.iter_mut().enumerate().collect();
@@ -915,6 +955,13 @@ fn step_round(
             by_len.into_iter().map(|(_, s)| &mut s.sess).collect();
         model.decode_step_batch(&mut sessions, &tokens, logits)
     };
+    let round_us = crate::obs::clock::now_us().saturating_sub(round_t0);
+    crate::obs::serving().decode_round_us.observe(round_us);
+    // One span per live trace per round (coarse: never per token-byte, so
+    // the hub mutex stays off the inner sampling loop).
+    for s in live.iter() {
+        crate::obs::trace::span(s.trace_id, "decode_round", round_t0, round_us, rows as u64);
+    }
     debug_assert_eq!(results.len(), rows);
     let v = logits.len() / rows;
     // Engine row holding admission row `r`.

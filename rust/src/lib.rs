@@ -18,6 +18,9 @@
 //! * [`net`] — dependency-free HTTP/1.1 + SSE serving front end over the
 //!   coordinator server: deadlines, backpressure, chaos injection, graceful
 //!   drain (DESIGN.md §Serving-Net).
+//! * [`obs`] — telemetry: lock-light metrics registry with Prometheus
+//!   exposition (`GET /metrics`), per-request trace spans (`GET /trace`),
+//!   and `HYENA_PROF` hot-path profiling hooks (DESIGN.md §Observability).
 //! * [`metrics`], [`report`], [`util`] — FLOP accounting (App. A.2), table
 //!   emission, JSON/RNG/CLI/property-test substrates.
 pub mod backend;
@@ -25,6 +28,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod tasks;

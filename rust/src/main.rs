@@ -13,7 +13,8 @@
 //!   replica --model NAME [--listen A] one worker's framed-RPC endpoint
 //!                                     (spawned by `serve --replicas`)
 //!   loadgen --addr HOST:PORT          chaos loadgen against a listener
-//!                                     (repeat --addr to round-robin targets)
+//!                                     (repeat --addr to round-robin targets;
+//!                                     --scrape checks /metrics invariants)
 //!   dump-filters --model NAME [--out F] write filter CSV (Fig. D.5)
 //!   info  --model NAME                print manifest summary
 //!
@@ -60,6 +61,7 @@ fn main() -> Result<()> {
         "require-buckets",
         "stream-decode",
         "burst",
+        "scrape",
     ]);
     // Size the shared worker pool before any backend is constructed (models
     // capture the pool at load time).
@@ -87,7 +89,8 @@ fn main() -> Result<()> {
                  [--model NAME] [--backend native|pjrt|auto] [--threads N] \
                  [--steps N] [--seed S] [--buckets N] [--max-context N] [--mixed] \
                  [--require-buckets] [--stream-decode] [--listen ADDR] \
-                 [--replicas N] [--addr HOST:PORT]... [--chaos SPEC] [--burst]"
+                 [--replicas N] [--addr HOST:PORT]... [--chaos SPEC] [--burst] \
+                 [--scrape]"
             );
             Ok(())
         }
@@ -343,6 +346,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_new: *max_new,
                 sampling,
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect();
@@ -816,6 +820,9 @@ fn serve_fleet(args: &Args, name: &str, listen: &str) -> Result<()> {
 
 /// `loadgen --addr HOST:PORT`: drive a listener with N concurrent
 /// keep-alive clients, optional chaos, and report tail latencies.
+/// `--scrape` brackets the run with `GET /metrics` on every target and
+/// fails if the server's counter deltas disagree with what this client
+/// observed (assumes loadgen is the only traffic source meanwhile).
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr_strs = args.get_all("addr");
     if addr_strs.is_empty() {
@@ -837,6 +844,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         max_retries: args.get_usize("max-retries", 8),
         seed: args.get_u64("seed", 0),
         io_timeout_ms: args.get_u64("io-timeout-ms", 10_000),
+    };
+    let scrape = args.flag("scrape");
+    let scrape_to = Duration::from_millis(cfg.io_timeout_ms.max(1));
+    let before: Vec<(u64, u64)> = if scrape {
+        let mut v = Vec::with_capacity(addrs.len());
+        for a in &addrs {
+            v.push(scrape_pair(*a, scrape_to)?);
+        }
+        v
+    } else {
+        Vec::new()
     };
     let addr_list =
         addrs.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ");
@@ -897,7 +915,59 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             );
         }
     }
+    if scrape {
+        for ((a, rep), &(tok0, rej0)) in addrs.iter().zip(&reports).zip(&before) {
+            let (tok1, rej1) = scrape_pair(*a, scrape_to)?;
+            let d_tok = tok1.saturating_sub(tok0);
+            let d_rej = rej1.saturating_sub(rej0);
+            // Every 429 the server wrote reached a reading client (faults
+            // are only injected into 200 streams), so this delta is exact
+            // even under chaos.
+            if d_rej != rep.rejected_429 as u64 {
+                bail!(
+                    "target {a}: hyena_admission_rejected_total advanced by {d_rej} \
+                     but this client observed {} x 429 — /metrics disagrees with \
+                     the wire",
+                    rep.rejected_429
+                );
+            }
+            // The server counts a token when it writes the event; a client
+            // that hung up or stalled mid-stream (injected chaos) read
+            // fewer. With chaos off the two are byte-for-byte equal.
+            let tokens_ok = if cfg.chaos.is_off() {
+                d_tok == rep.tokens as u64
+            } else {
+                d_tok >= rep.tokens as u64
+            };
+            if !tokens_ok {
+                bail!(
+                    "target {a}: hyena_tokens_generated_total advanced by {d_tok} \
+                     but this client received {} token events{} — /metrics \
+                     disagrees with the wire",
+                    rep.tokens,
+                    if cfg.chaos.is_off() { "" } else { " (chaos on: server may lead)" }
+                );
+            }
+            println!(
+                "  scrape [{a}]: tokens_generated +{d_tok} (client saw {}), \
+                 admission_rejected +{d_rej} (client saw {}) — consistent",
+                rep.tokens, rep.rejected_429
+            );
+        }
+    }
     Ok(())
+}
+
+/// One `--scrape` sample: (tokens_generated_total, admission_rejected_total)
+/// read off a target's `/metrics` aggregate (unlabeled) lines.
+fn scrape_pair(addr: SocketAddr, timeout: Duration) -> Result<(u64, u64)> {
+    let text = hyena::net::client::scrape_metrics(addr, timeout)
+        .with_context(|| format!("--scrape: GET /metrics from {addr}"))?;
+    let tok = hyena::net::client::scrape_counter(&text, "hyena_tokens_generated_total")
+        .ok_or_else(|| anyhow!("--scrape: {addr} exposes no hyena_tokens_generated_total"))?;
+    let rej = hyena::net::client::scrape_counter(&text, "hyena_admission_rejected_total")
+        .ok_or_else(|| anyhow!("--scrape: {addr} exposes no hyena_admission_rejected_total"))?;
+    Ok((tok, rej))
 }
 
 fn cmd_dump_filters(args: &Args) -> Result<()> {

@@ -598,6 +598,36 @@ fn take_conn(
     }
 }
 
+/// GET `/metrics` from a front end over a one-shot connection (the
+/// `loadgen --scrape` invariant check).
+pub fn scrape_metrics(addr: SocketAddr, timeout: Duration) -> io::Result<String> {
+    let mut c = HttpClient::connect(addr, timeout)?;
+    let resp = c.get("/metrics")?;
+    if resp.status != 200 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("GET /metrics -> {}", resp.status),
+        ));
+    }
+    String::from_utf8(resp.body)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// Pull one *unlabeled* counter's value out of Prometheus exposition text.
+/// Labeled series of the same family (`name{replica="0"} 5`) are skipped —
+/// a fleet scrape's unlabeled line is the aggregate sum, which is what the
+/// loadgen invariants compare against.
+pub fn scrape_counter(text: &str, name: &str) -> Option<u64> {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse::<u64>().ok();
+            }
+        }
+    }
+    None
+}
+
 /// The canonical `/generate` request body.
 pub fn generate_body(prompt: &[i32], max_new: usize, timeout_ms: u64) -> String {
     Json::obj(vec![
@@ -650,6 +680,20 @@ mod tests {
         assert_eq!(percentile(&s, 99.0), 5.0);
         assert_eq!(percentile(&s, 1.0), 1.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn scrape_counter_matches_aggregate_line_only() {
+        let text = "# HELP hyena_tokens_generated_total Tokens\n\
+                    # TYPE hyena_tokens_generated_total counter\n\
+                    hyena_tokens_generated_total 42\n\
+                    hyena_tokens_generated_total{replica=\"0\"} 40\n\
+                    hyena_tokens_generated_totally_other 9\n";
+        assert_eq!(scrape_counter(text, "hyena_tokens_generated_total"), Some(42));
+        assert_eq!(scrape_counter(text, "hyena_admission_rejected_total"), None);
+        // A labeled-only family yields no aggregate value.
+        let labeled = "hyena_x_total{replica=\"1\"} 3\n";
+        assert_eq!(scrape_counter(labeled, "hyena_x_total"), None);
     }
 
     #[test]

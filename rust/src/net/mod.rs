@@ -178,12 +178,11 @@ impl Default for NetConfig {
     }
 }
 
-/// Milliseconds since the Unix epoch (the access log's `ts`).
+/// Milliseconds since the Unix epoch (the access log's `ts`). Delegates to
+/// the [`crate::obs::clock`] seam — the telemetry layer's single wall-clock
+/// source — so log stamps and trace birth stamps agree.
 pub fn epoch_ms() -> u128 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_millis())
-        .unwrap_or(0)
+    crate::obs::clock::epoch_ms()
 }
 
 /// UTC ISO-8601 `YYYY-MM-DDTHH:MM:SS.mmmZ` for an epoch-milliseconds

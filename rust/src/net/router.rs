@@ -51,6 +51,7 @@ use crate::coordinator::server::{
 };
 use crate::coordinator::generation::Sampling;
 use crate::net::jsonrd::{Frame, JsonReader};
+use crate::obs::{self, trace};
 use crate::runtime::Tensor;
 use crate::util::json::Json;
 
@@ -231,8 +232,8 @@ fn parse_params(req: &Json) -> Result<Vec<Tensor>> {
 // ---------------------------------------------------------------------------
 
 /// One worker's RPC endpoint: accepts router connections and serves the
-/// frame ops (`gen`, `health`, `mem`, `set_params`, `drain`) against a
-/// single in-process engine.
+/// frame ops (`gen`, `health`, `mem`, `metrics`, `set_params`, `drain`)
+/// against a single in-process engine.
 pub struct ReplicaServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -342,6 +343,7 @@ fn replica_conn(handle: ServerHandle, epoch: Arc<AtomicU64>, mut stream: TcpStre
             "gen" => replica_gen(&handle, &epoch, &mut stream, &v),
             "health" => replica_health(&handle, &epoch, &mut stream),
             "mem" => replica_mem(&handle, &mut stream),
+            "metrics" => replica_metrics(&mut stream),
             "set_params" => replica_set_params(&handle, &epoch, &mut stream, &v),
             "drain" => replica_drain(&handle, &mut stream, &v),
             other => write_frame(&mut stream, &ev_err(&format!("unknown op `{other}`"), 0)).is_ok(),
@@ -366,10 +368,17 @@ fn replica_gen(
         Ok(p) => p,
         Err(msg) => return write_frame(stream, &ev_err(&msg, 0)).is_ok(),
     };
+    // The router forwards its trace id in the frame; this process opens
+    // its own trace under the same id, so the engine-side spans (queue
+    // wait, prefill, decode rounds) land in this replica's `/trace` ring
+    // and correlate with the front end's by the printed hex.
+    let trace_id = req.trace_id;
+    trace::begin(trace_id);
     let token_buf = v.get("token_buf").and_then(|x| x.as_usize()).unwrap_or(128).max(1);
     let rx = match handle.try_submit_stream(req, token_buf) {
         Ok(rx) => rx,
         Err(AdmitError::Busy { retry_after }) => {
+            trace::finish(trace_id, "rejected");
             let f = Json::obj(vec![
                 ("ev", Json::str("busy")),
                 ("retry_ms", Json::num(retry_after.as_millis() as f64)),
@@ -377,6 +386,7 @@ fn replica_gen(
             return write_frame(stream, &f).is_ok();
         }
         Err(AdmitError::Draining) => {
+            trace::finish(trace_id, "rejected");
             return write_frame(stream, &Json::obj(vec![("ev", Json::str("draining"))])).is_ok();
         }
     };
@@ -392,6 +402,7 @@ fn replica_gen(
             Ok(StreamEvent::Token(t)) => {
                 let f = Json::obj(vec![("ev", Json::str("tok")), ("t", Json::num(t as f64))]);
                 if write_frame(stream, &f).is_err() {
+                    trace::finish(trace_id, "error");
                     return false;
                 }
             }
@@ -408,12 +419,15 @@ fn replica_gen(
                     ("total_ms", Json::num(resp.total_time.as_secs_f64() * 1e3)),
                     ("epoch", Json::num(epoch.load(Ordering::SeqCst) as f64)),
                 ]);
+                trace::finish(trace_id, "done");
                 return write_frame(stream, &f).is_ok();
             }
             Ok(StreamEvent::Error { message, partial }) => {
+                trace::finish(trace_id, "error");
                 return write_frame(stream, &ev_err(&message, partial)).is_ok();
             }
             Err(_) => {
+                trace::finish(trace_id, "error");
                 return write_frame(stream, &ev_err("engine stream closed unexpectedly", 0))
                     .is_ok();
             }
@@ -444,6 +458,17 @@ fn replica_mem(handle: &ServerHandle, stream: &mut TcpStream) -> bool {
         Some(m) => Json::obj(vec![("ev", Json::str("mem")), ("mem", mem_to_json(&m))]),
         None => ev_err("engine has no mem report", 0),
     };
+    write_frame(stream, &f).is_ok()
+}
+
+/// Serve one `metrics` frame: this process's telemetry snapshot. The
+/// router folds replica snapshots into the fleet-level `GET /metrics`
+/// (aggregate sums plus per-replica `replica="K"` labeled series).
+fn replica_metrics(stream: &mut TcpStream) -> bool {
+    let f = Json::obj(vec![
+        ("ev", Json::str("metrics")),
+        ("metrics", obs::snapshot_to_json(&obs::snapshot())),
+    ]);
     write_frame(stream, &f).is_ok()
 }
 
@@ -784,6 +809,11 @@ fn gen_frame(req: &GenerateRequest, token_buf: usize) -> Json {
     if let Some(d) = req.deadline {
         kv.push(("timeout_ms", Json::num(d.as_millis() as f64)));
     }
+    if req.trace_id != 0 {
+        // Full 16-hex id (not the short log form) so the replica traces
+        // under exactly the router's id.
+        kv.push(("trace_id", Json::str(&format!("{:016x}", req.trace_id))));
+    }
     Json::obj(kv)
 }
 
@@ -905,7 +935,8 @@ fn pump(
                             if !inner.cfg.quiet {
                                 eprintln!(
                                     "[router] replica {rid} died before first token; \
-                                     re-prefilled on replica {nid}"
+                                     re-prefilled on replica {nid} trace={}",
+                                    trace::id_hex(req.trace_id)
                                 );
                             }
                             pin_session(&inner, &session, nid);
@@ -983,6 +1014,21 @@ fn fetch_mem(addr: SocketAddr, timeout: Duration) -> io::Result<MemReport> {
     match (v.get("ev").and_then(|x| x.as_str()), v.get("mem")) {
         (Some("mem"), Some(m)) => Ok(mem_from_json(m)),
         _ => Err(io::Error::new(io::ErrorKind::InvalidData, "expected mem frame")),
+    }
+}
+
+fn fetch_metrics(addr: SocketAddr, timeout: Duration) -> io::Result<obs::Snapshot> {
+    let mut s = TcpStream::connect_timeout(&addr, timeout)?;
+    let _ = s.set_nodelay(true);
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    write_frame(&mut s, &Json::obj(vec![("op", Json::str("metrics"))]))?;
+    let mut rd = JsonReader::new(1 << 22);
+    let v = read_frame(&mut s, &mut rd)?;
+    match (v.get("ev").and_then(|x| x.as_str()), v.get("metrics")) {
+        (Some("metrics"), Some(m)) => obs::snapshot_from_json(m)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad metrics payload")),
+        _ => Err(io::Error::new(io::ErrorKind::InvalidData, "expected metrics frame")),
     }
 }
 
@@ -1123,6 +1169,9 @@ impl Engine for FleetHandle {
         };
         r.inflight.fetch_add(1, Ordering::SeqCst);
         let rid = r.id;
+        if !inner.cfg.quiet && req.trace_id != 0 {
+            eprintln!("[router] dispatch replica={rid} trace={}", trace::id_hex(req.trace_id));
+        }
         let skey = session.map(|s| s.to_string());
         pin_session(inner, &skey, rid);
         let (tx, rx) = sync_channel(token_buf.max(2));
@@ -1205,5 +1254,25 @@ impl Engine for FleetHandle {
 
     fn replicas(&self) -> usize {
         self.inner.replicas.len()
+    }
+
+    /// Fleet metrics: the router's own snapshot (front-end counters: HTTP
+    /// classes, admission, tokens delivered) merged with every reachable
+    /// replica's (engine histograms: queue wait, prefill, decode rounds)
+    /// — aggregate sums plus per-replica `replica="K"` labeled series.
+    /// Down replicas are still queried, same policy as [`mem_report`]:
+    /// observability must see a draining or stale worker.
+    ///
+    /// [`mem_report`]: Engine::mem_report
+    fn metrics(&self) -> obs::Snapshot {
+        let inner = &self.inner;
+        let io_to = Duration::from_millis(inner.cfg.io_timeout_ms.max(1));
+        let mut reps: Vec<(usize, obs::Snapshot)> = Vec::new();
+        for r in &inner.replicas {
+            if let Ok(s) = fetch_metrics(addr_of(r), io_to) {
+                reps.push((r.id, s));
+            }
+        }
+        obs::merge_fleet(obs::snapshot(), &reps)
     }
 }

@@ -18,6 +18,10 @@
 //!   event per decoded token, then exactly one `done` or `error` event.
 //! * `GET /healthz` — liveness + drain state.
 //! * `GET /mem` — the engine's `MemReport` (session/leak accounting).
+//! * `GET /metrics` — Prometheus text exposition of the telemetry registry
+//!   (`obs`); in fleet mode the engine merges replica snapshots.
+//! * `GET /trace?n=K` — the newest K finished request traces as JSON
+//!   (spans per stage: admission, queue, prefill, decode rounds, stream).
 //!
 //! Resilience state machine per request: `admitted → streaming →
 //! (done | deadline | evicted | disconnected | drained)`; every terminal
@@ -53,6 +57,7 @@ use crate::net::http::{
 };
 use crate::net::jsonrd::{Frame, JsonReader};
 use crate::net::{epoch_ms, iso8601, NetConfig};
+use crate::obs::{self, clock, trace};
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
@@ -121,11 +126,29 @@ pub struct StatsSnapshot {
 impl Stats {
     fn count_status(&self, status: u16) {
         self.requests.fetch_add(1, Ordering::SeqCst);
+        // Mirror into the telemetry registry. 429 only ever comes from the
+        // admission refusal path, so it doubles as the admission-rejected
+        // counter the loadgen `--scrape` invariant checks.
+        let m = obs::serving();
+        m.http_requests.inc();
         match status {
-            429 => self.s429.fetch_add(1, Ordering::SeqCst),
-            200..=299 => self.s2xx.fetch_add(1, Ordering::SeqCst),
-            400..=499 => self.s4xx.fetch_add(1, Ordering::SeqCst),
-            _ => self.s5xx.fetch_add(1, Ordering::SeqCst),
+            429 => {
+                self.s429.fetch_add(1, Ordering::SeqCst);
+                m.http_4xx.inc();
+                m.admission_rejected.inc();
+            }
+            200..=299 => {
+                self.s2xx.fetch_add(1, Ordering::SeqCst);
+                m.http_2xx.inc();
+            }
+            400..=499 => {
+                self.s4xx.fetch_add(1, Ordering::SeqCst);
+                m.http_4xx.inc();
+            }
+            _ => {
+                self.s5xx.fetch_add(1, Ordering::SeqCst);
+                m.http_5xx.inc();
+            }
         };
     }
 
@@ -396,7 +419,7 @@ fn respond(
 ) {
     let _ = http::write_response(stream, status, extra, body.as_bytes(), keep_alive);
     shared.stats.count_status(status);
-    access_log(shared, route, status, 0, 0, 0, None, None, Duration::ZERO);
+    access_log(shared, route, status, 0, 0, 0, None, None, Duration::ZERO, 0);
 }
 
 fn err_body(msg: &str) -> String {
@@ -405,7 +428,10 @@ fn err_body(msg: &str) -> String {
 
 /// One structured line per request: ts, route, prompt/gen lens, bucket,
 /// replica (which worker served it; `-` for the in-process engine),
-/// status, ttfb, total — the fields the ISSUE's access-log gate names.
+/// status, ttfb, total, trace id (`-` for untraced requests) — the fields
+/// the ISSUE's access-log gate names. The same trace id appears in SSE
+/// `error` events, router dispatch logs, and `GET /trace`, so one request
+/// can be followed across processes.
 #[allow(clippy::too_many_arguments)]
 fn access_log(
     shared: &Shared,
@@ -417,14 +443,16 @@ fn access_log(
     replica: Option<usize>,
     ttfb: Option<Duration>,
     total: Duration,
+    trace_id: u64,
 ) {
     if shared.cfg.quiet {
         return;
     }
     let ttfb_ms = ttfb.map_or_else(|| "-".to_string(), |d| format!("{:.1}", d.as_secs_f64() * 1e3));
     let replica = replica.map_or_else(|| "-".to_string(), |r| r.to_string());
+    let trace = if trace_id == 0 { "-".to_string() } else { trace::id_hex(trace_id) };
     println!(
-        "[serve-net] {} route={} status={} prompt={} gen={} bucket={} replica={} ttfb_ms={} total_ms={:.1}",
+        "[serve-net] {} route={} status={} prompt={} gen={} bucket={} replica={} ttfb_ms={} total_ms={:.1} trace={}",
         iso8601(epoch_ms()),
         route,
         status,
@@ -434,6 +462,7 @@ fn access_log(
         replica,
         ttfb_ms,
         total.as_secs_f64() * 1e3,
+        trace,
     );
 }
 
@@ -444,7 +473,12 @@ fn handle_request(
     carry: &mut Vec<u8>,
     head: &RequestHead,
 ) -> bool {
-    match (head.method.as_str(), head.target.as_str()) {
+    // Routes may carry a query string (`/trace?n=K`); match on the path.
+    let (path, query) = match head.target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (head.target.as_str(), ""),
+    };
+    match (head.method.as_str(), path) {
         ("POST", "/generate") => generate_route(shared, stream, carry, head),
         ("GET", "/healthz") => {
             let body = Json::obj(vec![
@@ -466,7 +500,34 @@ fn handle_request(
             respond(shared, stream, 200, &[], &body, head.keep_alive, "/mem");
             head.keep_alive
         }
-        (_, "/generate") | (_, "/healthz") | (_, "/mem") => {
+        ("GET", "/metrics") => {
+            // The engine seam decides the scope: the in-process worker
+            // returns this process's registry, a fleet front merges its
+            // own snapshot with every reachable replica's.
+            let body = obs::render_prometheus(&shared.handle.metrics());
+            respond(
+                shared,
+                stream,
+                200,
+                &[("Content-Type", "text/plain; version=0.0.4; charset=utf-8")],
+                &body,
+                head.keep_alive,
+                "/metrics",
+            );
+            head.keep_alive
+        }
+        ("GET", "/trace") => {
+            let n = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("n="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(32)
+                .min(trace::RING_CAP);
+            let body = trace::dump(n).to_string();
+            respond(shared, stream, 200, &[], &body, head.keep_alive, "/trace");
+            head.keep_alive
+        }
+        (_, "/generate") | (_, "/healthz") | (_, "/mem") | (_, "/metrics") | (_, "/trace") => {
             drop_body(stream, carry, head);
             respond(
                 shared,
@@ -540,14 +601,24 @@ fn generate_route(
             return false;
         }
     };
-    let (req, want_stream, session) = match parse_generate(&body, shared.cfg.deadline_ms) {
+    let (mut req, want_stream, session) = match parse_generate(&body, shared.cfg.deadline_ms) {
         Ok(x) => x,
         Err(msg) => {
             respond(shared, stream, 400, &[], &err_body(&msg), head.keep_alive, "/generate");
             return head.keep_alive;
         }
     };
+    // Mint the trace here — the first point the request exists as a
+    // request — unless the caller already carries one (the fleet router
+    // forwards its id so replica-side spans land under the same trace).
+    if req.trace_id == 0 {
+        req.trace_id = trace::mint();
+    }
+    trace::begin(req.trace_id);
     let prompt_len = req.prompt.len();
+    // The read+parse span starts where the request did.
+    let t0_us = clock::now_us().saturating_sub(t_start.elapsed().as_micros() as u64);
+    trace::span_since(req.trace_id, "parse", t0_us, prompt_len as u64);
     if want_stream {
         stream_generate(shared, stream, head, req, session, prompt_len, t_start)
     } else {
@@ -577,6 +648,7 @@ fn refuse(
             head.keep_alive
         }
         AdmitError::Draining => {
+            obs::serving().draining_rejected.inc();
             respond(
                 shared,
                 stream,
@@ -600,29 +672,49 @@ fn stream_generate(
     prompt_len: usize,
     t_start: Instant,
 ) -> bool {
+    let trace_id = req.trace_id;
+    let sub_t0 = clock::now_us();
     let sub = match shared.handle.try_submit_stream(req, shared.cfg.token_buf, session.as_deref())
     {
         Ok(sub) => sub,
-        Err(e) => return refuse(shared, stream, head, e),
+        Err(e) => {
+            trace::finish(trace_id, "rejected");
+            return refuse(shared, stream, head, e);
+        }
     };
+    trace::span_since(trace_id, "admission", sub_t0, 0);
     let replica = sub.replica;
     let rx = sub.rx;
+    let m = obs::serving();
     shared.stats.streams.fetch_add(1, Ordering::SeqCst);
     let mut ttfb: Option<Duration> = None;
     let mut gen = 0usize;
     let mut bucket = 0usize;
     let mut clean = false;
+    let mut errored = false;
     let io_res: io::Result<()> = (|| {
         let mut sse = SseWriter::start(&mut *stream, head.keep_alive)?;
         loop {
             match rx.recv() {
                 Ok(StreamEvent::Token(t)) => {
                     if ttfb.is_none() {
-                        ttfb = Some(t_start.elapsed());
+                        let d = t_start.elapsed();
+                        m.ttfb_us.observe_us(d);
+                        ttfb = Some(d);
                     }
                     gen += 1;
                     shared.stats.tokens.fetch_add(1, Ordering::SeqCst);
+                    m.tokens_generated.inc();
+                    // Time the wire write: a slow client shows up here as
+                    // a stall (the bounded token buffer upstream is what
+                    // eventually evicts it).
+                    let w0 = clock::now_us();
                     sse.event("token", &format!("{{\"t\":{t}}}"))?;
+                    let w_us = clock::now_us().saturating_sub(w0);
+                    if w_us > 1_000 {
+                        m.write_stall_us.observe(w_us);
+                        trace::span(trace_id, "write_stall", w0, w_us, gen as u64);
+                    }
                 }
                 Ok(StreamEvent::Done(resp)) => {
                     bucket = resp.bucket_len;
@@ -647,9 +739,11 @@ fn stream_generate(
                     return sse.finish();
                 }
                 Ok(StreamEvent::Error { message, partial }) => {
+                    errored = true;
                     let data = Json::obj(vec![
                         ("message", Json::str(&message)),
                         ("partial", Json::num(partial as f64)),
+                        ("trace_id", Json::str(&trace::id_hex(trace_id))),
                     ])
                     .to_string();
                     sse.event("error", &data)?;
@@ -658,10 +752,14 @@ fn stream_generate(
                 }
                 // Engine worker terminated: end the stream explicitly.
                 Err(_) => {
-                    let _ = sse.event(
-                        "error",
-                        "{\"message\":\"server worker terminated\",\"partial\":0}",
-                    );
+                    errored = true;
+                    let data = Json::obj(vec![
+                        ("message", Json::str("server worker terminated")),
+                        ("partial", Json::num(0.0)),
+                        ("trace_id", Json::str(&trace::id_hex(trace_id))),
+                    ])
+                    .to_string();
+                    let _ = sse.event("error", &data);
                     return sse.finish();
                 }
             }
@@ -671,8 +769,28 @@ fn stream_generate(
     // up; dropping `rx` is the recovery — the worker's next push observes
     // a dead channel and retires the session.
     drop(rx);
+    let total = t_start.elapsed();
+    m.request_us.observe_us(total);
+    if errored || io_res.is_err() || !clean {
+        m.stream_errors.inc();
+    } else {
+        m.streams_completed.inc();
+    }
+    trace::span(trace_id, "stream", sub_t0, clock::now_us().saturating_sub(sub_t0), gen as u64);
+    trace::finish(trace_id, if errored || io_res.is_err() || !clean { "error" } else { "done" });
     shared.stats.count_status(200);
-    access_log(shared, "/generate", 200, prompt_len, gen, bucket, replica, ttfb, t_start.elapsed());
+    access_log(
+        shared,
+        "/generate",
+        200,
+        prompt_len,
+        gen,
+        bucket,
+        replica,
+        ttfb,
+        total,
+        trace_id,
+    );
     io_res.is_ok() && clean && head.keep_alive
 }
 
@@ -685,11 +803,17 @@ fn block_generate(
     prompt_len: usize,
     t_start: Instant,
 ) -> bool {
+    let trace_id = req.trace_id;
+    let sub_t0 = clock::now_us();
     let sub = match shared.handle.try_submit_stream(req, shared.cfg.token_buf, session.as_deref())
     {
         Ok(sub) => sub,
-        Err(e) => return refuse(shared, stream, head, e),
+        Err(e) => {
+            trace::finish(trace_id, "rejected");
+            return refuse(shared, stream, head, e);
+        }
     };
+    trace::span_since(trace_id, "admission", sub_t0, 0);
     let replica = sub.replica;
     // Blocking replies ride the streaming admission seam (the only one
     // the Engine trait exposes): drain token events, answer from the
@@ -732,6 +856,17 @@ fn block_generate(
         None => (500u16, err_body("server worker terminated"), 0, 0),
     };
     let _ = http::write_response(stream, status, &[], body.as_bytes(), head.keep_alive);
+    let total = t_start.elapsed();
+    let m = obs::serving();
+    m.request_us.observe_us(total);
+    if status == 200 {
+        m.tokens_generated.add(gen as u64);
+        m.streams_completed.inc();
+    } else {
+        m.stream_errors.inc();
+    }
+    trace::span(trace_id, "stream", sub_t0, clock::now_us().saturating_sub(sub_t0), gen as u64);
+    trace::finish(trace_id, if status == 200 { "done" } else { "error" });
     shared.stats.count_status(status);
     access_log(
         shared,
@@ -742,7 +877,8 @@ fn block_generate(
         bucket,
         replica,
         None,
-        t_start.elapsed(),
+        total,
+        trace_id,
     );
     head.keep_alive
 }
@@ -799,9 +935,9 @@ fn read_request_json(
 }
 
 /// `{"prompt":[...], "max_new":N, "temperature":t, "top_k":k,
-/// "timeout_ms":N, "stream":bool, "session":"key"}` → request + stream
-/// flag + session-affinity key. Shared with the replica RPC endpoint
-/// (`net::router`), whose `gen` frames reuse this grammar.
+/// "timeout_ms":N, "stream":bool, "session":"key", "trace_id":"hex"}` →
+/// request + stream flag + session-affinity key. Shared with the replica
+/// RPC endpoint (`net::router`), whose `gen` frames reuse this grammar.
 pub(crate) fn parse_generate(
     v: &Json,
     default_deadline_ms: u64,
@@ -837,5 +973,13 @@ pub(crate) fn parse_generate(
     // Optional session-affinity key: a replica fleet pins every request
     // carrying the same key to one worker.
     let session = v.get("session").and_then(|x| x.as_str()).map(|s| s.to_string());
-    Ok((GenerateRequest { prompt, max_new, sampling, deadline }, want_stream, session))
+    // Optional trace id (16 hex chars). The fleet router stamps its minted
+    // id into the replica-bound frame so both processes trace under one
+    // id; absent (the normal client case) the front end mints one.
+    let trace_id = v
+        .get("trace_id")
+        .and_then(|x| x.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .unwrap_or(0);
+    Ok((GenerateRequest { prompt, max_new, sampling, deadline, trace_id }, want_stream, session))
 }

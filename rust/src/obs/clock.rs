@@ -1,0 +1,69 @@
+//! The single time source for the telemetry layer (DESIGN.md
+//! §Observability).
+//!
+//! Every wall-clock read in `rust/src/` routes through this module (or
+//! through `net/mod.rs`, which delegates here): the rustcheck
+//! nondeterminism lint allowlists exactly these two files, so a stray
+//! `SystemTime::now()` anywhere else fails `scripts/check.sh lint-smoke`.
+//! Span timestamps and profiling timers use the *monotonic* clock
+//! ([`now_us`]/[`now_ns`]), anchored at the first read, so they never jump
+//! under NTP adjustment; only log stamps and trace birth times use the
+//! wall clock ([`epoch_ms`]).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Milliseconds since the Unix epoch (wall clock; log/trace stamps only).
+pub fn epoch_ms() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// The process-start anchor for the monotonic clock (first call wins).
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
+
+/// Monotonic microseconds since the first clock read in this process.
+pub fn now_us() -> u64 {
+    start().elapsed().as_micros() as u64
+}
+
+/// Monotonic nanoseconds since the first clock read in this process
+/// (profiling timers; wraps after ~584 years).
+pub fn now_ns() -> u64 {
+    start().elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_never_goes_backwards() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        let n1 = now_ns();
+        let n2 = now_ns();
+        assert!(n2 >= n1);
+    }
+
+    #[test]
+    fn ns_and_us_agree_on_scale() {
+        let us = now_us();
+        let ns = now_ns();
+        // Same anchor: ns/1000 can only be ahead of the earlier us read.
+        assert!(ns / 1000 >= us);
+    }
+
+    #[test]
+    fn epoch_is_after_2020() {
+        // 2020-01-01 in ms — a sanity floor, not a tight bound.
+        assert!(epoch_ms() > 1_577_836_800_000);
+    }
+}

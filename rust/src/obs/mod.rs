@@ -1,0 +1,710 @@
+//! Dependency-free telemetry: metrics registry, request tracing, and
+//! hot-path profiling (DESIGN.md §Observability).
+//!
+//! The registry is process-global and lock-light: every handle returned by
+//! [`counter`]/[`gauge`]/[`histogram`] is a `&'static` atomic cell, so the
+//! hot path is a single `fetch_add` — the registration mutex is taken only
+//! when a metric is first (or repeatedly, idempotently) registered, and at
+//! scrape time. A scrape materializes a [`Snapshot`] — plain data that can
+//! be rendered as Prometheus text ([`render_prometheus`], served at
+//! `GET /metrics`), shipped over the replica RPC as JSON
+//! ([`snapshot_to_json`]/[`snapshot_from_json`]), or folded across a fleet
+//! ([`merge_fleet`]: summed aggregates plus per-replica `replica="K"`
+//! labeled series — the same shape `GET /mem` uses for `MemReport`).
+//!
+//! Histograms use fixed log2 buckets (`le` = 1, 2, 4, …, 2^30, +Inf) over
+//! integer units — microseconds by convention, stated in the metric name
+//! (`*_us`) — so merging across processes is bucketwise addition with no
+//! re-binning. Counter reads at scrape time are individually atomic but
+//! not mutually consistent (a histogram's `sum` may be one observation
+//! ahead of its `count`); the exposition is monotone, which is all
+//! Prometheus-style rate math needs.
+
+pub mod clock;
+pub mod prof;
+pub mod trace;
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Histogram bucket count: `le` = 2^0 .. 2^30 (31 finite bounds) + `+Inf`.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Monotonically increasing event count.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (in-flight requests, resident sessions, …).
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log2-bucket histogram over non-negative integer observations.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observe a duration in microseconds (the `*_us` convention).
+    pub fn observe_us(&self, d: std::time::Duration) {
+        self.observe(d.as_micros() as u64);
+    }
+}
+
+/// Bucket index for an observation: smallest i with v <= 2^i, clamped to
+/// the +Inf bucket. v = 0 and v = 1 both land in bucket 0 (le = 1).
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        ((u64::BITS - (v - 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket i, or `None` for the +Inf bucket.
+pub fn bucket_le(i: usize) -> Option<u64> {
+    if i + 1 < HIST_BUCKETS {
+        Some(1u64 << i)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Handle {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    handle: Handle,
+}
+
+fn registry() -> &'static Mutex<Vec<Entry>> {
+    static R: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register(name: &str, help: &str, labels: &[(&str, &str)], make: fn() -> Handle) -> Handle {
+    let labels: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    let mut reg = registry().lock().unwrap();
+    if let Some(e) = reg.iter().find(|e| e.name == name && e.labels == labels) {
+        return e.handle;
+    }
+    let handle = make();
+    reg.push(Entry { name: name.to_string(), help: help.to_string(), labels, handle });
+    handle
+}
+
+/// Register (idempotently) and return an unlabeled counter.
+pub fn counter(name: &str, help: &str) -> &'static Counter {
+    counter_with(name, help, &[])
+}
+
+/// Register (idempotently) and return a labeled counter.
+pub fn counter_with(name: &str, help: &str, labels: &[(&str, &str)]) -> &'static Counter {
+    match register(name, help, labels, || {
+        Handle::C(Box::leak(Box::new(Counter(AtomicU64::new(0)))))
+    }) {
+        Handle::C(c) => c,
+        _ => panic!("metric `{name}` already registered with a different kind"),
+    }
+}
+
+/// Register (idempotently) and return an unlabeled gauge.
+pub fn gauge(name: &str, help: &str) -> &'static Gauge {
+    match register(name, help, &[], || Handle::G(Box::leak(Box::new(Gauge(AtomicI64::new(0)))))) {
+        Handle::G(g) => g,
+        _ => panic!("metric `{name}` already registered with a different kind"),
+    }
+}
+
+/// Register (idempotently) and return an unlabeled log2 histogram.
+pub fn histogram(name: &str, help: &str) -> &'static Histogram {
+    const Z: AtomicU64 = AtomicU64::new(0);
+    match register(name, help, &[], || {
+        Handle::H(Box::leak(Box::new(Histogram {
+            buckets: [Z; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        })))
+    }) {
+        Handle::H(h) => h,
+        _ => panic!("metric `{name}` already registered with a different kind"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot
+// ---------------------------------------------------------------------------
+
+/// A scraped metric value (plain data; mergeable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Counter(u64),
+    Gauge(i64),
+    Histogram { buckets: Vec<u64>, sum: u64, count: u64 },
+}
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Counter(_) => "counter",
+            Value::Gauge(_) => "gauge",
+            Value::Histogram { .. } => "histogram",
+        }
+    }
+
+    /// Fold another value of the same kind into this one (fleet sums).
+    fn merge(&mut self, o: &Value) {
+        match (self, o) {
+            (Value::Counter(a), Value::Counter(b)) => *a += b,
+            (Value::Gauge(a), Value::Gauge(b)) => *a += b,
+            (
+                Value::Histogram { buckets: ab, sum: asum, count: ac },
+                Value::Histogram { buckets: bb, sum: bsum, count: bc },
+            ) => {
+                for (a, b) in ab.iter_mut().zip(bb) {
+                    *a += b;
+                }
+                *asum += bsum;
+                *ac += bc;
+            }
+            _ => {} // kind mismatch: keep ours (cannot happen via registry)
+        }
+    }
+}
+
+/// One series: a metric name, its label set, and a scraped value.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub help: String,
+    pub labels: Vec<(String, String)>,
+    pub value: Value,
+}
+
+/// All series scraped at one instant, sorted by (name, labels).
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub series: Vec<Series>,
+}
+
+/// Scrape the process-global registry (plus profiling slots) right now.
+pub fn snapshot() -> Snapshot {
+    let mut series = Vec::new();
+    {
+        let reg = registry().lock().unwrap();
+        for e in reg.iter() {
+            let value = match e.handle {
+                Handle::C(c) => Value::Counter(c.get()),
+                Handle::G(g) => Value::Gauge(g.get()),
+                Handle::H(h) => Value::Histogram {
+                    buckets: h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                    sum: h.sum.load(Ordering::Relaxed),
+                    count: h.count.load(Ordering::Relaxed),
+                },
+            };
+            series.push(Series {
+                name: e.name.clone(),
+                help: e.help.clone(),
+                labels: e.labels.clone(),
+                value,
+            });
+        }
+    }
+    prof::fold_into(&mut series);
+    sort_series(&mut series);
+    Snapshot { series }
+}
+
+fn sort_series(series: &mut [Series]) {
+    series.sort_by(|a, b| a.name.cmp(&b.name).then_with(|| a.labels.cmp(&b.labels)));
+}
+
+/// Fold a fleet: the local (front-end) snapshot plus one snapshot per
+/// replica. Output = aggregated sums over all sources, plus every replica
+/// series repeated with a `replica="K"` label so per-worker skew stays
+/// visible.
+pub fn merge_fleet(local: Snapshot, replicas: &[(usize, Snapshot)]) -> Snapshot {
+    let mut agg: Vec<Series> = local.series;
+    for (_, snap) in replicas {
+        for s in &snap.series {
+            match agg.iter_mut().find(|a| a.name == s.name && a.labels == s.labels) {
+                Some(a) => a.value.merge(&s.value),
+                None => agg.push(s.clone()),
+            }
+        }
+    }
+    for (k, snap) in replicas {
+        for s in &snap.series {
+            let mut labels = s.labels.clone();
+            labels.push(("replica".to_string(), k.to_string()));
+            agg.push(Series { name: s.name.clone(), help: s.help.clone(), labels, value: s.value.clone() });
+        }
+    }
+    sort_series(&mut agg);
+    Snapshot { series: agg }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Escape a label value: backslash, double-quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP string: backslash and newline only (per the format spec).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format: families in
+/// name order, one `# HELP`/`# TYPE` pair per family, series in label
+/// order, cumulative histogram buckets with the `+Inf`/`_sum`/`_count`
+/// contract. Deterministic for a given snapshot (golden-tested by
+/// `python/tests/test_obs.py`).
+pub fn render_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for s in &snap.series {
+        if last_family != Some(s.name.as_str()) {
+            out.push_str(&format!("# HELP {} {}\n", s.name, escape_help(&s.help)));
+            out.push_str(&format!("# TYPE {} {}\n", s.name, s.value.kind()));
+            last_family = Some(s.name.as_str());
+        }
+        match &s.value {
+            Value::Counter(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, label_block(&s.labels, None)));
+            }
+            Value::Gauge(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, label_block(&s.labels, None)));
+            }
+            Value::Histogram { buckets, sum, count } => {
+                let mut cum = 0u64;
+                for (i, b) in buckets.iter().enumerate() {
+                    cum += b;
+                    let le = match bucket_le(i) {
+                        Some(b) => b.to_string(),
+                        None => "+Inf".to_string(),
+                    };
+                    out.push_str(&format!(
+                        "{}_bucket{} {cum}\n",
+                        s.name,
+                        label_block(&s.labels, Some(("le", &le)))
+                    ));
+                }
+                out.push_str(&format!("{}_sum{} {sum}\n", s.name, label_block(&s.labels, None)));
+                out.push_str(&format!(
+                    "{}_count{} {count}\n",
+                    s.name,
+                    label_block(&s.labels, None)
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// JSON transport (the `metrics` replica RPC op)
+// ---------------------------------------------------------------------------
+
+/// Serialize a snapshot for the replica RPC (field-by-field, like
+/// `mem_to_json`).
+pub fn snapshot_to_json(snap: &Snapshot) -> Json {
+    let series = snap
+        .series
+        .iter()
+        .map(|s| {
+            let labels = Json::Arr(
+                s.labels
+                    .iter()
+                    .map(|(k, v)| Json::Arr(vec![Json::str(k), Json::str(v)]))
+                    .collect(),
+            );
+            let mut pairs = vec![
+                ("name", Json::str(&s.name)),
+                ("help", Json::str(&s.help)),
+                ("kind", Json::str(s.value.kind())),
+                ("labels", labels),
+            ];
+            match &s.value {
+                Value::Counter(v) => pairs.push(("value", Json::num(*v as f64))),
+                Value::Gauge(v) => pairs.push(("value", Json::num(*v as f64))),
+                Value::Histogram { buckets, sum, count } => {
+                    pairs.push((
+                        "buckets",
+                        Json::Arr(buckets.iter().map(|&b| Json::num(b as f64)).collect()),
+                    ));
+                    pairs.push(("sum", Json::num(*sum as f64)));
+                    pairs.push(("count", Json::num(*count as f64)));
+                }
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![("series", Json::Arr(series))])
+}
+
+/// Parse a snapshot shipped by [`snapshot_to_json`] (None on shape errors).
+pub fn snapshot_from_json(v: &Json) -> Option<Snapshot> {
+    let mut series = Vec::new();
+    for s in v.get("series")?.as_arr()? {
+        let name = s.get("name")?.as_str()?.to_string();
+        let help = s.get("help")?.as_str()?.to_string();
+        let kind = s.get("kind")?.as_str()?;
+        let mut labels = Vec::new();
+        for l in s.get("labels")?.as_arr()? {
+            let pair = l.as_arr()?;
+            labels.push((pair.first()?.as_str()?.to_string(), pair.get(1)?.as_str()?.to_string()));
+        }
+        let value = match kind {
+            "counter" => Value::Counter(s.get("value")?.as_f64()? as u64),
+            "gauge" => Value::Gauge(s.get("value")?.as_f64()? as i64),
+            "histogram" => {
+                let buckets: Vec<u64> = s
+                    .get("buckets")?
+                    .as_arr()?
+                    .iter()
+                    .map(|b| b.as_f64().unwrap_or(0.0) as u64)
+                    .collect();
+                if buckets.len() != HIST_BUCKETS {
+                    return None;
+                }
+                Value::Histogram {
+                    buckets,
+                    sum: s.get("sum")?.as_f64()? as u64,
+                    count: s.get("count")?.as_f64()? as u64,
+                }
+            }
+            _ => return None,
+        };
+        series.push(Series { name, help, labels, value });
+    }
+    let mut snap = Snapshot { series };
+    sort_series(&mut snap.series);
+    Some(snap)
+}
+
+// ---------------------------------------------------------------------------
+// Serving metric handles (shared by coordinator + net layers)
+// ---------------------------------------------------------------------------
+
+/// All serving-path metric handles, registered once per process. The
+/// front-end counters (`http_*`, `tokens_generated`, rejections) tick in
+/// the process running `net/server.rs` — the router in fleet mode — while
+/// the engine-side histograms (queue/prefill/decode) tick wherever the
+/// coordinator runs, so a fleet scrape merges complementary series.
+pub struct ServingMetrics {
+    pub http_requests: &'static Counter,
+    pub http_2xx: &'static Counter,
+    pub http_4xx: &'static Counter,
+    pub http_5xx: &'static Counter,
+    pub tokens_generated: &'static Counter,
+    pub admission_rejected: &'static Counter,
+    pub draining_rejected: &'static Counter,
+    pub streams_completed: &'static Counter,
+    pub stream_errors: &'static Counter,
+    pub inflight: &'static Gauge,
+    pub ttfb_us: &'static Histogram,
+    pub request_us: &'static Histogram,
+    pub queue_wait_us: &'static Histogram,
+    pub prefill_us: &'static Histogram,
+    pub decode_round_us: &'static Histogram,
+    pub write_stall_us: &'static Histogram,
+}
+
+/// The process-global serving metrics (registered on first use).
+pub fn serving() -> &'static ServingMetrics {
+    static S: OnceLock<ServingMetrics> = OnceLock::new();
+    S.get_or_init(|| ServingMetrics {
+        http_requests: counter("hyena_http_requests_total", "HTTP requests accepted off the wire"),
+        http_2xx: counter_with(
+            "hyena_http_responses_total",
+            "HTTP responses by status class",
+            &[("class", "2xx")],
+        ),
+        http_4xx: counter_with(
+            "hyena_http_responses_total",
+            "HTTP responses by status class",
+            &[("class", "4xx")],
+        ),
+        http_5xx: counter_with(
+            "hyena_http_responses_total",
+            "HTTP responses by status class",
+            &[("class", "5xx")],
+        ),
+        tokens_generated: counter(
+            "hyena_tokens_generated_total",
+            "Tokens written to client streams by the front end",
+        ),
+        admission_rejected: counter(
+            "hyena_admission_rejected_total",
+            "Requests bounced with 429 (admission backpressure)",
+        ),
+        draining_rejected: counter(
+            "hyena_draining_rejected_total",
+            "Requests bounced with 503 (draining or overloaded front door)",
+        ),
+        streams_completed: counter(
+            "hyena_streams_completed_total",
+            "SSE streams that ended with a done event",
+        ),
+        stream_errors: counter(
+            "hyena_stream_errors_total",
+            "SSE streams terminated by a server error event",
+        ),
+        inflight: gauge("hyena_inflight_requests", "Generate requests currently admitted"),
+        ttfb_us: histogram("hyena_ttfb_us", "Time to first token event, microseconds"),
+        request_us: histogram(
+            "hyena_request_duration_us",
+            "Full request duration (parse to stream end), microseconds",
+        ),
+        queue_wait_us: histogram(
+            "hyena_queue_wait_us",
+            "Admission queue wait before prefill, microseconds",
+        ),
+        prefill_us: histogram("hyena_prefill_us", "Prompt prefill duration, microseconds"),
+        decode_round_us: histogram(
+            "hyena_decode_round_us",
+            "One batched decode round, microseconds",
+        ),
+        write_stall_us: histogram(
+            "hyena_stream_write_stall_us",
+            "Slow client socket writes (> 1ms), microseconds",
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 30), 30);
+        assert_eq!(bucket_index((1 << 30) + 1), HIST_BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // Every finite bound lands in its own bucket.
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_index(1u64 << i), i.max(0));
+        }
+    }
+
+    #[test]
+    fn bucket_le_contract() {
+        assert_eq!(bucket_le(0), Some(1));
+        assert_eq!(bucket_le(1), Some(2));
+        assert_eq!(bucket_le(HIST_BUCKETS - 2), Some(1 << (HIST_BUCKETS - 2)));
+        assert_eq!(bucket_le(HIST_BUCKETS - 1), None);
+    }
+
+    #[test]
+    fn registration_is_idempotent() {
+        let a = counter("obs_test_idem_total", "x");
+        let b = counter("obs_test_idem_total", "x");
+        assert!(std::ptr::eq(a, b));
+        a.inc();
+        assert_eq!(b.get(), a.get());
+    }
+
+    #[test]
+    fn labeled_counters_are_distinct_series() {
+        let a = counter_with("obs_test_lbl_total", "x", &[("k", "a")]);
+        let b = counter_with("obs_test_lbl_total", "x", &[("k", "b")]);
+        assert!(!std::ptr::eq(a, b));
+        a.add(3);
+        b.add(5);
+        let snap = snapshot();
+        let vals: Vec<u64> = snap
+            .series
+            .iter()
+            .filter(|s| s.name == "obs_test_lbl_total")
+            .map(|s| match s.value {
+                Value::Counter(v) => v,
+                _ => panic!("kind"),
+            })
+            .collect();
+        assert_eq!(vals, vec![3, 5]); // sorted by labels: k="a" then k="b"
+    }
+
+    #[test]
+    fn histogram_exposition_contract() {
+        let h = histogram("obs_test_hist_us", "y");
+        h.observe(1);
+        h.observe(3);
+        h.observe(1 << 40); // +Inf bucket
+        let snap = snapshot();
+        let text = render_prometheus(&snap);
+        assert!(text.contains("# TYPE obs_test_hist_us histogram"));
+        assert!(text.contains("obs_test_hist_us_bucket{le=\"1\"} 1\n"));
+        // Cumulative: le="4" includes both finite observations.
+        assert!(text.contains("obs_test_hist_us_bucket{le=\"4\"} 2\n"));
+        assert!(text.contains("obs_test_hist_us_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains(&format!("obs_test_hist_us_sum {}\n", 4 + (1u64 << 40))));
+        assert!(text.contains("obs_test_hist_us_count 3\n"));
+    }
+
+    #[test]
+    fn render_escapes_labels() {
+        let c = counter_with("obs_test_esc_total", "z", &[("path", "a\"b\\c\nd")]);
+        c.inc();
+        let text = render_prometheus(&snapshot());
+        assert!(text.contains("obs_test_esc_total{path=\"a\\\"b\\\\c\\nd\"} 1"));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_snapshot() {
+        let c = counter("obs_test_rt_total", "r");
+        c.add(7);
+        let h = histogram("obs_test_rt_us", "r");
+        h.observe(100);
+        let snap = snapshot();
+        let back = snapshot_from_json(&snapshot_to_json(&snap)).expect("roundtrip");
+        assert_eq!(back.series.len(), snap.series.len());
+        for (a, b) in snap.series.iter().zip(&back.series) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.value, b.value);
+        }
+    }
+
+    #[test]
+    fn fleet_merge_sums_and_labels() {
+        let mk = |v: u64| Snapshot {
+            series: vec![Series {
+                name: "m_total".into(),
+                help: "m".into(),
+                labels: vec![],
+                value: Value::Counter(v),
+            }],
+        };
+        let merged = merge_fleet(mk(1), &[(0, mk(10)), (1, mk(100))]);
+        let agg = merged
+            .series
+            .iter()
+            .find(|s| s.labels.is_empty())
+            .expect("aggregate series");
+        assert_eq!(agg.value, Value::Counter(111));
+        let r1 = merged
+            .series
+            .iter()
+            .find(|s| s.labels == vec![("replica".to_string(), "1".to_string())])
+            .expect("replica series");
+        assert_eq!(r1.value, Value::Counter(100));
+        assert_eq!(merged.series.len(), 3);
+    }
+
+    #[test]
+    fn fleet_merge_histograms_bucketwise() {
+        let mk = |b0: u64| {
+            let mut buckets = vec![0u64; HIST_BUCKETS];
+            buckets[0] = b0;
+            Snapshot {
+                series: vec![Series {
+                    name: "h_us".into(),
+                    help: "h".into(),
+                    labels: vec![],
+                    value: Value::Histogram { buckets, sum: b0, count: b0 },
+                }],
+            }
+        };
+        let merged = merge_fleet(mk(2), &[(0, mk(3))]);
+        let agg = merged.series.iter().find(|s| s.labels.is_empty()).unwrap();
+        match &agg.value {
+            Value::Histogram { buckets, sum, count } => {
+                assert_eq!(buckets[0], 5);
+                assert_eq!((*sum, *count), (5, 5));
+            }
+            _ => panic!("kind"),
+        }
+    }
+
+    #[test]
+    fn serving_handles_register_once() {
+        let a = serving();
+        let b = serving();
+        assert!(std::ptr::eq(a.tokens_generated, b.tokens_generated));
+    }
+}

@@ -1,0 +1,170 @@
+//! Hot-path profiling hooks (DESIGN.md §Observability).
+//!
+//! Gated by `HYENA_PROF=1`, resolved once and cached in an `AtomicBool`
+//! so the disabled check is a single relaxed load — the contract gated by
+//! `benches/native_obs.rs` is ≤ 3% decode-throughput overhead enabled and
+//! ≈ 0 disabled. Three hook families:
+//!
+//! * per-kernel call counts + wall time: the `Kernels` dispatcher swaps in
+//!   a timing wrapper table ([`crate::backend::native::kernels`]) when
+//!   profiling is on, so the off path pays nothing at all;
+//! * FFT plan runs ([`FFT`]): one timer around each forward/inverse pass;
+//! * batched decode rounds ([`DECODE_BATCH`]): one timer around each
+//!   `decode_step_batch` call.
+//!
+//! Slots are plain atomics folded into every metrics [`Snapshot`](super::Snapshot)
+//! (`hyena_prof_*` series), so `GET /metrics` carries them and the fleet
+//! merge aggregates them like any other counter.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use super::Value;
+
+static INIT: AtomicBool = AtomicBool::new(false);
+static ON: AtomicBool = AtomicBool::new(false);
+
+/// Is profiling on? First call resolves `HYENA_PROF`; later calls are one
+/// relaxed load (two during the benign init race, which is idempotent).
+pub fn enabled() -> bool {
+    if !INIT.load(Ordering::Relaxed) {
+        let on = std::env::var("HYENA_PROF").map(|v| v == "1").unwrap_or(false);
+        ON.store(on, Ordering::Relaxed);
+        INIT.store(true, Ordering::Relaxed);
+    }
+    ON.load(Ordering::Relaxed)
+}
+
+/// Override the env gate (benches toggle the instrumented path in-process;
+/// note the kernel wrapper table is chosen once at first dispatch, so only
+/// the FFT/decode hooks react to a mid-process toggle).
+pub fn set_enabled(on: bool) {
+    ON.store(on, Ordering::Relaxed);
+    INIT.store(true, Ordering::Relaxed);
+}
+
+/// One profiled site: call count + accumulated wall nanoseconds.
+pub struct Slot {
+    pub calls: AtomicU64,
+    pub ns: AtomicU64,
+}
+
+impl Slot {
+    pub const fn new() -> Slot {
+        Slot { calls: AtomicU64::new(0), ns: AtomicU64::new(0) }
+    }
+
+    pub fn record(&self, ns: u64) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Kernel-op slot indices (order matches [`KERNEL_OPS`]).
+pub const K_AXPY: usize = 0;
+pub const K_DOT: usize = 1;
+pub const K_GATE_MUL: usize = 2;
+pub const K_GELU_FWD: usize = 3;
+pub const K_BUTTERFLY: usize = 4;
+pub const K_SPEC_MUL: usize = 5;
+pub const K_SPEC_MUL_CONJ: usize = 6;
+
+/// `op` label values for the per-kernel series.
+pub const KERNEL_OPS: [&str; 7] =
+    ["axpy", "dot", "gate_mul", "gelu_fwd", "butterfly_pass", "spec_mul", "spec_mul_conj"];
+
+const SLOT_INIT: Slot = Slot::new();
+
+/// Per-kernel-op slots, filled by the profiled dispatch table.
+pub static KERNELS: [Slot; 7] = [SLOT_INIT; 7];
+/// FFT plan runs (one forward or inverse pass each).
+pub static FFT: Slot = Slot::new();
+/// Batched decode rounds (`decode_step_batch` calls).
+pub static DECODE_BATCH: Slot = Slot::new();
+
+/// Zero every slot (bench phases).
+pub fn reset() {
+    for s in &KERNELS {
+        s.reset();
+    }
+    FFT.reset();
+    DECODE_BATCH.reset();
+}
+
+fn push_slot(series: &mut Vec<super::Series>, base: &str, labels: Vec<(String, String)>, s: &Slot) {
+    let mk = |name: String, help: &str, v: u64, labels: Vec<(String, String)>| super::Series {
+        name,
+        help: help.to_string(),
+        labels,
+        value: Value::Counter(v),
+    };
+    series.push(mk(
+        format!("{base}_calls_total"),
+        "Profiled call count (HYENA_PROF)",
+        s.calls.load(Ordering::Relaxed),
+        labels.clone(),
+    ));
+    series.push(mk(
+        format!("{base}_ns_total"),
+        "Profiled wall nanoseconds (HYENA_PROF)",
+        s.ns.load(Ordering::Relaxed),
+        labels,
+    ));
+}
+
+/// Append the `hyena_prof_*` series to a snapshot under construction.
+pub fn fold_into(series: &mut Vec<super::Series>) {
+    for (i, op) in KERNEL_OPS.iter().enumerate() {
+        push_slot(
+            series,
+            "hyena_prof_kernel",
+            vec![("op".to_string(), op.to_string())],
+            &KERNELS[i],
+        );
+    }
+    push_slot(series, "hyena_prof_fft_run", Vec::new(), &FFT);
+    push_slot(series, "hyena_prof_decode_round", Vec::new(), &DECODE_BATCH);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_accumulate_and_reset() {
+        // Private slots so parallel tests cannot interfere.
+        let s = Slot::new();
+        s.record(100);
+        s.record(50);
+        assert_eq!(s.calls.load(Ordering::Relaxed), 2);
+        assert_eq!(s.ns.load(Ordering::Relaxed), 150);
+        s.reset();
+        assert_eq!(s.calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn set_enabled_overrides_env() {
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn fold_emits_every_slot_series() {
+        let mut series = Vec::new();
+        fold_into(&mut series);
+        // 7 kernel ops x 2 + fft x 2 + decode x 2.
+        assert_eq!(series.len(), KERNEL_OPS.len() * 2 + 4);
+        assert!(series.iter().any(|s| {
+            s.name == "hyena_prof_kernel_calls_total"
+                && s.labels == vec![("op".to_string(), "dot".to_string())]
+        }));
+        assert!(series.iter().any(|s| s.name == "hyena_prof_fft_run_ns_total"));
+        assert!(series.iter().any(|s| s.name == "hyena_prof_decode_round_calls_total"));
+    }
+}

@@ -1,0 +1,327 @@
+//! Per-request trace spans (DESIGN.md §Observability).
+//!
+//! A `trace_id` is minted when the front end parses a `/generate` request
+//! and rides the [`GenerateRequest`](crate::coordinator::server::GenerateRequest)
+//! through admission, the coordinator loop, and (in fleet mode) the replica
+//! RPC, so every layer appends spans to the same trace without new channel
+//! plumbing: the hub is process-global, keyed by id. Spans are coarse —
+//! one per request stage or decode round, never per token — so the hub
+//! mutex stays off the per-token hot path. Finished traces land in a
+//! bounded ring ([`RING_CAP`]) served as JSON at `GET /trace?n=K`; the id
+//! is also stamped into access logs, SSE `error` events, and router
+//! dispatch logs ([`id_hex`]) so one request can be followed across
+//! processes. Traces are per-process: the router's ring holds front-end
+//! spans (admission, dispatch, stream), each replica's ring holds the
+//! engine spans (queue, prefill, decode rounds) under the same id.
+//!
+//! Id 0 means "untraced" (benches, direct engine drivers): every hub call
+//! is a no-op for it.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+use super::clock;
+use crate::util::json::Json;
+
+/// Finished traces kept for `GET /trace`.
+pub const RING_CAP: usize = 256;
+/// Spans kept per trace; the overflow is counted, not stored.
+pub const SPAN_CAP: usize = 512;
+/// Traces that began but never finished are evicted beyond this.
+pub const INFLIGHT_CAP: usize = 1024;
+
+/// One timed stage. `n` is a stage-specific count (chunk index, tokens in
+/// the round, bytes written, …).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub n: u64,
+}
+
+/// One request's spans, from mint to finish.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: u64,
+    /// Wall-clock birth stamp (for cross-process correlation by eye).
+    pub started_ms: u128,
+    pub spans: Vec<Span>,
+    /// Spans dropped past [`SPAN_CAP`].
+    pub dropped: u64,
+    /// Terminal status: `"done"`, `"error"`, `"rejected"`, … (empty while
+    /// in flight).
+    pub status: &'static str,
+    pub end_us: u64,
+}
+
+struct Hub {
+    inflight: Mutex<Vec<Trace>>,
+    finished: Mutex<VecDeque<Trace>>,
+}
+
+fn hub() -> &'static Hub {
+    static H: OnceLock<Hub> = OnceLock::new();
+    H.get_or_init(|| Hub {
+        inflight: Mutex::new(Vec::new()),
+        finished: Mutex::new(VecDeque::new()),
+    })
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Mint a fresh nonzero trace id: a per-process wall-clock salt (so two
+/// processes started at different times do not collide) mixed with a
+/// sequence counter through splitmix64.
+pub fn mint() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    static SALT: OnceLock<u64> = OnceLock::new();
+    let salt = *SALT.get_or_init(|| clock::epoch_ms() as u64);
+    let id = splitmix64(salt ^ SEQ.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x2545_f491_4f6c_dd1d));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Short printable form (12 hex chars) used in logs and JSON.
+pub fn id_hex(id: u64) -> String {
+    format!("{:012x}", id & 0xffff_ffff_ffff)
+}
+
+/// Open a trace for `id`. No-op for id 0 or an id already in flight.
+pub fn begin(id: u64) {
+    if id == 0 {
+        return;
+    }
+    let mut inflight = hub().inflight.lock().unwrap();
+    if inflight.iter().any(|t| t.id == id) {
+        return;
+    }
+    if inflight.len() >= INFLIGHT_CAP {
+        inflight.remove(0); // oldest leaked trace gives way
+    }
+    inflight.push(Trace {
+        id,
+        started_ms: clock::epoch_ms(),
+        spans: Vec::new(),
+        dropped: 0,
+        status: "",
+        end_us: 0,
+    });
+}
+
+/// Append a span to an in-flight trace (no-op for id 0 / unknown ids).
+pub fn span(id: u64, name: &'static str, start_us: u64, dur_us: u64, n: u64) {
+    if id == 0 {
+        return;
+    }
+    let mut inflight = hub().inflight.lock().unwrap();
+    if let Some(t) = inflight.iter_mut().find(|t| t.id == id) {
+        if t.spans.len() >= SPAN_CAP {
+            t.dropped += 1;
+        } else {
+            t.spans.push(Span { name, start_us, dur_us, n });
+        }
+    }
+}
+
+/// Convenience: record a span that ends now.
+pub fn span_since(id: u64, name: &'static str, start_us: u64, n: u64) {
+    span(id, name, start_us, clock::now_us().saturating_sub(start_us), n);
+}
+
+thread_local! {
+    static CURRENT: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// Set the calling thread's ambient trace id. The coordinator sets this
+/// around engine calls so layers below the [`Backend`] trait seam (e.g.
+/// the chunked-prefill loop) can attach spans without the trait carrying
+/// an id parameter. 0 clears it.
+///
+/// [`Backend`]: crate::backend::Backend
+pub fn set_current(id: u64) {
+    CURRENT.with(|c| c.set(id));
+}
+
+/// The calling thread's ambient trace id (0 = none).
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// Record a span on the ambient trace (no-op when none is set).
+pub fn span_current(name: &'static str, start_us: u64, dur_us: u64, n: u64) {
+    span(current(), name, start_us, dur_us, n);
+}
+
+/// Close a trace and move it into the finished ring (no-op for id 0 /
+/// unknown ids).
+pub fn finish(id: u64, status: &'static str) {
+    if id == 0 {
+        return;
+    }
+    let trace = {
+        let mut inflight = hub().inflight.lock().unwrap();
+        let i = match inflight.iter().position(|t| t.id == id) {
+            Some(i) => i,
+            None => return,
+        };
+        let mut t = inflight.remove(i);
+        t.status = status;
+        t.end_us = clock::now_us();
+        t
+    };
+    let mut finished = hub().finished.lock().unwrap();
+    finished.push_back(trace);
+    while finished.len() > RING_CAP {
+        finished.pop_front();
+    }
+}
+
+/// The most recent `n` finished traces, newest first.
+pub fn recent(n: usize) -> Vec<Trace> {
+    let finished = hub().finished.lock().unwrap();
+    finished.iter().rev().take(n).cloned().collect()
+}
+
+fn trace_json(t: &Trace) -> Json {
+    Json::obj(vec![
+        ("trace_id", Json::str(&id_hex(t.id))),
+        ("started_ms", Json::num(t.started_ms as f64)),
+        ("status", Json::str(t.status)),
+        ("end_us", Json::num(t.end_us as f64)),
+        ("dropped", Json::num(t.dropped as f64)),
+        (
+            "spans",
+            Json::Arr(
+                t.spans
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name)),
+                            ("t_us", Json::num(s.start_us as f64)),
+                            ("dur_us", Json::num(s.dur_us as f64)),
+                            ("n", Json::num(s.n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The `GET /trace?n=K` payload: newest-first finished traces as JSON.
+pub fn dump(n: usize) -> Json {
+    let traces = recent(n);
+    Json::obj(vec![
+        ("count", Json::num(traces.len() as f64)),
+        ("traces", Json::Arr(traces.iter().map(trace_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = mint();
+        let b = mint();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+        assert_eq!(id_hex(a).len(), 12);
+    }
+
+    #[test]
+    fn spans_accumulate_and_finish_moves_to_ring() {
+        let id = mint();
+        begin(id);
+        span(id, "admission", 10, 5, 0);
+        span(id, "decode_round", 20, 3, 4);
+        finish(id, "done");
+        let t = recent(RING_CAP)
+            .into_iter()
+            .find(|t| t.id == id)
+            .expect("finished trace in ring");
+        assert_eq!(t.status, "done");
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.spans[0].name, "admission");
+        assert_eq!(t.spans[1].n, 4);
+        // Finishing removed it from inflight: spans after finish are lost.
+        span(id, "late", 0, 0, 0);
+        let t2 = recent(RING_CAP).into_iter().find(|t| t.id == id).unwrap();
+        assert_eq!(t2.spans.len(), 2);
+    }
+
+    #[test]
+    fn ambient_current_id_routes_spans() {
+        let id = mint();
+        begin(id);
+        assert_eq!(current(), 0);
+        set_current(id);
+        span_current("prefill_chunk", 5, 7, 2);
+        set_current(0);
+        span_current("ignored", 0, 0, 0); // ambient cleared: no-op
+        finish(id, "done");
+        let t = recent(RING_CAP).into_iter().find(|t| t.id == id).unwrap();
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!((t.spans[0].name, t.spans[0].n), ("prefill_chunk", 2));
+    }
+
+    #[test]
+    fn id_zero_is_untraced() {
+        begin(0);
+        span(0, "x", 0, 0, 0);
+        finish(0, "done");
+        assert!(recent(RING_CAP).iter().all(|t| t.id != 0));
+    }
+
+    #[test]
+    fn span_cap_counts_drops() {
+        let id = mint();
+        begin(id);
+        for i in 0..(SPAN_CAP as u64 + 10) {
+            span(id, "round", i, 1, 0);
+        }
+        finish(id, "done");
+        let t = recent(RING_CAP).into_iter().find(|t| t.id == id).unwrap();
+        assert_eq!(t.spans.len(), SPAN_CAP);
+        assert_eq!(t.dropped, 10);
+    }
+
+    #[test]
+    fn dump_is_valid_json_newest_first() {
+        let a = mint();
+        begin(a);
+        span(a, "prefill", 1, 2, 0);
+        finish(a, "done");
+        let b = mint();
+        begin(b);
+        finish(b, "error");
+        let d = dump(RING_CAP);
+        let reparsed = Json::parse(&d.to_string()).expect("dump is valid json");
+        let traces = reparsed.get("traces").unwrap().as_arr().unwrap();
+        // Other tests share the ring: find ours by id, check relative order.
+        let pos = |id: u64| {
+            let hex = id_hex(id);
+            traces
+                .iter()
+                .position(|t| t.get("trace_id").and_then(|v| v.as_str()) == Some(hex.as_str()))
+                .expect("trace present")
+        };
+        let (pa, pb) = (pos(a), pos(b));
+        assert!(pb < pa, "newest first: b finished after a");
+        assert_eq!(traces[pb].get("status").unwrap().as_str().unwrap(), "error");
+        let spans = traces[pa].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].get("name").unwrap().as_str().unwrap(), "prefill");
+    }
+}

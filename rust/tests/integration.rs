@@ -206,6 +206,7 @@ fn server_round_trip() {
                 max_new: 3,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect();

@@ -213,6 +213,7 @@ fn server_round_trip_native() {
                 max_new: 3,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect();
@@ -260,6 +261,7 @@ fn server_batched_rounds_match_single_session_greedy_streams() {
                 max_new,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect();
@@ -302,12 +304,14 @@ fn server_routes_mixed_lengths_to_their_buckets() {
         max_new: 2,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     });
     let long = server.handle.submit(GenerateRequest {
         prompt: vec![1; 10],
         max_new: 4,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     });
     let short = short.recv().unwrap().unwrap();
     let long = long.recv().unwrap().unwrap();
@@ -536,12 +540,14 @@ fn longctx_server_admits_past_the_compiled_window() {
         max_new: 4,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     });
     let short = server.handle.submit(GenerateRequest {
         prompt: vec![1, 2, 3],
         max_new: 3,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     });
     let long = long.recv().unwrap().unwrap();
     let short = short.recv().unwrap().unwrap();
@@ -621,6 +627,7 @@ fn server_deadlines_expire_cleanly() {
         max_new: 4,
         sampling: Sampling::Greedy,
         deadline: Some(Duration::ZERO),
+        trace_id: 0,
     });
     let err = h.recv().unwrap().expect_err("expired deadline must not generate");
     assert!(
@@ -636,6 +643,7 @@ fn server_deadlines_expire_cleanly() {
         max_new: 3,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     });
     let tight: Vec<_> = (0..4)
         .map(|i| {

@@ -1,0 +1,262 @@
+//! Loopback end-to-end tests for the telemetry subsystem: real sockets
+//! against a real engine (`golden_tiny`, native backend), covering the
+//! observability gates — `GET /metrics` serving well-formed Prometheus
+//! text whose counter deltas agree with what the client saw on the wire,
+//! `GET /trace` carrying per-stage spans for a real request, SSE `error`
+//! events stamped with the request's trace id, and the fleet `metrics`
+//! RPC merging replica snapshots into aggregate + `replica="K"` series.
+//!
+//! The metrics registry and trace ring are process-global and tests run
+//! in parallel, so every assertion is delta-based (`>=` across scrapes)
+//! or keyed by a test-owned trace id — never an absolute counter value.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hyena::backend::BackendKind;
+use hyena::coordinator::server::{Engine, Server};
+use hyena::net::client::{generate_body, scrape_counter, Fault, HttpClient};
+use hyena::net::router::{FleetConfig, FleetHandle, ReplicaServer};
+use hyena::net::server::NetServer;
+use hyena::net::NetConfig;
+use hyena::obs;
+use hyena::util::json::Json;
+
+/// Engine + listener on a free loopback port, logs off.
+fn start_stack() -> (Server, NetServer) {
+    let server = Server::start_kind(
+        BackendKind::Native,
+        PathBuf::from("artifacts/golden_tiny"),
+        0,
+        Duration::from_millis(5),
+        None,
+        None,
+        None,
+    )
+    .unwrap();
+    let cfg = NetConfig {
+        addr: "127.0.0.1:0".into(),
+        conn_threads: 8,
+        quiet: true,
+        ..NetConfig::default()
+    };
+    let net = NetServer::start(server.handle.clone(), cfg).unwrap();
+    (server, net)
+}
+
+/// `/generate` body with an explicit client-chosen trace id (48-bit hex,
+/// so `id_hex` round-trips it verbatim into `/trace` and SSE payloads).
+fn traced_body(prompt: &[i32], max_new: usize, timeout_ms: u64, trace_hex: &str) -> String {
+    let base = generate_body(prompt, max_new, timeout_ms);
+    let mut v = Json::parse(&base).unwrap();
+    if let Json::Obj(m) = &mut v {
+        m.insert("trace_id".to_string(), Json::str(trace_hex));
+    }
+    v.to_string()
+}
+
+#[test]
+fn metrics_endpoint_serves_consistent_prometheus_text() {
+    let (server, net) = start_stack();
+    let addr = net.addr();
+    let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+
+    let before = c.get("/metrics").unwrap();
+    assert_eq!(before.status, 200);
+    assert!(
+        before.header("content-type").is_some_and(|t| t.starts_with("text/plain")),
+        "exposition content type: {:?}",
+        before.headers
+    );
+    let before_text = String::from_utf8(before.body).unwrap();
+    let tok0 = scrape_counter(&before_text, "hyena_tokens_generated_total").unwrap();
+    let done0 = scrape_counter(&before_text, "hyena_streams_completed_total").unwrap();
+
+    let mut my_tokens = 0usize;
+    for _ in 0..3 {
+        let out = c.generate_stream(&generate_body(&[1, 2, 3], 5, 0), Fault::None).unwrap();
+        assert_eq!(out.status, 200, "stream rejected: {:?}", out.reject);
+        assert!(out.done.is_some());
+        my_tokens += out.tokens.len();
+    }
+    assert!(my_tokens > 0);
+
+    let after_text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+    // Well-formed exposition: every non-comment line is `name[{labels}] value`.
+    for line in after_text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(!name.is_empty());
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "unparseable sample value in {line:?}"
+        );
+    }
+    assert!(after_text.contains("# TYPE hyena_http_requests_total counter"));
+    assert!(after_text.contains("# TYPE hyena_ttfb_us histogram"));
+    assert!(after_text.contains("hyena_ttfb_us_bucket{le=\"+Inf\"}"));
+    assert!(after_text.contains("# TYPE hyena_inflight_requests gauge"));
+    // Counter deltas: the registry is shared with parallel tests, so the
+    // deltas are lower-bounded by this client's traffic, never exact.
+    let tok1 = scrape_counter(&after_text, "hyena_tokens_generated_total").unwrap();
+    let done1 = scrape_counter(&after_text, "hyena_streams_completed_total").unwrap();
+    assert!(
+        tok1 - tok0 >= my_tokens as u64,
+        "tokens_generated advanced {} for {} tokens on the wire",
+        tok1 - tok0,
+        my_tokens
+    );
+    assert!(done1 - done0 >= 3, "streams_completed advanced {}", done1 - done0);
+
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    server.stop();
+}
+
+#[test]
+fn trace_endpoint_reports_per_stage_spans() {
+    let (server, net) = start_stack();
+    let addr = net.addr();
+    let trace_hex = "c0ffee0b5e2e"; // test-owned id, 48-bit hex
+    let mut c = HttpClient::connect(addr, Duration::from_secs(10)).unwrap();
+    let out = c
+        .generate_stream(&traced_body(&[4, 5, 6], 6, 0, trace_hex), Fault::None)
+        .unwrap();
+    assert_eq!(out.status, 200);
+    assert!(out.done.is_some());
+
+    let resp = c.get("/trace?n=256").unwrap();
+    assert_eq!(resp.status, 200);
+    let dump = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let traces = dump.get("traces").unwrap().as_arr().unwrap();
+    let t = traces
+        .iter()
+        .find(|t| t.get("trace_id").and_then(|v| v.as_str()) == Some(trace_hex))
+        .expect("our trace in the ring");
+    assert_eq!(t.get("status").unwrap().as_str(), Some("done"));
+    let names: Vec<String> = t
+        .get("spans")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    // The in-process engine shares the hub, so one trace carries both the
+    // front end's stages and the coordinator's.
+    for want in ["parse", "admission", "queue_wait", "prefill", "stream"] {
+        assert!(names.contains(&want.to_string()), "span {want:?} missing from {names:?}");
+    }
+    assert!(
+        names.iter().filter(|n| *n == "decode_round").count() >= 1,
+        "no decode rounds traced: {names:?}"
+    );
+
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    server.stop();
+}
+
+#[test]
+fn error_events_carry_the_trace_id() {
+    let (server, net) = start_stack();
+    let addr = net.addr();
+    // Hold the engine busy so a 1 ms budget expires in the queue and the
+    // stream terminates with an explicit error event.
+    let flood: Vec<_> = (0..2000)
+        .map(|i| {
+            server.handle.submit(hyena::coordinator::server::GenerateRequest {
+                prompt: vec![1 + (i % 11) as i32, 2, 3],
+                max_new: 8,
+                sampling: hyena::coordinator::generation::Sampling::Greedy,
+                deadline: None,
+                trace_id: 0,
+            })
+        })
+        .collect();
+    let trace_hex = "deadbeef0042";
+    let mut c = HttpClient::connect(addr, Duration::from_secs(30)).unwrap();
+    let out = c
+        .generate_stream(&traced_body(&[1, 2, 3], 8, 1, trace_hex), Fault::None)
+        .unwrap();
+    assert_eq!(out.status, 200);
+    let err = out.error.expect("expired stream ends with an error event");
+    assert_eq!(
+        err.get("trace_id").and_then(|v| v.as_str()),
+        Some(trace_hex),
+        "error event payload: {err:?}"
+    );
+    for rx in flood {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = net.finish().unwrap();
+    assert_eq!(report.leaked_sessions, 0);
+    server.stop();
+}
+
+#[test]
+fn fleet_metrics_rpc_merges_replica_series() {
+    // Replicas here are threads around local engines (the RPC wire is
+    // real; see router_e2e.rs) — all sharing this process's registry, so
+    // the assertions are structural: the merge must carry an unlabeled
+    // aggregate plus one `replica="K"` copy per worker, and the aggregate
+    // must dominate any single replica's value.
+    let workers: Vec<(Server, ReplicaServer)> = (0..2)
+        .map(|_| {
+            let server = Server::start_kind(
+                BackendKind::Native,
+                PathBuf::from("artifacts/golden_tiny"),
+                0,
+                Duration::from_millis(5),
+                None,
+                None,
+                None,
+            )
+            .unwrap();
+            let rs = ReplicaServer::start(server.handle.clone(), "127.0.0.1:0").unwrap();
+            (server, rs)
+        })
+        .collect();
+    let addrs: Vec<_> = workers.iter().map(|(_, rs)| rs.addr()).collect();
+    let fleet = FleetHandle::connect(
+        &addrs,
+        FleetConfig { probe_ms: 40, quiet: true, ..FleetConfig::default() },
+    )
+    .unwrap();
+
+    let snap = fleet.metrics();
+    let name = "hyena_http_requests_total";
+    let agg = snap
+        .series
+        .iter()
+        .find(|s| s.name == name && s.labels.is_empty())
+        .expect("aggregate series");
+    for k in 0..2 {
+        let labeled = snap
+            .series
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && s.labels == vec![("replica".to_string(), k.to_string())]
+            })
+            .unwrap_or_else(|| panic!("replica {k} series missing"));
+        match (&agg.value, &labeled.value) {
+            (obs::Value::Counter(a), obs::Value::Counter(r)) => {
+                assert!(a >= r, "aggregate {a} < replica {k} value {r}");
+            }
+            other => panic!("unexpected kinds: {other:?}"),
+        }
+    }
+    // The merged snapshot renders: replica labels survive into the text.
+    let text = obs::render_prometheus(&snap);
+    assert!(text.contains("hyena_http_requests_total{replica=\"0\"}"));
+    assert!(text.contains("hyena_http_requests_total{replica=\"1\"}"));
+
+    fleet.shutdown();
+    for (server, mut rs) in workers {
+        rs.stop();
+        server.stop();
+    }
+}

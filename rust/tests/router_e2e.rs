@@ -57,6 +57,7 @@ fn greedy(prompt: &[i32], max_new: usize) -> GenerateRequest {
         max_new,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace_id: 0,
     }
 }
 

@@ -53,6 +53,7 @@ fn flood(server: &Server, n: usize) -> Vec<std::sync::mpsc::Receiver<anyhow::Res
                 max_new: 8,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             })
         })
         .collect()
@@ -94,6 +95,7 @@ fn loopback_streams_match_in_process_greedy() {
                 max_new: 5,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace_id: 0,
             })
             .unwrap();
         for o in outs {

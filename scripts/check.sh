@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI/dev gate: formatting, lints, build, tests — keeps docs and code in sync.
 #
-# Usage: scripts/check.sh [--fix|lint-smoke|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke|serve-net-smoke|router-smoke]
+# Usage: scripts/check.sh [--fix|lint-smoke|bench-smoke|serve-smoke|decode-smoke|kernel-smoke|longctx-smoke|serve-net-smoke|router-smoke|obs-smoke]
 #   --fix        run `cargo fmt` (writing) instead of `cargo fmt --check`
 #   lint-smoke   static-analysis gate (DESIGN.md §Static-Analysis): runs the
 #                dependency-free rustcheck analyzer over rust/src, rust/tests,
@@ -57,6 +57,18 @@
 #                process must be respawned and traffic keep flowing, and
 #                SIGTERM must drain fleet-wide to exit 0 with `0 leaked
 #                sessions` in the report.
+#   obs-smoke    observability gate (DESIGN.md §Observability): (1) the
+#                obs e2e tests — /metrics exposition consistency, /trace
+#                per-stage spans, trace-stamped error events, fleet
+#                metrics-RPC merge; (2) the native_obs bench in --smoke
+#                mode (ledger key `obs`): HYENA_PROF=1 decode overhead
+#                must stay ≤ 3%; (3) a live `serve --listen --replicas 2`
+#                fleet scraped before/after a loadgen --scrape run: the
+#                aggregate /metrics counter deltas must agree with what
+#                the client saw on the wire, /metrics must carry
+#                replica-labeled series, /trace must return spans for the
+#                traffic just served, and SIGTERM must drain to exit 0
+#                with `0 leaked sessions`.
 #   longctx-smoke long-context gate (DESIGN.md §Long-context): (1) every
 #                longctx_* unit test — chunked prefill bitwise at the full
 #                bucket, ≤ tolerance vs the extended monolithic oracle,
@@ -245,6 +257,77 @@ if [ "${1:-}" = "router-smoke" ]; then
     fi
     rm -f "$log"
     echo "check.sh: router-smoke green"
+    exit 0
+fi
+
+if [ "${1:-}" = "obs-smoke" ]; then
+    echo "==> obs-smoke: obs e2e tests (/metrics, /trace, trace-stamped errors, fleet merge)"
+    cargo test --release -q --test obs_e2e
+    echo "==> obs-smoke: native_obs bench gate (--smoke: HYENA_PROF overhead <= 3%)"
+    cargo bench --bench native_obs -- --smoke --threads 2
+    echo "==> obs-smoke: live 2-replica fleet, scrape-bracketed loadgen, /trace spans, SIGTERM drain"
+    cargo build --release --bin hyena
+    log=$(mktemp)
+    ./target/release/hyena serve --model lm_hyena_s --backend native \
+        --listen 127.0.0.1:0 --replicas 2 --threads 2 --quiet >"$log" 2>&1 &
+    srv=$!
+    addr=""
+    for _ in $(seq 1 200); do
+        addr=$(sed -n 's/^listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -1)
+        [ -n "$addr" ] && break
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "obs-smoke: fleet listener never came up" >&2
+        cat "$log" >&2
+        kill "$srv" 2>/dev/null || true
+        exit 1
+    fi
+    # --scrape brackets the run with GET /metrics and makes loadgen itself
+    # fail if the server's tokens_generated / admission_rejected deltas
+    # disagree with the streams the client actually saw.
+    ./target/release/hyena loadgen --addr "$addr" --clients 4 --requests 3 \
+        --prompt-len 16 --max-new 32 --vocab 96 --seed 0 --scrape
+    http_get() {
+        python3 -c "import urllib.request,sys; \
+sys.stdout.write(urllib.request.urlopen('http://$addr'+sys.argv[1], timeout=10).read().decode())" "$1"
+    }
+    # Fleet exposition: the aggregate line plus per-replica labeled series.
+    metrics=$(http_get /metrics)
+    for want in 'hyena_tokens_generated_total ' 'replica="0"' 'replica="1"' \
+        '# TYPE hyena_ttfb_us histogram'; do
+        if ! echo "$metrics" | grep -qF "$want"; then
+            echo "obs-smoke: /metrics is missing $want" >&2
+            echo "$metrics" | head -40 >&2
+            kill "$srv" 2>/dev/null || true
+            exit 1
+        fi
+    done
+    # The traffic just served must be traceable: finished traces with the
+    # front end's stream span and a done status.
+    trace=$(http_get '/trace?n=64')
+    for want in '"status":"done"' '"name":"stream"' '"name":"admission"'; do
+        if ! echo "$trace" | grep -qF "$want"; then
+            echo "obs-smoke: /trace is missing $want" >&2
+            echo "$trace" | head -5 >&2
+            kill "$srv" 2>/dev/null || true
+            exit 1
+        fi
+    done
+    kill -TERM "$srv"
+    rc=0
+    wait "$srv" || rc=$?
+    cat "$log"
+    if [ "$rc" -ne 0 ]; then
+        echo "obs-smoke: fleet exited rc=$rc after drain (leak gate)" >&2
+        exit 1
+    fi
+    if ! grep -q ', 0 leaked sessions' "$log"; then
+        echo "obs-smoke: drain report missing the zero-leak line" >&2
+        exit 1
+    fi
+    rm -f "$log"
+    echo "check.sh: obs-smoke green"
     exit 0
 fi
 

@@ -29,6 +29,7 @@ TAGS = {
     "PERF_LONGCTX": "native_fftconv_longctx.csv",
     "PERF_SERVE_NET": "native_serve_net.csv",
     "PERF_ROUTER": "native_router.csv",
+    "PERF_OBS": "native_obs.csv",
     "PERF_L2": "perf_donation.csv",
 }
 

@@ -18,9 +18,10 @@ Lints:
   table in ``kernels/mod.rs``.
 * **nondeterminism**     — wall-clock / OS-entropy sources
   (``SystemTime::now``, ``thread_rng``, ``from_entropy``, ``rand::random``,
-  ``getrandom``) anywhere in ``rust/src`` outside the sanctioned
-  ``net/mod.rs`` seam.  Reproducibility is a core paper claim; randomness
-  must flow from seeded ``util::rng``.
+  ``getrandom``) anywhere in ``rust/src`` outside the sanctioned seams
+  (``net/mod.rs`` and ``obs/clock.rs``).  Reproducibility is a core paper
+  claim; randomness must flow from seeded ``util::rng`` and wall-clock
+  reads through ``obs::clock``.
 """
 
 import re
@@ -224,22 +225,25 @@ def lint_kernel_parity(kernel_files: Dict[str, str]) -> List[dict]:
 _NONDET = re.compile(
     r"\b(SystemTime\s*::\s*now|thread_rng|from_entropy|rand\s*::\s*random|getrandom)\b"
 )
-_NONDET_SEAM = "rust/src/net/mod.rs"
+_NONDET_SEAMS = frozenset({
+    "rust/src/net/mod.rs",      # Retry-After wall-clock, net entropy
+    "rust/src/obs/clock.rs",    # telemetry epoch timestamps (obs::clock)
+})
 
 
 def lint_nondeterminism(masked: str, path: str) -> List[dict]:
     p = str(path).replace("\\", "/")
     if not p.startswith("rust/src/"):
         return []  # tests/benches/examples may use wall-clock freely
-    if p == _NONDET_SEAM:
-        return []  # the sanctioned seam (Retry-After wall-clock, net entropy)
+    if p in _NONDET_SEAMS:
+        return []  # the sanctioned seams
     out = []
     for m in _NONDET.finditer(masked):
         line = masked.count("\n", 0, m.start()) + 1
         out.append(_f(
             "nondeterminism", path, line,
-            f"`{m.group(1)}` outside the sanctioned net/mod.rs seam — "
-            "route randomness through seeded util::rng and clocks through "
-            "the net time seam",
+            f"`{m.group(1)}` outside the sanctioned seams "
+            "(net/mod.rs, obs/clock.rs) — route randomness through seeded "
+            "util::rng and clocks through obs::clock",
         ))
     return out
